@@ -1,0 +1,99 @@
+//! **Fig. 2 reproduction** — parallel weak scaling of the 3-D heat
+//! diffusion solver (paper: 1 -> 2197 Nvidia P100s on Piz Daint, 93%
+//! parallel efficiency at 2197, medians of 20 samples with 95% CI).
+//!
+//! Here: real runs at 1..<=cores ranks (threads) under the Aries network
+//! model with hide_communication, then the calibrated analytic model
+//! extends the curve to 13^3 = 2197 ranks. Matching criterion (DESIGN.md
+//! §4): the *shape* — near-flat efficiency >= 90% with hiding — not P100
+//! absolute times.
+//!
+//!     cargo bench --bench fig2_weak_scaling_diffusion
+//!     IGG_BENCH_SAMPLES=20 cargo bench ...   # the paper's sample count
+
+use igg::bench::measure::bench_samples;
+use igg::bench::{markdown_table, report, scaling};
+use igg::coordinator::config::{AppKind, Config};
+use igg::mpisim::NetModel;
+use igg::overlap::HideWidths;
+use igg::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let samples = bench_samples(5);
+    // local size: paper used 512^3/GPU; 32^3/rank keeps the thread-level
+    // testbed honest (fits cache hierarchies at 64 ranks)
+    let cfg = Config {
+        app: AppKind::Diffusion,
+        local: [32, 32, 32],
+        nt: 20,
+        net: NetModel::aries(),
+        hide: Some(HideWidths([4, 2, 2])),
+        ..Default::default()
+    };
+    // ranks beyond the core count time-share; efficiency is normalized
+    // (bench::scaling::normalized_efficiency), so the sweep stays meaningful
+    let ranks: Vec<usize> = vec![1, 2, 4, 8, 16, 27];
+    let _ = cores;
+
+    println!("# Fig. 2 — weak scaling, 3-D heat diffusion");
+    println!("paper: 93% parallel efficiency at 2197 P100s (local 512^3)");
+    println!("here : local 32^3/rank, aries netmodel, hide (4,2,2), {samples} samples\n");
+
+    let rows = scaling::weak_scaling(&cfg, &ranks, samples, 2)?;
+    println!("{}", markdown_table("measured (ranks-as-threads)", &rows));
+
+    // Model extension to the paper's scale.
+    let model = scaling::PerfModel::calibrate(&cfg, 3)?;
+    println!(
+        "\nmodel calibration: t_comp {:.1} us, t_inner {:.1} us, t_boundary {:.1} us, sigma {:.2} us",
+        model.t_comp_s * 1e6,
+        model.t_inner_s * 1e6,
+        model.t_boundary_s * 1e6,
+        model.sigma_s * 1e6
+    );
+    println!("\n### calibrated analytic model -> paper scale\n");
+    println!("| P | modeled efficiency | paper |");
+    println!("|---:|---:|---:|");
+    for p in [1usize, 8, 27, 64, 125, 343, 729, 1331, 2197] {
+        let paper = if p == 1 { "100%" } else if p == 2197 { "93%" } else { "-" };
+        println!("| {p} | {:.1}% | {paper} |", model.efficiency(p)? * 100.0);
+    }
+    let e2197 = model.efficiency(2197)?;
+    println!("\nmodeled efficiency at 2197 ranks: {:.1}% (paper: 93%)", e2197 * 100.0);
+
+    // Sensitivity: the straggler term scales with the per-step jitter sigma,
+    // which on this shared container is far above dedicated-HPC-node levels.
+    // Show the modeled large-scale efficiency across sigma regimes so the
+    // reproduction is judged on the mechanism, not the neighbours' noise.
+    {
+        let t1 = if model.hide { model.t_boundary_s + model.t_inner_s } else { model.t_comp_s };
+        println!("\n### sigma sensitivity at P = 2197 (straggler ~ sigma*sqrt(2 ln P))\n");
+        println!("| sigma / t1 | modeled efficiency | note |");
+        println!("|---:|---:|:---|");
+        let measured_ratio = model.sigma_s / t1;
+        for (label, ratio) in [
+            ("measured here", measured_ratio),
+            ("3% (busy HPC node)", 0.03),
+            ("1% (quiet HPC node)", 0.01),
+        ] {
+            let mut m = model.clone();
+            m.sigma_s = ratio * t1;
+            println!(
+                "| {label} ({:.1}%) | {:.1}% | paper: 93% |",
+                ratio * 100.0,
+                m.efficiency(2197)? * 100.0
+            );
+        }
+    }
+
+    report::write_json_report(
+        "target/bench_results/fig2_weak_scaling_diffusion.json",
+        Json::obj(vec![
+            ("config", cfg.to_json()),
+            ("rows", report::rows_to_json(&rows)),
+            ("modeled_eff_2197", Json::Num(e2197)),
+        ]),
+    )?;
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! **Ablation A** (paper §2 claims): communication hiding.
+//!
+//! "all data transfers are performed on non-blocking high-priority streams
+//! ... allowing to overlap the communication optimally with computation."
+//! This bench measures the diffusion step time with and without
+//! `@hide_communication` across network-speed regimes, showing where
+//! overlap matters (slow networks / small local problems) and that it never
+//! hurts.
+//!
+//!     cargo bench --bench hide_communication_ablation
+
+use igg::bench::measure::bench_samples;
+use igg::bench::{report, scaling};
+use igg::coordinator::config::{AppKind, Config};
+use igg::mpisim::NetModel;
+use igg::overlap::HideWidths;
+use igg::util::json::Json;
+use igg::util::stats::median;
+
+fn step_time(cfg: &Config, samples: usize) -> anyhow::Result<f64> {
+    let mut xs = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        xs.push(scaling::run_app_once(cfg, 1)?.step_time_s());
+    }
+    Ok(median(&xs))
+}
+
+fn main() -> anyhow::Result<()> {
+    let samples = bench_samples(5);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let ranks = if cores >= 8 { 8 } else { 2 };
+
+    println!("# hide_communication ablation — diffusion, {ranks} ranks, 32^3/rank\n");
+    println!("| network | plain t/step | hidden t/step | speedup |");
+    println!("|:---|---:|---:|---:|");
+
+    let mut out = Vec::new();
+    for (name, net) in [
+        ("ideal", NetModel::ideal()),
+        ("aries", NetModel::aries()),
+        ("aries:8 (slow)", NetModel::aries_scaled(8.0)),
+        ("aries:64 (very slow)", NetModel::aries_scaled(64.0)),
+    ] {
+        let base = Config {
+            app: AppKind::Diffusion,
+            local: [32, 32, 32],
+            nranks: ranks,
+            nt: 10,
+            net,
+            ..Default::default()
+        };
+        let plain = step_time(&base, samples)?;
+        let hidden = step_time(
+            &Config { hide: Some(HideWidths([4, 2, 2])), ..base },
+            samples,
+        )?;
+        println!(
+            "| {name} | {} | {} | {:.2}x |",
+            igg::bench::measure::fmt_time(plain),
+            igg::bench::measure::fmt_time(hidden),
+            plain / hidden
+        );
+        out.push(Json::obj(vec![
+            ("net", Json::Str(name.into())),
+            ("plain_s", Json::Num(plain)),
+            ("hidden_s", Json::Num(hidden)),
+        ]));
+    }
+    println!("\nexpected shape: speedup ~1x on ideal (nothing to hide), growing with");
+    println!("network cost until comm > inner-compute (can't hide more than the inner time).");
+
+    report::write_json_report(
+        "target/bench_results/hide_communication_ablation.json",
+        Json::Arr(out),
+    )?;
+    Ok(())
+}

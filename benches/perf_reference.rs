@@ -1,0 +1,100 @@
+//! **Perf-reference reproduction** (paper §3, last sentence): "the solver
+//! implemented in Julia achieved 90% of the performance of the respective
+//! original solver written in CUDA C using MPI."
+//!
+//! Mapping (DESIGN.md §4): the AOT JAX/Pallas artifact executed through
+//! PJRT plays the Julia solver; the hand-written native Rust step plays the
+//! CUDA C original. Reported: single-rank step times and their ratio, per
+//! app and size.
+//!
+//!     cargo bench --bench perf_reference
+
+use igg::bench::measure::{bench_samples, fmt_time, measure};
+use igg::bench::report;
+use igg::physics::{diffusion3d, twophase, DiffusionParams, Field3D, Region, TwophaseParams};
+use igg::runtime::{artifact_dir, ArtifactStore, DiffusionExecutor, TwophaseExecutor};
+use igg::util::json::Json;
+use igg::util::prng::Rng;
+
+fn rand_field(dims: [usize; 3], seed: u64, lo: f64, hi: f64) -> Field3D {
+    let mut rng = Rng::new(seed);
+    Field3D::from_fn(dims, |_, _, _| rng.range(lo, hi))
+}
+
+fn main() -> anyhow::Result<()> {
+    let samples = bench_samples(10);
+    let store = ArtifactStore::load(artifact_dir())?;
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+
+    println!("# Perf-reference — PJRT (\"Julia\") vs native (\"CUDA C\")");
+    println!("paper: Julia reaches 90% of CUDA C + MPI\n");
+
+    for shape in [[32, 32, 32], [64, 64, 64]] {
+        let t = rand_field(shape, 1, -1.0, 1.0);
+        let ci = rand_field(shape, 2, 0.1, 1.0);
+        let p = DiffusionParams::stable(1.0, 0.1, 0.1, 0.1, 1.0);
+        let interior = Region::interior(shape);
+
+        let mut t2 = t.clone();
+        let native = measure(samples, 3, || diffusion3d::step(&t, &ci, &p, &mut t2));
+
+        let mut exec = DiffusionExecutor::pjrt(shape, None, &store)?;
+        let mut t2p = t.clone();
+        let pjrt = measure(samples, 3, || {
+            exec.step_region(&t, &ci, &p, interior, &mut t2p).unwrap()
+        });
+
+        let ratio = native.median / pjrt.median;
+        println!(
+            "diffusion {}^3 : native {}  pjrt {}  ratio {:.1}% (paper 90%)",
+            shape[0],
+            fmt_time(native.median),
+            fmt_time(pjrt.median),
+            ratio * 100.0
+        );
+        rows.push((format!("diffusion_{}", shape[0]), native.median, pjrt.median));
+    }
+
+    for shape in [[32, 32, 32], [64, 64, 64]] {
+        let pe = rand_field(shape, 3, -0.1, 0.1);
+        let phi = rand_field(shape, 4, 0.01, 0.05);
+        let p = TwophaseParams::stable(0.1, 0.1, 0.1);
+        let interior = Region::interior(shape);
+
+        let (mut pe2, mut phi2) = (pe.clone(), phi.clone());
+        let native = measure(samples, 3, || twophase::step(&pe, &phi, &p, &mut pe2, &mut phi2));
+
+        let mut exec = TwophaseExecutor::pjrt(shape, None, &store)?;
+        let (mut pe2p, mut phi2p) = (pe.clone(), phi.clone());
+        let pjrt = measure(samples, 3, || {
+            exec.step_region(&pe, &phi, &p, interior, &mut pe2p, &mut phi2p).unwrap()
+        });
+
+        let ratio = native.median / pjrt.median;
+        println!(
+            "twophase  {}^3 : native {}  pjrt {}  ratio {:.1}% (paper 90%)",
+            shape[0],
+            fmt_time(native.median),
+            fmt_time(pjrt.median),
+            ratio * 100.0
+        );
+        rows.push((format!("twophase_{}", shape[0]), native.median, pjrt.median));
+    }
+
+    report::write_json_report(
+        "target/bench_results/perf_reference.json",
+        Json::Arr(
+            rows.into_iter()
+                .map(|(name, native, pjrt)| {
+                    Json::obj(vec![
+                        ("name", Json::Str(name)),
+                        ("native_s", Json::Num(native)),
+                        ("pjrt_s", Json::Num(pjrt)),
+                        ("ratio", Json::Num(native / pjrt)),
+                    ])
+                })
+                .collect(),
+        ),
+    )?;
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! End-to-end weak-scaling experiment (the runnable form of EXPERIMENTS.md):
+//! measures the Fig. 2 protocol on this machine at small rank counts,
+//! calibrates the analytic model, and projects to the paper's 2197 GPUs.
+//!
+//!     cargo run --release --example scaling_experiment
+//!
+//! Writes target/experiments/scaling_experiment.json with the raw rows.
+
+use igg::bench::{markdown_table, report, scaling};
+use igg::coordinator::config::{AppKind, Config};
+use igg::mpisim::NetModel;
+use igg::overlap::HideWidths;
+use igg::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let ranks: Vec<usize> = vec![1, 2, 4, 8, 12, 16, 27];
+    let cfg = Config {
+        app: AppKind::Diffusion,
+        local: [32, 32, 32],
+        nt: 20,
+        net: NetModel::aries(),
+        hide: Some(HideWidths([4, 2, 2])),
+        ..Default::default()
+    };
+    println!("weak scaling, local 32^3/rank, aries netmodel, hide (4,2,2), {cores} cores");
+    let rows = scaling::weak_scaling(&cfg, &ranks, 5, 2)?;
+    println!("{}", markdown_table("measured (ranks-as-threads)", &rows));
+
+    let model = scaling::PerfModel::calibrate(&cfg, 3)?;
+    println!("### calibrated model, projected\n");
+    println!("| P | modeled efficiency |");
+    println!("|---:|---:|");
+    for p in [1usize, 8, 27, 64, 125, 343, 1000, 2197] {
+        println!("| {p} | {:.1}% |", model.efficiency(p)? * 100.0);
+    }
+
+    report::write_json_report(
+        "target/experiments/scaling_experiment.json",
+        Json::obj(vec![
+            ("config", cfg.to_json()),
+            ("rows", report::rows_to_json(&rows)),
+        ]),
+    )?;
+    Ok(())
+}

@@ -1,0 +1,185 @@
+"""AOT compile path: lower the L2 step programs to HLO *text* artifacts.
+
+Run once by ``make artifacts``; Python is never on the Rust request path.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md). Programs are lowered
+with ``return_tuple=True`` so every artifact's result is a tuple, which the
+Rust runtime unpacks uniformly.
+
+Each artifact is one (program, local-array-shape[, region-set]) pair — array
+shapes are static in HLO, so the Rust runtime picks the artifact matching the
+local grid and caches the compiled executable. ``manifest.json`` is the
+machine-readable index the Rust `runtime::artifacts` module loads.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import x64  # noqa: F401
+
+F64 = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _lower(fn, arg_shapes):
+    args = [jax.ShapeDtypeStruct(s, F64) for s in arg_shapes]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def _scalar_shapes(names):
+    return [()] * len(names)
+
+
+class Builder:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.entries = []
+
+    def emit(self, name, fn, arrays_in, scalars, arrays_out, meta):
+        """Lower ``fn`` and record a manifest entry.
+
+        arrays_in / arrays_out: list of (param_name, shape) tuples.
+        scalars: tuple of scalar param names (appended after arrays_in).
+        """
+        shapes = [s for (_, s) in arrays_in] + _scalar_shapes(scalars)
+        text = _lower(fn, shapes)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": fname,
+            "arrays_in": [{"name": n, "shape": list(s)} for (n, s) in arrays_in],
+            "scalars": list(scalars),
+            "arrays_out": [{"name": n, "shape": list(s)} for (n, s) in arrays_out],
+        }
+        entry.update(meta)
+        self.entries.append(entry)
+        print(f"  {fname}  ({len(text)} chars)")
+
+    def emit_diffusion_full(self, shape):
+        nx, ny, nz = shape
+        self.emit(
+            f"diffusion_step__{nx}x{ny}x{nz}",
+            model.diffusion_step,
+            [("T", shape), ("Ci", shape)],
+            model.DIFFUSION_SCALARS,
+            [("T2", shape)],
+            {"app": "diffusion", "kind": "full", "shape": list(shape)},
+        )
+
+    def emit_twophase_full(self, shape):
+        nx, ny, nz = shape
+        self.emit(
+            f"twophase_step__{nx}x{ny}x{nz}",
+            model.twophase_step,
+            [("Pe", shape), ("phi", shape)],
+            model.TWOPHASE_SCALARS,
+            [("Pe2", shape), ("phi2", shape)],
+            {"app": "twophase", "kind": "full", "shape": list(shape)},
+        )
+
+    def emit_region_set(self, app, shape, widths):
+        nx, ny, nz = shape
+        wx, wy, wz = widths
+        inner, boundaries = model.split_regions(shape, widths)
+        regions = [("inner", inner)] + boundaries
+        for rname, region in regions:
+            sx, sy, sz = region[3:]
+            if app == "diffusion":
+                fn = model.diffusion_region(region)
+                arrays_in = [("T", shape), ("Ci", shape)]
+                scalars = model.DIFFUSION_SCALARS
+                arrays_out = [("U", (sx, sy, sz))]
+            else:
+                fn = model.twophase_region(region)
+                arrays_in = [("Pe", shape), ("phi", shape)]
+                scalars = model.TWOPHASE_SCALARS
+                arrays_out = [("UPe", (sx, sy, sz)), ("Uphi", (sx, sy, sz))]
+            self.emit(
+                f"{app}_{rname}__{nx}x{ny}x{nz}__w{wx}x{wy}x{wz}",
+                fn,
+                arrays_in,
+                scalars,
+                arrays_out,
+                {
+                    "app": app,
+                    "kind": f"region:{rname}",
+                    "shape": list(shape),
+                    "widths": list(widths),
+                    "region": list(region),
+                },
+            )
+
+    def write_manifest(self):
+        manifest = {
+            "format": 1,
+            "overlap": 2,
+            "dtype": "f64",
+            "layout": "C (z fastest), shape (nx, ny, nz)",
+            "diffusion_scalars": list(model.DIFFUSION_SCALARS),
+            "twophase_scalars": list(model.TWOPHASE_SCALARS),
+            "programs": self.entries,
+        }
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"wrote {path} ({len(self.entries)} programs)")
+
+
+# The default artifact set: small shapes for tests/examples, 64^3 for the
+# single-node benches, one non-cubic shape to catch axis-order bugs, and the
+# region sets used by hide_communication.
+DEFAULT_FULL_DIFFUSION = [(8, 8, 8), (16, 16, 16), (32, 32, 32), (64, 64, 64), (24, 16, 12)]
+DEFAULT_FULL_TWOPHASE = [(8, 8, 8), (16, 16, 16), (32, 32, 32), (64, 64, 64)]
+DEFAULT_REGION_SETS = [
+    ("diffusion", (16, 16, 16), (4, 2, 2)),
+    ("diffusion", (32, 32, 32), (4, 2, 2)),
+    ("diffusion", (64, 64, 64), (16, 2, 2)),
+    ("twophase", (32, 32, 32), (4, 2, 2)),
+]
+
+
+def build(out_dir, tiny=False):
+    os.makedirs(out_dir, exist_ok=True)
+    b = Builder(out_dir)
+    if tiny:  # fast set for python unit tests of the AOT path itself
+        b.emit_diffusion_full((8, 8, 8))
+        b.emit_region_set("diffusion", (8, 8, 8), (2, 2, 2))
+        b.emit_twophase_full((8, 8, 8))
+    else:
+        for shape in DEFAULT_FULL_DIFFUSION:
+            b.emit_diffusion_full(shape)
+        for shape in DEFAULT_FULL_TWOPHASE:
+            b.emit_twophase_full(shape)
+        for app, shape, widths in DEFAULT_REGION_SETS:
+            b.emit_region_set(app, shape, widths)
+    b.write_manifest()
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="artifact directory")
+    p.add_argument("--tiny", action="store_true", help="emit the tiny test set")
+    args = p.parse_args()
+    build(args.out, tiny=args.tiny)
+
+
+if __name__ == "__main__":
+    main()

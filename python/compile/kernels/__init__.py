@@ -1,0 +1,11 @@
+# L1: Pallas kernels for the paper's stencil hot loops.
+#
+# Every kernel has a pure-jnp oracle in ref.py; pytest + hypothesis assert
+# allclose between the two over random shapes and values. Kernels are always
+# instantiated with interpret=True: the CPU PJRT plugin cannot execute Mosaic
+# custom-calls, and interpret-mode lowers to plain HLO that the Rust runtime
+# (xla crate) compiles and runs (see /opt/xla-example/README.md).
+
+from . import diffusion3d, ref, twophase
+
+__all__ = ["diffusion3d", "twophase", "ref"]

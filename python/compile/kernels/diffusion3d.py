@@ -1,0 +1,109 @@
+"""L1 Pallas kernels for the 3-D heat diffusion stencil (paper Fig. 1).
+
+Two variants, both validated against ref.diffusion_step:
+
+* ``step`` — single-block kernel: the whole local array is one Pallas block
+  and the 7-point Laplacian is expressed as shifted-slice vector arithmetic.
+  This is the variant AOT-lowered into the production artifacts: on CPU-PJRT
+  (interpret=True) blocking buys nothing, and the shifted-slice form is what
+  XLA fuses best.
+
+* ``step_tiled`` — the TPU-shaped variant from DESIGN.md §8: the grid streams
+  (nx, ny, bz) z-slabs HBM->VMEM with a one-plane halo-in-VMEM on each side of
+  the slab (the in-kernel analog of the distributed halo). On a real TPU this
+  is the memory schedule that keeps the VMEM working set bounded; here it
+  runs under interpret=True for numerics validation only.
+
+Scalars (lam, dt, dx, dy, dz) enter as shape-(1,) f64 refs so they stay
+run-time HLO parameters: one artifact per array shape serves any physics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import x64  # noqa: F401
+
+
+def _step_kernel(t_ref, ci_ref, lam_ref, dt_ref, dx_ref, dy_ref, dz_ref, o_ref):
+    T = t_ref[...]
+    Ci = ci_ref[...]
+    lam = lam_ref[0]
+    dt = dt_ref[0]
+    dx = dx_ref[0]
+    dy = dy_ref[0]
+    dz = dz_ref[0]
+    lap = (
+        (T[2:, 1:-1, 1:-1] - 2.0 * T[1:-1, 1:-1, 1:-1] + T[:-2, 1:-1, 1:-1]) / dx**2
+        + (T[1:-1, 2:, 1:-1] - 2.0 * T[1:-1, 1:-1, 1:-1] + T[1:-1, :-2, 1:-1]) / dy**2
+        + (T[1:-1, 1:-1, 2:] - 2.0 * T[1:-1, 1:-1, 1:-1] + T[1:-1, 1:-1, :-2]) / dz**2
+    )
+    delta = dt * lam * Ci[1:-1, 1:-1, 1:-1] * lap
+    o_ref[...] = T + jnp.pad(delta, ((1, 1), (1, 1), (1, 1)))
+
+
+def step(T, Ci, lam, dt, dx, dy, dz):
+    """Full-domain diffusion step: returns T2 with updated interior."""
+    scalars = [jnp.reshape(jnp.float64(s), (1,)) for s in (lam, dt, dx, dy, dz)]
+    return pl.pallas_call(
+        _step_kernel,
+        out_shape=jax.ShapeDtypeStruct(T.shape, T.dtype),
+        interpret=True,
+    )(T, Ci, *scalars)
+
+
+def _step_tiled_kernel(
+    bz, t_ref, ci_ref, lam_ref, dt_ref, dx_ref, dy_ref, dz_ref, o_ref
+):
+    # One program per interior z-slab. The input refs hold the full arrays
+    # (on TPU: resident in HBM/ANY); each program loads a (nx, ny, bz+2) slab
+    # — the +2 is the halo-in-VMEM — computes the update for its bz interior
+    # planes, and stores a full (nx, ny, bz) output block whose x/y boundary
+    # rows carry the input values through unchanged.
+    # program_id is int32; promote so the dynamic-slice starts agree in type.
+    i = pl.program_id(0).astype(jnp.int64)
+    z0 = i * bz  # global z index of the first output plane is z0 + 1
+    lam = lam_ref[0]
+    dt = dt_ref[0]
+    dx = dx_ref[0]
+    dy = dy_ref[0]
+    dz = dz_ref[0]
+
+    nx, ny, _ = t_ref.shape
+    slab = pl.load(t_ref, (slice(None), slice(None), pl.dslice(z0, bz + 2)))
+    ci = pl.load(ci_ref, (slice(1, nx - 1), slice(1, ny - 1), pl.dslice(z0 + 1, bz)))
+
+    lap = (
+        (slab[2:, 1:-1, 1:-1] - 2.0 * slab[1:-1, 1:-1, 1:-1] + slab[:-2, 1:-1, 1:-1])
+        / dx**2
+        + (slab[1:-1, 2:, 1:-1] - 2.0 * slab[1:-1, 1:-1, 1:-1] + slab[1:-1, :-2, 1:-1])
+        / dy**2
+        + (slab[1:-1, 1:-1, 2:] - 2.0 * slab[1:-1, 1:-1, 1:-1] + slab[1:-1, 1:-1, :-2])
+        / dz**2
+    )
+    out = slab[:, :, 1:-1]
+    out = out.at[1:-1, 1:-1, :].add(dt * lam * ci * lap)
+    pl.store(o_ref, (slice(None), slice(None), pl.dslice(z0, bz)), out)
+
+
+def step_tiled(T, Ci, lam, dt, dx, dy, dz, bz=None):
+    """Diffusion step streamed over interior z-slabs of thickness ``bz``.
+
+    Requires ``(nz - 2) % bz == 0``; defaults to the largest divisor <= 8.
+    """
+    nx, ny, nz = T.shape
+    nzi = nz - 2
+    if bz is None:
+        bz = next(b for b in range(min(8, nzi), 0, -1) if nzi % b == 0)
+    if nzi % bz != 0:
+        raise ValueError(f"bz={bz} must divide nz-2={nzi}")
+    scalars = [jnp.reshape(jnp.float64(s), (1,)) for s in (lam, dt, dx, dy, dz)]
+    inner = pl.pallas_call(
+        functools.partial(_step_tiled_kernel, bz),
+        grid=(nzi // bz,),
+        out_shape=jax.ShapeDtypeStruct((nx, ny, nzi), T.dtype),
+        interpret=True,
+    )(T, Ci, *scalars)
+    return jnp.concatenate([T[:, :, :1], inner, T[:, :, -1:]], axis=2)

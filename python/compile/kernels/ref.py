@@ -1,0 +1,80 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are straight transcriptions of the paper's stencils (Fig. 1 for the
+heat diffusion; the porosity-wave two-phase flow model for the Fig. 3
+solver — see DESIGN.md §2 for the substitution note) with no Pallas in the
+loop. The L1 kernels must match these to f64 round-off; the Rust-native
+implementations in rust/src/physics/ are a third, independent transcription
+tested against the AOT artifacts in cargo tests.
+
+Array convention: shape (nx, ny, nz), C order (z fastest) — identical to the
+Rust Field3D layout, so HLO parameters round-trip without relayout.
+"""
+
+import jax.numpy as jnp
+
+from . import x64  # noqa: F401  (enables f64 on import)
+
+
+def diffusion_step(T, Ci, lam, dt, dx, dy, dz):
+    """One explicit step of 3-D heat diffusion (paper Fig. 1 `step!`).
+
+    T2 = T with the interior updated:
+        T2_inn = T_inn + dt * lam * Ci_inn * (d2_xi(T)/dx^2 +
+                                              d2_yi(T)/dy^2 + d2_zi(T)/dz^2)
+    Boundary planes are carried over from T unchanged: physical boundaries
+    keep their (Dirichlet) initial values, halo planes are overwritten by
+    `update_halo!` right after the step.
+    """
+    lap = (
+        (T[2:, 1:-1, 1:-1] - 2.0 * T[1:-1, 1:-1, 1:-1] + T[:-2, 1:-1, 1:-1]) / dx**2
+        + (T[1:-1, 2:, 1:-1] - 2.0 * T[1:-1, 1:-1, 1:-1] + T[1:-1, :-2, 1:-1]) / dy**2
+        + (T[1:-1, 1:-1, 2:] - 2.0 * T[1:-1, 1:-1, 1:-1] + T[1:-1, 1:-1, :-2]) / dz**2
+    )
+    delta = dt * lam * Ci[1:-1, 1:-1, 1:-1] * lap
+    return T + jnp.pad(delta, ((1, 1), (1, 1), (1, 1)))
+
+
+def twophase_step(Pe, phi, dtau, dt, dx, dy, dz, eta, rhog, phiref, npow):
+    """One pseudo-transient iteration of the porosity-wave two-phase solver.
+
+    Cell-centered fields Pe (effective pressure) and phi (porosity);
+    face-staggered Darcy fluxes (the size-(n-1) arrays of the staggered
+    grid — they are kernel-local and never halo-exchanged, exactly like in
+    the paper's solver):
+
+        k    = (phi / phiref)^npow                        (centers)
+        q_d  = -k_face * (dPe/dd - rhog * [d==z])         (faces, interior)
+        RPe  = -div(q) - Pe / (eta * (1 - phi))           (interior centers)
+        Pe'  = Pe + dtau * RPe
+        phi' = phi + dt * (1 - phi) * Pe' / eta
+
+    Returns (Pe', phi') with boundary planes carried over unchanged.
+    """
+    k = (phi / phiref) ** npow
+
+    kx = 0.5 * (k[:-1, 1:-1, 1:-1] + k[1:, 1:-1, 1:-1])
+    qx = -kx * (Pe[1:, 1:-1, 1:-1] - Pe[:-1, 1:-1, 1:-1]) / dx
+
+    ky = 0.5 * (k[1:-1, :-1, 1:-1] + k[1:-1, 1:, 1:-1])
+    qy = -ky * (Pe[1:-1, 1:, 1:-1] - Pe[1:-1, :-1, 1:-1]) / dy
+
+    kz = 0.5 * (k[1:-1, 1:-1, :-1] + k[1:-1, 1:-1, 1:])
+    qz = -kz * ((Pe[1:-1, 1:-1, 1:] - Pe[1:-1, 1:-1, :-1]) / dz - rhog)
+
+    divq = (
+        (qx[1:, :, :] - qx[:-1, :, :]) / dx
+        + (qy[:, 1:, :] - qy[:, :-1, :]) / dy
+        + (qz[:, :, 1:] - qz[:, :, :-1]) / dz
+    )
+
+    Pe_inn = Pe[1:-1, 1:-1, 1:-1]
+    phi_inn = phi[1:-1, 1:-1, 1:-1]
+    RPe = -divq - Pe_inn / (eta * (1.0 - phi_inn))
+    Pe2_inn = Pe_inn + dtau * RPe
+    phi2_inn = phi_inn + dt * (1.0 - phi_inn) * Pe2_inn / eta
+
+    pad = ((1, 1), (1, 1), (1, 1))
+    Pe2 = Pe + jnp.pad(Pe2_inn - Pe_inn, pad)
+    phi2 = phi + jnp.pad(phi2_inn - phi_inn, pad)
+    return Pe2, phi2

@@ -1,0 +1,90 @@
+"""L1 Pallas kernel for the two-phase flow pseudo-transient iteration.
+
+This is the Fig. 3 solver of the paper, reduced to the porosity-wave
+hydro-mechanical core (see DESIGN.md §2 for why the reduction preserves the
+communication pattern): two halo-exchanged cell-centered fields (Pe, phi) and
+three face-staggered Darcy-flux arrays that stay kernel-local — the classic
+staggered-grid layout ImplicitGlobalGrid is designed around.
+
+Validated against ref.twophase_step; lowered AOT with interpret=True.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import x64  # noqa: F401
+
+# Runtime scalar parameters, in HLO parameter order after the field params.
+SCALARS = ("dtau", "dt", "dx", "dy", "dz", "eta", "rhog", "phiref", "npow")
+
+
+def _step_kernel(pe_ref, phi_ref, *rest):
+    (
+        dtau_ref,
+        dt_ref,
+        dx_ref,
+        dy_ref,
+        dz_ref,
+        eta_ref,
+        rhog_ref,
+        phiref_ref,
+        npow_ref,
+        pe2_ref,
+        phi2_ref,
+    ) = rest
+    Pe = pe_ref[...]
+    phi = phi_ref[...]
+    dtau = dtau_ref[0]
+    dt = dt_ref[0]
+    dx = dx_ref[0]
+    dy = dy_ref[0]
+    dz = dz_ref[0]
+    eta = eta_ref[0]
+    rhog = rhog_ref[0]
+    phiref = phiref_ref[0]
+    npow = npow_ref[0]
+
+    # Mobility at cell centers, then averaged onto faces (staggered grid).
+    k = (phi / phiref) ** npow
+
+    kx = 0.5 * (k[:-1, 1:-1, 1:-1] + k[1:, 1:-1, 1:-1])
+    qx = -kx * (Pe[1:, 1:-1, 1:-1] - Pe[:-1, 1:-1, 1:-1]) / dx
+
+    ky = 0.5 * (k[1:-1, :-1, 1:-1] + k[1:-1, 1:, 1:-1])
+    qy = -ky * (Pe[1:-1, 1:, 1:-1] - Pe[1:-1, :-1, 1:-1]) / dy
+
+    kz = 0.5 * (k[1:-1, 1:-1, :-1] + k[1:-1, 1:-1, 1:])
+    qz = -kz * ((Pe[1:-1, 1:-1, 1:] - Pe[1:-1, 1:-1, :-1]) / dz - rhog)
+
+    divq = (
+        (qx[1:, :, :] - qx[:-1, :, :]) / dx
+        + (qy[:, 1:, :] - qy[:, :-1, :]) / dy
+        + (qz[:, :, 1:] - qz[:, :, :-1]) / dz
+    )
+
+    Pe_inn = Pe[1:-1, 1:-1, 1:-1]
+    phi_inn = phi[1:-1, 1:-1, 1:-1]
+    RPe = -divq - Pe_inn / (eta * (1.0 - phi_inn))
+    Pe2_inn = Pe_inn + dtau * RPe
+    phi2_inn = phi_inn + dt * (1.0 - phi_inn) * Pe2_inn / eta
+
+    pad = ((1, 1), (1, 1), (1, 1))
+    pe2_ref[...] = Pe + jnp.pad(Pe2_inn - Pe_inn, pad)
+    phi2_ref[...] = phi + jnp.pad(phi2_inn - phi_inn, pad)
+
+
+def step(Pe, phi, dtau, dt, dx, dy, dz, eta, rhog, phiref, npow):
+    """One pseudo-transient iteration; returns (Pe2, phi2)."""
+    scalars = [
+        jnp.reshape(jnp.float64(s), (1,))
+        for s in (dtau, dt, dx, dy, dz, eta, rhog, phiref, npow)
+    ]
+    return pl.pallas_call(
+        _step_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct(Pe.shape, Pe.dtype),
+            jax.ShapeDtypeStruct(phi.shape, phi.dtype),
+        ],
+        interpret=True,
+    )(Pe, phi, *scalars)

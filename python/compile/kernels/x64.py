@@ -1,0 +1,9 @@
+"""Enable f64 once, on first import, for every module in the compile path.
+
+The paper's solvers run in Float64; JAX defaults to f32 unless x64 is enabled
+before any array is created.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,121 @@
+"""L2: the step programs the Rust coordinator executes, built on the L1 kernels.
+
+Besides the full-domain steps this module provides *region* variants used by
+the `hide_communication` scheduler (paper Fig. 1 line 36): the interior of
+the local domain is split into one inner region plus up to six boundary
+slabs; the boundary slabs are computed first, their planes are sent while the
+inner region computes. Each region program takes the FULL local arrays, has
+XLA slice out the region plus its one-cell stencil ring (free — it fuses into
+the kernel), and returns the dense updated region which Rust scatters into
+the destination array.
+
+Region convention: ``region = (ox, oy, oz, sx, sy, sz)`` in *local array*
+coordinates; the region must lie strictly inside the array (ox >= 1,
+ox + sx <= nx - 1, ...), matching ParallelStencil's computation ranges.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import diffusion3d, twophase
+from .kernels import x64  # noqa: F401
+
+#: scalar-parameter order of the diffusion programs (after T, Ci).
+DIFFUSION_SCALARS = ("lam", "dt", "dx", "dy", "dz")
+#: scalar-parameter order of the two-phase programs (after Pe, phi).
+TWOPHASE_SCALARS = twophase.SCALARS
+
+
+def check_region(region, shape):
+    ox, oy, oz, sx, sy, sz = region
+    nx, ny, nz = shape
+    for o, s, n, name in ((ox, sx, nx, "x"), (oy, sy, ny, "y"), (oz, sz, nz, "z")):
+        if o < 1 or s < 1 or o + s > n - 1:
+            raise ValueError(
+                f"region {region} not strictly interior to {shape} in {name}"
+            )
+
+
+def _region_slice(a, region):
+    """The region expanded by the one-cell stencil ring."""
+    ox, oy, oz, sx, sy, sz = region
+    return lax.slice(a, (ox - 1, oy - 1, oz - 1), (ox + sx + 1, oy + sy + 1, oz + sz + 1))
+
+
+def diffusion_step(T, Ci, lam, dt, dx, dy, dz):
+    """Full-domain heat diffusion step (paper Fig. 1 `step!`): returns T2."""
+    return diffusion3d.step(T, Ci, lam, dt, dx, dy, dz)
+
+
+def diffusion_region(region):
+    """Step program for one region; returns fn(T, Ci, scalars...) -> U."""
+
+    def fn(T, Ci, lam, dt, dx, dy, dz):
+        check_region(region, T.shape)
+        Ts = _region_slice(T, region)
+        Cis = _region_slice(Ci, region)
+        out = diffusion3d.step(Ts, Cis, lam, dt, dx, dy, dz)
+        return out[1:-1, 1:-1, 1:-1]
+
+    return fn
+
+
+def twophase_step(Pe, phi, *scalars):
+    """Full-domain two-phase iteration: returns (Pe2, phi2)."""
+    return twophase.step(Pe, phi, *scalars)
+
+
+def twophase_region(region):
+    """Region variant of the two-phase iteration: returns (UPe, Uphi)."""
+
+    def fn(Pe, phi, *scalars):
+        check_region(region, Pe.shape)
+        Pes = _region_slice(Pe, region)
+        phis = _region_slice(phi, region)
+        Pe2, phi2 = twophase.step(Pes, phis, *scalars)
+        return Pe2[1:-1, 1:-1, 1:-1], phi2[1:-1, 1:-1, 1:-1]
+
+    return fn
+
+
+def split_regions(shape, widths):
+    """Decompose the interior of ``shape`` for ``hide_communication(widths)``.
+
+    Returns ``(inner, boundaries)`` where ``boundaries`` is a list of
+    ``(name, region)`` covering the interior cells within ``widths`` of the
+    domain edge, disjointly, in the order xlo, xhi, ylo, yhi, zlo, zhi.
+    Mirrors ParallelStencil's `@hide_communication` ranges; the Rust
+    `overlap::regions` module implements the identical decomposition (tested
+    against each other through the AOT artifacts).
+    """
+    nx, ny, nz = shape
+    wx, wy, wz = widths
+    # Interior computation range is [1, n-1); clamp widths into it.
+    if min(nx, ny, nz) < 3:
+        raise ValueError(f"shape {shape} has no interior")
+    if 2 * wx > nx - 2 or 2 * wy > ny - 2 or 2 * wz > nz - 2:
+        raise ValueError(f"widths {widths} leave no inner region in {shape}")
+    ix0, ix1 = (max(wx, 1), nx - max(wx, 1))
+    iy0, iy1 = (max(wy, 1), ny - max(wy, 1))
+    iz0, iz1 = (max(wz, 1), nz - max(wz, 1))
+    inner = (ix0, iy0, iz0, ix1 - ix0, iy1 - iy0, iz1 - iz0)
+    boundaries = []
+    if ix0 > 1:
+        boundaries.append(("xlo", (1, 1, 1, ix0 - 1, ny - 2, nz - 2)))
+    if ix1 < nx - 1:
+        boundaries.append(("xhi", (ix1, 1, 1, nx - 1 - ix1, ny - 2, nz - 2)))
+    if iy0 > 1:
+        boundaries.append(("ylo", (ix0, 1, 1, ix1 - ix0, iy0 - 1, nz - 2)))
+    if iy1 < ny - 1:
+        boundaries.append(("yhi", (ix0, iy1, 1, ix1 - ix0, ny - 1 - iy1, nz - 2)))
+    if iz0 > 1:
+        boundaries.append(("zlo", (ix0, iy0, 1, ix1 - ix0, iy1 - iy0, iz0 - 1)))
+    if iz1 < nz - 1:
+        boundaries.append(("zhi", (ix0, iy0, iz1, ix1 - ix0, iy1 - iy0, nz - 1 - iz1)))
+    return inner, boundaries
+
+
+def scatter_region(dst, U, region):
+    """Write region update U into dst (reference composition used in tests)."""
+    ox, oy, oz = region[:3]
+    return lax.dynamic_update_slice(dst, U, (ox, oy, oz))

@@ -1,0 +1,81 @@
+"""AOT path: artifacts exist, are valid HLO text, and the manifest indexes them."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def tiny_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.build(str(out), tiny=True)
+    return str(out)
+
+
+def _manifest(d):
+    with open(os.path.join(d, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_written(tiny_artifacts):
+    m = _manifest(tiny_artifacts)
+    assert m["format"] == 1
+    assert m["overlap"] == 2
+    assert m["dtype"] == "f64"
+    assert m["diffusion_scalars"] == list(model.DIFFUSION_SCALARS)
+    assert m["twophase_scalars"] == list(model.TWOPHASE_SCALARS)
+    assert len(m["programs"]) >= 3
+
+
+def test_all_program_files_exist_and_are_hlo_text(tiny_artifacts):
+    m = _manifest(tiny_artifacts)
+    for prog in m["programs"]:
+        path = os.path.join(tiny_artifacts, prog["file"])
+        assert os.path.exists(path), prog["file"]
+        text = open(path).read()
+        assert "ENTRY" in text and "HloModule" in text
+        # return_tuple=True: the root computation returns a tuple
+        assert "tuple(" in text or "ROOT" in text
+
+
+def test_full_program_shapes(tiny_artifacts):
+    m = _manifest(tiny_artifacts)
+    full = [p for p in m["programs"] if p["kind"] == "full" and p["app"] == "diffusion"]
+    assert full
+    p = full[0]
+    assert [a["name"] for a in p["arrays_in"]] == ["T", "Ci"]
+    assert p["scalars"] == list(model.DIFFUSION_SCALARS)
+    assert p["arrays_out"][0]["shape"] == p["shape"]
+    text = open(os.path.join(tiny_artifacts, p["file"])).read()
+    # All array params and the 5 scalars appear as f64 parameters.
+    assert text.count("f64[8,8,8]") >= 3
+    assert text.count("f64[]") >= len(model.DIFFUSION_SCALARS)
+
+
+def test_region_programs_cover_interior(tiny_artifacts):
+    m = _manifest(tiny_artifacts)
+    regions = [p for p in m["programs"] if p["kind"].startswith("region:")]
+    assert regions
+    shape = regions[0]["shape"]
+    seen = set()
+    total = 0
+    for p in regions:
+        ox, oy, oz, sx, sy, sz = p["region"]
+        assert p["arrays_out"][0]["shape"] == [sx, sy, sz]
+        for i in range(ox, ox + sx):
+            for j in range(oy, oy + sy):
+                for k in range(oz, oz + sz):
+                    assert (i, j, k) not in seen
+                    seen.add((i, j, k))
+        total += sx * sy * sz
+    nx, ny, nz = shape
+    assert total == (nx - 2) * (ny - 2) * (nz - 2)
+
+
+def test_twophase_program_has_two_outputs(tiny_artifacts):
+    m = _manifest(tiny_artifacts)
+    tp = [p for p in m["programs"] if p["app"] == "twophase" and p["kind"] == "full"]
+    assert tp and len(tp[0]["arrays_out"]) == 2

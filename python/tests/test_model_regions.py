@@ -1,0 +1,127 @@
+"""L2 correctness: region decomposition composes back to the full step.
+
+`hide_communication` correctness rests on this: computing the inner region
+plus the six boundary slabs and scattering them into T2 must equal the
+full-domain step exactly (bitwise in f64 — the same kernel runs on each
+region with identical operand values).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+PARAMS = dict(lam=1.7, dt=1e-4, dx=0.11, dy=0.13, dz=0.17)
+TP_PARAMS = dict(
+    dtau=1e-4, dt=1e-3, dx=0.1, dy=0.12, dz=0.09, eta=1.0, rhog=1.0, phiref=0.05, npow=3.0
+)
+
+
+def compose_diffusion(T, Ci, widths):
+    inner, boundaries = model.split_regions(T.shape, widths)
+    T2 = jnp.array(T)  # boundaries carried over, like the Rust runtime does
+    for _, region in [("inner", inner)] + boundaries:
+        U = model.diffusion_region(region)(T, Ci, **PARAMS)
+        T2 = model.scatter_region(T2, U, region)
+    return T2
+
+
+def test_split_regions_disjoint_cover():
+    shape = (16, 12, 14)
+    widths = (4, 2, 3)
+    inner, boundaries = model.split_regions(shape, widths)
+    count = np.zeros(shape, dtype=int)
+    for _, (ox, oy, oz, sx, sy, sz) in [("inner", inner)] + boundaries:
+        count[ox : ox + sx, oy : oy + sy, oz : oz + sz] += 1
+    # interior covered exactly once, boundary planes never
+    assert (count[1:-1, 1:-1, 1:-1] == 1).all()
+    count[1:-1, 1:-1, 1:-1] = 0
+    assert (count == 0).all()
+
+
+def test_split_regions_boundary_names_and_order():
+    inner, boundaries = model.split_regions((16, 16, 16), (4, 2, 2))
+    assert [n for n, _ in boundaries] == ["xlo", "xhi", "ylo", "yhi", "zlo", "zhi"]
+    assert inner == (4, 2, 2, 8, 12, 12)
+
+
+def test_split_regions_zero_width_skips_axis():
+    inner, boundaries = model.split_regions((10, 10, 10), (0, 2, 2))
+    names = [n for n, _ in boundaries]
+    assert "xlo" not in names and "xhi" not in names
+    assert inner[0] == 1 and inner[3] == 8
+
+
+def test_split_regions_rejects_too_wide():
+    with pytest.raises(ValueError):
+        model.split_regions((8, 8, 8), (4, 2, 2))  # 2*4 > 8-2
+
+
+def test_split_regions_rejects_no_interior():
+    with pytest.raises(ValueError):
+        model.split_regions((2, 8, 8), (0, 0, 0))
+
+
+def test_region_rejects_non_interior():
+    T = jnp.zeros((8, 8, 8))
+    with pytest.raises(ValueError):
+        model.diffusion_region((0, 1, 1, 3, 3, 3))(T, T, **PARAMS)
+    with pytest.raises(ValueError):
+        model.diffusion_region((1, 1, 1, 7, 3, 3))(T, T, **PARAMS)
+
+
+def test_diffusion_regions_compose_to_full_step():
+    rng = np.random.default_rng(0)
+    shape = (16, 12, 14)
+    T = jnp.asarray(rng.standard_normal(shape))
+    Ci = jnp.asarray(rng.uniform(0.1, 1.0, shape))
+    got = compose_diffusion(T, Ci, (4, 2, 3))
+    want = ref.diffusion_step(T, Ci, **PARAMS)
+    # XLA may fuse the region and full programs differently, so agreement is
+    # to f64 round-off, not bitwise (the Rust native path *is* bitwise).
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-13, atol=1e-14)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nx=st.integers(7, 16),
+    ny=st.integers(7, 16),
+    nz=st.integers(7, 16),
+    wx=st.integers(0, 3),
+    wy=st.integers(0, 3),
+    wz=st.integers(0, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_diffusion_regions_compose_hypothesis(nx, ny, nz, wx, wy, wz, seed):
+    if 2 * wx > nx - 2 or 2 * wy > ny - 2 or 2 * wz > nz - 2:
+        return
+    rng = np.random.default_rng(seed)
+    T = jnp.asarray(rng.standard_normal((nx, ny, nz)))
+    Ci = jnp.asarray(rng.uniform(0.1, 1.0, (nx, ny, nz)))
+    got = compose_diffusion(T, Ci, (wx, wy, wz))
+    want = ref.diffusion_step(T, Ci, **PARAMS)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-13, atol=1e-14)
+
+
+def test_twophase_regions_compose_to_full_step():
+    rng = np.random.default_rng(1)
+    shape = (14, 12, 16)
+    Pe = jnp.asarray(rng.standard_normal(shape) * 0.1)
+    phi = jnp.asarray(rng.uniform(0.01, 0.05, shape))
+    inner, boundaries = model.split_regions(shape, (3, 2, 4))
+    Pe2 = jnp.array(Pe)
+    phi2 = jnp.array(phi)
+    scalars = [TP_PARAMS[name] for name in model.TWOPHASE_SCALARS]
+    for _, region in [("inner", inner)] + boundaries:
+        UPe, Uphi = model.twophase_region(region)(Pe, phi, *scalars)
+        Pe2 = model.scatter_region(Pe2, UPe, region)
+        phi2 = model.scatter_region(phi2, Uphi, region)
+    want_pe, want_phi = ref.twophase_step(Pe, phi, **TP_PARAMS)
+    np.testing.assert_allclose(np.asarray(Pe2), np.asarray(want_pe), rtol=1e-13, atol=1e-14)
+    np.testing.assert_allclose(np.asarray(phi2), np.asarray(want_phi), rtol=1e-13, atol=1e-14)

@@ -1,0 +1,78 @@
+//! Timing loops with median/CI summaries.
+
+use std::time::Instant;
+
+use crate::util::stats::{summarize, Summary};
+
+/// Time `f` `samples` times (after `warmup` unmeasured calls); returns the
+/// per-call summary in seconds.
+pub fn measure(samples: usize, warmup: usize, mut f: impl FnMut()) -> Summary {
+    assert!(samples > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(&times)
+}
+
+/// [`measure`] plus a one-line human-readable report on stdout, in the
+/// criterion spirit: `name  median 1.234 ms  ci [1.1, 1.4] ms  (n=10)`.
+pub fn measure_named(name: &str, samples: usize, warmup: usize, f: impl FnMut()) -> Summary {
+    let s = measure(samples, warmup, f);
+    println!(
+        "{name:<44} median {:>10}  ci [{}, {}]  (n={})",
+        fmt_time(s.median),
+        fmt_time(s.median_ci.0),
+        fmt_time(s.median_ci.1),
+        s.n
+    );
+    s
+}
+
+/// Render seconds human-readably (ns/us/ms/s).
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{secs:.3} s")
+    }
+}
+
+/// Number of samples for benches: `IGG_BENCH_SAMPLES` or the default.
+pub fn bench_samples(default: usize) -> usize {
+    std::env::var("IGG_BENCH_SAMPLES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_calls() {
+        let mut calls = 0;
+        let s = measure(5, 2, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.min >= 0.0 && s.median >= s.min && s.median <= s.max);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(3e-9).ends_with("ns"));
+        assert!(fmt_time(3e-6).ends_with("us"));
+        assert!(fmt_time(3e-3).ends_with("ms"));
+        assert!(fmt_time(3.0).ends_with(" s"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Benchmark harness (criterion stand-in) and the weak-scaling drivers that
+//! regenerate the paper's figures.
+//!
+//! Statistical protocol matches the paper: every configuration is sampled
+//! repeatedly, the **median** is reported with the distribution-free **95%
+//! confidence interval** of the median (the paper uses 20 samples; the
+//! benches default lower to fit CI time, configurable via env).
+
+pub mod measure;
+pub mod report;
+pub mod scaling;
+
+pub use measure::{measure, measure_named};
+pub use report::{markdown_table, write_json_report};
+pub use scaling::{PerfModel, ScalingRow};

@@ -1,0 +1,108 @@
+//! Report emitters: markdown tables for stdout, JSON files for archival
+//! (the raw-data analog of the paper's `paper/` directory).
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::measure::fmt_time;
+use super::scaling::ScalingRow;
+
+/// Render scaling rows as the markdown table printed by the benches —
+/// the same columns as the paper's figures: P, topology, median step time
+/// with CI, aggregate T_eff, parallel efficiency.
+pub fn markdown_table(title: &str, rows: &[ScalingRow]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("\n### {title}\n\n"));
+    s.push_str("| P | topology | median t/step | 95% CI | T_eff total | efficiency |\n");
+    s.push_str("|---:|:---:|---:|:---:|---:|---:|\n");
+    for r in rows {
+        s.push_str(&format!(
+            "| {} | {}x{}x{} | {} | [{}, {}] | {:.2} GB/s | {:.1}% |\n",
+            r.nranks,
+            r.dims[0],
+            r.dims[1],
+            r.dims[2],
+            fmt_time(r.median_step_s),
+            fmt_time(r.ci.0),
+            fmt_time(r.ci.1),
+            r.total_t_eff_gbs,
+            r.efficiency * 100.0
+        ));
+    }
+    s
+}
+
+pub fn rows_to_json(rows: &[ScalingRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("nranks", Json::Num(r.nranks as f64)),
+                    ("dims", Json::arr_usize(&r.dims)),
+                    ("median_step_s", Json::Num(r.median_step_s)),
+                    ("ci_lo_s", Json::Num(r.ci.0)),
+                    ("ci_hi_s", Json::Num(r.ci.1)),
+                    ("total_t_eff_gbs", Json::Num(r.total_t_eff_gbs)),
+                    ("efficiency", Json::Num(r.efficiency)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Write a JSON report (creating parent dirs); used by benches and the
+/// `scaling` CLI subcommand.
+pub fn write_json_report(path: impl AsRef<Path>, body: Json) -> anyhow::Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, body.to_string())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(p: usize, e: f64) -> ScalingRow {
+        ScalingRow {
+            nranks: p,
+            dims: [p, 1, 1],
+            median_step_s: 1e-3 / e,
+            ci: (0.9e-3, 1.2e-3),
+            total_t_eff_gbs: 3.0 * p as f64,
+            efficiency: e,
+        }
+    }
+
+    #[test]
+    fn table_contains_all_rows() {
+        let t = markdown_table("Fig 2", &[row(1, 1.0), row(8, 0.93)]);
+        assert!(t.contains("Fig 2"));
+        assert!(t.contains("| 1 |"));
+        assert!(t.contains("| 8 |"));
+        assert!(t.contains("93.0%"));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let j = rows_to_json(&[row(1, 1.0), row(27, 0.91)]);
+        let parsed = crate::util::json::Json::from_str(&j.to_string()).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[1].get("nranks").unwrap().as_usize(), Some(27));
+    }
+
+    #[test]
+    fn write_report_creates_dirs() {
+        let dir = std::env::temp_dir().join("igg_test_report");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("sub/report.json");
+        write_json_report(&path, Json::Num(1.0)).unwrap();
+        assert!(path.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,294 @@
+//! Weak-scaling measurement (real runs) and the calibrated analytic model
+//! that extends the curves to the paper's scales (2197 / 1024 GPUs).
+//!
+//! Real runs use ranks-as-threads, so they are limited by the host's cores;
+//! the analytic model is calibrated from measured single-rank compute times
+//! and the netmodel's per-plane transit, then evaluated at any process
+//! count. Model structure (per step, worst-case interior rank):
+//!
+//! ```text
+//! t_halo(P)  = sum over exchanged dims d with neighbours:
+//!                f_serial * (latency + plane_bytes_d / bw + t_pack_d)
+//! no hiding:  t_step = t_comp + t_halo
+//! hiding:     t_step = t_boundary + max(t_inner, t_halo) (+ join overhead)
+//! efficiency(P) = t_step(1) / t_step(P)
+//! ```
+//!
+//! `f_serial` absorbs the engine's per-dimension serialization (recv waits
+//! after sends within a dim) and is calibrated against a measured multi-rank
+//! point when available.
+
+use crate::coordinator::apps::{self};
+use crate::coordinator::config::{AppKind, Config};
+use crate::coordinator::launcher::run_ranks;
+use crate::coordinator::metrics::RunMetrics;
+use crate::halo::slicing::plane_len;
+use crate::mpisim::NetModel;
+use crate::overlap::regions::split_regions;
+use crate::util::stats::{median, median_ci95};
+
+/// One row of a weak-scaling table (one process count).
+#[derive(Debug, Clone)]
+pub struct ScalingRow {
+    pub nranks: usize,
+    pub dims: [usize; 3],
+    pub median_step_s: f64,
+    pub ci: (f64, f64),
+    pub total_t_eff_gbs: f64,
+    /// weak-scaling parallel efficiency vs the 1-rank row, normalized for
+    /// core time-sharing (see [`normalized_efficiency`])
+    pub efficiency: f64,
+}
+
+/// Weak-scaling efficiency on a ranks-as-threads testbed.
+///
+/// With `c` physical cores and `P > c` ranks, the ranks time-share: even a
+/// perfectly scaling system takes `t_P = P/c * t_1` of wall clock. The
+/// efficiency that corresponds to the paper's (one device per rank) is
+/// therefore `t_1 * P / (t_P * min(P, c))`: it strips ideal time-sharing
+/// and keeps every real cost — halo transit, pack/unpack, scheduler
+/// overhead, contention. With `c >= P` it reduces to the plain `t_1/t_P`.
+pub fn normalized_efficiency(t1: f64, tp: f64, nranks: usize) -> f64 {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let concurrency = nranks.min(cores) as f64;
+    t1 * nranks as f64 / (tp * concurrency)
+}
+
+/// Dispatch an application run on every rank; returns aggregated metrics.
+pub fn run_app_once(cfg: &Config, warmup: usize) -> anyhow::Result<RunMetrics> {
+    let results = run_ranks(cfg, move |ctx| match ctx.cfg.app {
+        AppKind::Diffusion => apps::diffusion::run_with_warmup(&ctx, warmup),
+        AppKind::Twophase => apps::twophase::run_with_warmup(&ctx, warmup),
+    })?;
+    Ok(RunMetrics::new(results.into_iter().map(|r| r.metrics).collect()))
+}
+
+/// Measured weak scaling over `ranks`, `samples` runs each.
+pub fn weak_scaling(
+    base: &Config,
+    ranks: &[usize],
+    samples: usize,
+    warmup_steps: usize,
+) -> anyhow::Result<Vec<ScalingRow>> {
+    anyhow::ensure!(!ranks.is_empty() && samples >= 1);
+    let mut rows = Vec::new();
+    let mut t1 = f64::NAN;
+    for &p in ranks {
+        let cfg = Config { nranks: p, ..base.clone() };
+        let mut step_times = Vec::with_capacity(samples);
+        let mut last: Option<RunMetrics> = None;
+        for _ in 0..samples {
+            let rm = run_app_once(&cfg, warmup_steps)?;
+            step_times.push(rm.step_time_s());
+            last = Some(rm);
+        }
+        let med = median(&step_times);
+        if rows.is_empty() {
+            t1 = med;
+        }
+        let rm = last.expect("at least one sample");
+        rows.push(ScalingRow {
+            nranks: p,
+            dims: dims_for(&cfg)?,
+            median_step_s: med,
+            ci: median_ci95(&step_times),
+            total_t_eff_gbs: rm.total_t_eff_gbs(),
+            efficiency: normalized_efficiency(t1, med, p),
+        });
+    }
+    Ok(rows)
+}
+
+fn dims_for(cfg: &Config) -> anyhow::Result<[usize; 3]> {
+    crate::grid::topology::select_dims(cfg.nranks, cfg.local, cfg.dims)
+}
+
+/// The calibrated analytic weak-scaling model.
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    /// measured single-rank full-interior step time
+    pub t_comp_s: f64,
+    /// measured inner-region and boundary-slab times (when hiding)
+    pub t_inner_s: f64,
+    pub t_boundary_s: f64,
+    /// measured pack+unpack cost per plane, per dim
+    pub t_pack_s: [f64; 3],
+    pub plane_bytes: [usize; 3],
+    pub net: NetModel,
+    pub hide: bool,
+    /// per-dimension serialization factor of the halo engine
+    pub f_serial: f64,
+    /// per-step compute-time jitter (std dev), driving the bulk-synchronous
+    /// straggler term: E[max of P iid times] ~ mu + sigma * sqrt(2 ln P)
+    pub sigma_s: f64,
+}
+
+impl PerfModel {
+    /// Calibrate from single-rank measurements of `cfg`'s app/local size.
+    pub fn calibrate(cfg: &Config, samples: usize) -> anyhow::Result<Self> {
+        use std::time::Instant;
+        let local = cfg.local;
+        // full-step compute time (single rank, no comm)
+        let single = Config { nranks: 1, net: NetModel::ideal(), ..cfg.clone() };
+        let mut t_comp = Vec::new();
+        for _ in 0..samples.max(7) {
+            let rm = run_app_once(&single, 1)?;
+            t_comp.push(rm.step_time_s());
+        }
+        let t_comp_s = median(&t_comp);
+        // MAD, not std: timing samples on a shared container are heavy-
+        // tailed and a single scheduler hiccup would otherwise dominate the
+        // straggler term of the model.
+        let sigma_s = crate::util::stats::mad_sigma(&t_comp);
+
+        // inner/boundary split under the configured widths (native timing
+        // of the region decomposition; good enough for both backends since
+        // the ratio is geometric)
+        let (t_inner_s, t_boundary_s) = match cfg.effective_hide() {
+            Some(w) => {
+                let rs = split_regions(local, w)?;
+                let interior_cells: usize = local.iter().map(|&n| n - 2).product();
+                let frac_inner = rs.inner.cells() as f64 / interior_cells as f64;
+                (t_comp_s * frac_inner, t_comp_s * (1.0 - frac_inner))
+            }
+            None => (t_comp_s, 0.0),
+        };
+
+        // pack/unpack per plane per dim
+        let mut t_pack_s = [0.0f64; 3];
+        let mut plane_bytes = [0usize; 3];
+        let f = crate::physics::Field3D::filled(local, 1.0);
+        for d in 0..3 {
+            let cells = plane_len(local, d);
+            plane_bytes[d] = cells * 8;
+            let mut buf = vec![0.0; cells];
+            let reps = 50;
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                crate::halo::pack_plane(&f, d, 1, &mut buf);
+            }
+            t_pack_s[d] = t0.elapsed().as_secs_f64() / reps as f64 * 2.0; // pack + unpack
+        }
+
+        Ok(PerfModel {
+            t_comp_s,
+            t_inner_s,
+            t_boundary_s,
+            t_pack_s,
+            plane_bytes,
+            net: cfg.net,
+            hide: cfg.effective_hide().is_some(),
+            f_serial: 2.0,
+            sigma_s,
+        })
+    }
+
+    /// Modeled halo time for a rank with `active[d]` exchanged sides per dim.
+    pub fn t_halo(&self, active: [usize; 3]) -> f64 {
+        let mut t = 0.0;
+        for d in 0..3 {
+            if active[d] == 0 {
+                continue;
+            }
+            let transit = self.net.latency_s + self.plane_bytes[d] as f64 / self.net.bw_bytes_per_s;
+            // both sides of a dim proceed concurrently; serialization across
+            // phases is captured by f_serial
+            t += self.f_serial * (transit + self.t_pack_s[d]) * (active[d] as f64 / 2.0).max(1.0);
+        }
+        t
+    }
+
+    /// Modeled per-step time for the worst rank of a `dims` topology.
+    pub fn t_step(&self, dims: [usize; 3]) -> f64 {
+        let active = [
+            if dims[0] > 1 { 2 } else { 0 },
+            if dims[1] > 1 { 2 } else { 0 },
+            if dims[2] > 1 { 2 } else { 0 },
+        ];
+        let th = self.t_halo(active);
+        if self.hide {
+            self.t_boundary_s + self.t_inner_s.max(th)
+        } else {
+            self.t_comp_s + th
+        }
+    }
+
+    /// Bulk-synchronous straggler cost at P ranks: every step ends at the
+    /// slowest rank, and for iid per-rank jitter the expected maximum is
+    /// ~ sigma * sqrt(2 ln P) above the mean. This is the mechanism that
+    /// keeps real weak scaling below 100% even when communication is fully
+    /// hidden (the paper's 93% at 2197 GPUs despite hiding).
+    pub fn t_straggler(&self, nranks: usize) -> f64 {
+        if nranks <= 1 {
+            0.0
+        } else {
+            self.sigma_s * (2.0 * (nranks as f64).ln()).sqrt()
+        }
+    }
+
+    /// Modeled weak-scaling efficiency at `nranks` (auto topology).
+    pub fn efficiency(&self, nranks: usize) -> anyhow::Result<f64> {
+        let dims = crate::mpisim::dims_create(nranks, [0, 0, 0])?;
+        let t1 = if self.hide {
+            self.t_boundary_s + self.t_inner_s
+        } else {
+            self.t_comp_s
+        };
+        Ok(t1 / (self.t_step(dims) + self.t_straggler(nranks)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(hide: bool, net: NetModel) -> PerfModel {
+        PerfModel {
+            t_comp_s: 1e-3,
+            t_inner_s: 8e-4,
+            t_boundary_s: 2e-4,
+            t_pack_s: [1e-6; 3],
+            plane_bytes: [32 * 32 * 8; 3],
+            net,
+            hide,
+            f_serial: 2.0,
+            sigma_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn ideal_network_is_flat() {
+        let m = model(false, NetModel::ideal());
+        // halo cost = pack only; tiny vs 1 ms compute
+        let e = m.efficiency(2197).unwrap();
+        assert!(e > 0.95, "{e}");
+    }
+
+    #[test]
+    fn hiding_beats_no_hiding_on_slow_networks() {
+        let slow = NetModel { latency_s: 1e-4, bw_bytes_per_s: 1e9 };
+        let e_plain = model(false, slow).efficiency(27).unwrap();
+        let e_hide = model(true, slow).efficiency(27).unwrap();
+        assert!(e_hide > e_plain, "hide {e_hide} <= plain {e_plain}");
+    }
+
+    #[test]
+    fn efficiency_monotone_in_neighbor_count() {
+        let net = NetModel { latency_s: 1e-5, bw_bytes_per_s: 5e9 };
+        let m = model(false, net);
+        let e2 = m.efficiency(2).unwrap(); // 1 exchanged dim
+        let e8 = m.efficiency(8).unwrap(); // 3 exchanged dims
+        let e27 = m.efficiency(27).unwrap(); // 3 dims (interior ranks)
+        assert!(e2 > e8, "{e2} vs {e8}");
+        assert!((e8 - e27).abs() < 1e-9, "plateau once all dims exchange");
+    }
+
+    #[test]
+    fn hidden_efficiency_saturates_when_comm_fits_inner() {
+        let net = NetModel { latency_s: 1e-6, bw_bytes_per_s: 10e9 };
+        let m = model(true, net);
+        // t_halo ~ 2*(1e-6 + 8192/1e10 + 1e-6)*3 ~ 1.7e-5 << t_inner 8e-4
+        let e = m.efficiency(2197).unwrap();
+        assert!((e - 1.0).abs() < 1e-6, "fully hidden -> flat at 1.0, got {e}");
+    }
+}

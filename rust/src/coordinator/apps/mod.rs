@@ -1,0 +1,139 @@
+//! The applications: distributed drivers for the two solvers.
+//!
+//! Each `run` is the Rust analog of the paper's Fig. 1 program: build the
+//! implicit global grid (done by the launcher), set up global initial
+//! conditions from global coordinates, time-step with `update_halo!` (hidden
+//! behind computation when configured), and report metrics.
+
+pub mod diffusion;
+pub mod twophase;
+
+use crate::coordinator::config::{AppKind, Config};
+use crate::coordinator::launcher::run_ranks;
+use crate::coordinator::metrics::StepMetrics;
+use crate::physics::Field3D;
+use crate::OVERLAP;
+
+/// Result of one rank's application run.
+pub struct AppResult {
+    pub metrics: StepMetrics,
+    /// Final primary field (T for diffusion, Pe for two-phase).
+    pub field: Field3D,
+    /// Final secondary field (phi for two-phase).
+    pub extra: Option<Field3D>,
+}
+
+/// Global grid size implied by `cfg` (dims_create + the overlap formula),
+/// without building a network.
+pub fn global_dims(cfg: &Config) -> anyhow::Result<[usize; 3]> {
+    let dims = crate::grid::topology::select_dims(cfg.nranks, cfg.local, cfg.dims)?;
+    let mut g = [0usize; 3];
+    for d in 0..3 {
+        g[d] = dims[d] * (cfg.local[d] - OVERLAP) + OVERLAP;
+    }
+    Ok(g)
+}
+
+/// The end-to-end correctness check behind `igg validate`: run `cfg` on its
+/// N ranks, gather the global field(s), run the identical physics on one
+/// rank covering the whole global grid, and compare bitwise. Returns a
+/// human-readable report; errors if any deviation is found.
+pub fn validate_equivalence(cfg: &Config) -> anyhow::Result<String> {
+    let gdims = global_dims(cfg)?;
+    // The PJRT backend would need artifacts for the global size too; the
+    // native backend is bitwise-identical code either way, so validation
+    // always runs native (the runtime tests compare native vs pjrt).
+    let multi_cfg = Config { backend: crate::runtime::ExecBackend::Native, ..cfg.clone() };
+    let single_cfg = Config {
+        nranks: 1,
+        dims: [0; 3],
+        local: gdims,
+        hide: None,
+        backend: crate::runtime::ExecBackend::Native,
+        ..cfg.clone()
+    };
+
+    let app = cfg.app;
+    let multi = run_ranks(&multi_cfg, move |ctx| {
+        let res = match app {
+            AppKind::Diffusion => diffusion::run(&ctx)?,
+            AppKind::Twophase => twophase::run(&ctx)?,
+        };
+        let primary = ctx.grid.gather_check_overlap(&res.field, 0);
+        let extra = res.extra.map(|f| ctx.grid.gather_check_overlap(&f, 0));
+        Ok(primary.map(|p| (p, extra.flatten())))
+    })?;
+    let (primary, extra) = multi
+        .into_iter()
+        .next()
+        .flatten()
+        .ok_or_else(|| anyhow::anyhow!("root rank produced no gather"))?;
+    let (global_primary, dev_primary) = primary;
+
+    let single = run_ranks(&single_cfg, move |ctx| {
+        let res = match app {
+            AppKind::Diffusion => diffusion::run(&ctx)?,
+            AppKind::Twophase => twophase::run(&ctx)?,
+        };
+        Ok((res.field, res.extra))
+    })?;
+    let (single_primary, single_extra) = single.into_iter().next().expect("one rank");
+
+    let diff_primary = global_primary.max_abs_diff(&single_primary);
+    let mut report = format!(
+        "validate {}: ranks={} local={:?} global={:?} nt={}\n\
+           overlap coherence (primary): {dev_primary:e}\n\
+           N-rank vs 1-rank (primary) : {diff_primary:e}\n",
+        cfg.app.name(),
+        cfg.nranks,
+        cfg.local,
+        gdims,
+        cfg.nt,
+    );
+    let mut ok = dev_primary == 0.0 && diff_primary == 0.0;
+    if let (Some((global_extra, dev_extra)), Some(single_extra)) = (extra, single_extra) {
+        let diff_extra = global_extra.max_abs_diff(&single_extra);
+        report.push_str(&format!(
+            "  overlap coherence (extra)  : {dev_extra:e}\n\
+             \x20 N-rank vs 1-rank (extra)   : {diff_extra:e}\n"
+        ));
+        ok &= dev_extra == 0.0 && diff_extra == 0.0;
+    }
+    report.push_str(if ok { "PASS (bitwise equal)" } else { "FAIL" });
+    anyhow::ensure!(ok, "{report}");
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_dims_formula() {
+        let cfg = Config { nranks: 8, local: [10, 10, 10], ..Default::default() };
+        assert_eq!(global_dims(&cfg).unwrap(), [18, 18, 18]);
+        let cfg1 = Config { nranks: 1, local: [10, 10, 10], ..Default::default() };
+        assert_eq!(global_dims(&cfg1).unwrap(), [10, 10, 10]);
+    }
+
+    #[test]
+    fn validate_equivalence_diffusion() {
+        let cfg = Config { nranks: 4, local: [8, 8, 8], nt: 5, ..Default::default() };
+        let report = validate_equivalence(&cfg).unwrap();
+        assert!(report.contains("PASS"), "{report}");
+    }
+
+    #[test]
+    fn validate_equivalence_twophase_hidden() {
+        let cfg = Config {
+            app: AppKind::Twophase,
+            nranks: 8,
+            local: [8, 8, 8],
+            nt: 4,
+            hide: Some(crate::overlap::HideWidths([2, 2, 2])),
+            ..Default::default()
+        };
+        let report = validate_equivalence(&cfg).unwrap();
+        assert!(report.contains("PASS"), "{report}");
+    }
+}

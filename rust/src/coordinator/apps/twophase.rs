@@ -1,0 +1,192 @@
+//! Distributed two-phase flow — the paper's Fig. 3 workload (porosity-wave
+//! core; see DESIGN.md §2 for the solver-reduction note).
+//!
+//! Two halo-exchanged center fields (Pe, phi) advance per pseudo-transient
+//! iteration; the staggered Darcy fluxes stay kernel-local. Initial
+//! condition: porosity blob low in the global domain, zero effective
+//! pressure; buoyancy then drives a rising porosity wave.
+
+use std::time::Instant;
+
+use crate::coordinator::config::Config;
+use crate::coordinator::launcher::RankCtx;
+use crate::coordinator::metrics::StepMetrics;
+use crate::overlap::scheduler::{hide_communication, plain_step};
+use crate::physics::{twophase, Field3D, Region, TwophaseParams};
+use crate::runtime::{artifact_dir, ArtifactStore, ExecBackend, TwophaseExecutor};
+
+struct State {
+    pe: Field3D,
+    phi: Field3D,
+    pe2: Field3D,
+    phi2: Field3D,
+    p: TwophaseParams,
+    exec: TwophaseExecutor,
+}
+
+impl State {
+    fn compute(&mut self, r: Region) -> anyhow::Result<()> {
+        self.exec.step_region(&self.pe, &self.phi, &self.p, r, &mut self.pe2, &mut self.phi2)
+    }
+}
+
+pub fn initial_porosity(ctx: &RankCtx) -> Field3D {
+    twophase::porosity_blob(
+        ctx.grid.local_dims(),
+        |x, y, z| ctx.grid.global_frac(x, y, z),
+        0.01,
+        0.04,
+        0.3,
+    )
+}
+
+pub fn params_for(cfg: &Config, dims_g: [usize; 3]) -> TwophaseParams {
+    let dx = cfg.lx / (dims_g[0].max(2) - 1) as f64;
+    let dy = cfg.lx / (dims_g[1].max(2) - 1) as f64;
+    let dz = cfg.lx / (dims_g[2].max(2) - 1) as f64;
+    TwophaseParams::stable(dx, dy, dz)
+}
+
+fn make_executor(ctx: &RankCtx) -> anyhow::Result<TwophaseExecutor> {
+    match ctx.cfg.backend {
+        ExecBackend::Native => Ok(TwophaseExecutor::native()),
+        ExecBackend::Pjrt => {
+            let store = ArtifactStore::load(artifact_dir())?;
+            let widths = ctx.cfg.effective_hide().map(|h| h.0);
+            TwophaseExecutor::pjrt(ctx.grid.local_dims(), widths, &store)
+        }
+    }
+}
+
+pub fn run_with_warmup(ctx: &RankCtx, warmup: usize) -> anyhow::Result<super::AppResult> {
+    let local = ctx.grid.local_dims();
+    let p = params_for(&ctx.cfg, ctx.grid.dims_g());
+    let phi = initial_porosity(ctx);
+    let mut state = State {
+        pe: Field3D::zeros(local),
+        pe2: Field3D::zeros(local),
+        phi2: phi.clone(),
+        phi,
+        p,
+        exec: make_executor(ctx)?,
+    };
+
+    // Dimensions without neighbours gain nothing from boundary slabs;
+    // prune them on the native backend (PJRT widths must match artifacts).
+    let hide = ctx.cfg.effective_hide().map(|w| match ctx.cfg.backend {
+        ExecBackend::Native => crate::overlap::scheduler::prune_widths(&ctx.grid, w),
+        ExecBackend::Pjrt => w,
+    });
+
+    let mut measured_wall = 0.0f64;
+    let total = ctx.cfg.nt + warmup;
+    for it in 0..total {
+        if it == warmup {
+            ctx.grid.comm().barrier();
+            measured_wall = 0.0;
+        }
+        let t0 = Instant::now();
+        match hide {
+            Some(widths) => {
+                hide_communication(
+                    &ctx.grid,
+                    widths,
+                    local,
+                    &mut state,
+                    |s, r| s.compute(r),
+                    |s| vec![&mut s.pe2, &mut s.phi2],
+                )?;
+            }
+            None => {
+                plain_step(&ctx.grid, local, &mut state, |s, r| s.compute(r), |s| {
+                    vec![&mut s.pe2, &mut s.phi2]
+                })?;
+            }
+        }
+        std::mem::swap(&mut state.pe, &mut state.pe2);
+        std::mem::swap(&mut state.phi, &mut state.phi2);
+        measured_wall += t0.elapsed().as_secs_f64();
+    }
+
+    let metrics = StepMetrics {
+        rank: ctx.grid.rank(),
+        nranks: ctx.grid.nprocs(),
+        steps: ctx.cfg.nt.max(1),
+        wall_s: measured_wall,
+        local_cells: local.iter().product(),
+        d_u: 2, // Pe and phi read+updated
+        d_k: 0,
+        halo: ctx.grid.halo_stats(),
+        final_norm: state.pe.abs_max(),
+    };
+    Ok(super::AppResult { metrics, field: state.pe, extra: Some(state.phi) })
+}
+
+pub fn run(ctx: &RankCtx) -> anyhow::Result<super::AppResult> {
+    run_with_warmup(ctx, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::{AppKind, Config};
+    use crate::coordinator::launcher::run_ranks;
+    use crate::overlap::HideWidths;
+
+    fn cfg(nranks: usize, local: usize, nt: usize) -> Config {
+        Config { app: AppKind::Twophase, local: [local; 3], nranks, nt, ..Default::default() }
+    }
+
+    #[test]
+    fn single_rank_wave_stays_physical() {
+        let results = run_ranks(&cfg(1, 12, 50), |ctx| run(&ctx)).unwrap();
+        let r = &results[0];
+        assert!(r.field.all_finite());
+        let phi = r.extra.as_ref().unwrap();
+        assert!(phi.min() > 0.0 && phi.max() < 1.0, "porosity stays in (0,1)");
+        // buoyancy must generate nonzero effective pressure
+        assert!(r.metrics.final_norm > 1e-12);
+    }
+
+    #[test]
+    fn distributed_equals_single_rank_both_fields() {
+        let multi = run_ranks(&cfg(8, 10, 10), |ctx| {
+            let res = run(&ctx)?;
+            let pe = ctx.grid.gather_check_overlap(&res.field, 0);
+            let phi = ctx.grid.gather_check_overlap(res.extra.as_ref().unwrap(), 0);
+            Ok(pe.zip(phi))
+        })
+        .unwrap();
+        let ((pe_m, dev_pe), (phi_m, dev_phi)) = multi[0].clone().expect("root");
+        assert_eq!(dev_pe, 0.0);
+        assert_eq!(dev_phi, 0.0);
+
+        let single = run_ranks(&cfg(1, 18, 10), |ctx| {
+            let res = run(&ctx)?;
+            Ok((res.field, res.extra.unwrap()))
+        })
+        .unwrap();
+        assert_eq!(pe_m.max_abs_diff(&single[0].0), 0.0, "Pe global fields bitwise equal");
+        assert_eq!(phi_m.max_abs_diff(&single[0].1), 0.0, "phi global fields bitwise equal");
+    }
+
+    #[test]
+    fn hidden_communication_matches_plain() {
+        let base = cfg(8, 12, 8);
+        let hidden = Config { hide: Some(HideWidths([3, 2, 2])), ..base.clone() };
+        let a = run_ranks(&base, |ctx| {
+            let r = run(&ctx)?;
+            Ok((r.field.into_vec(), r.extra.unwrap().into_vec()))
+        })
+        .unwrap();
+        let b = run_ranks(&hidden, |ctx| {
+            let r = run(&ctx)?;
+            Ok((r.field.into_vec(), r.extra.unwrap().into_vec()))
+        })
+        .unwrap();
+        for ((pa, fa), (pb, fb)) in a.iter().zip(&b) {
+            assert_eq!(pa, pb);
+            assert_eq!(fa, fb);
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! Run configuration: every knob of the system in one struct, buildable
+//! from CLI flags or a JSON config file, serializable into run reports.
+
+use crate::grid::GridOptions;
+use crate::halo::TransferPath;
+use crate::mpisim::NetModel;
+use crate::overlap::HideWidths;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+pub use crate::runtime::ExecBackend as Backend;
+
+/// Which application the coordinator runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AppKind {
+    /// 3-D heat diffusion (paper Fig. 1 / Fig. 2 workload).
+    Diffusion,
+    /// Two-phase flow (paper Fig. 3 workload).
+    Twophase,
+}
+
+impl AppKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "diffusion" => Ok(AppKind::Diffusion),
+            "twophase" => Ok(AppKind::Twophase),
+            _ => anyhow::bail!("unknown app '{s}' (want diffusion|twophase)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AppKind::Diffusion => "diffusion",
+            AppKind::Twophase => "twophase",
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub app: AppKind,
+    /// Local (per-rank) base grid size.
+    pub local: [usize; 3],
+    pub nranks: usize,
+    /// Process topology; 0 = automatic.
+    pub dims: [usize; 3],
+    pub periods: [bool; 3],
+    /// Time steps (diffusion) or pseudo-transient iterations (twophase).
+    pub nt: usize,
+    /// `Some(widths)` enables hide_communication.
+    pub hide: Option<HideWidths>,
+    pub backend: Backend,
+    pub path: TransferPath,
+    pub pipeline_chunks: usize,
+    pub net: NetModel,
+    pub seed: u64,
+    /// Physical domain edge length (cubic domain, as in the paper).
+    pub lx: f64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            app: AppKind::Diffusion,
+            local: [32, 32, 32],
+            nranks: 1,
+            dims: [0; 3],
+            periods: [false; 3],
+            nt: 100,
+            hide: None,
+            backend: Backend::Native,
+            path: TransferPath::Rdma,
+            pipeline_chunks: 4,
+            net: NetModel::ideal(),
+            seed: 42,
+            lx: 1.0,
+        }
+    }
+}
+
+impl Config {
+    /// Build from parsed CLI flags (see `main.rs` for the flag spec).
+    pub fn from_args(args: &Args) -> anyhow::Result<Self> {
+        let mut cfg = Config::default();
+        if let Some(app) = args.get("app") {
+            cfg.app = AppKind::parse(app)?;
+        }
+        if let Some(nx) = args.get_usize("nx")? {
+            cfg.local = [nx, nx, nx];
+        }
+        if let Some(ny) = args.get_usize("ny")? {
+            cfg.local[1] = ny;
+        }
+        if let Some(nz) = args.get_usize("nz")? {
+            cfg.local[2] = nz;
+        }
+        if let Some(r) = args.get_usize("ranks")? {
+            cfg.nranks = r;
+        }
+        if let Some(d) = args.get_usize_list("dims")? {
+            anyhow::ensure!(d.len() == 3, "--dims needs dx,dy,dz");
+            cfg.dims = [d[0], d[1], d[2]];
+        }
+        if let Some(nt) = args.get_usize("nt")? {
+            cfg.nt = nt;
+        }
+        if let Some(h) = args.get("hide") {
+            cfg.hide = Some(HideWidths::parse(h)?);
+        }
+        if let Some(b) = args.get("backend") {
+            cfg.backend = Backend::parse(b)?;
+        }
+        if let Some(p) = args.get("path") {
+            cfg.path = TransferPath::parse(p)?;
+        }
+        if let Some(c) = args.get_usize("chunks")? {
+            cfg.pipeline_chunks = c;
+        }
+        if let Some(n) = args.get("net") {
+            cfg.net = NetModel::parse(n)?;
+        }
+        if let Some(s) = args.get_usize("seed")? {
+            cfg.seed = s as u64;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.nranks >= 1, "need at least one rank");
+        anyhow::ensure!(self.nt >= 1, "need at least one step");
+        anyhow::ensure!(self.pipeline_chunks >= 1, "need at least one pipeline chunk");
+        for (d, &n) in self.local.iter().enumerate() {
+            anyhow::ensure!(n >= 3, "local dim {d} = {n} too small (need >= 3)");
+        }
+        Ok(())
+    }
+
+    pub fn grid_options(&self) -> GridOptions {
+        GridOptions {
+            dims: self.dims,
+            periods: self.periods,
+            path: self.path,
+            pipeline_chunks: self.pipeline_chunks,
+        }
+    }
+
+    /// Hide widths to use, defaulting per-app like the paper's drivers
+    /// (Fig. 1 uses (16, 2, 2); scaled to the local grid here).
+    pub fn effective_hide(&self) -> Option<HideWidths> {
+        self.hide
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("app", Json::Str(self.app.name().into())),
+            ("local", Json::arr_usize(&self.local)),
+            ("nranks", Json::Num(self.nranks as f64)),
+            ("dims", Json::arr_usize(&self.dims)),
+            ("nt", Json::Num(self.nt as f64)),
+            (
+                "hide",
+                match self.hide {
+                    Some(HideWidths(w)) => Json::arr_usize(&w),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "backend",
+                Json::Str(match self.backend {
+                    Backend::Native => "native".into(),
+                    Backend::Pjrt => "pjrt".into(),
+                }),
+            ),
+            (
+                "path",
+                Json::Str(match self.path {
+                    TransferPath::Rdma => "rdma".into(),
+                    TransferPath::Staged => "staged".into(),
+                }),
+            ),
+            ("pipeline_chunks", Json::Num(self.pipeline_chunks as f64)),
+            ("net_latency_s", Json::Num(self.net.latency_s)),
+            (
+                "net_bw_bytes_per_s",
+                if self.net.bw_bytes_per_s.is_finite() {
+                    Json::Num(self.net.bw_bytes_per_s)
+                } else {
+                    Json::Null
+                },
+            ),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Command;
+
+    fn cmd() -> Command {
+        Command::new("run", "test")
+            .value("app", None, "")
+            .value("nx", None, "")
+            .value("ny", None, "")
+            .value("nz", None, "")
+            .value("ranks", None, "")
+            .value("dims", None, "")
+            .value("nt", None, "")
+            .value("hide", None, "")
+            .value("backend", None, "")
+            .value("path", None, "")
+            .value("chunks", None, "")
+            .value("net", None, "")
+            .value("seed", None, "")
+    }
+
+    fn parse(argv: &[&str]) -> anyhow::Result<Config> {
+        let args = cmd().parse(&argv.iter().map(|s| s.to_string()).collect::<Vec<_>>())?;
+        Config::from_args(&args)
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let c = parse(&["--app", "twophase", "--nx", "16", "--ranks", "8", "--hide", "4,2,2"])
+            .unwrap();
+        assert_eq!(c.app, AppKind::Twophase);
+        assert_eq!(c.local, [16, 16, 16]);
+        assert_eq!(c.nranks, 8);
+        assert_eq!(c.hide, Some(HideWidths([4, 2, 2])));
+    }
+
+    #[test]
+    fn anisotropic_local() {
+        let c = parse(&["--nx", "24", "--ny", "16", "--nz", "12"]).unwrap();
+        assert_eq!(c.local, [24, 16, 12]);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(parse(&["--app", "bogus"]).is_err());
+        assert!(parse(&["--nx", "2"]).is_err());
+        assert!(parse(&["--backend", "julia"]).is_err());
+        assert!(parse(&["--dims", "1,2"]).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_fields() {
+        let c = parse(&["--app", "diffusion", "--net", "aries"]).unwrap();
+        let j = c.to_json();
+        assert_eq!(j.get("app").unwrap().as_str().unwrap(), "diffusion");
+        assert_eq!(j.get("net_latency_s").unwrap().as_f64().unwrap(), 1.5e-6);
+        let parsed = Json::from_str(&j.to_string()).unwrap();
+        assert_eq!(parsed.get_usize_list("local").unwrap(), vec![32, 32, 32]);
+    }
+}

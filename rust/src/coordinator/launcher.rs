@@ -1,0 +1,111 @@
+//! The rank launcher: spawn N ranks (threads), build each rank's implicit
+//! global grid, run the application closure, collect results in rank order.
+//!
+//! This is the `mpirun`/`srun` analog of the in-process testbed. Each rank
+//! thread is named `igg-rank-<r>` and owns its grid (and, for the pjrt
+//! backend, its own PJRT context — one device per rank, as on the paper's
+//! machine). A panic or error on any rank aborts the run with that rank's
+//! error.
+
+use std::sync::Arc;
+
+use crate::grid::GlobalGrid;
+use crate::mpisim::Network;
+
+use super::config::Config;
+
+/// Everything a rank's application code needs.
+pub struct RankCtx {
+    pub grid: GlobalGrid,
+    pub cfg: Config,
+}
+
+/// Run `f` on `cfg.nranks` ranks; returns the per-rank results in rank
+/// order, or the first error (by rank order).
+pub fn run_ranks<R, F>(cfg: &Config, f: F) -> anyhow::Result<Vec<R>>
+where
+    R: Send + 'static,
+    F: Fn(RankCtx) -> anyhow::Result<R> + Send + Sync + 'static,
+{
+    cfg.validate()?;
+    let net = Network::with_model(cfg.nranks, cfg.net);
+    let f = Arc::new(f);
+    let mut handles = Vec::with_capacity(cfg.nranks);
+    for r in 0..cfg.nranks {
+        let comm = net.comm(r);
+        let cfg = cfg.clone();
+        let f = Arc::clone(&f);
+        let handle = std::thread::Builder::new()
+            .name(format!("igg-rank-{r}"))
+            .spawn(move || -> anyhow::Result<R> {
+                let grid = GlobalGrid::init(comm, cfg.local, cfg.grid_options())?;
+                f(RankCtx { grid, cfg })
+            })
+            .expect("spawn rank thread");
+        handles.push(handle);
+    }
+    let mut out = Vec::with_capacity(cfg.nranks);
+    let mut first_err: Option<anyhow::Error> = None;
+    for (r, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(Ok(v)) => out.push(v),
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(e.context(format!("rank {r}")));
+                }
+            }
+            Err(panic) => {
+                if first_err.is_none() {
+                    let msg = panic
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "opaque panic".into());
+                    first_err = Some(anyhow::anyhow!("rank {r} panicked: {msg}"));
+                }
+            }
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_see_consistent_topology() {
+        let cfg = Config { nranks: 8, local: [8, 8, 8], ..Default::default() };
+        let dims = run_ranks(&cfg, |ctx| Ok((ctx.grid.rank(), ctx.grid.dims()))).unwrap();
+        assert_eq!(dims.len(), 8);
+        for (i, (rank, d)) in dims.iter().enumerate() {
+            assert_eq!(*rank, i, "results in rank order");
+            assert_eq!(*d, [2, 2, 2]);
+        }
+    }
+
+    #[test]
+    fn rank_error_propagates_with_context() {
+        let cfg = Config { nranks: 4, local: [8, 8, 8], ..Default::default() };
+        let err = run_ranks(&cfg, |ctx| -> anyhow::Result<()> {
+            if ctx.grid.rank() == 2 {
+                anyhow::bail!("boom");
+            }
+            // other ranks must not deadlock on collectives with the dead
+            // rank; they simply return
+            Ok(())
+        })
+        .unwrap_err();
+        let s = format!("{err:#}");
+        assert!(s.contains("rank 2") && s.contains("boom"), "{s}");
+    }
+
+    #[test]
+    fn invalid_config_rejected_before_spawn() {
+        let cfg = Config { nranks: 0, ..Default::default() };
+        assert!(run_ranks(&cfg, |_| Ok(())).is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! Performance accounting: per-rank step metrics, the paper's T_eff
+//! (effective memory throughput) and weak-scaling parallel efficiency.
+//!
+//! T_eff is the metric of the companion paper (Omlin & Räss, "High-
+//! performance xPU Stencil Computations in Julia"): an iterative
+//! memory-bounded stencil solver moves at least `A_eff = 2 D_u + D_k` bytes
+//! per iteration (D_u: fields both read and updated — 2 transfers; D_k:
+//! fields only read), so `T_eff = A_eff / t_it` is a hardware-comparable
+//! throughput lower bound.
+
+use crate::halo::HaloStats;
+use crate::util::json::Json;
+
+/// Timing/traffic of one rank's time loop.
+#[derive(Debug, Clone)]
+pub struct StepMetrics {
+    pub rank: usize,
+    pub nranks: usize,
+    pub steps: usize,
+    /// wall-clock of the measured loop (after warm-up), seconds
+    pub wall_s: f64,
+    /// cells in the local base grid
+    pub local_cells: usize,
+    /// fields updated per step (D_u) and read-only (D_k)
+    pub d_u: usize,
+    pub d_k: usize,
+    pub halo: HaloStats,
+    /// solution diagnostic (max |field|) for sanity/regression checks
+    pub final_norm: f64,
+}
+
+impl StepMetrics {
+    pub fn per_step_s(&self) -> f64 {
+        self.wall_s / self.steps as f64
+    }
+
+    /// A_eff in bytes per iteration (f64 fields).
+    pub fn a_eff_bytes(&self) -> f64 {
+        ((2 * self.d_u + self.d_k) * self.local_cells * 8) as f64
+    }
+
+    /// T_eff in GB/s (the paper's headline per-device metric).
+    pub fn t_eff_gbs(&self) -> f64 {
+        self.a_eff_bytes() / self.per_step_s() / 1e9
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rank", Json::Num(self.rank as f64)),
+            ("nranks", Json::Num(self.nranks as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("per_step_s", Json::Num(self.per_step_s())),
+            ("t_eff_gbs", Json::Num(self.t_eff_gbs())),
+            ("halo_bytes_sent", Json::Num(self.halo.bytes_sent as f64)),
+            ("halo_planes_sent", Json::Num(self.halo.planes_sent as f64)),
+            ("final_norm", Json::Num(self.final_norm)),
+        ])
+    }
+}
+
+/// A whole run: the slowest rank defines the step time (bulk-synchronous
+/// execution), as in the paper's measurements.
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    pub per_rank: Vec<StepMetrics>,
+}
+
+impl RunMetrics {
+    pub fn new(per_rank: Vec<StepMetrics>) -> Self {
+        assert!(!per_rank.is_empty());
+        RunMetrics { per_rank }
+    }
+
+    /// Max per-step wall time over ranks.
+    pub fn step_time_s(&self) -> f64 {
+        self.per_rank.iter().map(StepMetrics::per_step_s).fold(0.0, f64::max)
+    }
+
+    /// Sum of T_eff over ranks (aggregate throughput).
+    pub fn total_t_eff_gbs(&self) -> f64 {
+        self.per_rank.iter().map(StepMetrics::t_eff_gbs).sum()
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.per_rank[0].nranks
+    }
+
+    /// Weak-scaling parallel efficiency vs a single-rank reference time.
+    pub fn efficiency_vs(&self, t1_step_s: f64) -> f64 {
+        t1_step_s / self.step_time_s()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("step_time_s", Json::Num(self.step_time_s())),
+            ("total_t_eff_gbs", Json::Num(self.total_t_eff_gbs())),
+            ("ranks", Json::Arr(self.per_rank.iter().map(StepMetrics::to_json).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(rank: usize, wall: f64) -> StepMetrics {
+        StepMetrics {
+            rank,
+            nranks: 2,
+            steps: 10,
+            wall_s: wall,
+            local_cells: 1000,
+            d_u: 1,
+            d_k: 1,
+            halo: HaloStats::default(),
+            final_norm: 1.0,
+        }
+    }
+
+    #[test]
+    fn t_eff_formula() {
+        let x = m(0, 1.0); // 0.1 s/step, A_eff = 3*1000*8 = 24 kB
+        assert!((x.a_eff_bytes() - 24_000.0).abs() < 1e-9);
+        assert!((x.t_eff_gbs() - 24_000.0 / 0.1 / 1e9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn run_uses_slowest_rank() {
+        let r = RunMetrics::new(vec![m(0, 1.0), m(1, 2.0)]);
+        assert!((r.step_time_s() - 0.2).abs() < 1e-15);
+        assert!((r.efficiency_vs(0.19) - 0.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_has_per_rank_entries() {
+        let r = RunMetrics::new(vec![m(0, 1.0), m(1, 2.0)]);
+        let j = r.to_json();
+        assert_eq!(j.get("ranks").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

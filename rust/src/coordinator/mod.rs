@@ -1,0 +1,12 @@
+//! The coordinator: configuration, the rank launcher, the applications
+//! (heat diffusion and two-phase flow), and metrics.
+//!
+//! This is the layer a user of the library interacts with: it owns process
+//! (thread) topology, per-rank lifecycle, the time loop with or without
+//! `hide_communication`, and the performance accounting the paper reports
+//! (T_eff, parallel efficiency, medians with 95% CIs).
+
+pub mod apps;
+pub mod config;
+pub mod launcher;
+pub mod metrics;

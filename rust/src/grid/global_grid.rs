@@ -1,0 +1,301 @@
+//! `GlobalGrid`: init / query / halo-update / finalize.
+
+use std::sync::Mutex;
+
+use crate::halo::{self, HaloEngine, TransferPath};
+use crate::mpisim::{CartComm, Comm};
+use crate::physics::Field3D;
+use crate::OVERLAP;
+
+use super::topology::select_dims;
+
+/// Options for [`GlobalGrid::init`] (the keyword arguments of the paper's
+/// `init_global_grid`).
+#[derive(Debug, Clone)]
+pub struct GridOptions {
+    /// Process-grid dimensions; 0 = choose automatically.
+    pub dims: [usize; 3],
+    /// Periodic boundaries per dimension.
+    pub periods: [bool; 3],
+    /// Halo transfer path (RDMA-like direct, or pipelined host staging).
+    pub path: TransferPath,
+    /// Chunks per message for the staged path's software pipeline.
+    pub pipeline_chunks: usize,
+}
+
+impl Default for GridOptions {
+    fn default() -> Self {
+        GridOptions { dims: [0; 3], periods: [false; 3], path: TransferPath::Rdma, pipeline_chunks: 4 }
+    }
+}
+
+/// The implicit global grid: the local grid's place in the global one, plus
+/// the halo-update engine operating on it.
+pub struct GlobalGrid {
+    cart: CartComm,
+    local: [usize; 3],
+    engine: Mutex<HaloEngine>,
+}
+
+impl GlobalGrid {
+    /// Create the implicit global staggered grid (`init_global_grid`).
+    ///
+    /// `local` is the *base* local grid size; `comm.size()` and
+    /// `opts.dims` determine the process topology.
+    pub fn init(comm: Comm, local: [usize; 3], opts: GridOptions) -> anyhow::Result<Self> {
+        for (d, &n) in local.iter().enumerate() {
+            if n != 1 && n < OVERLAP + 1 {
+                anyhow::bail!("local dimension {d} = {n} is below the minimum {}", OVERLAP + 1);
+            }
+        }
+        let dims = select_dims(comm.size(), local, opts.dims)?;
+        let cart = CartComm::create(comm, dims, opts.periods)?;
+        let engine = HaloEngine::new(&cart, opts.path, opts.pipeline_chunks);
+        Ok(GlobalGrid { cart, local, engine: Mutex::new(engine) })
+    }
+
+    /// Use an existing Cartesian communicator (the paper: "alternatively, an
+    /// MPI communicator can be passed to ImplicitGlobalGrid for usage").
+    pub fn init_cart(cart: CartComm, local: [usize; 3], opts: GridOptions) -> anyhow::Result<Self> {
+        let engine = HaloEngine::new(&cart, opts.path, opts.pipeline_chunks);
+        Ok(GlobalGrid { cart, local, engine: Mutex::new(engine) })
+    }
+
+    // ---- queries --------------------------------------------------------
+
+    pub fn cart(&self) -> &CartComm {
+        &self.cart
+    }
+    pub fn comm(&self) -> &Comm {
+        self.cart.comm()
+    }
+    pub fn rank(&self) -> usize {
+        self.cart.rank()
+    }
+    pub fn nprocs(&self) -> usize {
+        self.cart.size()
+    }
+    pub fn dims(&self) -> [usize; 3] {
+        self.cart.dims()
+    }
+    pub fn coords(&self) -> [usize; 3] {
+        self.cart.coords()
+    }
+    /// Base local grid size (the `(nx, ny, nz)` of `init_global_grid`).
+    pub fn local_dims(&self) -> [usize; 3] {
+        self.local
+    }
+
+    /// Global grid size along `dim` for the *base* grid:
+    /// `n_g = dims · (n − overlap) + overlap` (the paper's `nx_g()`).
+    pub fn n_g(&self, dim: usize) -> usize {
+        self.n_g_of(dim, self.local[dim])
+    }
+
+    /// Global size along `dim` for an array with local size `m` (staggered
+    /// sizes get their own overlap: `ol = OVERLAP + (m - n)`).
+    pub fn n_g_of(&self, dim: usize, m: usize) -> usize {
+        let o = m as i64 - self.local[dim] as i64;
+        debug_assert!((-1..=1).contains(&o), "stagger offset out of range");
+        let ol = OVERLAP as i64 + o;
+        (self.cart.dims()[dim] as i64 * (m as i64 - ol) + ol) as usize
+    }
+
+    /// `[nx_g, ny_g, nz_g]` of the base grid.
+    pub fn dims_g(&self) -> [usize; 3] {
+        [self.n_g(0), self.n_g(1), self.n_g(2)]
+    }
+
+    /// Global index of local cell `i` along `dim` (base grid).
+    pub fn global_index(&self, dim: usize, i: usize) -> usize {
+        debug_assert!(i < self.local[dim]);
+        self.cart.coords()[dim] * (self.local[dim] - OVERLAP) + i
+    }
+
+    /// Physical coordinate of local index `i` of an array staggered by `o`
+    /// along `dim`, with grid spacing `dh` (the paper's `x_g(ix, dx, A)`):
+    /// cell centers at `g·dh`, staggered locations shifted by `−o·dh/2`.
+    pub fn coord(&self, dim: usize, i: usize, o: i32, dh: f64) -> f64 {
+        let stride = self.local[dim] as i64 + o as i64 - (OVERLAP as i64 + o as i64);
+        let g = self.cart.coords()[dim] as i64 * stride + i as i64;
+        (g as f64 - 0.5 * o as f64) * dh
+    }
+
+    /// Normalized global position of a base-grid local cell, each component
+    /// in [0, 1] (used to build global initial conditions identically on
+    /// every rank).
+    pub fn global_frac(&self, ix: usize, iy: usize, iz: usize) -> [f64; 3] {
+        let f = |dim: usize, i: usize| {
+            let ng = self.n_g(dim);
+            if ng <= 1 {
+                0.0
+            } else {
+                self.global_index(dim, i) as f64 / (ng - 1) as f64
+            }
+        };
+        [f(0, ix), f(1, iy), f(2, iz)]
+    }
+
+    // ---- halo update ----------------------------------------------------
+
+    /// `update_halo!(A, B, ...)`: exchange the outermost planes of each
+    /// field with the Cartesian neighbours, dimension by dimension.
+    /// Staggered sizes are handled per-array; `o = -1` (face) arrays are
+    /// rejected — recompute them locally instead, as the paper's solvers do.
+    pub fn update_halo(&self, fields: &mut [&mut Field3D]) -> anyhow::Result<()> {
+        let mut engine = self.engine.lock().unwrap();
+        engine.update(&self.cart, self.local, fields)
+    }
+
+    /// Begin an overlapped halo update: packs the send planes now, runs the
+    /// transfers on the communication stream, and returns a handle whose
+    /// `finish` unpacks into the fields. Computation on the *inner* region
+    /// may proceed between `start` and `finish` (see `overlap::scheduler`).
+    pub fn update_halo_start(
+        &self,
+        fields: &mut [&mut Field3D],
+    ) -> anyhow::Result<halo::PendingHalo> {
+        let mut engine = self.engine.lock().unwrap();
+        engine.start(&self.cart, self.local, fields)
+    }
+
+    /// Traffic counters of the halo engine (bytes packed/sent, messages).
+    pub fn halo_stats(&self) -> halo::HaloStats {
+        self.engine.lock().unwrap().stats()
+    }
+
+    /// `finalize_global_grid()`. Consumes the grid; synchronizes ranks so
+    /// teardown is collective, like the original.
+    pub fn finalize(self) {
+        self.comm().barrier();
+    }
+
+    // ---- test/diagnostic helpers ---------------------------------------
+
+    /// Gather the distributed base-grid field into the *global* array on
+    /// `root` (None elsewhere). Overlapping planes are written by every
+    /// covering rank; after a correct halo update they agree, which
+    /// [`Self::gather_check_overlap`] asserts.
+    pub fn gather_global(&self, f: &Field3D, root: usize) -> Option<Field3D> {
+        assert_eq!(f.dims(), self.local, "gather_global expects a base-grid field");
+        let payload = f.as_slice();
+        let gathered = self.comm().gather(root, payload)?;
+        let gdims = self.dims_g();
+        let mut out = Field3D::zeros(gdims);
+        for (rank, data) in gathered.iter().enumerate() {
+            let coords = self.coords_of_rank(rank);
+            let rank_field = Field3D::from_vec(self.local, data.clone());
+            for ix in 0..self.local[0] {
+                let gx = coords[0] * (self.local[0] - OVERLAP) + ix;
+                for iy in 0..self.local[1] {
+                    let gy = coords[1] * (self.local[1] - OVERLAP) + iy;
+                    for iz in 0..self.local[2] {
+                        let gz = coords[2] * (self.local[2] - OVERLAP) + iz;
+                        out.set(gx, gy, gz, rank_field.get(ix, iy, iz));
+                    }
+                }
+            }
+        }
+        Some(out)
+    }
+
+    /// As [`Self::gather_global`], but additionally returns the largest
+    /// disagreement across overlapping planes (0.0 iff halos are coherent).
+    pub fn gather_check_overlap(&self, f: &Field3D, root: usize) -> Option<(Field3D, f64)> {
+        assert_eq!(f.dims(), self.local);
+        let gathered = self.comm().gather(root, f.as_slice())?;
+        let gdims = self.dims_g();
+        let mut out = Field3D::zeros(gdims);
+        let mut written = vec![false; out.len()];
+        let mut max_dev = 0.0f64;
+        for (rank, data) in gathered.iter().enumerate() {
+            let coords = self.coords_of_rank(rank);
+            let rf = Field3D::from_vec(self.local, data.clone());
+            for ix in 0..self.local[0] {
+                let gx = coords[0] * (self.local[0] - OVERLAP) + ix;
+                for iy in 0..self.local[1] {
+                    let gy = coords[1] * (self.local[1] - OVERLAP) + iy;
+                    for iz in 0..self.local[2] {
+                        let gz = coords[2] * (self.local[2] - OVERLAP) + iz;
+                        let i = out.idx(gx, gy, gz);
+                        let v = rf.get(ix, iy, iz);
+                        if written[i] {
+                            max_dev = max_dev.max((out.as_slice()[i] - v).abs());
+                        }
+                        out.as_mut_slice()[i] = v;
+                        written[i] = true;
+                    }
+                }
+            }
+        }
+        Some((out, max_dev))
+    }
+
+    fn coords_of_rank(&self, rank: usize) -> [usize; 3] {
+        let [_, dy, dz] = self.cart.dims();
+        [rank / (dy * dz), (rank / dz) % dy, rank % dz]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpisim::Network;
+
+    fn grid1(local: [usize; 3]) -> GlobalGrid {
+        GlobalGrid::init(Network::new(1).comm(0), local, GridOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn single_rank_global_equals_local() {
+        let g = grid1([16, 12, 8]);
+        assert_eq!(g.dims_g(), [16, 12, 8]);
+        assert_eq!(g.global_index(0, 5), 5);
+        assert_eq!(g.nprocs(), 1);
+        g.finalize();
+    }
+
+    #[test]
+    fn global_size_formula() {
+        // 8 ranks as 2x2x2 with local 16^3 and overlap 2: n_g = 2*14+2 = 30
+        let net = Network::new(8);
+        let g = GlobalGrid::init(net.comm(0), [16, 16, 16], GridOptions::default()).unwrap();
+        assert_eq!(g.dims(), [2, 2, 2]);
+        assert_eq!(g.dims_g(), [30, 30, 30]);
+        // staggered sizes: m=17 (o=+1): 2*(17-3)+3 = 31; m=15 (o=-1): 2*14+1=29
+        assert_eq!(g.n_g_of(0, 17), 31);
+        assert_eq!(g.n_g_of(0, 15), 29);
+    }
+
+    #[test]
+    fn rejects_tiny_local_grid() {
+        let net = Network::new(1);
+        assert!(GlobalGrid::init(net.comm(0), [2, 8, 8], GridOptions::default()).is_err());
+    }
+
+    #[test]
+    fn coord_helper_staggering() {
+        let g = grid1([11, 11, 11]);
+        let dh = 0.1;
+        assert!((g.coord(0, 3, 0, dh) - 0.3).abs() < 1e-15);
+        // node-staggered (o=+1): shifted half a cell left
+        assert!((g.coord(0, 3, 1, dh) - 0.25).abs() < 1e-15);
+        // face-staggered (o=-1): shifted half a cell right
+        assert!((g.coord(0, 3, -1, dh) - 0.35).abs() < 1e-15);
+    }
+
+    #[test]
+    fn global_frac_corners() {
+        let g = grid1([9, 9, 9]);
+        assert_eq!(g.global_frac(0, 0, 0), [0.0, 0.0, 0.0]);
+        assert_eq!(g.global_frac(8, 8, 8), [1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn gather_single_rank_identity() {
+        let g = grid1([5, 5, 5]);
+        let f = Field3D::from_fn([5, 5, 5], |x, y, z| (x + 10 * y + 100 * z) as f64);
+        let got = g.gather_global(&f, 0).unwrap();
+        assert_eq!(got, f);
+    }
+}

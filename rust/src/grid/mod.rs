@@ -1,0 +1,23 @@
+//! The implicit global grid — the paper's central abstraction.
+//!
+//! The *global* computational grid is never materialized: it is implicitly
+//! defined by the local grid size `(nx, ny, nz)` and the Cartesian process
+//! topology, with neighbouring local grids overlapping by [`crate::OVERLAP`]
+//! cells per dimension. `init_global_grid(nx, ny, nz)` in the paper's Fig. 1
+//! is [`GlobalGrid::init`] here; `nx_g()`/`x_g()` map to [`GlobalGrid::n_g`]
+//! and [`GlobalGrid::coord`]; `finalize_global_grid()` is
+//! [`GlobalGrid::finalize`].
+//!
+//! Staggered arrays — sizes differing by ±1 from the base grid per
+//! dimension, e.g. pressure at centers `(nx, ny, nz)`, x-fluxes at
+//! `(nx-1, ny, nz)`, node velocities at `(nx+1, ...)` — are first-class:
+//! each size offset implies its own overlap and halo-exchange rule
+//! ([`staggered`]).
+
+pub mod global_grid;
+pub mod staggered;
+pub mod topology;
+
+pub use global_grid::{GlobalGrid, GridOptions};
+pub use staggered::{exchange_eligible, offset_of, StaggerOffset};
+pub use topology::select_dims;

@@ -1,0 +1,133 @@
+//! Staggered-grid size offsets and the per-array halo/overlap rules.
+//!
+//! On the regular staggered grid, a field's size along dimension `d` is
+//! `n[d] + o` with `o ∈ {-1, 0, +1}` relative to the base (cell-center)
+//! grid:
+//!
+//! * `o = 0`  — cell centers (temperature, pressure): overlap 2, halo
+//!   exchanged (send plane `1`, `m-2`; recv plane `0`, `m-1`).
+//! * `o = +1` — nodes/edges (velocities): overlap 3; exchanged (send plane
+//!   `2`, `m-3`; recv plane `0`, `m-1`; plane `1`/`m-2` is computed
+//!   redundantly by both neighbours, deterministically identical).
+//! * `o = -1` — faces (fluxes): overlap 1 — *not* exchanged; face arrays are
+//!   recomputed locally from halo-exchanged center fields, which is exactly
+//!   how the paper's solvers use them.
+//!
+//! The derivation is the global-consistency argument in DESIGN.md §5: with
+//! local size `m`, overlap `ol + o`, local plane `j` of rank `c` is global
+//! plane `c·(m - ol - o) + j`; matching computed/stale planes across the
+//! shared band yields the send/recv indices above.
+
+use crate::OVERLAP;
+
+/// Per-dimension stagger offset of an array relative to the base grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StaggerOffset(pub i32);
+
+impl StaggerOffset {
+    /// Per-array overlap along this dimension: `OVERLAP + o`.
+    pub fn overlap(&self) -> i64 {
+        OVERLAP as i64 + self.0 as i64
+    }
+}
+
+/// Offsets of an array of dims `m` on a base grid of dims `n`;
+/// errors if any offset is outside {-1, 0, +1}.
+pub fn offset_of(m: [usize; 3], n: [usize; 3]) -> anyhow::Result<[StaggerOffset; 3]> {
+    let mut out = [StaggerOffset(0); 3];
+    for d in 0..3 {
+        let o = m[d] as i64 - n[d] as i64;
+        if !(-1..=1).contains(&o) {
+            anyhow::bail!(
+                "array dim {d} has size {} on a base grid of {}: stagger offset {o} \
+                 is outside -1..=1",
+                m[d],
+                n[d]
+            );
+        }
+        out[d] = StaggerOffset(o as i32);
+    }
+    Ok(out)
+}
+
+/// Is an array with stagger offset `o` halo-exchanged along a dimension?
+/// (Requires a shared band of >= 2 planes, i.e. `o >= 0`.)
+pub fn exchange_eligible(o: StaggerOffset) -> bool {
+    o.overlap() >= OVERLAP as i64
+}
+
+/// Send-plane index (0-based) for (side, array size m, offset o):
+/// side 0 (low) sends plane `1 + o`, side 1 (high) sends `m - 2 - o`.
+pub fn send_plane(side: usize, m: usize, o: StaggerOffset) -> usize {
+    debug_assert!(exchange_eligible(o));
+    let o = o.0 as i64;
+    match side {
+        0 => (1 + o) as usize,
+        1 => (m as i64 - 2 - o) as usize,
+        _ => unreachable!("side is 0 or 1"),
+    }
+}
+
+/// Recv-plane index for (side, array size m): the outermost plane.
+pub fn recv_plane(side: usize, m: usize) -> usize {
+    match side {
+        0 => 0,
+        1 => m - 1,
+        _ => unreachable!("side is 0 or 1"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_detected() {
+        let o = offset_of([31, 32, 33], [32, 32, 32]).unwrap();
+        assert_eq!(o[0], StaggerOffset(-1));
+        assert_eq!(o[1], StaggerOffset(0));
+        assert_eq!(o[2], StaggerOffset(1));
+        assert!(offset_of([30, 32, 32], [32, 32, 32]).is_err());
+    }
+
+    #[test]
+    fn eligibility() {
+        assert!(!exchange_eligible(StaggerOffset(-1)));
+        assert!(exchange_eligible(StaggerOffset(0)));
+        assert!(exchange_eligible(StaggerOffset(1)));
+    }
+
+    #[test]
+    fn plane_indices_center_arrays() {
+        let o = StaggerOffset(0);
+        assert_eq!(send_plane(0, 16, o), 1);
+        assert_eq!(send_plane(1, 16, o), 14);
+        assert_eq!(recv_plane(0, 16), 0);
+        assert_eq!(recv_plane(1, 16), 15);
+    }
+
+    #[test]
+    fn plane_indices_node_arrays() {
+        let o = StaggerOffset(1);
+        assert_eq!(send_plane(0, 17, o), 2);
+        assert_eq!(send_plane(1, 17, o), 14); // m-2-o = 17-2-1
+    }
+
+    /// The global-consistency identity: the plane rank c sends to its high
+    /// neighbour must be, in that neighbour's local indexing, exactly the
+    /// plane the neighbour receives (recv_plane(0)), and vice versa.
+    #[test]
+    fn send_recv_planes_are_global_duals() {
+        for o in [StaggerOffset(0), StaggerOffset(1)] {
+            for m in 8..20usize {
+                let stride = m as i64 - o.overlap(); // global planes per rank step
+                // my send-high plane, expressed in the high neighbour's frame:
+                let g = send_plane(1, m, o) as i64;
+                assert_eq!(g - stride, recv_plane(0, m) as i64, "o={o:?} m={m}");
+                // my send-low plane, in the low neighbour's frame:
+                let g = send_plane(0, m, o) as i64;
+                assert_eq!(g + stride, recv_plane(1, m) as i64, "o={o:?} m={m}");
+            }
+        }
+    }
+}

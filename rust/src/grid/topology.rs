@@ -1,0 +1,53 @@
+//! Process-topology selection.
+//!
+//! Thin policy layer over [`crate::mpisim::dims_create`]: the user can pin
+//! any subset of dimensions (0 = automatic, like the paper's
+//! `init_global_grid(...; dims=(2, 2, 0))`), and 2-D problems (nz == 1) are
+//! kept flat by pinning the z topology to 1.
+
+use crate::mpisim::dims_create;
+
+/// Choose the process grid for `nprocs` ranks and a local grid of `local`
+/// cells: free dimensions are filled by balanced factorization, and
+/// dimensions where the local grid is degenerate (size 1: a 2-D/1-D
+/// problem) are pinned to a single process layer.
+pub fn select_dims(
+    nprocs: usize,
+    local: [usize; 3],
+    mut requested: [usize; 3],
+) -> anyhow::Result<[usize; 3]> {
+    for d in 0..3 {
+        if local[d] == 1 {
+            match requested[d] {
+                0 | 1 => requested[d] = 1,
+                r => anyhow::bail!(
+                    "dimension {d} has local size 1 but {r} process layers were requested"
+                ),
+            }
+        }
+    }
+    dims_create(nprocs, requested)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn free_dims_balanced() {
+        assert_eq!(select_dims(8, [32, 32, 32], [0, 0, 0]).unwrap(), [2, 2, 2]);
+        assert_eq!(select_dims(6, [32, 32, 32], [0, 0, 0]).unwrap(), [3, 2, 1]);
+    }
+
+    #[test]
+    fn degenerate_local_dim_pins_topology() {
+        assert_eq!(select_dims(8, [64, 64, 1], [0, 0, 0]).unwrap(), [4, 2, 1]);
+        assert!(select_dims(8, [64, 64, 1], [0, 0, 2]).is_err());
+    }
+
+    #[test]
+    fn explicit_dims_respected() {
+        assert_eq!(select_dims(12, [32, 32, 32], [0, 6, 0]).unwrap(), [2, 6, 1]);
+        assert!(select_dims(12, [32, 32, 32], [5, 0, 0]).is_err());
+    }
+}

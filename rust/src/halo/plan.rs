@@ -1,0 +1,245 @@
+//! Halo exchange plans: which planes go where, per field and dimension.
+//!
+//! A plan is computed once per `update_halo!` call signature (field dims ×
+//! topology) and describes, for each dimension and side with a neighbour,
+//! the send plane, the receive plane, the peer rank, and the message tag.
+//! Building the plan is cheap; the engine caches nothing across calls
+//! except buffers (sizes are embedded in [`crate::memory::BufKey`]s).
+
+use crate::grid::staggered::{self, StaggerOffset};
+use crate::mpisim::CartComm;
+
+use super::slicing::plane_len;
+
+/// One plane exchange: field `field`, dimension `dim`, direction `dir`
+/// (+1: send to high neighbour / receive from low; -1: the reverse).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExchangeOp {
+    pub field: usize,
+    pub dim: usize,
+    /// +1 = message travels low->high; -1 = high->low.
+    pub dir: i32,
+    pub send_plane: usize,
+    pub recv_plane: usize,
+    /// Peer the send goes to.
+    pub send_to: Option<usize>,
+    /// Peer the receive comes from.
+    pub recv_from: Option<usize>,
+    /// true when dims[dim] == 1 and the dimension is periodic: the exchange
+    /// degenerates to a local wrap copy (self-messages are not allowed).
+    pub self_wrap: bool,
+    pub plane_cells: usize,
+}
+
+impl ExchangeOp {
+    /// Message tag: unique per (field, dim, dir); chunk indices are added
+    /// by the staged path (chunk < MAX_CHUNKS).
+    pub fn tag(&self, chunk: usize) -> u64 {
+        debug_assert!(chunk < MAX_CHUNKS);
+        let dir_bit = if self.dir > 0 { 1u64 } else { 0u64 };
+        (((self.field as u64 * 3 + self.dim as u64) * 2 + dir_bit) * MAX_CHUNKS as u64)
+            + chunk as u64
+    }
+}
+
+/// Upper bound on pipeline chunks per message (tag-space partitioning).
+pub const MAX_CHUNKS: usize = 64;
+
+/// The exchange operations for one dimension of one field, in execution
+/// order. Returns ops even when a side has no neighbour (send_to/recv_from
+/// = None) so accounting is uniform; the engine skips the Nones.
+pub fn ops_for_dim(
+    cart: &CartComm,
+    field: usize,
+    dims: [usize; 3],
+    offsets: [StaggerOffset; 3],
+    dim: usize,
+) -> Vec<ExchangeOp> {
+    let o = offsets[dim];
+    if !staggered::exchange_eligible(o) {
+        return Vec::new();
+    }
+    let m = dims[dim];
+    let (lo, hi) = cart.shift(dim);
+    let cells = plane_len(dims, dim);
+    let self_wrap = cart.dims()[dim] == 1 && cart.periods()[dim];
+    if self_wrap {
+        return vec![
+            ExchangeOp {
+                field,
+                dim,
+                dir: 1,
+                send_plane: staggered::send_plane(1, m, o),
+                recv_plane: staggered::recv_plane(0, m),
+                send_to: None,
+                recv_from: None,
+                self_wrap: true,
+                plane_cells: cells,
+            },
+            ExchangeOp {
+                field,
+                dim,
+                dir: -1,
+                send_plane: staggered::send_plane(0, m, o),
+                recv_plane: staggered::recv_plane(1, m),
+                send_to: None,
+                recv_from: None,
+                self_wrap: true,
+                plane_cells: cells,
+            },
+        ];
+    }
+    vec![
+        // dir +1: I send my high plane up; I receive my low halo from below.
+        ExchangeOp {
+            field,
+            dim,
+            dir: 1,
+            send_plane: staggered::send_plane(1, m, o),
+            recv_plane: staggered::recv_plane(0, m),
+            send_to: hi,
+            recv_from: lo,
+            self_wrap: false,
+            plane_cells: cells,
+        },
+        // dir -1: I send my low plane down; I receive my high halo from above.
+        ExchangeOp {
+            field,
+            dim,
+            dir: -1,
+            send_plane: staggered::send_plane(0, m, o),
+            recv_plane: staggered::recv_plane(1, m),
+            send_to: lo,
+            recv_from: hi,
+            self_wrap: false,
+            plane_cells: cells,
+        },
+    ]
+}
+
+/// Full plan: per dimension (outer, executed sequentially), the ops of all
+/// fields (inner, may be interleaved/batched).
+#[derive(Debug, Clone)]
+pub struct HaloPlan {
+    pub per_dim: [Vec<ExchangeOp>; 3],
+}
+
+impl HaloPlan {
+    pub fn build(
+        cart: &CartComm,
+        field_dims: &[[usize; 3]],
+        base: [usize; 3],
+    ) -> anyhow::Result<Self> {
+        let mut per_dim: [Vec<ExchangeOp>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for (fi, &fdims) in field_dims.iter().enumerate() {
+            let offsets = staggered::offset_of(fdims, base)?;
+            for (d, ops) in per_dim.iter_mut().enumerate() {
+                if fdims[d] == 1 {
+                    continue; // degenerate (2-D problem): nothing to exchange
+                }
+                if offsets[d].0 < 0 {
+                    anyhow::bail!(
+                        "field {fi} is face-staggered (size n-1) along dim {d}: such arrays \
+                         are not halo-exchanged — recompute them locally from exchanged \
+                         center fields"
+                    );
+                }
+                ops.extend(ops_for_dim(cart, fi, fdims, offsets, d));
+            }
+        }
+        Ok(HaloPlan { per_dim })
+    }
+
+    /// Total bytes this plan moves per update (send direction).
+    pub fn bytes(&self) -> usize {
+        self.per_dim
+            .iter()
+            .flatten()
+            .filter(|op| op.self_wrap || op.send_to.is_some())
+            .map(|op| op.plane_cells * std::mem::size_of::<f64>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpisim::Network;
+
+    fn cart(n: usize, dims: [usize; 3], periods: [bool; 3]) -> CartComm {
+        CartComm::create(Network::new(n).comm(0), dims, periods).unwrap()
+    }
+
+    #[test]
+    fn base_array_plan_2ranks() {
+        let c = cart(2, [2, 1, 1], [false; 3]);
+        let plan = HaloPlan::build(&c, &[[8, 8, 8]], [8, 8, 8]).unwrap();
+        // rank 0 of 2 along x: only the high side has a neighbour
+        let xops = &plan.per_dim[0];
+        assert_eq!(xops.len(), 2);
+        let up = xops.iter().find(|o| o.dir == 1).unwrap();
+        assert_eq!(up.send_plane, 6);
+        assert_eq!(up.recv_plane, 0);
+        assert_eq!(up.send_to, Some(1));
+        assert_eq!(up.recv_from, None);
+        let down = xops.iter().find(|o| o.dir == -1).unwrap();
+        assert_eq!(down.send_plane, 1);
+        assert_eq!(down.recv_plane, 7);
+        assert_eq!(down.send_to, None);
+        assert_eq!(down.recv_from, Some(1));
+        // y and z: single layer, not periodic -> ops exist but are no-peer
+        assert!(plan.per_dim[1].iter().all(|o| o.send_to.is_none() && o.recv_from.is_none()));
+    }
+
+    #[test]
+    fn face_staggered_rejected() {
+        let c = cart(2, [2, 1, 1], [false; 3]);
+        assert!(HaloPlan::build(&c, &[[7, 8, 8]], [8, 8, 8]).is_err());
+    }
+
+    #[test]
+    fn node_staggered_planes() {
+        let c = cart(2, [2, 1, 1], [false; 3]);
+        let plan = HaloPlan::build(&c, &[[9, 8, 8]], [8, 8, 8]).unwrap();
+        let up = plan.per_dim[0].iter().find(|o| o.dir == 1).unwrap();
+        assert_eq!(up.send_plane, 9 - 3); // m-2-o = 9-2-1
+        assert_eq!(up.recv_plane, 0);
+    }
+
+    #[test]
+    fn periodic_single_rank_wraps() {
+        let c = cart(1, [1, 1, 1], [true, false, false]);
+        let plan = HaloPlan::build(&c, &[[8, 8, 8]], [8, 8, 8]).unwrap();
+        let xops = &plan.per_dim[0];
+        assert_eq!(xops.len(), 2);
+        assert!(xops.iter().all(|o| o.self_wrap));
+        assert!(plan.per_dim[1].is_empty() || plan.per_dim[1].iter().all(|o| !o.self_wrap));
+    }
+
+    #[test]
+    fn degenerate_dim_skipped() {
+        let c = cart(1, [1, 1, 1], [true; 3]);
+        let plan = HaloPlan::build(&c, &[[8, 8, 1]], [8, 8, 1]).unwrap();
+        assert!(plan.per_dim[2].is_empty());
+    }
+
+    #[test]
+    fn tags_unique_across_ops_and_fields() {
+        let c = cart(8, [2, 2, 2], [false; 3]);
+        let plan = HaloPlan::build(&c, &[[8, 8, 8], [9, 8, 9]], [8, 8, 8]).unwrap();
+        let mut tags = std::collections::HashSet::new();
+        for ops in &plan.per_dim {
+            for op in ops {
+                assert!(tags.insert(op.tag(0)), "duplicate tag for {op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_bytes_counts_active_sends() {
+        let c = cart(2, [2, 1, 1], [false; 3]);
+        let plan = HaloPlan::build(&c, &[[8, 8, 8]], [8, 8, 8]).unwrap();
+        // one active send (to the high neighbour): 64 cells * 8 bytes
+        assert_eq!(plan.bytes(), 64 * 8);
+    }
+}

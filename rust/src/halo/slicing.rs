@@ -1,0 +1,160 @@
+//! Plane pack/unpack: the boundary plane of a 3-D C-order array <-> a dense
+//! buffer.
+//!
+//! This is the hot path of the halo engine (every exchanged plane is packed
+//! once and unpacked once per step), so the three dimension cases are
+//! written out explicitly around contiguous z-rows:
+//!
+//! * dim 0 (x-plane): one contiguous `ny*nz` block — a single memcpy;
+//! * dim 1 (y-plane): `nx` rows of `nz`, stride `ny*nz`;
+//! * dim 2 (z-plane): `nx*ny` single elements, stride `nz` — the strided
+//!   worst case (gather/scatter).
+//!
+//! The `_raw` variants work on bare slices so the overlapped exchange (which
+//! accesses fields through pointers from the communication stream, see
+//! `engine.rs`) shares the exact same code as the synchronous path.
+
+use crate::physics::Field3D;
+
+/// Pack plane `plane` of dimension `dim` from `data` (dims `dims`) into `buf`.
+pub fn pack_plane_raw(data: &[f64], dims: [usize; 3], dim: usize, plane: usize, buf: &mut [f64]) {
+    let [nx, ny, nz] = dims;
+    debug_assert!(plane < dims[dim]);
+    match dim {
+        0 => {
+            debug_assert_eq!(buf.len(), ny * nz);
+            let start = plane * ny * nz;
+            buf.copy_from_slice(&data[start..start + ny * nz]);
+        }
+        1 => {
+            debug_assert_eq!(buf.len(), nx * nz);
+            for ix in 0..nx {
+                let src = (ix * ny + plane) * nz;
+                buf[ix * nz..(ix + 1) * nz].copy_from_slice(&data[src..src + nz]);
+            }
+        }
+        2 => {
+            debug_assert_eq!(buf.len(), nx * ny);
+            for ix in 0..nx {
+                let row_base = ix * ny * nz + plane;
+                let out_base = ix * ny;
+                for iy in 0..ny {
+                    buf[out_base + iy] = data[row_base + iy * nz];
+                }
+            }
+        }
+        _ => unreachable!("dim must be 0..3"),
+    }
+}
+
+/// Unpack `buf` into plane `plane` of dimension `dim` of `data`.
+pub fn unpack_plane_raw(data: &mut [f64], dims: [usize; 3], dim: usize, plane: usize, buf: &[f64]) {
+    let [nx, ny, nz] = dims;
+    debug_assert!(plane < dims[dim]);
+    match dim {
+        0 => {
+            debug_assert_eq!(buf.len(), ny * nz);
+            let start = plane * ny * nz;
+            data[start..start + ny * nz].copy_from_slice(buf);
+        }
+        1 => {
+            debug_assert_eq!(buf.len(), nx * nz);
+            for ix in 0..nx {
+                let dst = (ix * ny + plane) * nz;
+                data[dst..dst + nz].copy_from_slice(&buf[ix * nz..(ix + 1) * nz]);
+            }
+        }
+        2 => {
+            debug_assert_eq!(buf.len(), nx * ny);
+            for ix in 0..nx {
+                let row_base = ix * ny * nz + plane;
+                let in_base = ix * ny;
+                for iy in 0..ny {
+                    data[row_base + iy * nz] = buf[in_base + iy];
+                }
+            }
+        }
+        _ => unreachable!("dim must be 0..3"),
+    }
+}
+
+/// [`pack_plane_raw`] over a [`Field3D`].
+pub fn pack_plane(f: &Field3D, dim: usize, plane: usize, buf: &mut [f64]) {
+    pack_plane_raw(f.as_slice(), f.dims(), dim, plane, buf);
+}
+
+/// [`unpack_plane_raw`] over a [`Field3D`].
+pub fn unpack_plane(f: &mut Field3D, dim: usize, plane: usize, buf: &[f64]) {
+    let dims = f.dims();
+    unpack_plane_raw(f.as_mut_slice(), dims, dim, plane, buf);
+}
+
+/// Number of cells in a plane orthogonal to `dim`.
+pub fn plane_len(dims: [usize; 3], dim: usize) -> usize {
+    match dim {
+        0 => dims[1] * dims[2],
+        1 => dims[0] * dims[2],
+        2 => dims[0] * dims[1],
+        _ => unreachable!(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn field() -> Field3D {
+        Field3D::from_fn([4, 5, 6], |x, y, z| (x * 100 + y * 10 + z) as f64)
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_all_dims() {
+        let f = field();
+        for dim in 0..3 {
+            for plane in [0, 1, f.dims()[dim] - 1] {
+                let mut buf = vec![0.0; plane_len(f.dims(), dim)];
+                pack_plane(&f, dim, plane, &mut buf);
+                let mut g = Field3D::zeros(f.dims());
+                unpack_plane(&mut g, dim, plane, &buf);
+                let [nx, ny, nz] = f.dims();
+                for x in 0..nx {
+                    for y in 0..ny {
+                        for z in 0..nz {
+                            let on_plane = [x, y, z][dim] == plane;
+                            let want = if on_plane { f.get(x, y, z) } else { 0.0 };
+                            assert_eq!(g.get(x, y, z), want, "dim={dim} plane={plane}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_values_x_plane_contiguous() {
+        let f = field();
+        let mut buf = vec![0.0; 30];
+        pack_plane(&f, 0, 2, &mut buf);
+        assert_eq!(buf[0], 200.0);
+        assert_eq!(buf[29], 245.0);
+    }
+
+    #[test]
+    fn pack_values_z_plane_strided() {
+        let f = field();
+        let mut buf = vec![0.0; 20];
+        pack_plane(&f, 2, 3, &mut buf);
+        // buf[(ix*ny)+iy] = f(ix, iy, 3)
+        assert_eq!(buf[0], 3.0);
+        assert_eq!(buf[1], 13.0);
+        assert_eq!(buf[5], 103.0);
+        assert_eq!(buf[19], 343.0);
+    }
+
+    #[test]
+    fn plane_len_by_dim() {
+        assert_eq!(plane_len([4, 5, 6], 0), 30);
+        assert_eq!(plane_len([4, 5, 6], 1), 24);
+        assert_eq!(plane_len([4, 5, 6], 2), 20);
+    }
+}

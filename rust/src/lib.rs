@@ -1,0 +1,81 @@
+//! # igg — Implicit Global Grid in Rust
+//!
+//! A Rust + JAX + Pallas reproduction of *Distributed Parallelization of xPU
+//! Stencil Computations in Julia* (Omlin, Räss & Utkin, 2022), the paper
+//! behind [ImplicitGlobalGrid.jl]. The library makes a single-device stencil
+//! code a distributed multi-device code with three calls, mirroring the
+//! paper's API:
+//!
+//! ```no_run
+//! use igg::prelude::*;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! // 1. the global grid is *implicitly* defined by the local size and the
+//! //    number of ranks (Cartesian topology chosen automatically)
+//! let world = igg::mpisim::Network::new(8).comm(0); // rank 0 of 8 (demo)
+//! let grid = GlobalGrid::init(world, [32, 32, 32], GridOptions::default())?;
+//!
+//! // 2. halo updates on any (possibly staggered) field
+//! let mut t = Field3D::zeros(grid.local_dims());
+//! grid.update_halo(&mut [&mut t])?;
+//!
+//! // 3. done
+//! grid.finalize();
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The crate is organized exactly as the system inventory in `DESIGN.md`:
+//!
+//! * [`mpisim`] — message-passing substrate (MPI.jl stand-in): in-process
+//!   ranks, non-blocking p2p with request objects, Cartesian communicators,
+//!   collectives, and a calibrated interconnect timing model.
+//! * [`memory`] — device-memory substrate (CUDA.jl stand-in): host/device
+//!   spaces, priority streams, pooled reusable communication buffers.
+//! * [`grid`] — the implicit global grid: topology factorization, global
+//!   sizes/coordinates, staggered-array overlap rules.
+//! * [`halo`] — the `update_halo!` engine: plans, pack/unpack, RDMA-like
+//!   direct and chunk-pipelined host-staged transfer paths.
+//! * [`overlap`] — `@hide_communication`: inner/boundary region
+//!   decomposition and the overlap scheduler.
+//! * [`physics`] — native Rust field type and stencil steps (the paper's
+//!   "CUDA C" reference solver and the cross-check oracle for the AOT path).
+//! * [`runtime`] — PJRT executor: loads the AOT-lowered JAX/Pallas HLO
+//!   artifacts and runs them from the Rust hot path (Python is build-time
+//!   only).
+//! * [`coordinator`] — config system, rank launcher, applications
+//!   (heat diffusion, two-phase flow), time loop, metrics.
+//! * [`bench`] — median/95%-CI measurement harness and the weak-scaling
+//!   drivers that regenerate the paper's figures.
+//! * [`util`] — zero-dependency substrates: JSON, CLI flags, PRNG,
+//!   statistics, and a property-testing harness.
+//!
+//! [ImplicitGlobalGrid.jl]: https://github.com/eth-cscs/ImplicitGlobalGrid.jl
+
+pub mod bench;
+pub mod coordinator;
+pub mod grid;
+pub mod halo;
+pub mod memory;
+pub mod mpisim;
+pub mod overlap;
+pub mod physics;
+pub mod runtime;
+pub mod util;
+
+/// The most common imports, for examples and applications.
+pub mod prelude {
+    pub use crate::coordinator::config::{AppKind, Backend, Config};
+    pub use crate::coordinator::launcher::{run_ranks, RankCtx};
+    pub use crate::coordinator::metrics::StepMetrics;
+    pub use crate::grid::{GlobalGrid, GridOptions};
+    pub use crate::halo::TransferPath;
+    pub use crate::mpisim::{CartComm, Comm, Network, NetModel};
+    pub use crate::overlap::HideWidths;
+    pub use crate::physics::Field3D;
+}
+
+/// Width of the overlap (in grid cells) between neighbouring local grids for
+/// arrays matching the base grid size — the paper's (and IGG's) default of 2:
+/// one halo plane plus one computed plane shared per side.
+pub const OVERLAP: usize = 2;

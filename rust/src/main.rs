@@ -1,0 +1,174 @@
+//! `igg` — the command-line launcher for the distributed stencil system.
+//!
+//! Subcommands:
+//!   info       platform, artifact inventory
+//!   run        run an application once and print metrics
+//!   validate   N-rank vs 1-rank global-equivalence check
+//!   scaling    weak-scaling sweep (the CLI form of the Fig. 2/3 benches)
+
+use igg::bench::{markdown_table, report, scaling};
+use igg::coordinator::config::Config;
+use igg::coordinator::metrics::RunMetrics;
+use igg::runtime::{artifact_dir, ArtifactStore};
+use igg::util::cli::Command;
+use igg::util::json::Json;
+
+fn run_flags(cmd: Command) -> Command {
+    cmd.value("app", Some("diffusion"), "application: diffusion|twophase")
+        .value("nx", Some("32"), "local grid size (cubic unless ny/nz given)")
+        .value("ny", None, "local grid size y")
+        .value("nz", None, "local grid size z")
+        .value("ranks", Some("1"), "number of ranks (threads)")
+        .value("dims", None, "process topology dx,dy,dz (0 = auto)")
+        .value("nt", Some("100"), "time steps / iterations")
+        .value("hide", None, "hide_communication widths wx,wy,wz")
+        .value("backend", Some("native"), "stencil backend: native|pjrt")
+        .value("path", Some("rdma"), "halo transfer path: rdma|staged")
+        .value("chunks", Some("4"), "pipeline chunks for the staged path")
+        .value("net", Some("ideal"), "network model: ideal|aries|aries:<scale>")
+        .value("seed", None, "base RNG seed")
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(argv: &[String]) -> anyhow::Result<()> {
+    let (sub, rest) = match argv.first().map(String::as_str) {
+        Some("info") => ("info", &argv[1..]),
+        Some("run") => ("run", &argv[1..]),
+        Some("validate") => ("validate", &argv[1..]),
+        Some("scaling") => ("scaling", &argv[1..]),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            return Ok(());
+        }
+        Some(other) => anyhow::bail!("unknown subcommand '{other}'\n\n{}", usage_text()),
+    };
+    match sub {
+        "info" => info(),
+        "run" => run(rest),
+        "validate" => validate(rest),
+        "scaling" => cmd_scaling(rest),
+        _ => unreachable!(),
+    }
+}
+
+fn usage_text() -> String {
+    "igg — Implicit Global Grid in Rust (paper reproduction)\n\
+     \n\
+     subcommands:\n\
+     \x20 info       platform and artifact inventory\n\
+     \x20 run        run an application once and print metrics\n\
+     \x20 validate   N-rank vs 1-rank global-equivalence check\n\
+     \x20 scaling    weak-scaling sweep (Fig. 2 / Fig. 3 protocol)\n\
+     \n\
+     `igg <subcommand> --help` lists the flags."
+        .to_string()
+}
+
+fn print_usage() {
+    println!("{}", usage_text());
+}
+
+fn info() -> anyhow::Result<()> {
+    println!("igg {} — three-layer rust+JAX+Pallas stencil system", env!("CARGO_PKG_VERSION"));
+    match igg::runtime::PjrtContext::cpu() {
+        Ok(ctx) => println!("pjrt: {}", ctx.platform()),
+        Err(e) => println!("pjrt: unavailable ({e})"),
+    }
+    match ArtifactStore::load(artifact_dir()) {
+        Ok(store) => {
+            println!("artifacts: {} programs in {}", store.programs.len(), store.dir.display());
+            for app in ["diffusion", "twophase"] {
+                let shapes = store.shapes_of(app);
+                println!("  {app}: full-step shapes {shapes:?}");
+            }
+        }
+        Err(e) => println!("artifacts: not built ({e})"),
+    }
+    println!("cores: {}", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    Ok(())
+}
+
+fn run(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = run_flags(Command::new("run", "run an application once"))
+        .value("warmup", Some("2"), "unmeasured warm-up steps")
+        .switch("json", "print metrics as JSON");
+    let args = cmd.parse(argv)?;
+    let cfg = Config::from_args(&args)?;
+    let warmup = args.get_usize("warmup")?.unwrap_or(2);
+    let rm: RunMetrics = scaling::run_app_once(&cfg, warmup)?;
+    if args.get_flag("json") {
+        let body = Json::obj(vec![("config", cfg.to_json()), ("metrics", rm.to_json())]);
+        println!("{body}");
+    } else {
+        println!("app         : {}", cfg.app.name());
+        println!("ranks       : {}", cfg.nranks);
+        println!("local grid  : {:?}", cfg.local);
+        println!("steps       : {}", cfg.nt);
+        println!("t/step      : {}", igg::bench::measure::fmt_time(rm.step_time_s()));
+        println!("T_eff total : {:.2} GB/s", rm.total_t_eff_gbs());
+        println!("final |u|max: {:.6e}", rm.per_rank[0].final_norm);
+    }
+    Ok(())
+}
+
+fn validate(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = run_flags(Command::new("validate", "N-rank vs 1-rank equivalence"));
+    let args = cmd.parse(argv)?;
+    let cfg = Config::from_args(&args)?;
+    anyhow::ensure!(cfg.nranks > 1, "validate needs --ranks > 1");
+    let report = igg::coordinator::apps::validate_equivalence(&cfg)?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_scaling(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = run_flags(Command::new("scaling", "weak-scaling sweep"))
+        .value("ranks-list", Some("1,2,4,8"), "process counts to measure")
+        .value("samples", Some("5"), "samples per point (paper: 20)")
+        .value("warmup", Some("2"), "warm-up steps per run")
+        .value("model-out-to", None, "extend with the analytic model to this P")
+        .value("out", None, "write JSON rows to this path");
+    let args = cmd.parse(argv)?;
+    let cfg = Config::from_args(&args)?;
+    let ranks = args.get_usize_list("ranks-list")?.unwrap();
+    let samples = args.get_usize("samples")?.unwrap();
+    let warmup = args.get_usize("warmup")?.unwrap();
+
+    let rows = scaling::weak_scaling(&cfg, &ranks, samples, warmup)?;
+    println!("{}", markdown_table(&format!("weak scaling — {}", cfg.app.name()), &rows));
+
+    if let Some(pmax) = args.get_usize("model-out-to")? {
+        let model = scaling::PerfModel::calibrate(&cfg, samples.min(3))?;
+        println!("### analytic model (calibrated)\n");
+        println!("| P | modeled efficiency |");
+        println!("|---:|---:|");
+        let mut p = 1usize;
+        while p <= pmax {
+            println!("| {p} | {:.1}% |", model.efficiency(p)? * 100.0);
+            p *= if p < 8 { 2 } else { 3 };
+        }
+        println!("| {pmax} | {:.1}% |", model.efficiency(pmax)? * 100.0);
+    }
+
+    if let Some(out) = args.get("out") {
+        report::write_json_report(
+            out,
+            Json::obj(vec![
+                ("config", cfg.to_json()),
+                ("rows", report::rows_to_json(&rows)),
+            ]),
+        )?;
+    }
+    Ok(())
+}

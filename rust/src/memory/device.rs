@@ -1,0 +1,138 @@
+//! Simulated xPU device: host/device memory spaces + copy timing.
+//!
+//! On the real system, moving a halo slab GPU->host costs
+//! `latency + bytes/bw_pcie`; the staged transfer path pipelines these
+//! copies against network sends chunk by chunk. The simulation keeps both
+//! spaces in host RAM (the numbers are identical) but *charges* the modeled
+//! copy time, so pipelining decisions have measurable consequences — the
+//! `halo_update` ablation bench quantifies them.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Host<->device copy timing model (PCIe-like).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CopyModel {
+    pub latency_s: f64,
+    pub bw_bytes_per_s: f64,
+}
+
+impl CopyModel {
+    /// No modeled cost (unit tests, native fast path).
+    pub fn ideal() -> Self {
+        CopyModel { latency_s: 0.0, bw_bytes_per_s: f64::INFINITY }
+    }
+
+    /// PCIe 3.0 x16 as on the paper's Piz Daint nodes: ~10 us submission
+    /// latency, ~11 GB/s effective.
+    pub fn pcie3() -> Self {
+        CopyModel { latency_s: 10e-6, bw_bytes_per_s: 11e9 }
+    }
+
+    /// Scaled variant (same role as NetModel::aries_scaled).
+    pub fn pcie3_scaled(factor: f64) -> Self {
+        CopyModel { latency_s: 10e-6 * factor, bw_bytes_per_s: 11e9 / factor }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        self.latency_s == 0.0 && self.bw_bytes_per_s.is_infinite()
+    }
+
+    pub fn copy_time(&self, bytes: usize) -> Duration {
+        if self.is_ideal() {
+            return Duration::ZERO;
+        }
+        Duration::from_secs_f64(self.latency_s + bytes as f64 / self.bw_bytes_per_s)
+    }
+}
+
+/// A simulated accelerator: tracks copy traffic and charges copy time.
+/// "Device" buffers are plain `Vec<f64>` owned by the caller; what the
+/// device provides is the *cost model* and accounting for moving them.
+pub struct SimDevice {
+    model: CopyModel,
+    h2d_bytes: AtomicU64,
+    d2h_bytes: AtomicU64,
+}
+
+impl SimDevice {
+    pub fn new(model: CopyModel) -> Self {
+        SimDevice { model, h2d_bytes: AtomicU64::new(0), d2h_bytes: AtomicU64::new(0) }
+    }
+
+    pub fn model(&self) -> CopyModel {
+        self.model
+    }
+
+    /// Copy device -> host staging buffer, charging modeled time.
+    pub fn d2h(&self, src: &[f64], dst: &mut [f64]) {
+        assert_eq!(src.len(), dst.len(), "d2h size mismatch");
+        dst.copy_from_slice(src);
+        self.charge(&self.d2h_bytes, src.len());
+    }
+
+    /// Copy host staging buffer -> device, charging modeled time.
+    pub fn h2d(&self, src: &[f64], dst: &mut [f64]) {
+        assert_eq!(src.len(), dst.len(), "h2d size mismatch");
+        dst.copy_from_slice(src);
+        self.charge(&self.h2d_bytes, src.len());
+    }
+
+    fn charge(&self, counter: &AtomicU64, len: usize) {
+        let bytes = len * std::mem::size_of::<f64>();
+        counter.fetch_add(bytes as u64, Ordering::Relaxed);
+        let t = self.model.copy_time(bytes);
+        if t > Duration::ZERO {
+            crate::util::timing::precise_sleep(t);
+        }
+    }
+
+    /// (h2d, d2h) traffic in bytes since construction.
+    pub fn traffic(&self) -> (u64, u64) {
+        (self.h2d_bytes.load(Ordering::Relaxed), self.d2h_bytes.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn copy_preserves_data_and_counts() {
+        let dev = SimDevice::new(CopyModel::ideal());
+        let src = vec![1.0, 2.0, 3.0];
+        let mut dst = vec![0.0; 3];
+        dev.d2h(&src, &mut dst);
+        assert_eq!(dst, src);
+        let mut back = vec![0.0; 3];
+        dev.h2d(&dst, &mut back);
+        assert_eq!(back, src);
+        assert_eq!(dev.traffic(), (24, 24));
+    }
+
+    #[test]
+    fn copy_time_charged() {
+        let dev = SimDevice::new(CopyModel { latency_s: 0.01, bw_bytes_per_s: 1e12 });
+        let src = vec![0.0; 8];
+        let mut dst = vec![0.0; 8];
+        let t0 = Instant::now();
+        dev.d2h(&src, &mut dst);
+        assert!(t0.elapsed() >= Duration::from_millis(8));
+    }
+
+    #[test]
+    #[should_panic(expected = "size mismatch")]
+    fn size_mismatch_rejected() {
+        let dev = SimDevice::new(CopyModel::ideal());
+        let mut dst = vec![0.0; 2];
+        dev.d2h(&[1.0, 2.0, 3.0], &mut dst);
+    }
+
+    #[test]
+    fn pcie3_cost_is_positive() {
+        let m = CopyModel::pcie3();
+        assert!(m.copy_time(1 << 20) > Duration::ZERO);
+        assert!(CopyModel::pcie3_scaled(2.0).copy_time(1 << 20) > m.copy_time(1 << 20));
+    }
+}

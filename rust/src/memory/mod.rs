@@ -1,0 +1,25 @@
+//! Device-memory substrate (the CUDA.jl / AMDGPU.jl stand-in).
+//!
+//! The paper's halo engine manages GPU memory, CUDA streams / ROCm queues,
+//! and pinned host buffers explicitly so that (a) send/recv buffers and
+//! streams are allocated once and reused for the whole application, and
+//! (b) transfers run on non-blocking *high-priority* streams that overlap
+//! with the compute stream. This module reproduces that structure on the
+//! CPU testbed:
+//!
+//! * [`device::SimDevice`] — a simulated xPU with distinct host/device
+//!   memory spaces and a PCIe-like copy-timing model, so the host-staged
+//!   transfer path has a real cost structure to pipeline against.
+//! * [`stream::Stream`] — an ordered asynchronous work queue (one worker
+//!   thread per stream, like a hardware queue), with a priority label and
+//!   `synchronize()`.
+//! * [`buffer_pool::BufferPool`] — keyed, reusable f64 buffers; the halo
+//!   engine never allocates in steady state.
+
+pub mod buffer_pool;
+pub mod device;
+pub mod stream;
+
+pub use buffer_pool::{BufKey, BufferPool};
+pub use device::{CopyModel, SimDevice};
+pub use stream::{Stream, StreamPriority};

@@ -1,0 +1,157 @@
+//! Asynchronous ordered work queues (CUDA stream / ROCm queue analog).
+//!
+//! Each stream owns a worker thread executing enqueued closures in FIFO
+//! order — the same ordering contract as a hardware queue. The halo engine
+//! keeps one high-priority communication stream per rank (allocated once,
+//! reused for the whole application, as the paper emphasizes) and runs
+//! transfers on it while the main thread computes.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Priority label. On real hardware high-priority queues preempt the compute
+/// queue's DMA slots; in-process it documents intent and is reported in
+/// metrics, while the OS scheduler provides the actual concurrency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamPriority {
+    High,
+    Normal,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct State {
+    queue: VecDeque<Job>,
+    pending: usize, // queued + running
+    shutdown: bool,
+}
+
+/// An ordered asynchronous work queue with its own worker thread.
+pub struct Stream {
+    state: Arc<(Mutex<State>, Condvar)>,
+    priority: StreamPriority,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Stream {
+    pub fn new(priority: StreamPriority) -> Self {
+        let state = Arc::new((
+            Mutex::new(State { queue: VecDeque::new(), pending: 0, shutdown: false }),
+            Condvar::new(),
+        ));
+        let worker_state = Arc::clone(&state);
+        let worker = std::thread::Builder::new()
+            .name(format!("igg-stream-{priority:?}"))
+            .spawn(move || {
+                let (m, cv) = &*worker_state;
+                loop {
+                    let job = {
+                        let mut st = m.lock().unwrap();
+                        loop {
+                            if let Some(job) = st.queue.pop_front() {
+                                break job;
+                            }
+                            if st.shutdown {
+                                return;
+                            }
+                            st = cv.wait(st).unwrap();
+                        }
+                    };
+                    job();
+                    let (m, cv) = &*worker_state;
+                    let mut st = m.lock().unwrap();
+                    st.pending -= 1;
+                    cv.notify_all();
+                }
+            })
+            .expect("spawn stream worker");
+        Stream { state, priority, worker: Some(worker) }
+    }
+
+    pub fn priority(&self) -> StreamPriority {
+        self.priority
+    }
+
+    /// Enqueue work; returns immediately. Jobs run in enqueue order.
+    pub fn enqueue(&self, job: impl FnOnce() + Send + 'static) {
+        let (m, cv) = &*self.state;
+        let mut st = m.lock().unwrap();
+        assert!(!st.shutdown, "enqueue on shut-down stream");
+        st.queue.push_back(Box::new(job));
+        st.pending += 1;
+        cv.notify_all();
+    }
+
+    /// Block until every job enqueued so far has finished.
+    pub fn synchronize(&self) {
+        let (m, cv) = &*self.state;
+        let mut st = m.lock().unwrap();
+        while st.pending > 0 {
+            st = cv.wait(st).unwrap();
+        }
+    }
+}
+
+impl Drop for Stream {
+    fn drop(&mut self) {
+        {
+            let (m, cv) = &*self.state;
+            let mut st = m.lock().unwrap();
+            st.shutdown = true;
+            cv.notify_all();
+        }
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn jobs_run_in_fifo_order() {
+        let stream = Stream::new(StreamPriority::High);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..20 {
+            let log = Arc::clone(&log);
+            stream.enqueue(move || log.lock().unwrap().push(i));
+        }
+        stream.synchronize();
+        assert_eq!(*log.lock().unwrap(), (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn synchronize_waits_for_running_job() {
+        let stream = Stream::new(StreamPriority::Normal);
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = Arc::clone(&done);
+        stream.enqueue(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            d.store(1, Ordering::SeqCst);
+        });
+        stream.synchronize();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn synchronize_on_empty_stream_returns() {
+        let stream = Stream::new(StreamPriority::Normal);
+        stream.synchronize();
+    }
+
+    #[test]
+    fn drop_joins_worker() {
+        let stream = Stream::new(StreamPriority::High);
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = Arc::clone(&done);
+        stream.enqueue(move || {
+            d.store(7, Ordering::SeqCst);
+        });
+        drop(stream); // must not lose the queued job or hang
+        assert_eq!(done.load(Ordering::SeqCst), 7);
+    }
+}

@@ -1,0 +1,225 @@
+//! Cartesian topology (MPI_Cart_* analog) and `dims_create`.
+//!
+//! The implicit global grid is built on exactly these primitives: the
+//! process count is factorized into a balanced 3-D topology (the user can
+//! pin any subset of dimensions, 0 = "choose for me", like MPI_Dims_create),
+//! ranks get coordinates in row-major order, and neighbours are resolved
+//! per-dimension with optional periodicity.
+
+use super::Comm;
+
+/// Balanced factorization of `nprocs` over `ndims` dimensions.
+///
+/// `dims[d] == 0` means free; fixed entries are kept. Free entries are
+/// filled so the dims are as close to each other as possible, in
+/// non-increasing order (the MPI_Dims_create contract).
+pub fn dims_create(nprocs: usize, mut dims: [usize; 3]) -> anyhow::Result<[usize; 3]> {
+    assert!(nprocs > 0);
+    let fixed_product: usize = dims.iter().filter(|&&d| d > 0).product();
+    if nprocs % fixed_product != 0 {
+        anyhow::bail!("nprocs {nprocs} not divisible by fixed dims product {fixed_product}");
+    }
+    let mut rem = nprocs / fixed_product;
+    let free: Vec<usize> = (0..3).filter(|&d| dims[d] == 0).collect();
+    if free.is_empty() {
+        if rem != 1 {
+            anyhow::bail!("fixed dims {dims:?} do not multiply to nprocs {nprocs}");
+        }
+        return Ok(dims);
+    }
+
+    // Greedy: repeatedly peel the largest prime factor and assign it to the
+    // currently smallest free dimension.
+    let mut factors = prime_factors(rem);
+    factors.sort_unstable_by(|a, b| b.cmp(a));
+    let mut assigned = vec![1usize; free.len()];
+    for f in factors {
+        let i = (0..assigned.len()).min_by_key(|&i| assigned[i]).unwrap();
+        assigned[i] *= f;
+        rem /= f;
+    }
+    debug_assert_eq!(rem, 1);
+    // MPI orders free dims non-increasing by position.
+    assigned.sort_unstable_by(|a, b| b.cmp(a));
+    for (slot, val) in free.iter().zip(assigned) {
+        dims[*slot] = val;
+    }
+    Ok(dims)
+}
+
+fn prime_factors(mut n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut p = 2;
+    while p * p <= n {
+        while n % p == 0 {
+            out.push(p);
+            n /= p;
+        }
+        p += 1;
+    }
+    if n > 1 {
+        out.push(n);
+    }
+    out
+}
+
+/// A communicator with Cartesian topology attached.
+#[derive(Clone)]
+pub struct CartComm {
+    comm: Comm,
+    dims: [usize; 3],
+    periods: [bool; 3],
+    coords: [usize; 3],
+}
+
+impl CartComm {
+    /// Attach a Cartesian topology to `comm`. `dims` entries of 0 are chosen
+    /// automatically; `prod(dims)` must equal `comm.size()`.
+    pub fn create(comm: Comm, dims: [usize; 3], periods: [bool; 3]) -> anyhow::Result<Self> {
+        let dims = dims_create(comm.size(), dims)?;
+        let coords = Self::coords_of(dims, comm.rank());
+        Ok(CartComm { comm, dims, periods, coords })
+    }
+
+    /// Row-major rank -> coordinates (x slowest, z fastest; matches
+    /// MPI_Cart_coords with the default ordering).
+    fn coords_of(dims: [usize; 3], rank: usize) -> [usize; 3] {
+        let [_, dy, dz] = dims;
+        [rank / (dy * dz), (rank / dz) % dy, rank % dz]
+    }
+
+    /// Coordinates -> rank (row-major).
+    pub fn rank_of(&self, coords: [usize; 3]) -> usize {
+        let [_, dy, dz] = self.dims;
+        (coords[0] * dy + coords[1]) * dz + coords[2]
+    }
+
+    pub fn comm(&self) -> &Comm {
+        &self.comm
+    }
+    pub fn rank(&self) -> usize {
+        self.comm.rank()
+    }
+    pub fn size(&self) -> usize {
+        self.comm.size()
+    }
+    pub fn dims(&self) -> [usize; 3] {
+        self.dims
+    }
+    pub fn periods(&self) -> [bool; 3] {
+        self.periods
+    }
+    pub fn coords(&self) -> [usize; 3] {
+        self.coords
+    }
+
+    /// Neighbour rank one step along `dim` in direction `dir` (-1 or +1);
+    /// `None` at a non-periodic boundary (MPI_PROC_NULL analog).
+    pub fn neighbor(&self, dim: usize, dir: i32) -> Option<usize> {
+        assert!(dim < 3 && (dir == 1 || dir == -1));
+        let d = self.dims[dim] as i64;
+        let c = self.coords[dim] as i64 + dir as i64;
+        let c = if self.periods[dim] {
+            c.rem_euclid(d)
+        } else if (0..d).contains(&c) {
+            c
+        } else {
+            return None;
+        };
+        let mut nc = self.coords;
+        nc[dim] = c as usize;
+        Some(self.rank_of(nc))
+    }
+
+    /// Both neighbours along `dim`: (low, high) (MPI_Cart_shift analog).
+    pub fn shift(&self, dim: usize) -> (Option<usize>, Option<usize>) {
+        (self.neighbor(dim, -1), self.neighbor(dim, 1))
+    }
+
+    /// Does this rank touch the global domain boundary on (dim, dir)?
+    pub fn at_boundary(&self, dim: usize, dir: i32) -> bool {
+        self.neighbor(dim, dir).is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Network;
+    use super::*;
+
+    #[test]
+    fn dims_create_balanced() {
+        assert_eq!(dims_create(8, [0, 0, 0]).unwrap(), [2, 2, 2]);
+        assert_eq!(dims_create(12, [0, 0, 0]).unwrap(), [3, 2, 2]);
+        assert_eq!(dims_create(27, [0, 0, 0]).unwrap(), [3, 3, 3]);
+        assert_eq!(dims_create(1, [0, 0, 0]).unwrap(), [1, 1, 1]);
+        assert_eq!(dims_create(7, [0, 0, 0]).unwrap(), [7, 1, 1]);
+        assert_eq!(dims_create(2197, [0, 0, 0]).unwrap(), [13, 13, 13]);
+    }
+
+    #[test]
+    fn dims_create_respects_fixed() {
+        assert_eq!(dims_create(8, [1, 0, 0]).unwrap(), [1, 4, 2]);
+        assert_eq!(dims_create(8, [2, 2, 2]).unwrap(), [2, 2, 2]);
+        assert_eq!(dims_create(6, [0, 3, 0]).unwrap(), [2, 3, 1]);
+        assert!(dims_create(8, [3, 0, 0]).is_err());
+        assert!(dims_create(8, [2, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn dims_create_product_invariant() {
+        for n in 1..=64 {
+            let d = dims_create(n, [0, 0, 0]).unwrap();
+            assert_eq!(d[0] * d[1] * d[2], n, "n={n} d={d:?}");
+            assert!(d[0] >= d[1] && d[1] >= d[2], "non-increasing {d:?}");
+        }
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let net = Network::new(12);
+        for r in 0..12 {
+            let cart = CartComm::create(net.comm(r), [3, 2, 2], [false; 3]).unwrap();
+            assert_eq!(cart.rank_of(cart.coords()), r);
+        }
+    }
+
+    #[test]
+    fn neighbors_non_periodic() {
+        let net = Network::new(8); // 2x2x2
+        let cart = CartComm::create(net.comm(0), [0, 0, 0], [false; 3]).unwrap();
+        assert_eq!(cart.coords(), [0, 0, 0]);
+        assert_eq!(cart.neighbor(0, -1), None);
+        assert_eq!(cart.neighbor(0, 1), Some(4));
+        assert_eq!(cart.neighbor(1, 1), Some(2));
+        assert_eq!(cart.neighbor(2, 1), Some(1));
+        assert!(cart.at_boundary(0, -1));
+        assert!(!cart.at_boundary(0, 1));
+    }
+
+    #[test]
+    fn neighbors_periodic_wrap() {
+        let net = Network::new(4);
+        let cart = CartComm::create(net.comm(0), [4, 1, 1], [true, false, false]).unwrap();
+        assert_eq!(cart.neighbor(0, -1), Some(3));
+        let (lo, hi) = cart.shift(0);
+        assert_eq!((lo, hi), (Some(3), Some(1)));
+        // periodic with a single rank along the dim: self-neighbour
+        let cart1 = CartComm::create(Network::new(1).comm(0), [1, 1, 1], [true; 3]).unwrap();
+        assert_eq!(cart1.neighbor(0, 1), Some(0));
+    }
+
+    #[test]
+    fn shift_consistency_all_ranks() {
+        let net = Network::new(12);
+        for r in 0..12 {
+            let cart = CartComm::create(net.comm(r), [3, 2, 2], [false; 3]).unwrap();
+            for dim in 0..3 {
+                if let Some(nb) = cart.neighbor(dim, 1) {
+                    let nb_cart = CartComm::create(net.comm(nb), [3, 2, 2], [false; 3]).unwrap();
+                    assert_eq!(nb_cart.neighbor(dim, -1), Some(r));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Collectives over the point-to-point transport.
+//!
+//! Simple root-based algorithms (gather-to-0 + broadcast) on reserved
+//! internal tags: correctness and determinism matter here, not algorithmic
+//! sophistication — collective traffic is outside the paper's measured path
+//! (halo exchange) and is excluded from the traffic model (network.rs).
+//!
+//! The barrier is a shared-state sense barrier (all ranks are in-process),
+//! generation-counted so it is reusable.
+
+use super::{Comm, INTERNAL_TAG_BASE};
+
+const TAG_REDUCE: u64 = INTERNAL_TAG_BASE + 1;
+const TAG_BCAST: u64 = INTERNAL_TAG_BASE + 2;
+const TAG_GATHER: u64 = INTERNAL_TAG_BASE + 3;
+
+pub(super) fn barrier(comm: &Comm) {
+    let net = comm.network();
+    let n = comm.size();
+    if n == 1 {
+        return;
+    }
+    let mut st = net.barrier.lock().unwrap();
+    let gen = st.generation;
+    st.count += 1;
+    if st.count == n {
+        st.count = 0;
+        st.generation = st.generation.wrapping_add(1);
+        net.barrier_cv.notify_all();
+    } else {
+        while st.generation == gen {
+            st = net.barrier_cv.wait(st).unwrap();
+        }
+    }
+}
+
+pub(super) fn allreduce(comm: &Comm, x: f64, op: impl Fn(f64, f64) -> f64) -> f64 {
+    let n = comm.size();
+    if n == 1 {
+        return x;
+    }
+    if comm.rank() == 0 {
+        let mut acc = x;
+        for src in 1..n {
+            let v = comm.recv(src, TAG_REDUCE);
+            acc = op(acc, v[0]);
+        }
+        for dst in 1..n {
+            comm.send(dst, TAG_BCAST, &[acc]);
+        }
+        acc
+    } else {
+        comm.send(0, TAG_REDUCE, &[x]);
+        comm.recv(0, TAG_BCAST)[0]
+    }
+}
+
+pub(super) fn gather(comm: &Comm, root: usize, data: &[f64]) -> Option<Vec<Vec<f64>>> {
+    let n = comm.size();
+    if comm.rank() == root {
+        let mut out: Vec<Vec<f64>> = vec![Vec::new(); n];
+        out[root] = data.to_vec();
+        for src in (0..n).filter(|&r| r != root) {
+            out[src] = comm.recv(src, TAG_GATHER);
+        }
+        Some(out)
+    } else {
+        comm.send(root, TAG_GATHER, data);
+        None
+    }
+}
+
+pub(super) fn bcast(comm: &Comm, root: usize, data: Vec<f64>) -> Vec<f64> {
+    let n = comm.size();
+    if n == 1 {
+        return data;
+    }
+    if comm.rank() == root {
+        for dst in (0..n).filter(|&r| r != root) {
+            comm.send(dst, TAG_BCAST, &data);
+        }
+        data
+    } else {
+        comm.recv(root, TAG_BCAST)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Network;
+
+    fn on_ranks(n: usize, f: impl Fn(super::Comm) + Send + Sync + Clone + 'static) {
+        let net = Network::new(n);
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let c = net.comm(r);
+                let f = f.clone();
+                std::thread::spawn(move || f(c))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn allreduce_sum_all_ranks_agree() {
+        on_ranks(5, |c| {
+            let got = c.allreduce_sum(c.rank() as f64);
+            assert_eq!(got, 10.0); // 0+1+2+3+4
+        });
+    }
+
+    #[test]
+    fn allreduce_max_min() {
+        on_ranks(4, |c| {
+            assert_eq!(c.allreduce_max(c.rank() as f64), 3.0);
+            assert_eq!(c.allreduce_min(c.rank() as f64 + 1.0), 1.0);
+        });
+    }
+
+    #[test]
+    fn gather_collects_in_rank_order() {
+        on_ranks(4, |c| {
+            let payload = vec![c.rank() as f64; c.rank() + 1];
+            match c.gather(2, &payload) {
+                Some(all) => {
+                    assert_eq!(all.len(), 4);
+                    for (r, v) in all.iter().enumerate() {
+                        assert_eq!(v.len(), r + 1);
+                        assert!(v.iter().all(|&x| x == r as f64));
+                    }
+                }
+                None => assert_ne!(c.rank(), 2),
+            }
+        });
+    }
+
+    #[test]
+    fn bcast_distributes_root_payload() {
+        on_ranks(3, |c| {
+            let data = if c.rank() == 1 { vec![7.0, 8.0] } else { Vec::new() };
+            let got = c.bcast(1, data);
+            assert_eq!(got, vec![7.0, 8.0]);
+        });
+    }
+
+    #[test]
+    fn barrier_is_reusable() {
+        on_ranks(6, |c| {
+            for _ in 0..50 {
+                c.barrier();
+            }
+        });
+    }
+
+    #[test]
+    fn single_rank_collectives_are_identity() {
+        on_ranks(1, |c| {
+            c.barrier();
+            assert_eq!(c.allreduce_sum(3.0), 3.0);
+            assert_eq!(c.bcast(0, vec![1.0]), vec![1.0]);
+            assert_eq!(c.gather(0, &[2.0]), Some(vec![vec![2.0]]));
+        });
+    }
+}

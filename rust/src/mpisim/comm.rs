@@ -1,0 +1,117 @@
+//! The per-rank communicator handle (MPI_Comm analog).
+
+use std::sync::Arc;
+
+use super::request::{RecvRequest, SendRequest};
+use super::Network;
+
+/// A rank's view of the network: all point-to-point and collective entry
+/// points. Cheap to clone; clones refer to the same rank.
+#[derive(Clone)]
+pub struct Comm {
+    net: Arc<Network>,
+    rank: usize,
+}
+
+impl Comm {
+    pub(super) fn new(net: Arc<Network>, rank: usize) -> Self {
+        Comm { net, rank }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.net.size()
+    }
+
+    pub fn network(&self) -> &Arc<Network> {
+        &self.net
+    }
+
+    // ---- point to point ----------------------------------------------
+
+    /// Buffered send: completes locally, the payload is in flight.
+    pub fn send(&self, dst: usize, tag: u64, data: &[f64]) {
+        self.isend(dst, tag, data.to_vec()).wait();
+    }
+
+    /// Non-blocking send taking ownership of the payload (no copy).
+    pub fn isend(&self, dst: usize, tag: u64, data: Vec<f64>) -> SendRequest {
+        assert!(dst < self.size(), "send to invalid rank {dst}");
+        assert!(dst != self.rank, "self-sends are a deadlock footgun; use a local copy");
+        self.net.deposit(self.rank, dst, tag, data);
+        SendRequest::completed()
+    }
+
+    /// Blocking matched receive.
+    pub fn recv(&self, src: usize, tag: u64) -> Vec<f64> {
+        self.net.collect(self.rank, src, tag)
+    }
+
+    /// Post a non-blocking receive.
+    pub fn irecv(&self, src: usize, tag: u64) -> RecvRequest {
+        assert!(src < self.size(), "recv from invalid rank {src}");
+        RecvRequest { net: Arc::clone(&self.net), me: self.rank, src, tag }
+    }
+
+    // ---- collectives ---------------------------------------------------
+    // Implemented over the same transport with reserved internal tags; see
+    // collective.rs. Re-exported here so applications only touch `Comm`.
+
+    pub fn barrier(&self) {
+        super::collective::barrier(self)
+    }
+
+    pub fn allreduce_sum(&self, x: f64) -> f64 {
+        super::collective::allreduce(self, x, |a, b| a + b)
+    }
+
+    pub fn allreduce_max(&self, x: f64) -> f64 {
+        super::collective::allreduce(self, x, f64::max)
+    }
+
+    pub fn allreduce_min(&self, x: f64) -> f64 {
+        super::collective::allreduce(self, x, f64::min)
+    }
+
+    /// Gather variable-length vectors on `root`; `None` on other ranks.
+    pub fn gather(&self, root: usize, data: &[f64]) -> Option<Vec<Vec<f64>>> {
+        super::collective::gather(self, root, data)
+    }
+
+    /// Broadcast from `root`; returns the payload on every rank.
+    pub fn bcast(&self, root: usize, data: Vec<f64>) -> Vec<f64> {
+        super::collective::bcast(self, root, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[should_panic(expected = "self-sends")]
+    fn self_send_rejected() {
+        let net = Network::new(2);
+        let c = net.comm(0);
+        let _ = c.isend(0, 1, vec![1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid rank")]
+    fn send_to_bad_rank_rejected() {
+        let net = Network::new(2);
+        let c = net.comm(0);
+        let _ = c.isend(5, 1, vec![1.0]);
+    }
+
+    #[test]
+    fn rank_and_size() {
+        let net = Network::new(4);
+        let c = net.comm(2);
+        assert_eq!(c.rank(), 2);
+        assert_eq!(c.size(), 4);
+    }
+}

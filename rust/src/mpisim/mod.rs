@@ -1,0 +1,138 @@
+//! In-process message-passing substrate (the MPI.jl stand-in).
+//!
+//! The paper's system runs on MPI over Cray Aries. No MPI or multi-node
+//! hardware exists in this environment, so this module provides the same
+//! *semantics* in-process: ranks are OS threads, point-to-point messages are
+//! matched by `(source, tag)` in FIFO order, sends are buffered (non-blocking
+//! completion), receives block until a matching message's *modeled arrival
+//! time* has passed, and a Cartesian communicator provides the
+//! `MPI_Dims_create` / `MPI_Cart_shift` topology the implicit global grid is
+//! built on.
+//!
+//! The [`NetModel`] injects per-message latency and bandwidth so that the
+//! communication cost structure of a real interconnect — the thing the
+//! paper's `@hide_communication` exists to hide — is present in measurements
+//! even though the underlying transport is shared memory (DESIGN.md §2).
+//!
+//! What is deliberately *not* modeled: link contention, topology-dependent
+//! routing, and MPI unexpected-message buffers. Halo exchange is
+//! nearest-neighbour with one message in flight per (array, dim, side), so
+//! these effects are second-order for the workloads reproduced here.
+
+mod cart;
+mod collective;
+mod comm;
+mod netmodel;
+mod network;
+mod request;
+
+pub use cart::{dims_create, CartComm};
+pub use comm::Comm;
+pub use netmodel::NetModel;
+pub use network::{Network, TrafficStats};
+pub use request::{wait_all, RecvRequest, SendRequest};
+
+/// Tags are u64; the top byte is reserved for internal (collective) traffic.
+pub const INTERNAL_TAG_BASE: u64 = 0xFF00_0000_0000_0000;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let net = Network::new(2);
+        let c0 = net.comm(0);
+        let c1 = net.comm(1);
+        let t = std::thread::spawn(move || {
+            c1.send(0, 7, &[1.0, 2.0, 3.0]);
+        });
+        let got = c0.recv(1, 7);
+        assert_eq!(got, vec![1.0, 2.0, 3.0]);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn tag_and_source_matching_is_fifo_per_pair() {
+        let net = Network::new(2);
+        let c0 = net.comm(0);
+        let c1 = net.comm(1);
+        c1.send(0, 1, &[10.0]);
+        c1.send(0, 2, &[20.0]);
+        c1.send(0, 1, &[11.0]);
+        // tag 2 first even though it was sent between the tag-1 messages
+        assert_eq!(c0.recv(1, 2), vec![20.0]);
+        assert_eq!(c0.recv(1, 1), vec![10.0]);
+        assert_eq!(c0.recv(1, 1), vec![11.0]);
+    }
+
+    #[test]
+    fn isend_irecv_complete() {
+        let net = Network::new(2);
+        let c0 = net.comm(0);
+        let c1 = net.comm(1);
+        let r = c0.irecv(1, 5);
+        let s = c1.isend(0, 5, vec![42.0]);
+        s.wait();
+        assert_eq!(r.wait(), vec![42.0]);
+    }
+
+    #[test]
+    fn messages_between_many_ranks() {
+        let net = Network::new(8);
+        let mut handles = Vec::new();
+        for r in 0..8usize {
+            let c = net.comm(r);
+            handles.push(std::thread::spawn(move || {
+                let right = (r + 1) % 8;
+                let left = (r + 7) % 8;
+                let s = c.isend(right, 1, vec![r as f64]);
+                let got = c.recv(left, 1);
+                s.wait();
+                assert_eq!(got, vec![left as f64]);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn netmodel_delays_arrival() {
+        let model = NetModel { latency_s: 0.02, bw_bytes_per_s: 1e12 };
+        let net = Network::with_model(2, model);
+        let c0 = net.comm(0);
+        let c1 = net.comm(1);
+        c1.send(0, 1, &[1.0]);
+        let t0 = Instant::now();
+        let _ = c0.recv(1, 1);
+        assert!(t0.elapsed() >= Duration::from_millis(15), "latency not applied");
+    }
+
+    #[test]
+    fn netmodel_bandwidth_term() {
+        // 8 MB at 100 MB/s = 80 ms of modeled transit
+        let model = NetModel { latency_s: 0.0, bw_bytes_per_s: 100e6 };
+        let net = Network::with_model(2, model);
+        let c0 = net.comm(0);
+        let c1 = net.comm(1);
+        let big = vec![0.0f64; 1_000_000];
+        let t0 = Instant::now();
+        c1.send(0, 1, &big);
+        let _ = c0.recv(1, 1);
+        assert!(t0.elapsed() >= Duration::from_millis(60));
+    }
+
+    #[test]
+    fn traffic_stats_count() {
+        let net = Network::new(2);
+        let c0 = net.comm(0);
+        let c1 = net.comm(1);
+        c1.send(0, 1, &[0.0; 10]);
+        let _ = c0.recv(1, 1);
+        let s = net.traffic();
+        assert_eq!(s.messages, 1);
+        assert_eq!(s.bytes, 80);
+    }
+}

@@ -1,0 +1,23 @@
+//! `@hide_communication`: overlap halo exchange with inner-region compute.
+//!
+//! The local domain's interior is decomposed into one **inner** region plus
+//! up to six **boundary** slabs of the configured widths (the paper's
+//! `@hide_communication (16, 2, 2)`). One step then executes as:
+//!
+//! 1. compute all boundary slabs (they produce the planes that will be sent);
+//! 2. start the halo exchange — it packs the send planes and runs on the
+//!    engine's high-priority communication stream;
+//! 3. compute the inner region on the calling thread, overlapping 2.;
+//! 4. finish the exchange (unpack received halo planes).
+//!
+//! Correctness requires every exchanged dimension's boundary width to be at
+//! least [`crate::OVERLAP`] (so the sent planes are computed in phase 1 and
+//! the inner phase never touches the planes the engine reads/writes); this
+//! is validated at scheduling time, exactly as ImplicitGlobalGrid errors on
+//! too-small `b_width`s.
+
+pub mod regions;
+pub mod scheduler;
+
+pub use regions::{split_regions, HideWidths, RegionSet};
+pub use scheduler::hide_communication;

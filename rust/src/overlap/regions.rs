@@ -1,0 +1,211 @@
+//! Inner/boundary region decomposition.
+//!
+//! Mirrors `python/compile/model.py::split_regions` exactly — the region
+//! artifacts the AOT path lowers are indexed by these same boxes, and the
+//! cargo test `regions_match_artifact_manifest` pins the two against each
+//! other through `artifacts/manifest.json`.
+
+use crate::physics::Region;
+
+/// Boundary widths per dimension (the paper's `(16, 2, 2)`); width 0 means
+/// "do not split this dimension" (only valid when it is not exchanged).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HideWidths(pub [usize; 3]);
+
+impl HideWidths {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let parts: Vec<usize> = s
+            .split(',')
+            .map(|p| p.trim().parse())
+            .collect::<Result<_, _>>()
+            .map_err(|_| anyhow::anyhow!("bad widths '{s}' (want wx,wy,wz)"))?;
+        anyhow::ensure!(parts.len() == 3, "widths need exactly 3 components, got {}", parts.len());
+        Ok(HideWidths([parts[0], parts[1], parts[2]]))
+    }
+}
+
+/// The decomposition: the inner region plus named boundary slabs, in the
+/// fixed order xlo, xhi, ylo, yhi, zlo, zhi (absent when width 0 or the
+/// slab would be empty).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionSet {
+    pub inner: Region,
+    pub boundaries: Vec<(&'static str, Region)>,
+}
+
+impl RegionSet {
+    /// All regions, boundaries first (execution order of the scheduler).
+    pub fn boundaries_then_inner(&self) -> Vec<Region> {
+        let mut v: Vec<Region> = self.boundaries.iter().map(|&(_, r)| r).collect();
+        v.push(self.inner);
+        v
+    }
+
+    pub fn total_cells(&self) -> usize {
+        self.inner.cells() + self.boundaries.iter().map(|(_, r)| r.cells()).sum::<usize>()
+    }
+}
+
+/// Decompose the interior of an array of dims `n` for `hide_communication`
+/// with the given widths. Identical to the Python `split_regions` (see
+/// module docs).
+pub fn split_regions(n: [usize; 3], widths: HideWidths) -> anyhow::Result<RegionSet> {
+    let [nx, ny, nz] = n;
+    let HideWidths([wx, wy, wz]) = widths;
+    anyhow::ensure!(nx.min(ny).min(nz) >= 3, "shape {n:?} has no interior");
+    anyhow::ensure!(
+        2 * wx <= nx - 2 && 2 * wy <= ny - 2 && 2 * wz <= nz - 2,
+        "widths {widths:?} leave no inner region in {n:?}"
+    );
+    let (ix0, ix1) = (wx.max(1), nx - wx.max(1));
+    let (iy0, iy1) = (wy.max(1), ny - wy.max(1));
+    let (iz0, iz1) = (wz.max(1), nz - wz.max(1));
+    let inner = Region::new([ix0, iy0, iz0], [ix1 - ix0, iy1 - iy0, iz1 - iz0]);
+    let mut boundaries = Vec::new();
+    if ix0 > 1 {
+        boundaries.push(("xlo", Region::new([1, 1, 1], [ix0 - 1, ny - 2, nz - 2])));
+    }
+    if ix1 < nx - 1 {
+        boundaries.push(("xhi", Region::new([ix1, 1, 1], [nx - 1 - ix1, ny - 2, nz - 2])));
+    }
+    if iy0 > 1 {
+        boundaries.push(("ylo", Region::new([ix0, 1, 1], [ix1 - ix0, iy0 - 1, nz - 2])));
+    }
+    if iy1 < ny - 1 {
+        boundaries.push(("yhi", Region::new([ix0, iy1, 1], [ix1 - ix0, ny - 1 - iy1, nz - 2])));
+    }
+    if iz0 > 1 {
+        boundaries.push(("zlo", Region::new([ix0, iy0, 1], [ix1 - ix0, iy1 - iy0, iz0 - 1])));
+    }
+    if iz1 < nz - 1 {
+        boundaries.push(("zhi", Region::new([ix0, iy0, iz1], [ix1 - ix0, iy1 - iy0, nz - 1 - iz1])));
+    }
+    Ok(RegionSet { inner, boundaries })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{ensure, ensure_eq, for_all};
+
+    #[test]
+    fn matches_python_reference_case() {
+        // pinned against python split_regions((16,16,16),(4,2,2))
+        let rs = split_regions([16, 16, 16], HideWidths([4, 2, 2])).unwrap();
+        assert_eq!(rs.inner, Region::new([4, 2, 2], [8, 12, 12]));
+        let names: Vec<_> = rs.boundaries.iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, ["xlo", "xhi", "ylo", "yhi", "zlo", "zhi"]);
+        assert_eq!(rs.boundaries[0].1, Region::new([1, 1, 1], [3, 14, 14]));
+        assert_eq!(rs.boundaries[3].1, Region::new([4, 14, 1], [8, 1, 14]));
+    }
+
+    #[test]
+    fn zero_width_skips_axis() {
+        let rs = split_regions([10, 10, 10], HideWidths([0, 2, 2])).unwrap();
+        assert!(rs.boundaries.iter().all(|(n, _)| !n.starts_with('x')));
+        assert_eq!(rs.inner.offset[0], 1);
+        assert_eq!(rs.inner.size[0], 8);
+    }
+
+    #[test]
+    fn rejects_too_wide_or_degenerate() {
+        assert!(split_regions([8, 8, 8], HideWidths([4, 2, 2])).is_err());
+        assert!(split_regions([2, 8, 8], HideWidths([0, 0, 0])).is_err());
+    }
+
+    #[test]
+    fn parse_widths() {
+        assert_eq!(HideWidths::parse("16,2,2").unwrap(), HideWidths([16, 2, 2]));
+        assert!(HideWidths::parse("1,2").is_err());
+        assert!(HideWidths::parse("a,b,c").is_err());
+    }
+
+    /// Property: the regions partition the interior exactly (every interior
+    /// cell covered once, no boundary-plane cell covered).
+    #[test]
+    fn prop_disjoint_exact_cover() {
+        for_all(
+            60,
+            0xC0FFEE,
+            |g| {
+                let n = [g.usize_in(5, 18), g.usize_in(5, 18), g.usize_in(5, 18)];
+                let w = [
+                    g.usize_in(0, (n[0] - 2) / 2),
+                    g.usize_in(0, (n[1] - 2) / 2),
+                    g.usize_in(0, (n[2] - 2) / 2),
+                ];
+                (n, w)
+            },
+            |&(n, w)| {
+                let rs = split_regions(n, HideWidths(w)).map_err(|e| e.to_string())?;
+                let mut count = vec![0u8; n[0] * n[1] * n[2]];
+                let mut mark = |r: Region| {
+                    for x in r.offset[0]..r.offset[0] + r.size[0] {
+                        for y in r.offset[1]..r.offset[1] + r.size[1] {
+                            for z in r.offset[2]..r.offset[2] + r.size[2] {
+                                count[(x * n[1] + y) * n[2] + z] += 1;
+                            }
+                        }
+                    }
+                };
+                mark(rs.inner);
+                for &(_, r) in &rs.boundaries {
+                    mark(r);
+                }
+                for x in 0..n[0] {
+                    for y in 0..n[1] {
+                        for z in 0..n[2] {
+                            let interior = x >= 1
+                                && y >= 1
+                                && z >= 1
+                                && x < n[0] - 1
+                                && y < n[1] - 1
+                                && z < n[2] - 1;
+                            let c = count[(x * n[1] + y) * n[2] + z];
+                            ensure_eq(c, u8::from(interior), &format!("cell ({x},{y},{z})"))?;
+                        }
+                    }
+                }
+                ensure(
+                    rs.total_cells() == (n[0] - 2) * (n[1] - 2) * (n[2] - 2),
+                    "total cells",
+                )
+            },
+        );
+    }
+
+    /// Property: every region is strictly interior (required by the step
+    /// kernels) and the inner region is disjoint from the outermost 2-plane
+    /// shell whenever widths >= 2 (the overlap-safety precondition).
+    #[test]
+    fn prop_inner_avoids_shell_when_widths_ge_2() {
+        for_all(
+            40,
+            0xBEEF,
+            |g| {
+                let n = [g.usize_in(7, 20), g.usize_in(7, 20), g.usize_in(7, 20)];
+                let w = [
+                    g.usize_in(2, (n[0] - 2) / 2),
+                    g.usize_in(2, (n[1] - 2) / 2),
+                    g.usize_in(2, (n[2] - 2) / 2),
+                ];
+                (n, w)
+            },
+            |&(n, w)| {
+                let rs = split_regions(n, HideWidths(w)).map_err(|e| e.to_string())?;
+                for r in rs.boundaries_then_inner() {
+                    ensure(r.strictly_interior_to(n), format!("{r:?} interior to {n:?}"))?;
+                }
+                let inner = rs.inner;
+                for d in 0..3 {
+                    ensure(inner.offset[d] >= 2, format!("inner clears low shell in dim {d}"))?;
+                    ensure(
+                        inner.offset[d] + inner.size[d] <= n[d] - 2,
+                        format!("inner clears high shell in dim {d}"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

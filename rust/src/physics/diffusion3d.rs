@@ -1,0 +1,208 @@
+//! Native 3-D heat diffusion step (paper Fig. 1 `step!`), written directly
+//! from the finite-difference equations.
+//!
+//! `step_region` updates an arbitrary interior region (the unit the
+//! `hide_communication` scheduler works in); `step` is the full interior.
+//! The hot loop runs over contiguous z-rows with three row slices per
+//! (ix, iy) pair, which the compiler auto-vectorizes — see EXPERIMENTS.md
+//! §Perf for the measured cost per cell.
+
+use super::{Field3D, Region};
+
+/// Physics/discretization parameters of the diffusion step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DiffusionParams {
+    pub lam: f64,
+    pub dt: f64,
+    pub dx: f64,
+    pub dy: f64,
+    pub dz: f64,
+}
+
+impl DiffusionParams {
+    /// The paper's stable explicit time step dt = min(dx,dy,dz)^2 / lam /
+    /// max(Ci) / 6.1 (Fig. 1 line 33, adapted: uses maximum of 1/heat
+    /// capacity field).
+    pub fn stable(lam: f64, dx: f64, dy: f64, dz: f64, ci_max: f64) -> Self {
+        let h2 = (dx * dx).min(dy * dy).min(dz * dz);
+        DiffusionParams { lam, dt: h2 / lam / ci_max / 6.1, dx, dy, dz }
+    }
+
+    /// Scalar parameter vector in the AOT artifact order
+    /// (`manifest.diffusion_scalars`: lam, dt, dx, dy, dz).
+    pub fn scalar_vec(&self) -> Vec<f64> {
+        vec![self.lam, self.dt, self.dx, self.dy, self.dz]
+    }
+}
+
+/// Update `t2`'s interior from `t`: full-domain step.
+pub fn step(t: &Field3D, ci: &Field3D, p: &DiffusionParams, t2: &mut Field3D) {
+    step_region(t, ci, p, Region::interior(t.dims()), t2);
+}
+
+/// Update only `region` (strictly interior) of `t2` from `t`.
+pub fn step_region(t: &Field3D, ci: &Field3D, p: &DiffusionParams, region: Region, t2: &mut Field3D) {
+    let n = t.dims();
+    assert_eq!(ci.dims(), n, "Ci dims mismatch");
+    assert_eq!(t2.dims(), n, "T2 dims mismatch");
+    assert!(region.strictly_interior_to(n), "region {region:?} not interior to {n:?}");
+
+    let [ox, oy, oz] = region.offset;
+    let [sx, sy, sz] = region.size;
+    let (rdx2, rdy2, rdz2) = (1.0 / (p.dx * p.dx), 1.0 / (p.dy * p.dy), 1.0 / (p.dz * p.dz));
+    let coef = p.dt * p.lam;
+    let [_, ny, nz] = n;
+    let sy_stride = nz; // +-1 in y
+    let sx_stride = ny * nz; // +-1 in x
+
+    let td = t.as_slice();
+    let cd = ci.as_slice();
+    let out = t2.as_mut_slice();
+
+    for ix in ox..ox + sx {
+        for iy in oy..oy + sy {
+            let base = (ix * ny + iy) * nz + oz;
+            // Row windows: center and the six neighbours. All contiguous in z.
+            let c = &td[base..base + sz];
+            let zm = &td[base - 1..base - 1 + sz];
+            let zp = &td[base + 1..base + 1 + sz];
+            let ym = &td[base - sy_stride..base - sy_stride + sz];
+            let yp = &td[base + sy_stride..base + sy_stride + sz];
+            let xm = &td[base - sx_stride..base - sx_stride + sz];
+            let xp = &td[base + sx_stride..base + sx_stride + sz];
+            let cirow = &cd[base..base + sz];
+            let orow = &mut out[base..base + sz];
+            for k in 0..sz {
+                let lap = (xp[k] - 2.0 * c[k] + xm[k]) * rdx2
+                    + (yp[k] - 2.0 * c[k] + ym[k]) * rdy2
+                    + (zp[k] - 2.0 * c[k] + zm[k]) * rdz2;
+                orow[k] = c[k] + coef * cirow[k] * lap;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    pub fn rand_field(dims: [usize; 3], seed: u64) -> Field3D {
+        let mut rng = Rng::new(seed);
+        Field3D::from_fn(dims, |_, _, _| rng.normal())
+    }
+
+    fn params() -> DiffusionParams {
+        DiffusionParams { lam: 1.7, dt: 1e-4, dx: 0.11, dy: 0.13, dz: 0.17 }
+    }
+
+    /// Scalar reference implementation (per-cell indexing) used to validate
+    /// the row-sliced hot loop.
+    fn step_naive(t: &Field3D, ci: &Field3D, p: &DiffusionParams, t2: &mut Field3D) {
+        let [nx, ny, nz] = t.dims();
+        for ix in 1..nx - 1 {
+            for iy in 1..ny - 1 {
+                for iz in 1..nz - 1 {
+                    let lap = (t.get(ix + 1, iy, iz) - 2.0 * t.get(ix, iy, iz)
+                        + t.get(ix - 1, iy, iz))
+                        / (p.dx * p.dx)
+                        + (t.get(ix, iy + 1, iz) - 2.0 * t.get(ix, iy, iz)
+                            + t.get(ix, iy - 1, iz))
+                            / (p.dy * p.dy)
+                        + (t.get(ix, iy, iz + 1) - 2.0 * t.get(ix, iy, iz)
+                            + t.get(ix, iy, iz - 1))
+                            / (p.dz * p.dz);
+                    t2.set(ix, iy, iz, t.get(ix, iy, iz) + p.dt * p.lam * ci.get(ix, iy, iz) * lap);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hot_loop_matches_naive() {
+        let dims = [9, 7, 11];
+        let t = rand_field(dims, 1);
+        let ci = rand_field(dims, 2);
+        let mut a = t.clone();
+        let mut b = t.clone();
+        step(&t, &ci, &params(), &mut a);
+        step_naive(&t, &ci, &params(), &mut b);
+        // identical arithmetic per cell -> close to bitwise; the operation
+        // order differs only in the 1/dx^2 strength reduction
+        assert!(a.max_abs_diff(&b) < 1e-15, "diff {}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn boundary_untouched() {
+        let dims = [6, 6, 6];
+        let t = rand_field(dims, 3);
+        let ci = rand_field(dims, 4);
+        let mut t2 = Field3D::filled(dims, 9.0);
+        step(&t, &ci, &params(), &mut t2);
+        let [nx, ny, nz] = dims;
+        for ix in 0..nx {
+            for iy in 0..ny {
+                for iz in 0..nz {
+                    let boundary = ix == 0
+                        || iy == 0
+                        || iz == 0
+                        || ix == nx - 1
+                        || iy == ny - 1
+                        || iz == nz - 1;
+                    if boundary {
+                        assert_eq!(t2.get(ix, iy, iz), 9.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn region_updates_compose_to_full() {
+        let dims = [12, 10, 14];
+        let t = rand_field(dims, 5);
+        let ci = rand_field(dims, 6);
+        let p = params();
+        let mut full = t.clone();
+        step(&t, &ci, &p, &mut full);
+        // split interior into 3 x-chunks, compute region-wise
+        let mut composed = t.clone();
+        for (o, s) in [(1usize, 3usize), (4, 4), (8, 3)] {
+            step_region(&t, &ci, &p, Region::new([o, 1, 1], [s, 8, 12]), &mut composed);
+        }
+        assert_eq!(full.max_abs_diff(&composed), 0.0, "region composition must be bitwise");
+    }
+
+    #[test]
+    fn linear_field_is_fixed_point() {
+        let dims = [8, 8, 8];
+        let t = Field3D::from_fn(dims, |x, y, z| 0.3 * x as f64 + 0.5 * y as f64 - 0.2 * z as f64);
+        let ci = Field3D::filled(dims, 0.7);
+        let mut t2 = Field3D::zeros(dims);
+        step(&t, &ci, &params(), &mut t2);
+        for ix in 1..7 {
+            for iy in 1..7 {
+                for iz in 1..7 {
+                    assert!((t2.get(ix, iy, iz) - t.get(ix, iy, iz)).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stable_dt_formula() {
+        let p = DiffusionParams::stable(1.0, 0.1, 0.2, 0.3, 0.5);
+        assert!((p.dt - 0.01 / 1.0 / 0.5 / 6.1).abs() < 1e-15);
+        assert_eq!(p.scalar_vec(), vec![1.0, p.dt, 0.1, 0.2, 0.3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not interior")]
+    fn non_interior_region_rejected() {
+        let dims = [6, 6, 6];
+        let t = rand_field(dims, 7);
+        let ci = rand_field(dims, 8);
+        let mut t2 = t.clone();
+        step_region(&t, &ci, &params(), Region::new([0, 1, 1], [2, 2, 2]), &mut t2);
+    }
+}

@@ -1,0 +1,245 @@
+//! `Field3D`: the dense 3-D f64 array every layer shares.
+//!
+//! Layout is C order with z fastest — `idx(ix, iy, iz) = (ix*ny + iy)*nz + iz`
+//! — matching numpy's default and therefore the HLO parameter/result layout
+//! of the AOT artifacts: buffers cross the Rust<->PJRT boundary without
+//! relayout. (The Julia original is column-major with x fastest; only the
+//! axis naming differs, the stencils are symmetric.)
+
+use super::Region;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Field3D {
+    data: Vec<f64>,
+    dims: [usize; 3],
+}
+
+impl Field3D {
+    pub fn zeros(dims: [usize; 3]) -> Self {
+        Self::filled(dims, 0.0)
+    }
+
+    pub fn filled(dims: [usize; 3], v: f64) -> Self {
+        assert!(dims.iter().all(|&d| d > 0), "zero-size field {dims:?}");
+        Field3D { data: vec![v; dims[0] * dims[1] * dims[2]], dims }
+    }
+
+    /// Build from a per-cell function of (ix, iy, iz).
+    pub fn from_fn(dims: [usize; 3], mut f: impl FnMut(usize, usize, usize) -> f64) -> Self {
+        let mut out = Self::zeros(dims);
+        let [nx, ny, nz] = dims;
+        let mut i = 0;
+        for ix in 0..nx {
+            for iy in 0..ny {
+                for iz in 0..nz {
+                    out.data[i] = f(ix, iy, iz);
+                    i += 1;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn from_vec(dims: [usize; 3], data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), dims[0] * dims[1] * dims[2], "data/dims mismatch");
+        Field3D { data, dims }
+    }
+
+    #[inline]
+    pub fn dims(&self) -> [usize; 3] {
+        self.dims
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn idx(&self, ix: usize, iy: usize, iz: usize) -> usize {
+        debug_assert!(ix < self.dims[0] && iy < self.dims[1] && iz < self.dims[2]);
+        (ix * self.dims[1] + iy) * self.dims[2] + iz
+    }
+
+    #[inline]
+    pub fn get(&self, ix: usize, iy: usize, iz: usize) -> f64 {
+        self.data[self.idx(ix, iy, iz)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, ix: usize, iy: usize, iz: usize, v: f64) {
+        let i = self.idx(ix, iy, iz);
+        self.data[i] = v;
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Contiguous z-row at (ix, iy).
+    #[inline]
+    pub fn row(&self, ix: usize, iy: usize) -> &[f64] {
+        let start = self.idx(ix, iy, 0);
+        &self.data[start..start + self.dims[2]]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, ix: usize, iy: usize) -> &mut [f64] {
+        let start = self.idx(ix, iy, 0);
+        let nz = self.dims[2];
+        &mut self.data[start..start + nz]
+    }
+
+    pub fn max(&self) -> f64 {
+        self.data.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.data.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn abs_max(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    /// Extract a dense copy of `region`.
+    pub fn extract(&self, region: Region) -> Vec<f64> {
+        let [ox, oy, oz] = region.offset;
+        let [sx, sy, sz] = region.size;
+        assert!(ox + sx <= self.dims[0] && oy + sy <= self.dims[1] && oz + sz <= self.dims[2]);
+        let mut out = Vec::with_capacity(sx * sy * sz);
+        for ix in ox..ox + sx {
+            for iy in oy..oy + sy {
+                let start = self.idx(ix, iy, oz);
+                out.extend_from_slice(&self.data[start..start + sz]);
+            }
+        }
+        out
+    }
+
+    /// Scatter a dense region buffer (as produced by [`Self::extract`] or a
+    /// PJRT region program) into this field.
+    pub fn scatter(&mut self, region: Region, src: &[f64]) {
+        let [ox, oy, oz] = region.offset;
+        let [sx, sy, sz] = region.size;
+        assert_eq!(src.len(), sx * sy * sz, "scatter size mismatch");
+        assert!(ox + sx <= self.dims[0] && oy + sy <= self.dims[1] && oz + sz <= self.dims[2]);
+        let mut s = 0;
+        for ix in ox..ox + sx {
+            for iy in oy..oy + sy {
+                let start = self.idx(ix, iy, oz);
+                self.data[start..start + sz].copy_from_slice(&src[s..s + sz]);
+                s += sz;
+            }
+        }
+    }
+
+    /// Largest |a - b| over all cells (fields must have equal dims).
+    pub fn max_abs_diff(&self, other: &Field3D) -> f64 {
+        assert_eq!(self.dims, other.dims, "dims mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f64, |m, (a, b)| m.max((a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_c_order_z_fastest() {
+        let f = Field3D::from_fn([2, 3, 4], |x, y, z| (x * 100 + y * 10 + z) as f64);
+        assert_eq!(f.idx(0, 0, 1), 1);
+        assert_eq!(f.idx(0, 1, 0), 4);
+        assert_eq!(f.idx(1, 0, 0), 12);
+        assert_eq!(f.get(1, 2, 3), 123.0);
+        assert_eq!(f.as_slice()[f.idx(1, 2, 3)], 123.0);
+    }
+
+    #[test]
+    fn rows_are_contiguous() {
+        let f = Field3D::from_fn([2, 2, 5], |x, y, z| (x * 100 + y * 10 + z) as f64);
+        assert_eq!(f.row(1, 0), &[100.0, 101.0, 102.0, 103.0, 104.0]);
+    }
+
+    #[test]
+    fn extract_scatter_roundtrip() {
+        let f = Field3D::from_fn([5, 6, 7], |x, y, z| (x * 100 + y * 10 + z) as f64);
+        let r = Region::new([1, 2, 3], [3, 2, 2]);
+        let buf = f.extract(r);
+        assert_eq!(buf.len(), 12);
+        assert_eq!(buf[0], f.get(1, 2, 3));
+        let mut g = Field3D::zeros([5, 6, 7]);
+        g.scatter(r, &buf);
+        for ix in 0..5 {
+            for iy in 0..6 {
+                for iz in 0..7 {
+                    let inside = (1..4).contains(&ix) && (2..4).contains(&iy) && (3..5).contains(&iz);
+                    let want = if inside { f.get(ix, iy, iz) } else { 0.0 };
+                    assert_eq!(g.get(ix, iy, iz), want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reductions() {
+        let f = Field3D::from_vec([1, 1, 4], vec![1.0, -3.0, 2.0, 0.0]);
+        assert_eq!(f.max(), 2.0);
+        assert_eq!(f.min(), -3.0);
+        assert_eq!(f.abs_max(), 3.0);
+        assert_eq!(f.sum(), 0.0);
+        assert!((f.l2_norm() - 14.0f64.sqrt()).abs() < 1e-15);
+        assert!(f.all_finite());
+    }
+
+    #[test]
+    fn max_abs_diff_detects_change() {
+        let a = Field3D::filled([3, 3, 3], 1.0);
+        let mut b = a.clone();
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+        b.set(2, 2, 2, 1.5);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "data/dims mismatch")]
+    fn from_vec_checks_len() {
+        let _ = Field3D::from_vec([2, 2, 2], vec![0.0; 7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "scatter size mismatch")]
+    fn scatter_checks_len() {
+        let mut f = Field3D::zeros([4, 4, 4]);
+        f.scatter(Region::new([1, 1, 1], [2, 2, 2]), &[0.0; 7]);
+    }
+}

@@ -1,0 +1,81 @@
+//! Native Rust stencil physics: the field container plus hand-written
+//! implementations of both solvers.
+//!
+//! These serve three roles (DESIGN.md S6):
+//!
+//! 1. **The paper's "CUDA C" reference** — §3 of the paper reports the Julia
+//!    solver reaching 90% of the original CUDA C + MPI implementation; here
+//!    the AOT JAX/Pallas artifacts play "Julia" and this native Rust code
+//!    plays "CUDA C" in the `perf_reference` bench.
+//! 2. **Independent correctness oracle** — written from the equations, not
+//!    from the Python source; cargo tests assert PJRT artifacts and native
+//!    steps agree to f64 round-off.
+//! 3. **The fallback backend** — local sizes with no lowered artifact run
+//!    native, so the distributed machinery works for any grid.
+
+pub mod diffusion3d;
+pub mod field;
+pub mod twophase;
+
+pub use diffusion3d::DiffusionParams;
+pub use field::Field3D;
+pub use twophase::TwophaseParams;
+
+/// A sub-box of a local array: offset + size per dimension, the unit of
+/// work for `hide_communication` region programs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Region {
+    pub offset: [usize; 3],
+    pub size: [usize; 3],
+}
+
+impl Region {
+    pub fn new(offset: [usize; 3], size: [usize; 3]) -> Self {
+        Region { offset, size }
+    }
+
+    /// The full interior of an array of dims `n`: offset 1, size n-2.
+    pub fn interior(n: [usize; 3]) -> Self {
+        assert!(n.iter().all(|&d| d >= 3), "no interior for dims {n:?}");
+        Region { offset: [1, 1, 1], size: [n[0] - 2, n[1] - 2, n[2] - 2] }
+    }
+
+    pub fn cells(&self) -> usize {
+        self.size.iter().product()
+    }
+
+    /// Is this region strictly inside the interior of an array of dims `n`?
+    pub fn strictly_interior_to(&self, n: [usize; 3]) -> bool {
+        (0..3).all(|d| {
+            self.offset[d] >= 1 && self.size[d] >= 1 && self.offset[d] + self.size[d] <= n[d] - 1
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interior_region() {
+        let r = Region::interior([8, 6, 5]);
+        assert_eq!(r.offset, [1, 1, 1]);
+        assert_eq!(r.size, [6, 4, 3]);
+        assert_eq!(r.cells(), 72);
+        assert!(r.strictly_interior_to([8, 6, 5]));
+    }
+
+    #[test]
+    fn interiority_checks() {
+        assert!(!Region::new([0, 1, 1], [2, 2, 2]).strictly_interior_to([8, 8, 8]));
+        assert!(!Region::new([1, 1, 1], [7, 2, 2]).strictly_interior_to([8, 8, 8]));
+        assert!(Region::new([1, 1, 1], [6, 2, 2]).strictly_interior_to([8, 8, 8]));
+        assert!(Region::new([1, 1, 1], [5, 2, 2]).strictly_interior_to([8, 8, 8]));
+    }
+
+    #[test]
+    #[should_panic(expected = "no interior")]
+    fn degenerate_interior_panics() {
+        let _ = Region::interior([2, 5, 5]);
+    }
+}

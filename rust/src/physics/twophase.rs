@@ -1,0 +1,313 @@
+//! Native two-phase flow pseudo-transient iteration (the Fig. 3 solver's
+//! porosity-wave core), written from the equations in DESIGN.md §2.
+//!
+//! Staggered grid: Pe and phi live at cell centers; the Darcy fluxes live on
+//! faces and are *kernel-local* — computed on the fly from the halo-exchanged
+//! center fields, exactly as in the paper's solver where the size-(n-1)
+//! staggered arrays are never communicated. The per-cell flux divergence is
+//! expanded inline; mobility `k = (phi/phiref)^npow` is precomputed on the
+//! region plus its one-cell ring to avoid 7 `powf` calls per cell.
+
+use super::{Field3D, Region};
+
+/// Physics/discretization parameters of the two-phase iteration, in the
+/// AOT artifact scalar order (`manifest.twophase_scalars`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TwophaseParams {
+    pub dtau: f64,
+    pub dt: f64,
+    pub dx: f64,
+    pub dy: f64,
+    pub dz: f64,
+    pub eta: f64,
+    pub rhog: f64,
+    pub phiref: f64,
+    pub npow: f64,
+}
+
+impl TwophaseParams {
+    /// A stable default configuration for unit-cube domains: pseudo-step
+    /// limited by the face-mobility diffusion CFL (k <= 1 at phi = phiref).
+    pub fn stable(dx: f64, dy: f64, dz: f64) -> Self {
+        let h2 = (dx * dx).min(dy * dy).min(dz * dz);
+        TwophaseParams {
+            dtau: 0.2 * h2,
+            dt: 0.2 * h2,
+            dx,
+            dy,
+            dz,
+            eta: 1.0,
+            rhog: 1.0,
+            phiref: 0.05,
+            npow: 3.0,
+        }
+    }
+
+    pub fn scalar_vec(&self) -> Vec<f64> {
+        vec![
+            self.dtau, self.dt, self.dx, self.dy, self.dz, self.eta, self.rhog, self.phiref,
+            self.npow,
+        ]
+    }
+}
+
+/// Full-interior iteration: writes `pe2`/`phi2` interiors.
+pub fn step(
+    pe: &Field3D,
+    phi: &Field3D,
+    p: &TwophaseParams,
+    pe2: &mut Field3D,
+    phi2: &mut Field3D,
+) {
+    step_region(pe, phi, p, Region::interior(pe.dims()), pe2, phi2);
+}
+
+/// Region iteration: updates only `region` (strictly interior).
+pub fn step_region(
+    pe: &Field3D,
+    phi: &Field3D,
+    p: &TwophaseParams,
+    region: Region,
+    pe2: &mut Field3D,
+    phi2: &mut Field3D,
+) {
+    let n = pe.dims();
+    assert_eq!(phi.dims(), n, "phi dims mismatch");
+    assert_eq!(pe2.dims(), n, "pe2 dims mismatch");
+    assert_eq!(phi2.dims(), n, "phi2 dims mismatch");
+    assert!(region.strictly_interior_to(n), "region {region:?} not interior to {n:?}");
+
+    let [ox, oy, oz] = region.offset;
+    let [sx, sy, sz] = region.size;
+    let [_, ny, nz] = n;
+    let ystride = nz;
+    let xstride = ny * nz;
+
+    // Mobility on the region + one-cell ring, as a dense scratch block.
+    // Scratch layout: (sx+2, sy+2, sz+2), C order.
+    let (kx, ky, kz) = (sx + 2, sy + 2, sz + 2);
+    let mut k = vec![0.0f64; kx * ky * kz];
+    {
+        let phid = phi.as_slice();
+        let inv_phiref = 1.0 / p.phiref;
+        let mut i = 0;
+        for ix in ox - 1..ox + sx + 1 {
+            for iy in oy - 1..oy + sy + 1 {
+                let base = (ix * ny + iy) * nz + (oz - 1);
+                for v in &phid[base..base + sz + 2] {
+                    k[i] = (v * inv_phiref).powf(p.npow);
+                    i += 1;
+                }
+            }
+        }
+    }
+    let kidx = |dx: usize, dy: usize, dz: usize| (dx * ky + dy) * kz + dz;
+
+    let ped = pe.as_slice();
+    let phid = phi.as_slice();
+    let (rdx, rdy, rdz) = (1.0 / p.dx, 1.0 / p.dy, 1.0 / p.dz);
+    let inv_eta = 1.0 / p.eta;
+
+    for ix in 0..sx {
+        for iy in 0..sy {
+            let base = ((ox + ix) * ny + (oy + iy)) * nz + oz;
+            for iz in 0..sz {
+                let c = base + iz;
+                let pe_c = ped[c];
+                let k_c = k[kidx(ix + 1, iy + 1, iz + 1)];
+                // face mobilities (arithmetic mean of adjacent centers)
+                let kxm = 0.5 * (k[kidx(ix, iy + 1, iz + 1)] + k_c);
+                let kxp = 0.5 * (k_c + k[kidx(ix + 2, iy + 1, iz + 1)]);
+                let kym = 0.5 * (k[kidx(ix + 1, iy, iz + 1)] + k_c);
+                let kyp = 0.5 * (k_c + k[kidx(ix + 1, iy + 2, iz + 1)]);
+                let kzm = 0.5 * (k[kidx(ix + 1, iy + 1, iz)] + k_c);
+                let kzp = 0.5 * (k_c + k[kidx(ix + 1, iy + 1, iz + 2)]);
+                // Darcy fluxes on the six faces (z faces carry buoyancy)
+                let qxm = -kxm * (pe_c - ped[c - xstride]) * rdx;
+                let qxp = -kxp * (ped[c + xstride] - pe_c) * rdx;
+                let qym = -kym * (pe_c - ped[c - ystride]) * rdy;
+                let qyp = -kyp * (ped[c + ystride] - pe_c) * rdy;
+                let qzm = -kzm * ((pe_c - ped[c - 1]) * rdz - p.rhog);
+                let qzp = -kzp * ((ped[c + 1] - pe_c) * rdz - p.rhog);
+                let divq = (qxp - qxm) * rdx + (qyp - qym) * rdy + (qzp - qzm) * rdz;
+
+                let phi_c = phid[c];
+                let rpe = -divq - pe_c / (p.eta * (1.0 - phi_c));
+                let pe_new = pe_c + p.dtau * rpe;
+                pe2.as_mut_slice()[c] = pe_new;
+                phi2.as_mut_slice()[c] = phi_c + p.dt * (1.0 - phi_c) * pe_new * inv_eta;
+            }
+        }
+    }
+}
+
+/// The Gaussian porosity-blob initial condition used by the Fig. 3 analog:
+/// background porosity `phi_bg`, a blob of amplitude `phi_amp` centred at
+/// fraction (0.5, 0.5, zfrac) of the *global* domain. Takes global coords so
+/// every rank builds its view of the same global field.
+pub fn porosity_blob(
+    dims: [usize; 3],
+    global_of: impl Fn(usize, usize, usize) -> [f64; 3],
+    phi_bg: f64,
+    phi_amp: f64,
+    zfrac: f64,
+) -> Field3D {
+    Field3D::from_fn(dims, |ix, iy, iz| {
+        let [gx, gy, gz] = global_of(ix, iy, iz); // in [0,1]^3
+        let r2 = (gx - 0.5).powi(2) + (gy - 0.5).powi(2) + (gz - zfrac).powi(2);
+        phi_bg + phi_amp * (-r2 / 0.01).exp()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand_state(dims: [usize; 3], seed: u64) -> (Field3D, Field3D) {
+        let mut rng = Rng::new(seed);
+        let pe = Field3D::from_fn(dims, |_, _, _| 0.1 * rng.normal());
+        let phi = Field3D::from_fn(dims, |_, _, _| rng.range(0.01, 0.05));
+        (pe, phi)
+    }
+
+    fn params() -> TwophaseParams {
+        TwophaseParams {
+            dtau: 1e-4,
+            dt: 1e-3,
+            dx: 0.1,
+            dy: 0.12,
+            dz: 0.09,
+            eta: 1.0,
+            rhog: 1.0,
+            phiref: 0.05,
+            npow: 3.0,
+        }
+    }
+
+    /// Naive per-cell implementation with explicit flux arrays, mirroring
+    /// the jnp oracle's formulation, to validate the fused loop.
+    fn step_naive(
+        pe: &Field3D,
+        phi: &Field3D,
+        p: &TwophaseParams,
+        pe2: &mut Field3D,
+        phi2: &mut Field3D,
+    ) {
+        let [nx, ny, nz] = pe.dims();
+        let k = Field3D::from_fn([nx, ny, nz], |x, y, z| {
+            (phi.get(x, y, z) / p.phiref).powf(p.npow)
+        });
+        let qx = |i: usize, j: usize, l: usize| {
+            -0.5 * (k.get(i, j, l) + k.get(i + 1, j, l)) * (pe.get(i + 1, j, l) - pe.get(i, j, l))
+                / p.dx
+        };
+        let qy = |i: usize, j: usize, l: usize| {
+            -0.5 * (k.get(i, j, l) + k.get(i, j + 1, l)) * (pe.get(i, j + 1, l) - pe.get(i, j, l))
+                / p.dy
+        };
+        let qz = |i: usize, j: usize, l: usize| {
+            -0.5 * (k.get(i, j, l) + k.get(i, j, l + 1))
+                * ((pe.get(i, j, l + 1) - pe.get(i, j, l)) / p.dz - p.rhog)
+        };
+        for i in 1..nx - 1 {
+            for j in 1..ny - 1 {
+                for l in 1..nz - 1 {
+                    let divq = (qx(i, j, l) - qx(i - 1, j, l)) / p.dx
+                        + (qy(i, j, l) - qy(i, j - 1, l)) / p.dy
+                        + (qz(i, j, l) - qz(i, j, l - 1)) / p.dz;
+                    let rpe = -divq - pe.get(i, j, l) / (p.eta * (1.0 - phi.get(i, j, l)));
+                    let pe_new = pe.get(i, j, l) + p.dtau * rpe;
+                    pe2.set(i, j, l, pe_new);
+                    phi2.set(i, j, l, phi.get(i, j, l) + p.dt * (1.0 - phi.get(i, j, l)) * pe_new / p.eta);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_loop_matches_naive() {
+        let dims = [9, 8, 10];
+        let (pe, phi) = rand_state(dims, 1);
+        let p = params();
+        let (mut a_pe, mut a_phi) = (pe.clone(), phi.clone());
+        let (mut b_pe, mut b_phi) = (pe.clone(), phi.clone());
+        step(&pe, &phi, &p, &mut a_pe, &mut a_phi);
+        step_naive(&pe, &phi, &p, &mut b_pe, &mut b_phi);
+        assert!(a_pe.max_abs_diff(&b_pe) < 1e-13, "pe {}", a_pe.max_abs_diff(&b_pe));
+        assert!(a_phi.max_abs_diff(&b_phi) < 1e-15, "phi {}", a_phi.max_abs_diff(&b_phi));
+    }
+
+    #[test]
+    fn uniform_state_relaxes_pressure() {
+        let dims = [7, 7, 7];
+        let p = params();
+        let pe0 = 0.2;
+        let phi0 = 0.03;
+        let pe = Field3D::filled(dims, pe0);
+        let phi = Field3D::filled(dims, phi0);
+        let mut pe2 = pe.clone();
+        let mut phi2 = phi.clone();
+        step(&pe, &phi, &p, &mut pe2, &mut phi2);
+        let expect = pe0 * (1.0 - p.dtau / (p.eta * (1.0 - phi0)));
+        for i in 1..6 {
+            assert!((pe2.get(i, 3, 3) - expect).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn region_updates_compose_to_full() {
+        let dims = [10, 9, 12];
+        let (pe, phi) = rand_state(dims, 2);
+        let p = params();
+        let (mut f_pe, mut f_phi) = (pe.clone(), phi.clone());
+        step(&pe, &phi, &p, &mut f_pe, &mut f_phi);
+        let (mut c_pe, mut c_phi) = (pe.clone(), phi.clone());
+        for (o, s) in [(1usize, 2usize), (3, 5), (8, 1)] {
+            let r = Region::new([o, 1, 1], [s, 7, 10]);
+            step_region(&pe, &phi, &p, r, &mut c_pe, &mut c_phi);
+        }
+        assert_eq!(f_pe.max_abs_diff(&c_pe), 0.0);
+        assert_eq!(f_phi.max_abs_diff(&c_phi), 0.0);
+    }
+
+    #[test]
+    fn boundary_untouched() {
+        let dims = [6, 6, 6];
+        let (pe, phi) = rand_state(dims, 3);
+        let p = params();
+        let mut pe2 = Field3D::filled(dims, 42.0);
+        let mut phi2 = Field3D::filled(dims, 43.0);
+        step(&pe, &phi, &p, &mut pe2, &mut phi2);
+        assert_eq!(pe2.get(0, 3, 3), 42.0);
+        assert_eq!(pe2.get(5, 3, 3), 42.0);
+        assert_eq!(phi2.get(3, 0, 3), 43.0);
+        assert_eq!(phi2.get(3, 3, 5), 43.0);
+    }
+
+    #[test]
+    fn blob_iteration_stays_bounded() {
+        let dims = [12, 12, 12];
+        let h = 1.0 / 11.0;
+        let p = TwophaseParams::stable(h, h, h);
+        let n = 11.0;
+        let phi = porosity_blob(
+            dims,
+            |x, y, z| [x as f64 / n, y as f64 / n, z as f64 / n],
+            0.01,
+            0.04,
+            0.3,
+        );
+        let pe = Field3D::zeros(dims);
+        let (mut pe_a, mut pe_b) = (pe.clone(), pe.clone());
+        let (mut phi_a, mut phi_b) = (phi.clone(), phi.clone());
+        for _ in 0..100 {
+            step(&pe_a, &phi_a, &p, &mut pe_b, &mut phi_b);
+            std::mem::swap(&mut pe_a, &mut pe_b);
+            std::mem::swap(&mut phi_a, &mut phi_b);
+        }
+        assert!(pe_a.all_finite() && phi_a.all_finite());
+        assert!(pe_a.abs_max() < 10.0);
+        assert!(phi_a.min() > 0.0 && phi_a.max() < 1.0);
+    }
+}

@@ -1,0 +1,243 @@
+//! `manifest.json` parsing and artifact lookup.
+
+use std::path::{Path, PathBuf};
+
+use crate::physics::Region;
+use crate::util::json::Json;
+
+/// One AOT-lowered program, as described by the manifest.
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    /// "diffusion" | "twophase"
+    pub app: String,
+    /// "full" or "region:<name>"
+    pub kind: String,
+    /// local array shape the program was lowered for
+    pub shape: [usize; 3],
+    /// hide_communication widths (region programs only)
+    pub widths: Option<[usize; 3]>,
+    /// region box (region programs only)
+    pub region: Option<Region>,
+    /// names of array parameters, in order
+    pub arrays_in: Vec<String>,
+    /// names of scalar parameters, in order (after the arrays)
+    pub scalars: Vec<String>,
+    /// output array shapes, in tuple order
+    pub out_shapes: Vec<[usize; 3]>,
+}
+
+/// The parsed artifact directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub overlap: usize,
+    pub programs: Vec<ProgramSpec>,
+}
+
+fn shape3(v: &Json) -> anyhow::Result<[usize; 3]> {
+    let l = v
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("shape is not an array"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow::anyhow!("bad shape entry")))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    anyhow::ensure!(l.len() == 3, "shape has {} entries, want 3", l.len());
+    Ok([l[0], l[1], l[2]])
+}
+
+impl ArtifactStore {
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        let root = Json::from_str(&text)?;
+        anyhow::ensure!(
+            root.get("format").and_then(Json::as_usize) == Some(1),
+            "unsupported manifest format"
+        );
+        let overlap = root
+            .get("overlap")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing overlap"))?;
+        let mut programs = Vec::new();
+        for p in root
+            .get("programs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing programs"))?
+        {
+            let get_str = |k: &str| -> anyhow::Result<String> {
+                Ok(p.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("program missing {k}"))?
+                    .to_string())
+            };
+            let region = match p.get("region") {
+                Some(Json::Arr(a)) if a.len() == 6 => {
+                    let v: Vec<usize> = a
+                        .iter()
+                        .map(|x| x.as_usize().ok_or_else(|| anyhow::anyhow!("bad region")))
+                        .collect::<anyhow::Result<_>>()?;
+                    Some(Region::new([v[0], v[1], v[2]], [v[3], v[4], v[5]]))
+                }
+                _ => None,
+            };
+            let widths = match p.get("widths") {
+                Some(w @ Json::Arr(_)) => Some(shape3(w)?),
+                _ => None,
+            };
+            let names = |k: &str| -> Vec<String> {
+                p.get(k)
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(|e| {
+                                e.get("name").and_then(Json::as_str).map(str::to_string)
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            let out_shapes = p
+                .get("arrays_out")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|e| e.get("shape").and_then(|s| shape3(s).ok()))
+                        .collect()
+                })
+                .unwrap_or_default();
+            let scalars = p
+                .get("scalars")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|s| s.as_str().map(str::to_string)).collect())
+                .unwrap_or_default();
+            programs.push(ProgramSpec {
+                name: get_str("name")?,
+                file: get_str("file")?,
+                app: get_str("app")?,
+                kind: get_str("kind")?,
+                shape: shape3(p.get("shape").ok_or_else(|| anyhow::anyhow!("missing shape"))?)?,
+                widths,
+                region,
+                arrays_in: names("arrays_in"),
+                scalars,
+                out_shapes,
+            });
+        }
+        Ok(ArtifactStore { dir, overlap, programs })
+    }
+
+    /// The full-step program for (app, local shape), if lowered.
+    pub fn full_program(&self, app: &str, shape: [usize; 3]) -> Option<&ProgramSpec> {
+        self.programs
+            .iter()
+            .find(|p| p.app == app && p.kind == "full" && p.shape == shape)
+    }
+
+    /// The region programs for (app, shape, widths): inner + boundaries.
+    pub fn region_set(
+        &self,
+        app: &str,
+        shape: [usize; 3],
+        widths: [usize; 3],
+    ) -> Vec<&ProgramSpec> {
+        self.programs
+            .iter()
+            .filter(|p| {
+                p.app == app
+                    && p.shape == shape
+                    && p.widths == Some(widths)
+                    && p.kind.starts_with("region:")
+            })
+            .collect()
+    }
+
+    /// Shapes for which a full program of `app` exists (for diagnostics).
+    pub fn shapes_of(&self, app: &str) -> Vec<[usize; 3]> {
+        self.programs
+            .iter()
+            .filter(|p| p.app == app && p.kind == "full")
+            .map(|p| p.shape)
+            .collect()
+    }
+
+    pub fn hlo_path(&self, spec: &ProgramSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact_dir;
+
+    fn store() -> ArtifactStore {
+        ArtifactStore::load(artifact_dir()).expect("artifacts built (make artifacts)")
+    }
+
+    #[test]
+    fn manifest_loads_with_programs() {
+        let s = store();
+        assert_eq!(s.overlap, crate::OVERLAP);
+        assert!(s.programs.len() >= 10);
+    }
+
+    #[test]
+    fn full_programs_exist_for_default_shapes() {
+        let s = store();
+        for shape in [[8, 8, 8], [16, 16, 16], [32, 32, 32], [24, 16, 12]] {
+            let p = s.full_program("diffusion", shape).expect("diffusion full program");
+            assert_eq!(p.arrays_in, ["T", "Ci"]);
+            assert_eq!(p.scalars, ["lam", "dt", "dx", "dy", "dz"]);
+            assert_eq!(p.out_shapes, vec![shape]);
+            assert!(s.hlo_path(p).exists());
+        }
+        assert!(s.full_program("twophase", [32, 32, 32]).is_some());
+        assert!(s.full_program("diffusion", [5, 5, 5]).is_none());
+    }
+
+    #[test]
+    fn region_sets_cover_interior() {
+        let s = store();
+        let set = s.region_set("diffusion", [32, 32, 32], [4, 2, 2]);
+        assert_eq!(set.len(), 7, "inner + 6 boundary slabs");
+        let total: usize = set.iter().map(|p| p.region.unwrap().cells()).sum();
+        assert_eq!(total, 30 * 30 * 30);
+        for p in &set {
+            let r = p.region.unwrap();
+            assert_eq!(p.out_shapes[0], r.size);
+        }
+    }
+
+    #[test]
+    fn region_set_matches_rust_decomposition() {
+        use crate::overlap::regions::{split_regions, HideWidths};
+        let s = store();
+        let rs = split_regions([32, 32, 32], HideWidths([4, 2, 2])).unwrap();
+        let set = s.region_set("diffusion", [32, 32, 32], [4, 2, 2]);
+        let inner = set
+            .iter()
+            .find(|p| p.kind == "region:inner")
+            .and_then(|p| p.region)
+            .unwrap();
+        assert_eq!(inner, rs.inner, "python and rust region decomposition must agree");
+        for (name, r) in &rs.boundaries {
+            let got = set
+                .iter()
+                .find(|p| p.kind == format!("region:{name}"))
+                .and_then(|p| p.region)
+                .unwrap();
+            assert_eq!(got, *r, "region {name}");
+        }
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = ArtifactStore::load("/nonexistent/path").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,314 @@
+//! Step executors: one interface over the native (Rust) and PJRT (AOT
+//! JAX/Pallas) backends, for both applications.
+//!
+//! The executor is the only thing the coordinator's time loop talks to: it
+//! computes a [`Region`] of the next-step fields from the current fields.
+//! With `ExecBackend::Pjrt`, full-interior steps run the `*_step__<shape>`
+//! artifact and `hide_communication` regions run the matching
+//! `*_{inner,xlo,...}__<shape>__w<widths>` artifacts, whose dense outputs
+//! are scattered into the destination fields.
+
+use std::collections::HashMap;
+
+use crate::physics::{diffusion3d, twophase, DiffusionParams, Field3D, Region, TwophaseParams};
+
+use super::artifacts::{ArtifactStore, ProgramSpec};
+use super::pjrt::PjrtContext;
+
+/// Which implementation computes the stencil.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecBackend {
+    /// Hand-written Rust loops (the paper's "CUDA C" reference analog).
+    Native,
+    /// AOT-compiled JAX/Pallas artifacts via PJRT (the "Julia" analog).
+    Pjrt,
+}
+
+impl ExecBackend {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "native" => Ok(ExecBackend::Native),
+            "pjrt" => Ok(ExecBackend::Pjrt),
+            _ => anyhow::bail!("unknown backend '{s}' (want native|pjrt)"),
+        }
+    }
+}
+
+struct PjrtPrograms {
+    ctx: PjrtContext,
+    full: ProgramSpec,
+    /// region -> program, for the configured hide widths
+    regions: HashMap<Region, ProgramSpec>,
+    /// reusable dense output buffers for region programs (hot path does not
+    /// allocate in steady state)
+    scratch: HashMap<Region, Vec<Vec<f64>>>,
+}
+
+impl PjrtPrograms {
+    fn load(
+        app: &str,
+        shape: [usize; 3],
+        widths: Option<[usize; 3]>,
+        store: &ArtifactStore,
+    ) -> anyhow::Result<Self> {
+        let full = store
+            .full_program(app, shape)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no {app} artifact for local shape {shape:?}; available: {:?} — \
+                     re-run `make artifacts` with this shape added in aot.py, or use \
+                     --backend native",
+                    store.shapes_of(app)
+                )
+            })?
+            .clone();
+        let mut ctx = PjrtContext::cpu()?;
+        ctx.compile(store, &full)?;
+        let mut regions = HashMap::new();
+        if let Some(w) = widths {
+            let set = store.region_set(app, shape, w);
+            anyhow::ensure!(
+                !set.is_empty(),
+                "no {app} region artifacts for shape {shape:?} widths {w:?}; \
+                 hide_communication on the pjrt backend needs them (see aot.py)"
+            );
+            for spec in set {
+                ctx.compile(store, spec)?;
+                regions.insert(spec.region.expect("region programs carry a region"), spec.clone());
+            }
+        }
+        Ok(PjrtPrograms { ctx, full, regions, scratch: HashMap::new() })
+    }
+
+    fn run_region(
+        &mut self,
+        region: Region,
+        interior: Region,
+        fields: &[&Field3D],
+        scalars: &[f64],
+        outs: &mut [&mut Field3D],
+    ) -> anyhow::Result<()> {
+        if region == interior {
+            // full-step artifact: writes the whole arrays in place
+            let mut dsts: Vec<&mut [f64]> =
+                outs.iter_mut().map(|f| f.as_mut_slice()).collect();
+            return self.ctx.run_into(&self.full, fields, scalars, &mut dsts);
+        }
+        let spec = self.regions.get(&region).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no region artifact for {region:?}; pjrt hide_communication widths must \
+                 match the lowered set"
+            )
+        })?;
+        let bufs = self.scratch.entry(region).or_insert_with(|| {
+            spec.out_shapes.iter().map(|s| vec![0.0; s.iter().product()]).collect()
+        });
+        {
+            let mut dsts: Vec<&mut [f64]> = bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
+            self.ctx.run_into(spec, fields, scalars, &mut dsts)?;
+        }
+        for (dst, v) in outs.iter_mut().zip(self.scratch.get(&region).expect("just inserted")) {
+            dst.scatter(region, v);
+        }
+        Ok(())
+    }
+}
+
+/// Executor for the 3-D heat diffusion step.
+pub struct DiffusionExecutor {
+    pjrt: Option<PjrtPrograms>,
+}
+
+impl DiffusionExecutor {
+    pub fn native() -> Self {
+        DiffusionExecutor { pjrt: None }
+    }
+
+    pub fn pjrt(
+        shape: [usize; 3],
+        widths: Option<[usize; 3]>,
+        store: &ArtifactStore,
+    ) -> anyhow::Result<Self> {
+        Ok(DiffusionExecutor { pjrt: Some(PjrtPrograms::load("diffusion", shape, widths, store)?) })
+    }
+
+    pub fn backend(&self) -> ExecBackend {
+        if self.pjrt.is_some() {
+            ExecBackend::Pjrt
+        } else {
+            ExecBackend::Native
+        }
+    }
+
+    /// Compute `region` of `t2` from `t`.
+    pub fn step_region(
+        &mut self,
+        t: &Field3D,
+        ci: &Field3D,
+        p: &DiffusionParams,
+        region: Region,
+        t2: &mut Field3D,
+    ) -> anyhow::Result<()> {
+        match &mut self.pjrt {
+            None => {
+                diffusion3d::step_region(t, ci, p, region, t2);
+                Ok(())
+            }
+            Some(progs) => progs.run_region(
+                region,
+                Region::interior(t.dims()),
+                &[t, ci],
+                &p.scalar_vec(),
+                &mut [t2],
+            ),
+        }
+    }
+}
+
+/// Executor for the two-phase flow iteration.
+pub struct TwophaseExecutor {
+    pjrt: Option<PjrtPrograms>,
+}
+
+impl TwophaseExecutor {
+    pub fn native() -> Self {
+        TwophaseExecutor { pjrt: None }
+    }
+
+    pub fn pjrt(
+        shape: [usize; 3],
+        widths: Option<[usize; 3]>,
+        store: &ArtifactStore,
+    ) -> anyhow::Result<Self> {
+        Ok(TwophaseExecutor { pjrt: Some(PjrtPrograms::load("twophase", shape, widths, store)?) })
+    }
+
+    pub fn backend(&self) -> ExecBackend {
+        if self.pjrt.is_some() {
+            ExecBackend::Pjrt
+        } else {
+            ExecBackend::Native
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_region(
+        &mut self,
+        pe: &Field3D,
+        phi: &Field3D,
+        p: &TwophaseParams,
+        region: Region,
+        pe2: &mut Field3D,
+        phi2: &mut Field3D,
+    ) -> anyhow::Result<()> {
+        match &mut self.pjrt {
+            None => {
+                twophase::step_region(pe, phi, p, region, pe2, phi2);
+                Ok(())
+            }
+            Some(progs) => progs.run_region(
+                region,
+                Region::interior(pe.dims()),
+                &[pe, phi],
+                &p.scalar_vec(),
+                &mut [pe2, phi2],
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::overlap::regions::{split_regions, HideWidths};
+    use crate::runtime::{artifact_dir, ArtifactStore};
+    use crate::util::prng::Rng;
+
+    fn store() -> ArtifactStore {
+        ArtifactStore::load(artifact_dir()).expect("make artifacts first")
+    }
+
+    fn rand_field(dims: [usize; 3], seed: u64, lo: f64, hi: f64) -> Field3D {
+        let mut rng = Rng::new(seed);
+        Field3D::from_fn(dims, |_, _, _| rng.range(lo, hi))
+    }
+
+    #[test]
+    fn pjrt_full_step_matches_native() {
+        let shape = [16, 16, 16];
+        let s = store();
+        let native = DiffusionExecutor::native();
+        let mut native = native;
+        let mut pjrt = DiffusionExecutor::pjrt(shape, None, &s).unwrap();
+        let t = rand_field(shape, 1, -1.0, 1.0);
+        let ci = rand_field(shape, 2, 0.1, 1.0);
+        let p = DiffusionParams::stable(1.5, 0.1, 0.1, 0.1, 1.0);
+        let interior = Region::interior(shape);
+        let mut t2_n = t.clone();
+        let mut t2_p = t.clone();
+        native.step_region(&t, &ci, &p, interior, &mut t2_n).unwrap();
+        pjrt.step_region(&t, &ci, &p, interior, &mut t2_p).unwrap();
+        assert!(t2_n.max_abs_diff(&t2_p) < 1e-12);
+    }
+
+    #[test]
+    fn pjrt_region_set_composes_like_native_full() {
+        let shape = [16, 16, 16];
+        let widths = [4, 2, 2];
+        let s = store();
+        let mut pjrt = DiffusionExecutor::pjrt(shape, Some(widths), &s).unwrap();
+        let mut native = DiffusionExecutor::native();
+        let t = rand_field(shape, 3, -1.0, 1.0);
+        let ci = rand_field(shape, 4, 0.1, 1.0);
+        let p = DiffusionParams::stable(1.0, 0.05, 0.05, 0.05, 1.0);
+        let rs = split_regions(shape, HideWidths(widths)).unwrap();
+        let mut t2_p = t.clone();
+        for r in rs.boundaries_then_inner() {
+            pjrt.step_region(&t, &ci, &p, r, &mut t2_p).unwrap();
+        }
+        let mut t2_n = t.clone();
+        native.step_region(&t, &ci, &p, Region::interior(shape), &mut t2_n).unwrap();
+        assert!(t2_p.max_abs_diff(&t2_n) < 1e-12);
+    }
+
+    #[test]
+    fn twophase_pjrt_matches_native() {
+        let shape = [16, 16, 16];
+        let s = store();
+        let mut native = TwophaseExecutor::native();
+        let mut pjrt = TwophaseExecutor::pjrt(shape, None, &s).unwrap();
+        let pe = rand_field(shape, 5, -0.1, 0.1);
+        let phi = rand_field(shape, 6, 0.01, 0.05);
+        let p = TwophaseParams::stable(0.1, 0.1, 0.1);
+        let interior = Region::interior(shape);
+        let (mut pe_n, mut phi_n) = (pe.clone(), phi.clone());
+        let (mut pe_p, mut phi_p) = (pe.clone(), phi.clone());
+        native.step_region(&pe, &phi, &p, interior, &mut pe_n, &mut phi_n).unwrap();
+        pjrt.step_region(&pe, &phi, &p, interior, &mut pe_p, &mut phi_p).unwrap();
+        assert!(pe_n.max_abs_diff(&pe_p) < 1e-12, "pe diff {}", pe_n.max_abs_diff(&pe_p));
+        assert!(phi_n.max_abs_diff(&phi_p) < 1e-12);
+    }
+
+    #[test]
+    fn missing_artifact_errors_with_hint() {
+        let s = store();
+        let msg = match DiffusionExecutor::pjrt([5, 5, 5], None, &s) {
+            Ok(_) => panic!("expected missing-artifact error"),
+            Err(e) => e.to_string(),
+        };
+        assert!(msg.contains("make artifacts") || msg.contains("backend native"), "{msg}");
+    }
+
+    #[test]
+    fn unmatched_region_errors() {
+        let shape = [16, 16, 16];
+        let s = store();
+        let mut pjrt = DiffusionExecutor::pjrt(shape, Some([4, 2, 2]), &s).unwrap();
+        let t = rand_field(shape, 7, -1.0, 1.0);
+        let ci = rand_field(shape, 8, 0.1, 1.0);
+        let p = DiffusionParams::stable(1.0, 0.1, 0.1, 0.1, 1.0);
+        let mut t2 = t.clone();
+        let bogus = Region::new([2, 2, 2], [3, 3, 3]);
+        assert!(pjrt.step_region(&t, &ci, &p, bogus, &mut t2).is_err());
+    }
+}

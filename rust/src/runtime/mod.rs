@@ -1,0 +1,39 @@
+//! The PJRT runtime: load AOT-lowered HLO artifacts and execute them from
+//! the Rust hot path.
+//!
+//! Python/JAX runs once, at build time (`make artifacts`): each step program
+//! is lowered to HLO *text* (`artifacts/*.hlo.txt`, see `python/compile/
+//! aot.py` for why text and not a serialized proto) plus a machine-readable
+//! `manifest.json`. At run time this module:
+//!
+//! 1. parses the manifest ([`artifacts`]),
+//! 2. compiles the HLO for the local grid size on the PJRT CPU client,
+//!    once per program ([`pjrt`]),
+//! 3. executes compiled programs with [`crate::physics::Field3D`] inputs
+//!    and scalar parameters on every step ([`executor`]).
+//!
+//! `PjRtClient` is reference-counted and not `Send`, so every rank thread
+//! owns its own context — which also mirrors the paper's deployment of one
+//! GPU (one device context) per MPI rank.
+
+pub mod artifacts;
+pub mod executor;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactStore, ProgramSpec};
+pub use executor::{DiffusionExecutor, ExecBackend, TwophaseExecutor};
+pub use pjrt::PjrtContext;
+
+/// Locate the artifact directory: `$IGG_ARTIFACTS` if set, else
+/// `artifacts/` relative to the current directory, else relative to the
+/// crate root (so tests work from any cwd).
+pub fn artifact_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("IGG_ARTIFACTS") {
+        return d.into();
+    }
+    let cwd = std::path::PathBuf::from("artifacts");
+    if cwd.join("manifest.json").exists() {
+        return cwd;
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

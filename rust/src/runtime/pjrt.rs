@@ -1,0 +1,239 @@
+//! PJRT client wrapper: compile HLO text once, execute many times.
+//!
+//! Follows the reference wiring in /opt/xla-example/load_hlo: HLO text ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation` -> `client.compile`.
+//! Programs were lowered with `return_tuple=True`, so results are always
+//! tuples (possibly 1-tuples) and are unpacked uniformly.
+
+use std::collections::HashMap;
+
+use crate::physics::Field3D;
+
+use super::artifacts::{ArtifactStore, ProgramSpec};
+
+/// A per-rank PJRT context: one CPU client plus compile and input-literal
+/// caches. Input literals are allocated once per program and refilled with
+/// `copy_raw_from` on every step — the hot path does no literal allocation
+/// (see EXPERIMENTS.md §Perf for the before/after).
+pub struct PjrtContext {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    literal_cache: HashMap<String, Vec<xla::Literal>>,
+}
+
+impl PjrtContext {
+    pub fn cpu() -> anyhow::Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtContext { client, cache: HashMap::new(), literal_cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        format!("{} ({} devices)", self.client.platform_name(), self.client.device_count())
+    }
+
+    /// Compile `spec` (cached by program name).
+    pub fn compile(&mut self, store: &ArtifactStore, spec: &ProgramSpec) -> anyhow::Result<()> {
+        if self.cache.contains_key(&spec.name) {
+            return Ok(());
+        }
+        let path = store.hlo_path(spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(spec.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Execute a compiled program, writing the outputs into `outs` (flat
+    /// slices in tuple order). This is the hot-path entry: input literals
+    /// are cached per program and refilled in place, outputs are copied
+    /// straight into the destination slices — zero allocation after the
+    /// first call.
+    pub fn run_into(
+        &mut self,
+        spec: &ProgramSpec,
+        fields: &[&Field3D],
+        scalars: &[f64],
+        outs: &mut [&mut [f64]],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            fields.len() == spec.arrays_in.len(),
+            "{}: got {} array inputs, want {}",
+            spec.name,
+            fields.len(),
+            spec.arrays_in.len()
+        );
+        anyhow::ensure!(
+            scalars.len() == spec.scalars.len(),
+            "{}: got {} scalars, want {} ({:?})",
+            spec.name,
+            scalars.len(),
+            spec.scalars.len(),
+            spec.scalars
+        );
+        anyhow::ensure!(
+            outs.len() == spec.out_shapes.len(),
+            "{}: got {} outputs, want {}",
+            spec.name,
+            outs.len(),
+            spec.out_shapes.len()
+        );
+        for (f, name) in fields.iter().zip(&spec.arrays_in) {
+            anyhow::ensure!(
+                f.dims() == spec.shape || spec.kind != "full",
+                "{}: field {} has dims {:?}, artifact wants {:?}",
+                spec.name,
+                name,
+                f.dims(),
+                spec.shape
+            );
+        }
+        let exe = self
+            .cache
+            .get(&spec.name)
+            .ok_or_else(|| anyhow::anyhow!("program {} not compiled", spec.name))?;
+
+        // Input literals: allocated once per program, refilled in place.
+        let args = self.literal_cache.entry(spec.name.clone()).or_insert_with(|| {
+            let mut v: Vec<xla::Literal> = Vec::with_capacity(fields.len() + scalars.len());
+            for f in fields {
+                let [nx, ny, nz] = f.dims();
+                v.push(xla::Literal::create_from_shape(
+                    xla::PrimitiveType::F64,
+                    &[nx, ny, nz],
+                ));
+            }
+            for _ in scalars {
+                v.push(xla::Literal::scalar(0f64));
+            }
+            v
+        });
+        for (lit, f) in args.iter_mut().zip(fields) {
+            lit.copy_raw_from(f.as_slice())?;
+        }
+        for (lit, &s) in args[fields.len()..].iter_mut().zip(scalars) {
+            lit.copy_raw_from(&[s])?;
+        }
+
+        let result = exe.execute::<xla::Literal>(args)?;
+        let mut tuple = result[0][0].to_literal_sync()?;
+        let outs_lit = tuple.decompose_tuple()?;
+        anyhow::ensure!(
+            outs_lit.len() == outs.len(),
+            "{}: tuple arity {} != expected {}",
+            spec.name,
+            outs_lit.len(),
+            outs.len()
+        );
+        for ((lit, dst), &shape) in outs_lit.iter().zip(outs.iter_mut()).zip(&spec.out_shapes) {
+            anyhow::ensure!(
+                dst.len() == shape.iter().product::<usize>(),
+                "{}: destination length {} != shape {:?}",
+                spec.name,
+                dst.len(),
+                shape
+            );
+            lit.copy_raw_to(*dst)?;
+        }
+        Ok(())
+    }
+
+    /// Convenience wrapper over [`Self::run_into`] returning fresh vectors.
+    pub fn run(
+        &mut self,
+        spec: &ProgramSpec,
+        fields: &[&Field3D],
+        scalars: &[f64],
+    ) -> anyhow::Result<Vec<Vec<f64>>> {
+        let mut vecs: Vec<Vec<f64>> = spec
+            .out_shapes
+            .iter()
+            .map(|s| vec![0.0; s.iter().product()])
+            .collect();
+        {
+            let mut outs: Vec<&mut [f64]> = vecs.iter_mut().map(|v| v.as_mut_slice()).collect();
+            self.run_into(spec, fields, scalars, &mut outs)?;
+        }
+        Ok(vecs)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::physics::{diffusion3d, DiffusionParams};
+    use crate::runtime::artifact_dir;
+    use crate::util::prng::Rng;
+
+    fn ctx_and_store() -> (PjrtContext, ArtifactStore) {
+        let store = ArtifactStore::load(artifact_dir()).expect("make artifacts first");
+        (PjrtContext::cpu().unwrap(), store)
+    }
+
+    fn rand_field(dims: [usize; 3], seed: u64) -> Field3D {
+        let mut rng = Rng::new(seed);
+        Field3D::from_fn(dims, |_, _, _| rng.normal())
+    }
+
+    #[test]
+    fn diffusion_artifact_matches_native() {
+        let (mut ctx, store) = ctx_and_store();
+        let shape = [8, 8, 8];
+        let spec = store.full_program("diffusion", shape).unwrap().clone();
+        ctx.compile(&store, &spec).unwrap();
+        let t = rand_field(shape, 1);
+        let mut ci = rand_field(shape, 2);
+        for v in ci.as_mut_slice() {
+            *v = v.abs() + 0.1;
+        }
+        let p = DiffusionParams { lam: 1.7, dt: 1e-4, dx: 0.11, dy: 0.13, dz: 0.17 };
+        let outs = ctx.run(&spec, &[&t, &ci], &p.scalar_vec()).unwrap();
+        let got = Field3D::from_vec(shape, outs.into_iter().next().unwrap());
+        let mut want = t.clone();
+        diffusion3d::step(&t, &ci, &p, &mut want);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-12, "pjrt vs native diff {diff}");
+    }
+
+    #[test]
+    fn non_cubic_artifact_axis_order() {
+        // the (24,16,12) artifact catches any axis-order/layout mismatch
+        let (mut ctx, store) = ctx_and_store();
+        let shape = [24, 16, 12];
+        let spec = store.full_program("diffusion", shape).unwrap().clone();
+        ctx.compile(&store, &spec).unwrap();
+        let t = rand_field(shape, 3);
+        let ci = Field3D::filled(shape, 0.5);
+        let p = DiffusionParams { lam: 1.0, dt: 1e-4, dx: 0.1, dy: 0.2, dz: 0.3 };
+        let outs = ctx.run(&spec, &[&t, &ci], &p.scalar_vec()).unwrap();
+        let got = Field3D::from_vec(shape, outs.into_iter().next().unwrap());
+        let mut want = t.clone();
+        diffusion3d::step(&t, &ci, &p, &mut want);
+        assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn compile_is_cached() {
+        let (mut ctx, store) = ctx_and_store();
+        let spec = store.full_program("diffusion", [8, 8, 8]).unwrap().clone();
+        ctx.compile(&store, &spec).unwrap();
+        ctx.compile(&store, &spec).unwrap();
+        assert_eq!(ctx.compiled_count(), 1);
+    }
+
+    #[test]
+    fn scalar_count_validated() {
+        let (mut ctx, store) = ctx_and_store();
+        let spec = store.full_program("diffusion", [8, 8, 8]).unwrap().clone();
+        ctx.compile(&store, &spec).unwrap();
+        let t = rand_field([8, 8, 8], 4);
+        let err = ctx.run(&spec, &[&t, &t], &[1.0, 2.0]).unwrap_err();
+        assert!(err.to_string().contains("scalars"));
+    }
+}

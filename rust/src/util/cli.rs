@@ -1,0 +1,234 @@
+//! Declarative command-line flag parsing (clap stand-in).
+//!
+//! Supports `--key value`, `--key=value`, boolean switches, defaults,
+//! required flags, and generated `--help` text. Subcommand dispatch is done
+//! by the binary (`main.rs`) on the first positional argument.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArgKind {
+    /// takes a value (string/number/list, validated by the consumer)
+    Value,
+    /// boolean switch, true when present
+    Switch,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub kind: ArgKind,
+    pub default: Option<&'static str>,
+    pub required: bool,
+    pub help: &'static str,
+}
+
+/// A parsed argument set.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<Option<usize>> {
+        self.get(name)
+            .map(|v| v.parse::<usize>().map_err(|_| bad_value(name, v, "an integer")))
+            .transpose()
+    }
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<Option<f64>> {
+        self.get(name)
+            .map(|v| v.parse::<f64>().map_err(|_| bad_value(name, v, "a number")))
+            .transpose()
+    }
+    /// Comma-separated usize list, e.g. `--hide 16,2,2` or `--ranks 1,8,27`.
+    pub fn get_usize_list(&self, name: &str) -> anyhow::Result<Option<Vec<usize>>> {
+        self.get(name)
+            .map(|v| {
+                v.split(',')
+                    .map(|p| p.trim().parse::<usize>())
+                    .collect::<Result<Vec<_>, _>>()
+                    .map_err(|_| bad_value(name, v, "a comma-separated integer list"))
+            })
+            .transpose()
+    }
+}
+
+fn bad_value(name: &str, v: &str, want: &str) -> anyhow::Error {
+    anyhow::anyhow!("--{name}: '{v}' is not {want}")
+}
+
+/// A command with a flag specification.
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub specs: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, specs: Vec::new() }
+    }
+
+    pub fn value(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, kind: ArgKind::Value, default, required: false, help });
+        self
+    }
+
+    pub fn required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, kind: ArgKind::Value, default: None, required: true, help });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, kind: ArgKind::Switch, default: None, required: false, help });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = writeln!(s, "\nflags:");
+        for spec in &self.specs {
+            let meta = match spec.kind {
+                ArgKind::Value => format!("--{} <v>", spec.name),
+                ArgKind::Switch => format!("--{}", spec.name),
+            };
+            let extra = match (&spec.default, spec.required) {
+                (Some(d), _) => format!(" [default: {d}]"),
+                (None, true) => " [required]".to_string(),
+                _ => String::new(),
+            };
+            let _ = writeln!(s, "  {meta:<26} {}{extra}", spec.help);
+        }
+        s
+    }
+
+    /// Parse argv (not including the program/subcommand names).
+    pub fn parse(&self, argv: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                args.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown flag --{key}\n\n{}", self.usage()))?;
+                match spec.kind {
+                    ArgKind::Switch => {
+                        if inline.is_some() {
+                            anyhow::bail!("--{key} is a switch and takes no value");
+                        }
+                        args.switches.insert(key.to_string(), true);
+                    }
+                    ArgKind::Value => {
+                        let v = match inline {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                argv.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?
+                            }
+                        };
+                        args.values.insert(key.to_string(), v);
+                    }
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for spec in &self.specs {
+            if spec.required && args.get(spec.name).is_none() {
+                anyhow::bail!("missing required flag --{}\n\n{}", spec.name, self.usage());
+            }
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("run", "run an app")
+            .value("nx", Some("32"), "local grid size x")
+            .required("app", "application name")
+            .switch("hide", "hide communication")
+            .value("ranks", None, "rank list")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = cmd().parse(&sv(&["--app", "diffusion"])).unwrap();
+        assert_eq!(a.get("nx"), Some("32"));
+        assert_eq!(a.get("app"), Some("diffusion"));
+        assert!(!a.get_flag("hide"));
+    }
+
+    #[test]
+    fn equals_form_and_switch() {
+        let a = cmd().parse(&sv(&["--app=tp", "--nx=64", "--hide"])).unwrap();
+        assert_eq!(a.get("nx"), Some("64"));
+        assert!(a.get_flag("hide"));
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        assert!(cmd().parse(&sv(&["--nx", "8"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_fails() {
+        assert!(cmd().parse(&sv(&["--app", "x", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn switch_with_value_fails() {
+        assert!(cmd().parse(&sv(&["--app", "x", "--hide=1"])).is_err());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = cmd().parse(&sv(&["--app", "x", "--nx", "128", "--ranks", "1,8,27"])).unwrap();
+        assert_eq!(a.get_usize("nx").unwrap(), Some(128));
+        assert_eq!(a.get_usize_list("ranks").unwrap(), Some(vec![1, 8, 27]));
+        let bad = cmd().parse(&sv(&["--app", "x", "--nx", "abc"])).unwrap();
+        assert!(bad.get_usize("nx").is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cmd().parse(&sv(&["--app", "x", "pos1", "pos2"])).unwrap();
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+}

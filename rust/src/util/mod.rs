@@ -1,0 +1,13 @@
+//! Zero-dependency utility substrates.
+//!
+//! The build environment vendors only the `xla` crate's dependency closure,
+//! so the usual ecosystem crates (serde, clap, criterion, proptest, rand) are
+//! not available; this module provides the small, focused replacements the
+//! rest of the system needs (see DESIGN.md §2, offline-toolchain table).
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod quickcheck;
+pub mod stats;
+pub mod timing;

@@ -1,0 +1,126 @@
+//! A small property-testing harness (proptest stand-in, see DESIGN.md §2).
+//!
+//! `for_all(n, seed, gen, prop)` runs `prop` on `n` generated cases; on the
+//! first failure it reports the case number, the per-case seed (so the case
+//! reproduces with `case(seed)`), and the case's Debug rendering. Generators
+//! are plain closures over [`Gen`], which wraps the deterministic PRNG.
+
+use crate::util::prng::Rng;
+
+/// Case-generation context handed to generator closures.
+pub struct Gen {
+    pub rng: Rng,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.int_range(lo, hi)
+    }
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range(lo, hi)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool()
+    }
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+}
+
+/// Run `prop` over `n` random cases. Panics (test failure) on the first
+/// case where `prop` returns an `Err`, printing enough to reproduce it.
+pub fn for_all<T, G, P>(n: usize, seed: u64, mut generate: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case_idx in 0..n {
+        let case_seed = seed ^ (case_idx as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::new(case_seed) };
+        let case = generate(&mut g);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property failed on case {case_idx}/{n} (case_seed={case_seed:#x}):\n  \
+                 case: {case:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Assertion helpers returning Result, for use inside properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, ctx: &str) -> Result<(), String> {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, ctx: &str) -> Result<(), String> {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a} !~ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        for_all(
+            50,
+            1,
+            |g| (g.usize_in(1, 10), g.usize_in(1, 10)),
+            |&(a, b)| {
+                count += 1;
+                ensure(a + b >= a.max(b), "sum dominates max")
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        for_all(100, 2, |g| g.usize_in(0, 100), |&x| ensure(x < 90, "x < 90"));
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first: Vec<usize> = Vec::new();
+        for_all(10, 3, |g| g.usize_in(0, 1000), |&x| {
+            first.push(x);
+            Ok(())
+        });
+        let mut second: Vec<usize> = Vec::new();
+        for_all(10, 3, |g| g.usize_in(0, 1000), |&x| {
+            second.push(x);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn ensure_close_scales() {
+        assert!(ensure_close(1e9, 1e9 + 1.0, 1e-8, "big").is_ok());
+        assert!(ensure_close(1.0, 1.1, 1e-8, "small").is_err());
+    }
+}

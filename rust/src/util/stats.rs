@@ -1,0 +1,175 @@
+//! Sample statistics: median, mean/std, percentiles, and the 95% confidence
+//! interval of the median — the statistical treatment the paper uses for its
+//! figures ("medians of 20 samples" with a 95% CI band).
+//!
+//! The median CI uses the distribution-free order-statistic method: for n
+//! samples, the CI is `[x_(l), x_(u)]` with `l, u` from the binomial(n, 1/2)
+//! quantiles (normal approximation for n > 10, exact table below for small n).
+
+/// Summary statistics of one measurement series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    /// 95% CI of the median (distribution-free order statistics).
+    pub median_ci: (f64, f64),
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator).
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+fn sorted(xs: &[f64]) -> Vec<f64> {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+    v
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Linear-interpolated percentile, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty series");
+    let v = sorted(xs);
+    if v.len() == 1 {
+        return v[0];
+    }
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    v[lo] * (1.0 - frac) + v[hi] * frac
+}
+
+/// 95% CI of the median from order statistics.
+///
+/// Indices (1-based ranks) l = floor((n - 1.96*sqrt(n))/2), u = n + 1 - l,
+/// clamped into [1, n]; for n < 6 the CI is the full range (no distribution-
+/// free CI exists at 95% with so few samples).
+pub fn median_ci95(xs: &[f64]) -> (f64, f64) {
+    let v = sorted(xs);
+    let n = v.len();
+    assert!(n > 0);
+    if n < 6 {
+        return (v[0], v[n - 1]);
+    }
+    let nf = n as f64;
+    let l = ((nf - 1.96 * nf.sqrt()) / 2.0).floor().max(1.0) as usize;
+    let u = (n + 1 - l).min(n);
+    (v[l - 1], v[u - 1])
+}
+
+/// Robust scale estimate: median absolute deviation scaled to be
+/// sigma-consistent for normal data (x1.4826). Resists the heavy-tailed
+/// outliers a shared container injects into timing samples.
+pub fn mad_sigma(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = median(xs);
+    let dev: Vec<f64> = xs.iter().map(|x| (x - m).abs()).collect();
+    1.4826 * median(&dev)
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "summary of empty series");
+    let v = sorted(xs);
+    Summary {
+        n: v.len(),
+        mean: mean(&v),
+        std: std(&v),
+        min: v[0],
+        max: v[v.len() - 1],
+        median: median(&v),
+        median_ci: median_ci95(&v),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((std(&xs) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(median(&[7.0]), 7.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&xs, 25.0), 25.0);
+    }
+
+    #[test]
+    fn median_ci_small_n_is_range() {
+        let xs = [5.0, 1.0, 3.0];
+        assert_eq!(median_ci95(&xs), (1.0, 5.0));
+    }
+
+    #[test]
+    fn median_ci_contains_median_n20() {
+        // the paper's n=20 protocol
+        let xs: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        let (lo, hi) = median_ci95(&xs);
+        let m = median(&xs);
+        assert!(lo <= m && m <= hi);
+        assert!(lo > 1.0 && hi < 20.0, "CI should be tighter than the range");
+    }
+
+    #[test]
+    fn summary_consistency() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let s = summarize(&xs);
+        assert_eq!(s.n, 8);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 9.0);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.median, 4.5);
+        assert!((std(&xs) - s.std).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_series_panics() {
+        summarize(&[]);
+    }
+
+    #[test]
+    fn mad_resists_outliers() {
+        let clean = [10.0, 10.1, 9.9, 10.05, 9.95];
+        let dirty = [10.0, 10.1, 9.9, 10.05, 500.0];
+        assert!(mad_sigma(&clean) < 0.2);
+        assert!(mad_sigma(&dirty) < 0.5, "one outlier must not blow up MAD");
+        assert!(std(&dirty) > 100.0, "std is the non-robust contrast");
+        assert_eq!(mad_sigma(&[1.0]), 0.0);
+    }
+}

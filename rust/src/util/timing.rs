@@ -1,0 +1,89 @@
+//! Precise short sleeps for the timing models.
+//!
+//! `std::thread::sleep` on Linux is subject to the default 50 us timer
+//! slack, so modeled microsecond-scale delays (interconnect transit, PCIe
+//! copies) quantize to ~60-150 us and distort every measurement that sleeps
+//! (found during the perf pass — see EXPERIMENTS.md §Perf). The fix is
+//! `prctl(PR_SET_TIMERSLACK, 1ns)` once per sleeping thread, which brings
+//! nanosleep accuracy to single-digit microseconds without busy-waiting
+//! (spinning would be worse here: on a small core count, a spinning waiter
+//! steals the core from the rank whose compute the model wants to overlap).
+
+use std::time::Duration;
+
+#[cfg(target_os = "linux")]
+fn set_timerslack_once() {
+    use std::cell::Cell;
+    thread_local! {
+        static DONE: Cell<bool> = const { Cell::new(false) };
+    }
+    DONE.with(|d| {
+        if !d.get() {
+            const PR_SET_TIMERSLACK: libc::c_int = 29;
+            // SAFETY: plain prctl with integer arguments; affects only this
+            // thread's timer slack.
+            unsafe {
+                libc::prctl(PR_SET_TIMERSLACK, 1usize);
+            }
+            d.set(true);
+        }
+    });
+}
+
+#[cfg(not(target_os = "linux"))]
+fn set_timerslack_once() {}
+
+/// Below this, `nanosleep` on this class of virtualized container still
+/// rounds to ~40-100 us even with 1 ns slack (measured in the perf pass),
+/// so short modeled delays use a yielding spin instead: `yield_now` hands
+/// the core to whichever rank/stream should be overlapping this wait, and
+/// the elapsed check returns promptly at the modeled instant.
+const SPIN_THRESHOLD: Duration = Duration::from_micros(150);
+
+/// Wait with microsecond-scale accuracy: timer-slack-fixed sleep for long
+/// waits, yielding spin for short ones.
+pub fn precise_sleep(d: Duration) {
+    if d.is_zero() {
+        return;
+    }
+    if d > SPIN_THRESHOLD {
+        set_timerslack_once();
+        std::thread::sleep(d);
+        return;
+    }
+    let deadline = std::time::Instant::now() + d;
+    while std::time::Instant::now() < deadline {
+        std::thread::yield_now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn short_sleeps_do_not_quantize_to_timer_slack() {
+        // 100 sleeps of 10 us: with default 50 us slack this takes >= 6 ms;
+        // with 1 ns slack it should stay well under 4 ms.
+        precise_sleep(Duration::from_micros(1)); // warm the slack setting
+        let t0 = Instant::now();
+        for _ in 0..100 {
+            precise_sleep(Duration::from_micros(10));
+        }
+        let took = t0.elapsed();
+        assert!(
+            took < Duration::from_millis(4),
+            "100 x 10us sleeps took {took:?} — timer slack not applied?"
+        );
+    }
+
+    #[test]
+    fn zero_is_noop() {
+        let t0 = Instant::now();
+        for _ in 0..10_000 {
+            precise_sleep(Duration::ZERO);
+        }
+        assert!(t0.elapsed() < Duration::from_millis(50));
+    }
+}

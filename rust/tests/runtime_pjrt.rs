@@ -1,0 +1,80 @@
+//! Cross-layer integration: the distributed system running the AOT
+//! JAX/Pallas artifacts via PJRT must agree with the native backend —
+//! including under hide_communication, where the PJRT path executes the
+//! per-region artifacts and scatters their dense outputs.
+//!
+//! Requires `make artifacts` (the default set includes 16^3 and 32^3 with
+//! region sets).
+
+use igg::bench::scaling::run_app_once;
+use igg::coordinator::apps::{diffusion, twophase};
+use igg::coordinator::config::{AppKind, Backend, Config};
+use igg::coordinator::launcher::run_ranks;
+use igg::overlap::HideWidths;
+
+fn cfg(app: AppKind, backend: Backend, hide: Option<HideWidths>) -> Config {
+    Config {
+        app,
+        backend,
+        hide,
+        nranks: 8,
+        local: [16, 16, 16],
+        nt: 4,
+        ..Default::default()
+    }
+}
+
+fn run_diffusion(c: &Config) -> Vec<Vec<f64>> {
+    run_ranks(c, |ctx| Ok(diffusion::run(&ctx)?.field.into_vec())).unwrap()
+}
+
+fn run_twophase(c: &Config) -> Vec<(Vec<f64>, Vec<f64>)> {
+    run_ranks(c, |ctx| {
+        let r = twophase::run(&ctx)?;
+        Ok((r.field.into_vec(), r.extra.unwrap().into_vec()))
+    })
+    .unwrap()
+}
+
+fn close(a: &[f64], b: &[f64], tol: f64) -> f64 {
+    a.iter().zip(b).fold(0.0f64, |m, (x, y)| m.max((x - y).abs())).max(tol * 0.0)
+}
+
+#[test]
+fn pjrt_distributed_diffusion_matches_native() {
+    let native = run_diffusion(&cfg(AppKind::Diffusion, Backend::Native, None));
+    let pjrt = run_diffusion(&cfg(AppKind::Diffusion, Backend::Pjrt, None));
+    for (rank, (a, b)) in native.iter().zip(&pjrt).enumerate() {
+        let d = close(a, b, 0.0);
+        assert!(d < 1e-11, "rank {rank}: native vs pjrt diff {d}");
+    }
+}
+
+#[test]
+fn pjrt_hidden_communication_matches_native_hidden() {
+    let hide = Some(HideWidths([4, 2, 2]));
+    let native = run_diffusion(&cfg(AppKind::Diffusion, Backend::Native, hide));
+    let pjrt = run_diffusion(&cfg(AppKind::Diffusion, Backend::Pjrt, hide));
+    for (rank, (a, b)) in native.iter().zip(&pjrt).enumerate() {
+        let d = close(a, b, 0.0);
+        assert!(d < 1e-11, "rank {rank}: diff {d}");
+    }
+}
+
+#[test]
+fn pjrt_twophase_matches_native() {
+    let native = run_twophase(&cfg(AppKind::Twophase, Backend::Native, None));
+    let pjrt = run_twophase(&cfg(AppKind::Twophase, Backend::Pjrt, None));
+    for (rank, ((pe_a, phi_a), (pe_b, phi_b))) in native.iter().zip(&pjrt).enumerate() {
+        assert!(close(pe_a, pe_b, 0.0) < 1e-11, "rank {rank} Pe");
+        assert!(close(phi_a, phi_b, 0.0) < 1e-12, "rank {rank} phi");
+    }
+}
+
+#[test]
+fn pjrt_metrics_report_throughput() {
+    let rm = run_app_once(&cfg(AppKind::Diffusion, Backend::Pjrt, None), 1).unwrap();
+    assert!(rm.step_time_s() > 0.0);
+    assert!(rm.total_t_eff_gbs() > 0.0);
+    assert_eq!(rm.per_rank.len(), 8);
+}
