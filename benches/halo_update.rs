@@ -5,6 +5,12 @@
 //! effective throughput between GPU and GPU". This bench measures a single
 //! plane exchange between two ranks across transfer paths, chunk counts,
 //! and plane sizes, with PCIe-like copy costs and the Aries network model.
+//! It also verifies the engine's zero-allocation contract: the reported
+//! `allocs` column is the number of engine-attributed heap allocations over
+//! all measured iterations *after* warm-up, and must be 0 on every row.
+//!
+//! Emits `BENCH_halo.json` so the halo-path perf trajectory is
+//! machine-trackable across PRs.
 //!
 //!     cargo bench --bench halo_update
 
@@ -20,7 +26,9 @@ use igg::util::json::Json;
 use igg::util::stats::{median, summarize};
 
 /// Time `iters` halo updates between 2 ranks with the given engine config;
-/// returns the per-update median over `samples` trials (worst rank).
+/// returns (per-update median over `samples` trials for the worst rank,
+/// steady-state allocations across all measured updates — 0 when the
+/// zero-allocation contract holds).
 fn time_exchange(
     n: usize,
     path: TransferPath,
@@ -29,8 +37,9 @@ fn time_exchange(
     net: NetModel,
     samples: usize,
     iters: usize,
-) -> f64 {
+) -> (f64, usize) {
     let mut per_trial = Vec::with_capacity(samples);
+    let mut steady_allocs = 0usize;
     for _ in 0..samples {
         let network = Network::with_model(2, net);
         let barrier = Arc::new(std::sync::Barrier::new(2));
@@ -42,21 +51,24 @@ fn time_exchange(
                     let cart = CartComm::create(comm, [2, 1, 1], [false; 3]).unwrap();
                     let mut engine = HaloEngine::with_copy_model(&cart, path, chunks, copy);
                     let mut f = Field3D::filled([n, n, n], cart.rank() as f64);
-                    // warm-up (allocates pooled buffers)
+                    // warm-up (allocates pooled buffers, builds the plan)
                     engine.update(&cart, [n, n, n], &mut [&mut f]).unwrap();
+                    let warm_allocs = engine.allocations();
                     barrier.wait();
                     let t0 = std::time::Instant::now();
                     for _ in 0..iters {
                         engine.update(&cart, [n, n, n], &mut [&mut f]).unwrap();
                     }
-                    t0.elapsed().as_secs_f64() / iters as f64
+                    let dt = t0.elapsed().as_secs_f64() / iters as f64;
+                    (dt, engine.allocations() - warm_allocs)
                 })
             })
             .collect();
-        let times: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
-        per_trial.push(times.into_iter().fold(0.0f64, f64::max));
+        let results: Vec<(f64, usize)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        per_trial.push(results.iter().fold(0.0f64, |m, &(t, _)| m.max(t)));
+        steady_allocs += results.iter().map(|&(_, a)| a).sum::<usize>();
     }
-    median(&per_trial)
+    (median(&per_trial), steady_allocs)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -67,18 +79,21 @@ fn main() -> anyhow::Result<()> {
 
     println!("# Halo update — RDMA vs pipelined host staging");
     println!("2 ranks, x-exchange of one n^2 plane/side, aries net, pcie3 copies\n");
-    println!("| n | rdma | staged c=1 | staged c=4 | staged c=8 | pipeline gain |");
-    println!("|---:|---:|---:|---:|---:|---:|");
+    println!("| n | rdma | staged c=1 | staged c=4 | staged c=8 | pipeline gain | allocs |");
+    println!("|---:|---:|---:|---:|---:|---:|---:|");
 
     let mut out = Vec::new();
+    let mut total_steady_allocs = 0usize;
     for n in [32usize, 96, 256, 384] {
-        let rdma = time_exchange(n, TransferPath::Rdma, 1, pcie, net, samples, iters);
-        let s1 = time_exchange(n, TransferPath::Staged, 1, pcie, net, samples, iters);
-        let s4 = time_exchange(n, TransferPath::Staged, 4, pcie, net, samples, iters);
-        let s8 = time_exchange(n, TransferPath::Staged, 8, pcie, net, samples, iters);
+        let (rdma, a0) = time_exchange(n, TransferPath::Rdma, 1, pcie, net, samples, iters);
+        let (s1, a1) = time_exchange(n, TransferPath::Staged, 1, pcie, net, samples, iters);
+        let (s4, a4) = time_exchange(n, TransferPath::Staged, 4, pcie, net, samples, iters);
+        let (s8, a8) = time_exchange(n, TransferPath::Staged, 8, pcie, net, samples, iters);
         let gain = s1 / s4;
+        let allocs = a0 + a1 + a4 + a8;
+        total_steady_allocs += allocs;
         println!(
-            "| {n} | {} | {} | {} | {} | {:.2}x |",
+            "| {n} | {} | {} | {} | {} | {:.2}x | {allocs} |",
             fmt_time(rdma),
             fmt_time(s1),
             fmt_time(s4),
@@ -91,6 +106,7 @@ fn main() -> anyhow::Result<()> {
             ("staged1_s", Json::Num(s1)),
             ("staged4_s", Json::Num(s4)),
             ("staged8_s", Json::Num(s8)),
+            ("steady_state_allocs", Json::Num(allocs as f64)),
         ]));
     }
     println!(
@@ -98,13 +114,18 @@ fn main() -> anyhow::Result<()> {
          pays (c-1) extra submission latencies but overlaps chunk transit with the\n\
          next chunk's copy, so it loses on small planes (latency-bound, n<=96) and\n\
          wins on large ones (bandwidth-bound, n>=256 -- the paper's 512^2-plane\n\
-         regime). The crossover is the point of the ablation."
+         regime). The crossover is the point of the ablation. The allocs column\n\
+         is the engine's steady-state allocation count and must be 0 everywhere."
     );
+    if total_steady_allocs != 0 {
+        eprintln!("WARNING: zero-allocation contract violated: {total_steady_allocs} allocations");
+    }
 
     // pack/unpack microbench (the L3 hot path the perf pass optimizes)
     println!("\n## plane pack/unpack bandwidth (single thread)\n");
     println!("| dims | dim | GB/s |");
     println!("|:---:|---:|---:|");
+    let mut pack_rows = Vec::new();
     for n in [64usize, 128] {
         let f = Field3D::filled([n, n, n], 1.0);
         for d in 0..3 {
@@ -122,9 +143,21 @@ fn main() -> anyhow::Result<()> {
             let s = summarize(&times);
             let gbs = (cells * 8) as f64 / s.median / 1e9;
             println!("| {n}^3 | {d} | {gbs:.2} |");
+            pack_rows.push(Json::obj(vec![
+                ("n", Json::Num(n as f64)),
+                ("dim", Json::Num(d as f64)),
+                ("gbs", Json::Num(gbs)),
+            ]));
         }
     }
 
-    report::write_json_report("target/bench_results/halo_update.json", Json::Arr(out))?;
+    report::write_json_report(
+        "BENCH_halo.json",
+        Json::obj(vec![
+            ("exchange", Json::Arr(out)),
+            ("pack_unpack", Json::Arr(pack_rows)),
+            ("steady_state_allocs", Json::Num(total_steady_allocs as f64)),
+        ]),
+    )?;
     Ok(())
 }

@@ -5,13 +5,16 @@
 //! This bench measures the diffusion step time with and without
 //! `@hide_communication` across network-speed regimes, showing where
 //! overlap matters (slow networks / small local problems) and that it never
-//! hurts.
+//! hurts. A second section measures the threaded xPU compute backend
+//! (`compute_threads`): inner-region throughput must rise measurably with
+//! threads while the fields stay bitwise identical.
 //!
 //!     cargo bench --bench hide_communication_ablation
 
 use igg::bench::measure::bench_samples;
 use igg::bench::{report, scaling};
 use igg::coordinator::config::{AppKind, Config};
+use igg::coordinator::launcher::run_ranks;
 use igg::mpisim::NetModel;
 use igg::overlap::HideWidths;
 use igg::util::json::Json;
@@ -69,9 +72,63 @@ fn main() -> anyhow::Result<()> {
     println!("\nexpected shape: speedup ~1x on ideal (nothing to hide), growing with");
     println!("network cost until comm > inner-compute (can't hide more than the inner time).");
 
+    // ---- threaded xPU compute backend --------------------------------
+    // Single rank, large local grid: the inner region dominates, so the
+    // step time tracks inner-region throughput directly.
+    println!("\n# compute_threads ablation — diffusion, 1 rank, 64^3, hidden widths (4,2,2)\n");
+    println!("| threads | t/step | speedup | bitwise |");
+    println!("|---:|---:|---:|:---:|");
+    let thread_base = Config {
+        app: AppKind::Diffusion,
+        local: [64, 64, 64],
+        nranks: 1,
+        nt: 6,
+        hide: Some(HideWidths([4, 2, 2])),
+        ..Default::default()
+    };
+    let field_with = |threads: usize| -> anyhow::Result<Vec<f64>> {
+        let cfg = Config { compute_threads: threads, ..thread_base.clone() };
+        let fields = run_ranks(&cfg, |ctx| {
+            Ok(igg::coordinator::apps::diffusion::run(&ctx)?.field.into_vec())
+        })?;
+        Ok(fields.into_iter().next().expect("one rank"))
+    };
+    let reference = field_with(1)?;
+    let mut thread_counts = vec![1usize, 2];
+    if cores > 2 {
+        thread_counts.push(cores);
+    }
+    let mut t1 = f64::NAN;
+    let mut thread_rows = Vec::new();
+    for threads in thread_counts {
+        let cfg = Config { compute_threads: threads, ..thread_base.clone() };
+        let t = step_time(&cfg, samples)?;
+        if threads == 1 {
+            t1 = t;
+        }
+        let bitwise = threads == 1 || field_with(threads)? == reference;
+        println!(
+            "| {threads} | {} | {:.2}x | {} |",
+            igg::bench::measure::fmt_time(t),
+            t1 / t,
+            if bitwise { "yes" } else { "NO" }
+        );
+        assert!(bitwise, "compute_threads={threads} changed the fields");
+        thread_rows.push(Json::obj(vec![
+            ("threads", Json::Num(threads as f64)),
+            ("t_step_s", Json::Num(t)),
+            ("speedup", Json::Num(t1 / t)),
+        ]));
+    }
+    println!("\nexpected shape: speedup approaching min(threads, cores) for the");
+    println!("inner-dominated step; identical fields at every thread count.");
+
     report::write_json_report(
         "target/bench_results/hide_communication_ablation.json",
-        Json::Arr(out),
+        Json::obj(vec![
+            ("hide", Json::Arr(out)),
+            ("compute_threads", Json::Arr(thread_rows)),
+        ]),
     )?;
     Ok(())
 }

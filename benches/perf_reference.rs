@@ -5,14 +5,19 @@
 //! Mapping (DESIGN.md §4): the AOT JAX/Pallas artifact executed through
 //! PJRT plays the Julia solver; the hand-written native Rust step plays the
 //! CUDA C original. Reported: single-rank step times and their ratio, per
-//! app and size.
+//! app and size, plus the threaded native backend (`compute_threads`) as
+//! the upper bound the xPU analog should chase. When the PJRT runtime or
+//! the artifacts are unavailable the PJRT columns are null and the native
+//! trajectory is still recorded.
+//!
+//! Emits `BENCH_perf.json` so the perf trajectory is machine-trackable
+//! across PRs.
 //!
 //!     cargo bench --bench perf_reference
 
 use igg::bench::measure::{bench_samples, fmt_time, measure};
-use igg::bench::report;
-use igg::physics::{diffusion3d, twophase, DiffusionParams, Field3D, Region, TwophaseParams};
-use igg::runtime::{artifact_dir, ArtifactStore, DiffusionExecutor, TwophaseExecutor};
+use igg::physics::{diffusion3d, parallel, twophase, DiffusionParams, Field3D, Region, TwophaseParams};
+use igg::runtime::{DiffusionExecutor, TwophaseExecutor};
 use igg::util::json::Json;
 use igg::util::prng::Rng;
 
@@ -21,13 +26,25 @@ fn rand_field(dims: [usize; 3], seed: u64, lo: f64, hi: f64) -> Field3D {
     Field3D::from_fn(dims, |_, _, _| rng.range(lo, hi))
 }
 
+fn opt_num(x: Option<f64>) -> Json {
+    match x {
+        Some(v) => Json::Num(v),
+        None => Json::Null,
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     let samples = bench_samples(10);
-    let store = ArtifactStore::load(artifact_dir())?;
-    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    let store = igg::runtime::pjrt_store();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut rows: Vec<(String, f64, f64, Option<f64>)> = Vec::new(); // (name, native, native_t, pjrt)
 
     println!("# Perf-reference — PJRT (\"Julia\") vs native (\"CUDA C\")");
-    println!("paper: Julia reaches 90% of CUDA C + MPI\n");
+    println!("paper: Julia reaches 90% of CUDA C + MPI");
+    if store.is_none() {
+        println!("(PJRT runtime/artifacts unavailable — native columns only)");
+    }
+    println!();
 
     for shape in [[32, 32, 32], [64, 64, 64]] {
         let t = rand_field(shape, 1, -1.0, 1.0);
@@ -37,22 +54,27 @@ fn main() -> anyhow::Result<()> {
 
         let mut t2 = t.clone();
         let native = measure(samples, 3, || diffusion3d::step(&t, &ci, &p, &mut t2));
-
-        let mut exec = DiffusionExecutor::pjrt(shape, None, &store)?;
-        let mut t2p = t.clone();
-        let pjrt = measure(samples, 3, || {
-            exec.step_region(&t, &ci, &p, interior, &mut t2p).unwrap()
+        let mut t2t = t.clone();
+        let native_t = measure(samples, 3, || {
+            parallel::diffusion_step_region(threads, &t, &ci, &p, interior, &mut t2t)
         });
 
-        let ratio = native.median / pjrt.median;
-        println!(
-            "diffusion {}^3 : native {}  pjrt {}  ratio {:.1}% (paper 90%)",
-            shape[0],
-            fmt_time(native.median),
-            fmt_time(pjrt.median),
-            ratio * 100.0
-        );
-        rows.push((format!("diffusion_{}", shape[0]), native.median, pjrt.median));
+        let pjrt = match &store {
+            Some(s) => {
+                let mut exec = DiffusionExecutor::pjrt(shape, None, s)?;
+                let mut t2p = t.clone();
+                Some(
+                    measure(samples, 3, || {
+                        exec.step_region(&t, &ci, &p, interior, &mut t2p).unwrap()
+                    })
+                    .median,
+                )
+            }
+            None => None,
+        };
+
+        print_row("diffusion", shape[0], native.median, native_t.median, threads, pjrt);
+        rows.push((format!("diffusion_{}", shape[0]), native.median, native_t.median, pjrt));
     }
 
     for shape in [[32, 32, 32], [64, 64, 64]] {
@@ -63,38 +85,71 @@ fn main() -> anyhow::Result<()> {
 
         let (mut pe2, mut phi2) = (pe.clone(), phi.clone());
         let native = measure(samples, 3, || twophase::step(&pe, &phi, &p, &mut pe2, &mut phi2));
-
-        let mut exec = TwophaseExecutor::pjrt(shape, None, &store)?;
-        let (mut pe2p, mut phi2p) = (pe.clone(), phi.clone());
-        let pjrt = measure(samples, 3, || {
-            exec.step_region(&pe, &phi, &p, interior, &mut pe2p, &mut phi2p).unwrap()
+        let (mut pe2t, mut phi2t) = (pe.clone(), phi.clone());
+        let native_t = measure(samples, 3, || {
+            parallel::twophase_step_region(threads, &pe, &phi, &p, interior, &mut pe2t, &mut phi2t)
         });
 
-        let ratio = native.median / pjrt.median;
-        println!(
-            "twophase  {}^3 : native {}  pjrt {}  ratio {:.1}% (paper 90%)",
-            shape[0],
-            fmt_time(native.median),
-            fmt_time(pjrt.median),
-            ratio * 100.0
-        );
-        rows.push((format!("twophase_{}", shape[0]), native.median, pjrt.median));
+        let pjrt = match &store {
+            Some(s) => {
+                let mut exec = TwophaseExecutor::pjrt(shape, None, s)?;
+                let (mut pe2p, mut phi2p) = (pe.clone(), phi.clone());
+                Some(
+                    measure(samples, 3, || {
+                        exec.step_region(&pe, &phi, &p, interior, &mut pe2p, &mut phi2p).unwrap()
+                    })
+                    .median,
+                )
+            }
+            None => None,
+        };
+
+        print_row("twophase", shape[0], native.median, native_t.median, threads, pjrt);
+        rows.push((format!("twophase_{}", shape[0]), native.median, native_t.median, pjrt));
     }
 
-    report::write_json_report(
-        "target/bench_results/perf_reference.json",
-        Json::Arr(
-            rows.into_iter()
-                .map(|(name, native, pjrt)| {
-                    Json::obj(vec![
-                        ("name", Json::Str(name)),
-                        ("native_s", Json::Num(native)),
-                        ("pjrt_s", Json::Num(pjrt)),
-                        ("ratio", Json::Num(native / pjrt)),
-                    ])
-                })
-                .collect(),
-        ),
+    igg::bench::report::write_json_report(
+        "BENCH_perf.json",
+        Json::obj(vec![
+            ("threads", Json::Num(threads as f64)),
+            (
+                "rows",
+                Json::Arr(
+                    rows.into_iter()
+                        .map(|(name, native, native_t, pjrt)| {
+                            Json::obj(vec![
+                                ("name", Json::Str(name)),
+                                ("native_s", Json::Num(native)),
+                                ("native_threaded_s", Json::Num(native_t)),
+                                ("pjrt_s", opt_num(pjrt)),
+                                ("ratio", opt_num(pjrt.map(|p| native / p))),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
     )?;
     Ok(())
+}
+
+fn print_row(
+    app: &str,
+    n: usize,
+    native: f64,
+    native_t: f64,
+    threads: usize,
+    pjrt: Option<f64>,
+) {
+    let pjrt_col = match pjrt {
+        Some(p) => format!("pjrt {}  ratio {:.1}% (paper 90%)", fmt_time(p), native / p * 100.0),
+        None => "pjrt n/a".to_string(),
+    };
+    println!(
+        "{app:<9} {n}^3 : native {}  native({threads}t) {} ({:.2}x)  {}",
+        fmt_time(native),
+        fmt_time(native_t),
+        native / native_t,
+        pjrt_col
+    );
 }

@@ -52,7 +52,7 @@ pub fn params_for(cfg: &Config, dims_g: [usize; 3]) -> DiffusionParams {
 
 fn make_executor(ctx: &RankCtx) -> anyhow::Result<DiffusionExecutor> {
     match ctx.cfg.backend {
-        ExecBackend::Native => Ok(DiffusionExecutor::native()),
+        ExecBackend::Native => Ok(DiffusionExecutor::native_threads(ctx.cfg.compute_threads)),
         ExecBackend::Pjrt => {
             let store = ArtifactStore::load(artifact_dir())?;
             let widths = ctx.cfg.effective_hide().map(|h| h.0);
@@ -181,6 +181,24 @@ mod tests {
         let b = run_ranks(&hidden, |ctx| Ok(run(&ctx)?.field.into_vec())).unwrap();
         for (ra, rb) in a.iter().zip(&b) {
             assert_eq!(ra, rb, "hide_communication must not change results");
+        }
+    }
+
+    /// The threaded xPU backend is bitwise-identical end to end: the same
+    /// distributed run with `compute_threads > 1` — local grids big enough
+    /// to engage the worker pool, hidden communication on — matches the
+    /// serial fields exactly.
+    #[test]
+    fn compute_threads_bitwise_identical() {
+        let base = Config {
+            hide: Some(HideWidths([3, 2, 2])),
+            ..cfg(2, 32, 4)
+        };
+        let threaded = Config { compute_threads: 3, ..base.clone() };
+        let a = run_ranks(&base, |ctx| Ok(run(&ctx)?.field.into_vec())).unwrap();
+        let b = run_ranks(&threaded, |ctx| Ok(run(&ctx)?.field.into_vec())).unwrap();
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra, rb, "compute_threads must not change results");
         }
     }
 }

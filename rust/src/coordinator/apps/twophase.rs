@@ -49,7 +49,7 @@ pub fn params_for(cfg: &Config, dims_g: [usize; 3]) -> TwophaseParams {
 
 fn make_executor(ctx: &RankCtx) -> anyhow::Result<TwophaseExecutor> {
     match ctx.cfg.backend {
-        ExecBackend::Native => Ok(TwophaseExecutor::native()),
+        ExecBackend::Native => Ok(TwophaseExecutor::native_threads(ctx.cfg.compute_threads)),
         ExecBackend::Pjrt => {
             let store = ArtifactStore::load(artifact_dir())?;
             let widths = ctx.cfg.effective_hide().map(|h| h.0);
@@ -188,5 +188,25 @@ mod tests {
             assert_eq!(pa, pb);
             assert_eq!(fa, fb);
         }
+    }
+
+    /// `compute_threads > 1` (pool engaged: 32^3 local) is bitwise-identical
+    /// for both two-phase fields.
+    #[test]
+    fn compute_threads_bitwise_identical() {
+        let base = cfg(1, 32, 3);
+        let threaded = Config { compute_threads: 2, ..base.clone() };
+        let a = run_ranks(&base, |ctx| {
+            let r = run(&ctx)?;
+            Ok((r.field.into_vec(), r.extra.unwrap().into_vec()))
+        })
+        .unwrap();
+        let b = run_ranks(&threaded, |ctx| {
+            let r = run(&ctx)?;
+            Ok((r.field.into_vec(), r.extra.unwrap().into_vec()))
+        })
+        .unwrap();
+        assert_eq!(a[0].0, b[0].0, "Pe must be bitwise identical");
+        assert_eq!(a[0].1, b[0].1, "phi must be bitwise identical");
     }
 }

@@ -53,6 +53,10 @@ pub struct Config {
     pub backend: Backend,
     pub path: TransferPath,
     pub pipeline_chunks: usize,
+    /// Worker threads per rank for the native stencil backend (1 = serial).
+    /// Large regions — in particular the inner region under
+    /// `hide_communication` — are x-chunked across this many threads.
+    pub compute_threads: usize,
     pub net: NetModel,
     pub seed: u64,
     /// Physical domain edge length (cubic domain, as in the paper).
@@ -72,6 +76,7 @@ impl Default for Config {
             backend: Backend::Native,
             path: TransferPath::Rdma,
             pipeline_chunks: 4,
+            compute_threads: 1,
             net: NetModel::ideal(),
             seed: 42,
             lx: 1.0,
@@ -117,6 +122,9 @@ impl Config {
         if let Some(c) = args.get_usize("chunks")? {
             cfg.pipeline_chunks = c;
         }
+        if let Some(t) = args.get_usize("compute-threads")? {
+            cfg.compute_threads = t;
+        }
         if let Some(n) = args.get("net") {
             cfg.net = NetModel::parse(n)?;
         }
@@ -131,6 +139,7 @@ impl Config {
         anyhow::ensure!(self.nranks >= 1, "need at least one rank");
         anyhow::ensure!(self.nt >= 1, "need at least one step");
         anyhow::ensure!(self.pipeline_chunks >= 1, "need at least one pipeline chunk");
+        anyhow::ensure!(self.compute_threads >= 1, "need at least one compute thread");
         for (d, &n) in self.local.iter().enumerate() {
             anyhow::ensure!(n >= 3, "local dim {d} = {n} too small (need >= 3)");
         }
@@ -181,6 +190,7 @@ impl Config {
                 }),
             ),
             ("pipeline_chunks", Json::Num(self.pipeline_chunks as f64)),
+            ("compute_threads", Json::Num(self.compute_threads as f64)),
             ("net_latency_s", Json::Num(self.net.latency_s)),
             (
                 "net_bw_bytes_per_s",
@@ -213,6 +223,7 @@ mod tests {
             .value("backend", None, "")
             .value("path", None, "")
             .value("chunks", None, "")
+            .value("compute-threads", None, "")
             .value("net", None, "")
             .value("seed", None, "")
     }
@@ -236,6 +247,14 @@ mod tests {
     fn anisotropic_local() {
         let c = parse(&["--nx", "24", "--ny", "16", "--nz", "12"]).unwrap();
         assert_eq!(c.local, [24, 16, 12]);
+    }
+
+    #[test]
+    fn compute_threads_flag() {
+        assert_eq!(parse(&[]).unwrap().compute_threads, 1);
+        let c = parse(&["--compute-threads", "4"]).unwrap();
+        assert_eq!(c.compute_threads, 4);
+        assert!(parse(&["--compute-threads", "0"]).is_err());
     }
 
     #[test]

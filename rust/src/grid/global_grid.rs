@@ -164,6 +164,23 @@ impl GlobalGrid {
         self.engine.lock().unwrap().stats()
     }
 
+    /// Transfer path the halo engine was configured with.
+    pub fn halo_path(&self) -> TransferPath {
+        self.engine.lock().unwrap().path()
+    }
+
+    /// Pipeline chunk count the halo engine was configured with.
+    pub fn halo_chunks(&self) -> usize {
+        self.engine.lock().unwrap().chunks()
+    }
+
+    /// Cumulative engine-attributed heap allocations (pooled buffers,
+    /// payloads, plan builds). Constant across steady-state updates — the
+    /// zero-allocation contract tests assert on this.
+    pub fn halo_allocations(&self) -> usize {
+        self.engine.lock().unwrap().allocations()
+    }
+
     /// `finalize_global_grid()`. Consumes the grid; synchronizes ranks so
     /// teardown is collective, like the original.
     pub fn finalize(self) {

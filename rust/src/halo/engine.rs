@@ -1,6 +1,29 @@
 //! The halo-update engine: synchronous (`update`) and overlapped
 //! (`start` / `finish`) execution of a [`HaloPlan`].
 //!
+//! ## The steady-state hot path
+//!
+//! The engine is built so that after the first `update_halo!` call of a
+//! given signature, a halo update performs **zero heap allocations** and a
+//! fixed, small number of lock acquisitions:
+//!
+//! * **Plan cache** — the [`HaloPlan`] is memoized by (field dims, base
+//!   size). Rebuilding only happens when the call signature changes;
+//!   [`HaloEngine::allocations`] counts rebuilds together with pool
+//!   allocations so tests can assert the steady state is allocation-free.
+//! * **Posted sends, drained later** — within each dimension every send is
+//!   posted (non-blocking) before the first wait of any kind; the collected
+//!   [`SendRequest`]s are completed in a drain phase after the receives, so
+//!   all modeled injections and transits overlap.
+//! * **Payload recycling** — the vectors that travel through the network
+//!   come from the pool's size-keyed payload free list and every received
+//!   payload is recycled back into it ([`BufRole::Payload`]); halo traffic
+//!   is symmetric, so the free list is self-sustaining after one step. No
+//!   `clone`/`to_vec` per plane or chunk.
+//! * **Lock coarsening** — the buffer pool is locked once per dimension
+//!   (not 2–4 times per plane) and [`HaloStats`] are accumulated locally
+//!   and flushed once per update.
+//!
 //! ## Overlap and aliasing
 //!
 //! The overlapped path runs the whole sequential-by-dimension exchange on
@@ -18,8 +41,8 @@
 
 use std::sync::{Arc, Mutex};
 
-use crate::memory::{BufKey, BufferPool, CopyModel, SimDevice, Stream, StreamPriority};
-use crate::mpisim::{CartComm, Comm, RecvRequest};
+use crate::memory::{BufKey, BufRole, BufferPool, CopyModel, SimDevice, Stream, StreamPriority};
+use crate::mpisim::{CartComm, Comm, RecvRequest, SendRequest};
 use crate::physics::Field3D;
 
 use super::plan::{ExchangeOp, HaloPlan, MAX_CHUNKS};
@@ -62,9 +85,47 @@ impl RawField {
 
     /// SAFETY: caller must guarantee no concurrent access to the cells this
     /// exchange touches (boundary planes) for the lifetime of the call.
+    #[allow(clippy::mut_from_ref)]
     unsafe fn slice_mut<'a>(&self) -> &'a mut [f64] {
         std::slice::from_raw_parts_mut(self.ptr, self.len)
     }
+}
+
+/// Topology fingerprint of a Cartesian communicator — part of the plan
+/// cache key so a cart change (different dims/periods/placement) can never
+/// reuse a stale plan.
+#[derive(PartialEq, Eq, Clone, Copy)]
+struct TopoKey {
+    dims: [usize; 3],
+    periods: [bool; 3],
+    coords: [usize; 3],
+}
+
+impl TopoKey {
+    fn of(cart: &CartComm) -> Self {
+        TopoKey { dims: cart.dims(), periods: cart.periods(), coords: cart.coords() }
+    }
+}
+
+/// The memoized plan of the last `update_halo!` signature.
+struct PlanCache {
+    dims: Vec<[usize; 3]>,
+    base: [usize; 3],
+    topo: TopoKey,
+    plan: Arc<HaloPlan>,
+}
+
+/// Reusable request storage for one in-flight exchange; capacities are
+/// retained across updates so the steady state performs no allocation.
+#[derive(Default)]
+struct ExchangeScratch {
+    /// Send requests of the current dimension, drained after the receives.
+    sends: Vec<SendRequest>,
+    /// Posted receives of the current dimension, in op order.
+    recv_reqs: Vec<RecvRequest>,
+    /// (index into the dim's ops, chunk count) per receiving op, in the
+    /// order their requests appear in `recv_reqs`.
+    recv_ops: Vec<(usize, usize)>,
 }
 
 /// The engine: transfer-path policy + pooled buffers + the comm stream.
@@ -76,6 +137,16 @@ pub struct HaloEngine {
     pool: Arc<Mutex<BufferPool>>,
     stream: Arc<Stream>,
     stats: Arc<Mutex<HaloStats>>,
+    plan_cache: Option<PlanCache>,
+    /// Plan (re)builds — allocation events, counted into `allocations()`.
+    plan_builds: usize,
+    /// RawField views for the synchronous path (capacity reused).
+    raw_scratch: Vec<RawField>,
+    /// Request scratch for the synchronous path.
+    sync_scratch: ExchangeScratch,
+    /// Request scratch for the overlapped path; only stream jobs lock it,
+    /// and the FIFO stream serializes them.
+    stream_scratch: Arc<Mutex<ExchangeScratch>>,
 }
 
 impl HaloEngine {
@@ -98,6 +169,11 @@ impl HaloEngine {
             pool: Arc::new(Mutex::new(BufferPool::new())),
             stream: Arc::new(Stream::new(StreamPriority::High)),
             stats: Arc::new(Mutex::new(HaloStats::default())),
+            plan_cache: None,
+            plan_builds: 0,
+            raw_scratch: Vec::new(),
+            sync_scratch: ExchangeScratch::default(),
+            stream_scratch: Arc::new(Mutex::new(ExchangeScratch::default())),
         }
     }
 
@@ -109,6 +185,42 @@ impl HaloEngine {
         self.path
     }
 
+    /// Configured pipeline chunk count (effective only on the staged path).
+    pub fn chunks(&self) -> usize {
+        self.chunks
+    }
+
+    /// Cumulative engine-attributed heap allocations: pooled buffer
+    /// allocations (slots and payloads) plus halo-plan (re)builds. Constant
+    /// across steady-state updates — asserted by `buffer_pool_steady_state`.
+    pub fn allocations(&self) -> usize {
+        self.pool.lock().unwrap().allocations() + self.plan_builds
+    }
+
+    /// The memoized plan for this call signature, rebuilt only when the
+    /// field dims, base size, or communicator topology change.
+    fn plan_for(
+        &mut self,
+        cart: &CartComm,
+        base: [usize; 3],
+        fields: &mut [&mut Field3D],
+    ) -> anyhow::Result<Arc<HaloPlan>> {
+        let topo = TopoKey::of(cart);
+        let hit = self.plan_cache.as_ref().is_some_and(|c| {
+            c.base == base
+                && c.topo == topo
+                && c.dims.len() == fields.len()
+                && c.dims.iter().zip(fields.iter()).all(|(d, f)| *d == f.dims())
+        });
+        if !hit {
+            let dims: Vec<[usize; 3]> = fields.iter().map(|f| f.dims()).collect();
+            let plan = Arc::new(HaloPlan::build(cart, &dims, base)?);
+            self.plan_builds += 1;
+            self.plan_cache = Some(PlanCache { dims, base, topo, plan });
+        }
+        Ok(Arc::clone(&self.plan_cache.as_ref().expect("cache filled above").plan))
+    }
+
     /// Synchronous `update_halo!` on the calling thread.
     pub fn update(
         &mut self,
@@ -116,20 +228,22 @@ impl HaloEngine {
         base: [usize; 3],
         fields: &mut [&mut Field3D],
     ) -> anyhow::Result<()> {
-        let plan = HaloPlan::build(cart, &dims_of(fields), base)?;
-        let raws: Vec<RawField> = fields.iter_mut().map(|f| RawField::of(f)).collect();
+        let plan = self.plan_for(cart, base, fields)?;
+        self.raw_scratch.clear();
+        self.raw_scratch.extend(fields.iter_mut().map(|f| RawField::of(f)));
         // SAFETY: we hold the exclusive borrows in `fields` for the whole
         // call and run on this thread only — no aliasing at all.
         unsafe {
             exchange(
                 &self.comm,
                 &plan,
-                &raws,
+                &self.raw_scratch,
                 self.path,
                 self.chunks,
                 &self.device,
                 &self.pool,
                 &self.stats,
+                &mut self.sync_scratch,
             )
         }
     }
@@ -144,7 +258,7 @@ impl HaloEngine {
         base: [usize; 3],
         fields: &mut [&mut Field3D],
     ) -> anyhow::Result<PendingHalo> {
-        let plan = HaloPlan::build(cart, &dims_of(fields), base)?;
+        let plan = self.plan_for(cart, base, fields)?;
         let raws: Vec<RawField> = fields.iter_mut().map(|f| RawField::of(f)).collect();
         let comm = self.comm.clone();
         let path = self.path;
@@ -152,14 +266,16 @@ impl HaloEngine {
         let device = Arc::clone(&self.device);
         let pool = Arc::clone(&self.pool);
         let stats = Arc::clone(&self.stats);
+        let scratch = Arc::clone(&self.stream_scratch);
         let error: Arc<Mutex<Option<anyhow::Error>>> = Arc::new(Mutex::new(None));
         let error_slot = Arc::clone(&error);
         self.stream.enqueue(move || {
             // SAFETY: the scheduler contract (module docs) — the caller only
             // computes strictly inside the boundary width while this runs,
             // and PendingHalo joins the stream before the borrows end.
+            let mut scratch = scratch.lock().unwrap();
             let res = unsafe {
-                exchange(&comm, &plan, &raws, path, chunks, &device, &pool, &stats)
+                exchange(&comm, &plan, &raws, path, chunks, &device, &pool, &stats, &mut scratch)
             };
             if let Err(e) = res {
                 *error_slot.lock().unwrap() = Some(e);
@@ -167,10 +283,6 @@ impl HaloEngine {
         });
         Ok(PendingHalo { stream: Arc::clone(&self.stream), error, finished: false })
     }
-}
-
-fn dims_of(fields: &mut [&mut Field3D]) -> Vec<[usize; 3]> {
-    fields.iter().map(|f| f.dims()).collect()
 }
 
 /// An in-flight overlapped halo update.
@@ -203,6 +315,11 @@ impl Drop for PendingHalo {
 
 /// The sequential-by-dimension exchange at the heart of `update_halo!`.
 ///
+/// Per dimension: post every receive, post every send (packing straight
+/// into pooled payload buffers — no waits anywhere in this phase), then
+/// wait+unpack the receives, and finally drain the send requests. All
+/// modeled injections and transits of a dimension therefore overlap.
+///
 /// SAFETY (caller): no other thread may access the boundary planes of the
 /// fields behind `raws` during the call; the field allocations must outlive
 /// it.
@@ -216,37 +333,74 @@ unsafe fn exchange(
     device: &SimDevice,
     pool: &Mutex<BufferPool>,
     stats: &Mutex<HaloStats>,
+    scratch: &mut ExchangeScratch,
 ) -> anyhow::Result<()> {
+    // Stats are accumulated here and flushed once at the end of the update.
+    let mut local = HaloStats { updates: 1, ..HaloStats::default() };
     for ops in &plan.per_dim {
         if ops.is_empty() {
             continue;
         }
+        // One pool lock per dimension covers every checkout/restore below.
+        let mut pool_g = pool.lock().unwrap();
+
         // Phase 1: post all receives for this dimension.
-        let mut recvs: Vec<(usize, Vec<RecvRequest>)> = Vec::new(); // (op idx, chunk reqs)
+        scratch.recv_ops.clear();
+        scratch.recv_reqs.clear();
+        scratch.sends.clear();
         for (i, op) in ops.iter().enumerate() {
             if let Some(src) = op.recv_from {
                 let n_chunks = effective_chunks(path, chunks, op.plane_cells);
-                let reqs = (0..n_chunks).map(|c| comm.irecv(src, op.tag(c))).collect();
-                recvs.push((i, reqs));
+                for c in 0..n_chunks {
+                    scratch.recv_reqs.push(comm.irecv(src, op.tag(c)));
+                }
+                scratch.recv_ops.push((i, n_chunks));
             }
         }
-        // Phase 2: pack and send (pipelined d2h+send for the staged path).
+
+        // Phase 2: pack and post all sends — no wait happens before the
+        // last send of the dimension is on the wire.
         for op in ops {
             if op.self_wrap {
-                wrap_copy(op, raws, pool, stats);
+                wrap_copy(op, raws, &mut pool_g, &mut local);
                 continue;
             }
             if let Some(dst) = op.send_to {
-                send_plane(comm, op, dst, raws, path, chunks, device, pool, stats);
+                send_plane(
+                    comm,
+                    op,
+                    dst,
+                    raws,
+                    path,
+                    chunks,
+                    device,
+                    &mut pool_g,
+                    &mut local,
+                    &mut scratch.sends,
+                );
             }
         }
-        // Phase 3: wait + unpack (pipelined recv+h2d for the staged path).
-        for (i, reqs) in recvs {
-            let op = &ops[i];
-            recv_plane(op, reqs, raws, path, device, pool)?;
+
+        // Phase 3: wait + unpack receives (pipelined recv+h2d for the
+        // staged path); received payloads are recycled into the pool.
+        {
+            let mut reqs = scratch.recv_reqs.drain(..);
+            for &(i, n_chunks) in &scratch.recv_ops {
+                recv_plane(&ops[i], &mut reqs, n_chunks, raws, path, device, &mut pool_g)?;
+            }
+        }
+
+        // Phase 4: drain the posted sends (completes their modeled
+        // injection; usually already elapsed under the receive waits).
+        for req in scratch.sends.drain(..) {
+            req.wait();
         }
     }
-    stats.lock().unwrap().updates += 1;
+    let mut st = stats.lock().unwrap();
+    st.updates += local.updates;
+    st.planes_sent += local.planes_sent;
+    st.bytes_sent += local.bytes_sent;
+    st.wrap_copies += local.wrap_copies;
     Ok(())
 }
 
@@ -257,18 +411,14 @@ fn effective_chunks(path: TransferPath, chunks: usize, cells: usize) -> usize {
     }
 }
 
-/// Split `len` into `n` nearly equal chunk ranges.
-fn chunk_ranges(len: usize, n: usize) -> Vec<(usize, usize)> {
+/// The `i`-th of `n` nearly equal chunk ranges of `len` (allocation-free
+/// form of splitting `0..len` into `n` pieces).
+fn chunk_range(len: usize, n: usize, i: usize) -> (usize, usize) {
     let base = len / n;
     let rem = len % n;
-    let mut out = Vec::with_capacity(n);
-    let mut start = 0;
-    for i in 0..n {
-        let sz = base + usize::from(i < rem);
-        out.push((start, start + sz));
-        start += sz;
-    }
-    out
+    let lo = i * base + i.min(rem);
+    let hi = lo + base + usize::from(i < rem);
+    (lo, hi)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -280,63 +430,60 @@ unsafe fn send_plane(
     path: TransferPath,
     chunks: usize,
     device: &SimDevice,
-    pool: &Mutex<BufferPool>,
-    stats: &Mutex<HaloStats>,
+    pool: &mut BufferPool,
+    stats: &mut HaloStats,
+    sends: &mut Vec<SendRequest>,
 ) {
     let rf = raws[op.field];
     let data = rf.slice_mut();
-    let side = usize::from(op.dir > 0);
-    let key = BufKey { field: op.field, dim: op.dim, side, role: 0 };
-    let mut dev_buf = pool.lock().unwrap().checkout(key, op.plane_cells);
-    // "device-side" pack kernel
-    pack_plane_raw(data, rf.dims, op.dim, op.send_plane, &mut dev_buf);
-
     match path {
         TransferPath::Rdma => {
-            // GPU-direct: the packed device buffer goes straight out.
-            comm.isend(dst, op.tag(0), dev_buf.clone()).wait();
-            let mut st = stats.lock().unwrap();
-            st.planes_sent += 1;
-            st.bytes_sent += (op.plane_cells * 8) as u64;
+            // GPU-direct: pack straight into an outgoing payload buffer; it
+            // migrates to the receiver, and a payload received this step
+            // replaces it in the pool, so the steady state allocates nothing.
+            let mut payload = pool.checkout_payload(op.plane_cells);
+            pack_plane_raw(data, rf.dims, op.dim, op.send_plane, &mut payload);
+            sends.push(comm.isend(dst, op.tag(0), payload));
+            stats.planes_sent += 1;
+            stats.bytes_sent += (op.plane_cells * 8) as u64;
         }
         TransferPath::Staged => {
-            // Pipelined host staging: chunk i's network send overlaps
-            // chunk i+1's d2h copy (the isend is non-blocking).
+            // Host staging with chunked pipelining: chunk c's d2h copy
+            // overlaps chunk c-1's (non-blocking) network injection. Each
+            // chunk stages directly into the payload that goes on the wire.
+            let side = usize::from(op.dir > 0);
+            let key = BufKey { field: op.field, dim: op.dim, side, role: BufRole::Send };
+            let mut dev_buf = pool.checkout(key, op.plane_cells);
+            pack_plane_raw(data, rf.dims, op.dim, op.send_plane, &mut dev_buf);
             let n_chunks = effective_chunks(path, chunks, op.plane_cells);
-            let hkey = BufKey { field: op.field, dim: op.dim, side, role: 2 };
-            let mut host_buf = pool.lock().unwrap().checkout(hkey, op.plane_cells);
-            for (c, (lo, hi)) in chunk_ranges(op.plane_cells, n_chunks).into_iter().enumerate() {
-                device.d2h(&dev_buf[lo..hi], &mut host_buf[lo..hi]);
-                comm.isend(dst, op.tag(c), host_buf[lo..hi].to_vec()).wait();
+            for c in 0..n_chunks {
+                let (lo, hi) = chunk_range(op.plane_cells, n_chunks, c);
+                let mut payload = pool.checkout_payload(hi - lo);
+                device.d2h(&dev_buf[lo..hi], &mut payload);
+                sends.push(comm.isend(dst, op.tag(c), payload));
             }
-            let mut st = stats.lock().unwrap();
-            st.planes_sent += n_chunks as u64;
-            st.bytes_sent += (op.plane_cells * 8) as u64;
-            drop(st);
-            pool.lock().unwrap().restore(hkey, host_buf);
+            pool.restore(key, dev_buf);
+            stats.planes_sent += n_chunks as u64;
+            stats.bytes_sent += (op.plane_cells * 8) as u64;
         }
     }
-    pool.lock().unwrap().restore(key, dev_buf);
 }
 
 unsafe fn recv_plane(
     op: &ExchangeOp,
-    reqs: Vec<RecvRequest>,
+    reqs: &mut std::vec::Drain<'_, RecvRequest>,
+    n_chunks: usize,
     raws: &[RawField],
     path: TransferPath,
     device: &SimDevice,
-    pool: &Mutex<BufferPool>,
+    pool: &mut BufferPool,
 ) -> anyhow::Result<()> {
     let rf = raws[op.field];
     let data = rf.slice_mut();
-    let side = usize::from(op.dir < 0); // dir -1 receives into the high plane
-    let key = BufKey { field: op.field, dim: op.dim, side, role: 1 };
-    let mut dev_buf = pool.lock().unwrap().checkout(key, op.plane_cells);
-
     match path {
         TransferPath::Rdma => {
-            debug_assert_eq!(reqs.len(), 1);
-            let payload = reqs.into_iter().next().expect("one request").wait();
+            debug_assert_eq!(n_chunks, 1);
+            let payload = reqs.next().expect("one posted receive per rdma op").wait();
             anyhow::ensure!(
                 payload.len() == op.plane_cells,
                 "halo message size mismatch: got {}, want {} (field {}, dim {})",
@@ -345,12 +492,16 @@ unsafe fn recv_plane(
                 op.field,
                 op.dim
             );
-            dev_buf.copy_from_slice(&payload);
+            unpack_plane_raw(data, rf.dims, op.dim, op.recv_plane, &payload);
+            pool.restore_payload(payload);
         }
         TransferPath::Staged => {
-            let ranges = chunk_ranges(op.plane_cells, reqs.len());
-            for (req, (lo, hi)) in reqs.into_iter().zip(ranges) {
-                let payload = req.wait();
+            let side = usize::from(op.dir < 0); // dir -1 receives into the high plane
+            let key = BufKey { field: op.field, dim: op.dim, side, role: BufRole::Recv };
+            let mut dev_buf = pool.checkout(key, op.plane_cells);
+            for c in 0..n_chunks {
+                let (lo, hi) = chunk_range(op.plane_cells, n_chunks, c);
+                let payload = reqs.next().expect("one posted receive per chunk").wait();
                 anyhow::ensure!(
                     payload.len() == hi - lo,
                     "halo chunk size mismatch: got {}, want {}",
@@ -358,29 +509,30 @@ unsafe fn recv_plane(
                     hi - lo
                 );
                 device.h2d(&payload, &mut dev_buf[lo..hi]);
+                pool.restore_payload(payload);
             }
+            unpack_plane_raw(data, rf.dims, op.dim, op.recv_plane, &dev_buf);
+            pool.restore(key, dev_buf);
         }
     }
-    unpack_plane_raw(data, rf.dims, op.dim, op.recv_plane, &dev_buf);
-    pool.lock().unwrap().restore(key, dev_buf);
     Ok(())
 }
 
 unsafe fn wrap_copy(
     op: &ExchangeOp,
     raws: &[RawField],
-    pool: &Mutex<BufferPool>,
-    stats: &Mutex<HaloStats>,
+    pool: &mut BufferPool,
+    stats: &mut HaloStats,
 ) {
     let rf = raws[op.field];
     let data = rf.slice_mut();
     let side = usize::from(op.dir > 0);
-    let key = BufKey { field: op.field, dim: op.dim, side, role: 3 };
-    let mut buf = pool.lock().unwrap().checkout(key, op.plane_cells);
+    let key = BufKey { field: op.field, dim: op.dim, side, role: BufRole::Wrap };
+    let mut buf = pool.checkout(key, op.plane_cells);
     pack_plane_raw(data, rf.dims, op.dim, op.send_plane, &mut buf);
     unpack_plane_raw(data, rf.dims, op.dim, op.recv_plane, &buf);
-    pool.lock().unwrap().restore(key, buf);
-    stats.lock().unwrap().wrap_copies += 1;
+    pool.restore(key, buf);
+    stats.wrap_copies += 1;
 }
 
 #[cfg(test)]
@@ -425,17 +577,18 @@ mod tests {
         })
     }
 
+    /// Corrupt receivable halo planes, update, and check the global marker
+    /// is restored. `path`/`chunks` assert the grid's engine really runs
+    /// the configuration under test.
     fn check_halo_coherent(g: &GlobalGrid, path: TransferPath, chunks: usize) {
-        let _ = (path, chunks);
+        assert_eq!(g.halo_path(), path, "engine transfer path");
+        assert_eq!(g.halo_chunks(), chunks, "engine pipeline chunks");
         // Start from the marker but zero the halo planes that should be
         // received; after update_halo they must equal the global marker.
         let want = marker(g);
         let mut f = want.clone();
-        let [nx, ny, nz] = f.dims();
         for dim in 0..3 {
             if g.cart().neighbor(dim, -1).is_some() {
-                let m = [nx, ny, nz][dim];
-                let _ = m;
                 // zero plane 0 of this dim
                 for a in 0..f.dims()[(dim + 1) % 3] {
                     for b in 0..f.dims()[(dim + 2) % 3] {
@@ -466,14 +619,14 @@ mod tests {
     #[test]
     fn rdma_two_ranks_x() {
         on_grid(2, [6, 5, 4], GridOptions::default(), |g| {
-            check_halo_coherent(g, TransferPath::Rdma, 1);
+            check_halo_coherent(g, TransferPath::Rdma, 4);
         });
     }
 
     #[test]
     fn rdma_eight_ranks_cube() {
         on_grid(8, [6, 6, 6], GridOptions::default(), |g| {
-            check_halo_coherent(g, TransferPath::Rdma, 1);
+            check_halo_coherent(g, TransferPath::Rdma, 4);
         });
     }
 
@@ -490,7 +643,7 @@ mod tests {
         let opts = GridOptions { dims: [3, 2, 2], ..Default::default() };
         on_grid(12, [5, 6, 7], opts, |g| {
             assert_eq!(g.dims(), [3, 2, 2]);
-            check_halo_coherent(g, TransferPath::Rdma, 1);
+            check_halo_coherent(g, TransferPath::Rdma, 4);
         });
     }
 
@@ -561,23 +714,89 @@ mod tests {
         });
     }
 
+    /// The zero-allocation contract: after the warm-up step, updates on
+    /// either transfer path perform no engine-attributed heap allocation
+    /// (pool slots, payload buffers, plan builds).
     #[test]
     fn buffer_pool_steady_state() {
+        for (path, chunks) in [(TransferPath::Rdma, 1), (TransferPath::Staged, 4)] {
+            let opts = GridOptions { path, pipeline_chunks: chunks, ..Default::default() };
+            on_grid(8, [6, 6, 6], opts, move |g| {
+                let mut f = marker(g);
+                g.update_halo(&mut [&mut f]).unwrap(); // warm-up allocates
+                let warm = g.halo_allocations();
+                assert!(warm > 0, "warm-up must have allocated pooled buffers");
+                for _ in 0..10 {
+                    g.update_halo(&mut [&mut f]).unwrap();
+                }
+                assert_eq!(
+                    g.halo_allocations(),
+                    warm,
+                    "steady-state update_halo! must not allocate ({path:?}, chunks {chunks})"
+                );
+                let stats = g.halo_stats();
+                assert_eq!(stats.updates, 11);
+                assert!(stats.planes_sent > 0);
+            });
+        }
+    }
+
+    /// The plan cache memoizes by (dims, base): repeating a signature never
+    /// rebuilds; changing the field set rebuilds exactly once per change.
+    #[test]
+    fn plan_cache_rebuilds_only_on_signature_change() {
         on_grid(2, [6, 6, 6], GridOptions::default(), |g| {
-            let mut f = marker(g);
-            for _ in 0..10 {
-                g.update_halo(&mut [&mut f]).unwrap();
+            let mut a = marker(g);
+            g.update_halo(&mut [&mut a]).unwrap();
+            let after_first = g.halo_allocations();
+            for _ in 0..5 {
+                g.update_halo(&mut [&mut a]).unwrap();
             }
-            let stats = g.halo_stats();
-            assert_eq!(stats.updates, 10);
-            assert!(stats.planes_sent > 0);
+            assert_eq!(g.halo_allocations(), after_first, "same signature: no rebuild");
+            // a two-field call is a new signature: the plan rebuild (and the
+            // second field's buffers) allocate again, exactly once
+            let mut b = marker(g);
+            g.update_halo(&mut [&mut a, &mut b]).unwrap();
+            let after_second = g.halo_allocations();
+            assert!(after_second > after_first, "new signature must rebuild the plan");
+            g.update_halo(&mut [&mut a, &mut b]).unwrap();
+            assert_eq!(g.halo_allocations(), after_second, "repeated signature cached again");
+        });
+    }
+
+    /// Overlapped updates share the same pool and plan cache; steady state
+    /// stays allocation-free for pooled buffers there too.
+    #[test]
+    fn overlapped_steady_state_reuses_buffers() {
+        on_grid(8, [6, 6, 6], GridOptions::default(), |g| {
+            let mut f = marker(g);
+            let p = g.update_halo_start(&mut [&mut f]).unwrap();
+            p.finish().unwrap();
+            let warm = g.halo_allocations();
+            for _ in 0..5 {
+                let p = g.update_halo_start(&mut [&mut f]).unwrap();
+                p.finish().unwrap();
+            }
+            assert_eq!(g.halo_allocations(), warm, "overlapped path must reuse pooled buffers");
         });
     }
 
     #[test]
-    fn chunk_ranges_cover() {
-        assert_eq!(chunk_ranges(10, 3), vec![(0, 4), (4, 7), (7, 10)]);
-        assert_eq!(chunk_ranges(4, 4), vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
-        assert_eq!(chunk_ranges(5, 1), vec![(0, 5)]);
+    fn chunk_range_covers() {
+        let ranges = |len: usize, n: usize| -> Vec<(usize, usize)> {
+            (0..n).map(|i| chunk_range(len, n, i)).collect()
+        };
+        assert_eq!(ranges(10, 3), vec![(0, 4), (4, 7), (7, 10)]);
+        assert_eq!(ranges(4, 4), vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+        assert_eq!(ranges(5, 1), vec![(0, 5)]);
+        // contiguity and coverage for awkward splits
+        for (len, n) in [(17, 5), (64, 7), (3, 3)] {
+            let rs = ranges(len, n);
+            assert_eq!(rs[0].0, 0);
+            assert_eq!(rs[n - 1].1, len);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+        }
     }
 }

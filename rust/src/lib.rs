@@ -28,18 +28,27 @@
 //! The crate is organized exactly as the system inventory in `DESIGN.md`:
 //!
 //! * [`mpisim`] — message-passing substrate (MPI.jl stand-in): in-process
-//!   ranks, non-blocking p2p with request objects, Cartesian communicators,
+//!   ranks, non-blocking p2p with request objects carrying deferred
+//!   (injection-modeled) send completion, Cartesian communicators,
 //!   collectives, and a calibrated interconnect timing model.
 //! * [`memory`] — device-memory substrate (CUDA.jl stand-in): host/device
-//!   spaces, priority streams, pooled reusable communication buffers.
+//!   spaces, priority streams, pooled reusable communication buffers plus
+//!   the size-keyed payload free list that recycles received network
+//!   payloads into future sends.
 //! * [`grid`] — the implicit global grid: topology factorization, global
 //!   sizes/coordinates, staggered-array overlap rules.
-//! * [`halo`] — the `update_halo!` engine: plans, pack/unpack, RDMA-like
-//!   direct and chunk-pipelined host-staged transfer paths.
+//! * [`halo`] — the `update_halo!` engine: memoized plans (rebuilt only
+//!   when the call signature changes), pack/unpack, RDMA-like direct and
+//!   chunk-pipelined host-staged transfer paths. Within each dimension all
+//!   sends are posted before the first wait and drained afterwards; the
+//!   steady state performs zero heap allocations on either path
+//!   (`HaloEngine::allocations`).
 //! * [`overlap`] — `@hide_communication`: inner/boundary region
 //!   decomposition and the overlap scheduler.
 //! * [`physics`] — native Rust field type and stencil steps (the paper's
-//!   "CUDA C" reference solver and the cross-check oracle for the AOT path).
+//!   "CUDA C" reference solver and the cross-check oracle for the AOT
+//!   path), plus the `compute_threads` worker pool that x-chunks any
+//!   region step across threads bitwise-identically.
 //! * [`runtime`] — PJRT executor: loads the AOT-lowered JAX/Pallas HLO
 //!   artifacts and runs them from the Rust hot path (Python is build-time
 //!   only).

@@ -3,11 +3,42 @@
 //! The paper calls out "low level management of memory ... permits to
 //! efficiently reuse send and receive buffers ... throughout an application
 //! without putting the burden of their management to the user". This pool
-//! is that mechanism: buffers are keyed by (array-role, dimension, side),
-//! grown once to the high-water mark, and handed out zero-allocation from
-//! then on. `checkout` / `restore` pairs are cheap Vec moves.
+//! is that mechanism, in two parts:
+//!
+//! * **Slot buffers** — keyed by [`BufKey`] (field, dimension, side,
+//!   [`BufRole`]), grown once to the high-water mark and handed out
+//!   zero-allocation from then on. `checkout` / `restore` pairs are cheap
+//!   `Vec` moves. These are the buffers that stay on this rank (device pack
+//!   and unpack staging, periodic wrap copies).
+//! * **Payload buffers** — the vectors that actually travel through the
+//!   network ([`BufRole::Payload`]). A sent payload migrates to the
+//!   receiving rank, so it cannot live in a fixed slot; instead the pool
+//!   keeps a size-keyed free list and every *received* payload is recycled
+//!   into it after unpacking. Halo traffic is symmetric (each rank receives
+//!   one payload per payload it sends, of matching size), so after the
+//!   first exchange the free list is self-sustaining and `checkout_payload`
+//!   never allocates.
+//!
+//! [`allocations`](BufferPool::allocations) counts every real heap
+//! allocation either path performs; the halo engine's steady-state
+//! zero-allocation contract is asserted against it.
 
 use std::collections::HashMap;
+
+/// What a pooled slot buffer is used for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BufRole {
+    /// Device-side pack buffer for an outgoing plane (staged path).
+    Send,
+    /// Device-side unpack buffer for an incoming plane (staged path).
+    Recv,
+    /// Scratch for periodic self-wrap plane copies.
+    Wrap,
+    /// Marker for network payload buffers. Payloads are fungible and keyed
+    /// by size, not by slot — see [`BufferPool::checkout_payload`]; this
+    /// variant exists so diagnostics can name the role.
+    Payload,
+}
 
 /// Identifies one communication buffer slot.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -18,14 +49,16 @@ pub struct BufKey {
     pub dim: usize,
     /// side: 0 = low, 1 = high
     pub side: usize,
-    /// 0 = send, 1 = recv
-    pub role: usize,
+    /// what the buffer is used for
+    pub role: BufRole,
 }
 
-/// A pool of f64 buffers keyed by [`BufKey`].
+/// A pool of f64 buffers: keyed slots plus the size-keyed payload free list.
 #[derive(Default)]
 pub struct BufferPool {
     slots: HashMap<BufKey, Vec<f64>>,
+    /// Payload free list: exact length -> returned payload vectors.
+    payloads: HashMap<usize, Vec<Vec<f64>>>,
     allocations: usize,
 }
 
@@ -57,6 +90,27 @@ impl BufferPool {
         self.slots.insert(key, buf);
     }
 
+    /// Take a network payload buffer of exactly `len` elements
+    /// ([`BufRole::Payload`]). Reuses a previously received payload of the
+    /// same size when one is available; allocates (and counts) otherwise.
+    /// The contents are unspecified — callers overwrite the whole buffer.
+    pub fn checkout_payload(&mut self, len: usize) -> Vec<f64> {
+        if let Some(list) = self.payloads.get_mut(&len) {
+            if let Some(buf) = list.pop() {
+                debug_assert_eq!(buf.len(), len);
+                return buf;
+            }
+        }
+        self.allocations += 1;
+        vec![0.0; len]
+    }
+
+    /// Recycle a payload (typically one just received and unpacked) into
+    /// the free list, keyed by its exact length.
+    pub fn restore_payload(&mut self, buf: Vec<f64>) {
+        self.payloads.entry(buf.len()).or_default().push(buf);
+    }
+
     /// Number of real allocations performed (monitored by tests/benches to
     /// assert the steady state allocates nothing).
     pub fn allocations(&self) -> usize {
@@ -66,20 +120,25 @@ impl BufferPool {
     pub fn slots_held(&self) -> usize {
         self.slots.len()
     }
+
+    /// Payload buffers currently parked in the free list.
+    pub fn payloads_held(&self) -> usize {
+        self.payloads.values().map(Vec::len).sum()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn key(field: usize, dim: usize, side: usize, role: usize) -> BufKey {
+    fn key(field: usize, dim: usize, side: usize, role: BufRole) -> BufKey {
         BufKey { field, dim, side, role }
     }
 
     #[test]
     fn checkout_sizes_buffer() {
         let mut pool = BufferPool::new();
-        let b = pool.checkout(key(0, 0, 0, 0), 16);
+        let b = pool.checkout(key(0, 0, 0, BufRole::Send), 16);
         assert_eq!(b.len(), 16);
         assert!(b.iter().all(|&x| x == 0.0));
     }
@@ -87,7 +146,7 @@ mod tests {
     #[test]
     fn steady_state_does_not_allocate() {
         let mut pool = BufferPool::new();
-        let k = key(0, 1, 0, 1);
+        let k = key(0, 1, 0, BufRole::Recv);
         for _ in 0..100 {
             let b = pool.checkout(k, 1024);
             pool.restore(k, b);
@@ -98,18 +157,30 @@ mod tests {
     #[test]
     fn distinct_keys_get_distinct_buffers() {
         let mut pool = BufferPool::new();
-        let b0 = pool.checkout(key(0, 0, 0, 0), 8);
-        let b1 = pool.checkout(key(1, 0, 0, 0), 8);
-        pool.restore(key(0, 0, 0, 0), b0);
-        pool.restore(key(1, 0, 0, 0), b1);
+        let k0 = key(0, 0, 0, BufRole::Send);
+        let k1 = key(1, 0, 0, BufRole::Send);
+        let b0 = pool.checkout(k0, 8);
+        let b1 = pool.checkout(k1, 8);
+        pool.restore(k0, b0);
+        pool.restore(k1, b1);
         assert_eq!(pool.allocations(), 2);
         assert_eq!(pool.slots_held(), 2);
     }
 
     #[test]
+    fn roles_partition_the_key_space() {
+        let mut pool = BufferPool::new();
+        let send = pool.checkout(key(0, 0, 0, BufRole::Send), 8);
+        let recv = pool.checkout(key(0, 0, 0, BufRole::Recv), 8);
+        pool.restore(key(0, 0, 0, BufRole::Send), send);
+        pool.restore(key(0, 0, 0, BufRole::Recv), recv);
+        assert_eq!(pool.allocations(), 2, "same slot, different role = different buffer");
+    }
+
+    #[test]
     fn growth_counts_as_allocation() {
         let mut pool = BufferPool::new();
-        let k = key(0, 0, 1, 0);
+        let k = key(0, 0, 1, BufRole::Send);
         let b = pool.checkout(k, 8);
         pool.restore(k, b);
         let b = pool.checkout(k, 4096); // grow
@@ -117,6 +188,41 @@ mod tests {
         assert_eq!(pool.allocations(), 2);
         let b = pool.checkout(k, 8); // shrink reuses capacity
         pool.restore(k, b);
+        assert_eq!(pool.allocations(), 2);
+    }
+
+    #[test]
+    fn payload_recycling_is_size_keyed() {
+        let mut pool = BufferPool::new();
+        let a = pool.checkout_payload(64);
+        let b = pool.checkout_payload(100);
+        assert_eq!(pool.allocations(), 2);
+        pool.restore_payload(a);
+        pool.restore_payload(b);
+        assert_eq!(pool.payloads_held(), 2);
+        // same sizes come back allocation-free, in any order
+        let b2 = pool.checkout_payload(100);
+        let a2 = pool.checkout_payload(64);
+        assert_eq!((a2.len(), b2.len()), (64, 100));
+        assert_eq!(pool.allocations(), 2);
+        // a new size allocates
+        let c = pool.checkout_payload(65);
+        assert_eq!(pool.allocations(), 3);
+        pool.restore_payload(a2);
+        pool.restore_payload(b2);
+        pool.restore_payload(c);
+    }
+
+    #[test]
+    fn payload_steady_state_is_self_sustaining() {
+        let mut pool = BufferPool::new();
+        for _ in 0..50 {
+            // a "step": send two payloads, then receive two of equal size
+            let s0 = pool.checkout_payload(256);
+            let s1 = pool.checkout_payload(256);
+            pool.restore_payload(s0); // stands in for the received payloads
+            pool.restore_payload(s1);
+        }
         assert_eq!(pool.allocations(), 2);
     }
 }

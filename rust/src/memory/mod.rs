@@ -20,6 +20,6 @@ pub mod buffer_pool;
 pub mod device;
 pub mod stream;
 
-pub use buffer_pool::{BufKey, BufferPool};
+pub use buffer_pool::{BufKey, BufRole, BufferPool};
 pub use device::{CopyModel, SimDevice};
 pub use stream::{Stream, StreamPriority};

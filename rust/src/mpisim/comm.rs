@@ -37,12 +37,14 @@ impl Comm {
         self.isend(dst, tag, data.to_vec()).wait();
     }
 
-    /// Non-blocking send taking ownership of the payload (no copy).
+    /// Non-blocking send taking ownership of the payload (no copy). The
+    /// request completes once the modeled injection has elapsed; post all
+    /// sends before waiting on any to overlap their injections.
     pub fn isend(&self, dst: usize, tag: u64, data: Vec<f64>) -> SendRequest {
         assert!(dst < self.size(), "send to invalid rank {dst}");
         assert!(dst != self.rank, "self-sends are a deadlock footgun; use a local copy");
-        self.net.deposit(self.rank, dst, tag, data);
-        SendRequest::completed()
+        let complete_at = self.net.deposit(self.rank, dst, tag, data);
+        SendRequest::completing_at(complete_at)
     }
 
     /// Blocking matched receive.

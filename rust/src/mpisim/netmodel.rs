@@ -50,6 +50,19 @@ impl NetModel {
         Duration::from_secs_f64(secs)
     }
 
+    /// Modeled sender-side injection time: how long until the NIC has
+    /// drained the send buffer and the sender may reuse it (the completion
+    /// point of a non-blocking send). Only the bandwidth term is charged —
+    /// the latency term is wire time, which the *receiver* pays as part of
+    /// [`Self::transit`]. This is what makes posting all sends before any
+    /// wait measurably better than waiting inline after each send.
+    pub fn injection(&self, bytes: usize) -> Duration {
+        if self.is_ideal() {
+            return Duration::ZERO;
+        }
+        Duration::from_secs_f64(bytes as f64 / self.bw_bytes_per_s)
+    }
+
     /// Parse "ideal", "aries", or "aries:<scale>" (e.g. "aries:32").
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s {
@@ -76,6 +89,14 @@ mod tests {
     #[test]
     fn ideal_has_zero_transit() {
         assert_eq!(NetModel::ideal().transit(1 << 30), Duration::ZERO);
+        assert_eq!(NetModel::ideal().injection(1 << 30), Duration::ZERO);
+    }
+
+    #[test]
+    fn injection_charges_bandwidth_only() {
+        let m = NetModel { latency_s: 1e-3, bw_bytes_per_s: 1e6 };
+        let t = m.injection(500); // 0.5 ms, no latency term
+        assert!((t.as_secs_f64() - 0.5e-3).abs() < 1e-9);
     }
 
     #[test]

@@ -83,24 +83,30 @@ impl Network {
         }
     }
 
-    /// Deposit a message into `dst`'s mailbox (buffered send: completes now).
-    pub(super) fn deposit(&self, src: usize, dst: usize, tag: u64, data: Vec<f64>) {
+    /// Deposit a message into `dst`'s mailbox. The payload is buffered (it
+    /// is owned by the envelope from here on), but the *send operation* is
+    /// only modeled complete once the NIC has drained the buffer: the
+    /// returned instant is when the sender's [`super::SendRequest`] may
+    /// complete — `now + injection` for modeled traffic, `now` otherwise.
+    pub(super) fn deposit(&self, src: usize, dst: usize, tag: u64, data: Vec<f64>) -> Instant {
         let bytes = data.len() * std::mem::size_of::<f64>();
         // Internal (collective) traffic is not charged to the model or the
         // stats: MPI collectives on a real machine use tuned algorithms; what
         // we account is the halo traffic the paper's system generates.
         let internal = tag >= super::INTERNAL_TAG_BASE;
-        let arrival = if internal {
-            Instant::now()
+        let now = Instant::now();
+        let (arrival, complete) = if internal {
+            (now, now)
         } else {
             self.msg_count.fetch_add(1, Ordering::Relaxed);
             self.byte_count.fetch_add(bytes as u64, Ordering::Relaxed);
-            Instant::now() + self.model.transit(bytes)
+            (now + self.model.transit(bytes), now + self.model.injection(bytes))
         };
         let mb = &self.mailboxes[dst];
         let mut q = mb.queue.lock().unwrap();
         q.push_back(Envelope { src, tag, data, arrival });
         mb.cv.notify_all();
+        complete
     }
 
     /// Blocking matched receive for (src, tag), honouring modeled arrival.

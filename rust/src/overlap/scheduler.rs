@@ -12,6 +12,12 @@
 //! The schedule, exactly as in ParallelStencil's `@hide_communication`:
 //! boundary slabs -> start exchange -> inner region -> finish exchange, with
 //! the width >= overlap precondition validated against the topology.
+//!
+//! With `compute_threads > 1` the executor x-chunks the inner-region call
+//! over `physics::parallel`'s worker pool, so the inner compute saturates
+//! the "xPU" while the communication stream exchanges — the workers stay
+//! strictly inside the boundary width, preserving the disjointness contract
+//! with the in-flight exchange.
 
 use crate::grid::GlobalGrid;
 use crate::physics::{Field3D, Region};

@@ -43,8 +43,38 @@ pub fn step(t: &Field3D, ci: &Field3D, p: &DiffusionParams, t2: &mut Field3D) {
 /// Update only `region` (strictly interior) of `t2` from `t`.
 pub fn step_region(t: &Field3D, ci: &Field3D, p: &DiffusionParams, region: Region, t2: &mut Field3D) {
     let n = t.dims();
-    assert_eq!(ci.dims(), n, "Ci dims mismatch");
     assert_eq!(t2.dims(), n, "T2 dims mismatch");
+    step_region_into(t, ci, p, region, t2.as_mut_slice());
+}
+
+/// The core loop on the full raw output slice of a field with `t`'s dims.
+pub(crate) fn step_region_into(
+    t: &Field3D,
+    ci: &Field3D,
+    p: &DiffusionParams,
+    region: Region,
+    out: &mut [f64],
+) {
+    assert_eq!(out.len(), t.len(), "output length mismatch");
+    step_region_windowed(t, ci, p, region, out, 0);
+}
+
+/// As [`step_region_into`], but `out` is a *window* of the full output
+/// starting at flat index `out_start` and covering at least the region's
+/// rows. Disjoint regions touch disjoint windows, which is what
+/// [`crate::physics::parallel`] relies on to run x-slabs of one region
+/// concurrently over `split_at_mut` partitions of the output — no shared
+/// mutable state, no unsafe.
+pub(crate) fn step_region_windowed(
+    t: &Field3D,
+    ci: &Field3D,
+    p: &DiffusionParams,
+    region: Region,
+    out: &mut [f64],
+    out_start: usize,
+) {
+    let n = t.dims();
+    assert_eq!(ci.dims(), n, "Ci dims mismatch");
     assert!(region.strictly_interior_to(n), "region {region:?} not interior to {n:?}");
 
     let [ox, oy, oz] = region.offset;
@@ -54,14 +84,15 @@ pub fn step_region(t: &Field3D, ci: &Field3D, p: &DiffusionParams, region: Regio
     let [_, ny, nz] = n;
     let sy_stride = nz; // +-1 in y
     let sx_stride = ny * nz; // +-1 in x
+    assert!((ox * ny + oy) * nz + oz >= out_start, "output window starts after the region");
 
     let td = t.as_slice();
     let cd = ci.as_slice();
-    let out = t2.as_mut_slice();
 
     for ix in ox..ox + sx {
         for iy in oy..oy + sy {
             let base = (ix * ny + iy) * nz + oz;
+            let wbase = base - out_start;
             // Row windows: center and the six neighbours. All contiguous in z.
             let c = &td[base..base + sz];
             let zm = &td[base - 1..base - 1 + sz];
@@ -71,7 +102,7 @@ pub fn step_region(t: &Field3D, ci: &Field3D, p: &DiffusionParams, region: Regio
             let xm = &td[base - sx_stride..base - sx_stride + sz];
             let xp = &td[base + sx_stride..base + sx_stride + sz];
             let cirow = &cd[base..base + sz];
-            let orow = &mut out[base..base + sz];
+            let orow = &mut out[wbase..wbase + sz];
             for k in 0..sz {
                 let lap = (xp[k] - 2.0 * c[k] + xm[k]) * rdx2
                     + (yp[k] - 2.0 * c[k] + ym[k]) * rdy2

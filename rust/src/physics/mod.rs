@@ -12,9 +12,14 @@
 //!    steps agree to f64 round-off.
 //! 3. **The fallback backend** — local sizes with no lowered artifact run
 //!    native, so the distributed machinery works for any grid.
+//!
+//! [`parallel`] multi-threads either solver's `step_region` by x-chunking
+//! it over a scoped worker pool (the `compute_threads` knob), bitwise
+//! identically to the serial step.
 
 pub mod diffusion3d;
 pub mod field;
+pub mod parallel;
 pub mod twophase;
 
 pub use diffusion3d::DiffusionParams;

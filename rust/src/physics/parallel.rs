@@ -1,0 +1,257 @@
+//! Multi-threaded xPU compute backend: x-chunked region steps on a
+//! [`std::thread::scope`] worker pool.
+//!
+//! The paper's xPU saturates its device with thousands of threads; this
+//! testbed's "device" is the host CPU, so the analog is running the stencil
+//! region across worker threads. A region is split into at most
+//! `threads` x-slabs — exactly the decomposition the
+//! `region_updates_compose_to_full` contract proves bitwise-identical to a
+//! single full-region step. In C-order layout (x slowest) each slab's
+//! output rows form one *contiguous* range, so the output arrays are
+//! partitioned with `split_at_mut` and every worker owns its window
+//! exclusively — the whole dispatch is safe code, no aliasing.
+//!
+//! Used by the executors for every region at or above
+//! [`PAR_MIN_CELLS`] — in particular the *inner* region of
+//! `hide_communication`, which therefore computes in parallel while the
+//! communication stream exchanges halos. Tiny boundary slabs stay serial:
+//! spawning costs more than they do.
+
+use super::{diffusion3d, twophase, DiffusionParams, Field3D, Region, TwophaseParams};
+
+/// Regions below this many cells run serially — thread spawn/join overhead
+/// (~10 us) outweighs the compute of smaller boxes.
+pub const PAR_MIN_CELLS: usize = 16 * 1024;
+
+/// Split `region` into at most `n` x-slabs covering it exactly, in
+/// ascending x order. Every slab is non-empty; fewer than `n` come back
+/// when the region has fewer than `n` x-planes.
+pub fn split_x(region: Region, n: usize) -> Vec<Region> {
+    let sx = region.size[0];
+    let n = n.clamp(1, sx.max(1));
+    (0..n)
+        .map(|i| {
+            let lo = i * sx / n;
+            let hi = (i + 1) * sx / n;
+            Region::new(
+                [region.offset[0] + lo, region.offset[1], region.offset[2]],
+                [hi - lo, region.size[1], region.size[2]],
+            )
+        })
+        .collect()
+}
+
+/// Should `region` run on the worker pool?
+fn parallelize(threads: usize, region: Region) -> bool {
+    threads > 1 && region.size[0] >= 2 && region.cells() >= PAR_MIN_CELLS
+}
+
+/// Partition `out` into per-slab windows: slab `i` gets the contiguous
+/// sub-slice covering its x-planes, paired with the flat index that
+/// sub-slice starts at. Slabs must be contiguous in x (as from
+/// [`split_x`]); `row` is `ny * nz`.
+fn windows<'a>(
+    out: &'a mut [f64],
+    slabs: &[Region],
+    row: usize,
+) -> Vec<(&'a mut [f64], usize)> {
+    let x0 = slabs[0].offset[0];
+    let (_, mut rest) = out.split_at_mut(x0 * row);
+    let mut consumed = x0 * row;
+    let mut wins = Vec::with_capacity(slabs.len());
+    for slab in slabs {
+        debug_assert_eq!(slab.offset[0] * row, consumed, "slabs must tile contiguously");
+        let take = slab.size[0] * row;
+        let (win, tail) = std::mem::take(&mut rest).split_at_mut(take);
+        wins.push((win, consumed));
+        rest = tail;
+        consumed += take;
+    }
+    wins
+}
+
+/// Diffusion step on `region`, x-chunked across `threads` workers.
+/// Bitwise-identical to [`diffusion3d::step_region`] (slab composition is
+/// exact; every cell is computed by exactly one worker with identical
+/// arithmetic).
+pub fn diffusion_step_region(
+    threads: usize,
+    t: &Field3D,
+    ci: &Field3D,
+    p: &DiffusionParams,
+    region: Region,
+    t2: &mut Field3D,
+) {
+    assert_eq!(t2.dims(), t.dims(), "T2 dims mismatch");
+    if !parallelize(threads, region) {
+        diffusion3d::step_region(t, ci, p, region, t2);
+        return;
+    }
+    let [_, ny, nz] = t.dims();
+    let slabs = split_x(region, threads);
+    let wins = windows(t2.as_mut_slice(), &slabs, ny * nz);
+    std::thread::scope(|s| {
+        // First slab runs on the calling thread; the rest on workers.
+        let mut wins = wins.into_iter();
+        let (win0, start0) = wins.next().expect("at least one slab");
+        for (&slab, (win, start)) in slabs[1..].iter().zip(wins) {
+            s.spawn(move || diffusion3d::step_region_windowed(t, ci, p, slab, win, start));
+        }
+        diffusion3d::step_region_windowed(t, ci, p, slabs[0], win0, start0);
+    });
+}
+
+/// Two-phase step on `region`, x-chunked across `threads` workers.
+/// Bitwise-identical to [`twophase::step_region`].
+#[allow(clippy::too_many_arguments)]
+pub fn twophase_step_region(
+    threads: usize,
+    pe: &Field3D,
+    phi: &Field3D,
+    p: &TwophaseParams,
+    region: Region,
+    pe2: &mut Field3D,
+    phi2: &mut Field3D,
+) {
+    assert_eq!(pe2.dims(), pe.dims(), "pe2 dims mismatch");
+    assert_eq!(phi2.dims(), pe.dims(), "phi2 dims mismatch");
+    if !parallelize(threads, region) {
+        twophase::step_region(pe, phi, p, region, pe2, phi2);
+        return;
+    }
+    let [_, ny, nz] = pe.dims();
+    let slabs = split_x(region, threads);
+    let pe_wins = windows(pe2.as_mut_slice(), &slabs, ny * nz);
+    let phi_wins = windows(phi2.as_mut_slice(), &slabs, ny * nz);
+    std::thread::scope(|s| {
+        let mut wins = pe_wins.into_iter().zip(phi_wins);
+        let ((pe0, start0), (phi0, _)) = wins.next().expect("at least one slab");
+        for (&slab, ((pe_win, start), (phi_win, _))) in slabs[1..].iter().zip(wins) {
+            s.spawn(move || {
+                twophase::step_region_windowed(pe, phi, p, slab, pe_win, phi_win, start);
+            });
+        }
+        twophase::step_region_windowed(pe, phi, p, slabs[0], pe0, phi0, start0);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand_field(dims: [usize; 3], seed: u64, lo: f64, hi: f64) -> Field3D {
+        let mut rng = Rng::new(seed);
+        Field3D::from_fn(dims, |_, _, _| rng.range(lo, hi))
+    }
+
+    #[test]
+    fn split_x_partitions_exactly() {
+        let r = Region::new([2, 1, 3], [10, 7, 5]);
+        for n in 1..=12 {
+            let slabs = split_x(r, n);
+            assert!(slabs.len() <= n.min(10));
+            assert_eq!(slabs[0].offset, r.offset);
+            let mut x = r.offset[0];
+            let mut cells = 0;
+            for s in &slabs {
+                assert_eq!(s.offset[0], x, "slabs contiguous in x");
+                assert_eq!(s.offset[1], r.offset[1]);
+                assert_eq!(s.size[1], r.size[1]);
+                assert_eq!(s.size[2], r.size[2]);
+                assert!(s.size[0] >= 1, "no empty slabs");
+                x += s.size[0];
+                cells += s.cells();
+            }
+            assert_eq!(x, r.offset[0] + r.size[0]);
+            assert_eq!(cells, r.cells());
+        }
+    }
+
+    #[test]
+    fn windows_partition_is_exact() {
+        let r = Region::new([2, 1, 1], [6, 3, 3]);
+        let slabs = split_x(r, 3);
+        let row = 5 * 5; // ny * nz of a [10, 5, 5] field
+        let mut out = vec![0.0; 10 * 5 * 5];
+        let wins = windows(&mut out, &slabs, row);
+        assert_eq!(wins.len(), 3);
+        let mut expect_start = 2 * row;
+        for ((win, start), slab) in wins.iter().zip(&slabs) {
+            assert_eq!(*start, expect_start);
+            assert_eq!(win.len(), slab.size[0] * row);
+            expect_start += win.len();
+        }
+        assert_eq!(expect_start, 8 * row, "windows cover exactly the region's x-planes");
+    }
+
+    #[test]
+    fn threaded_diffusion_bitwise_matches_serial() {
+        // larger than PAR_MIN_CELLS so the pool actually engages
+        let dims = [34, 30, 30];
+        let t = rand_field(dims, 1, -1.0, 1.0);
+        let ci = rand_field(dims, 2, 0.1, 1.0);
+        let p = DiffusionParams { lam: 1.3, dt: 1e-4, dx: 0.1, dy: 0.12, dz: 0.09 };
+        let region = Region::interior(dims);
+        assert!(region.cells() >= PAR_MIN_CELLS, "test must exercise the parallel path");
+        let mut serial = t.clone();
+        diffusion3d::step_region(&t, &ci, &p, region, &mut serial);
+        for threads in [2, 3, 8] {
+            let mut par = t.clone();
+            diffusion_step_region(threads, &t, &ci, &p, region, &mut par);
+            assert_eq!(
+                serial.max_abs_diff(&par),
+                0.0,
+                "threads={threads} must be bitwise identical"
+            );
+        }
+    }
+
+    #[test]
+    fn threaded_twophase_bitwise_matches_serial() {
+        let dims = [34, 30, 30];
+        let pe = rand_field(dims, 3, -0.1, 0.1);
+        let phi = rand_field(dims, 4, 0.01, 0.05);
+        let p = TwophaseParams::stable(0.1, 0.1, 0.1);
+        let region = Region::interior(dims);
+        let (mut pe_s, mut phi_s) = (pe.clone(), phi.clone());
+        twophase::step_region(&pe, &phi, &p, region, &mut pe_s, &mut phi_s);
+        for threads in [2, 5] {
+            let (mut pe_p, mut phi_p) = (pe.clone(), phi.clone());
+            twophase_step_region(threads, &pe, &phi, &p, region, &mut pe_p, &mut phi_p);
+            assert_eq!(pe_s.max_abs_diff(&pe_p), 0.0, "threads={threads} Pe");
+            assert_eq!(phi_s.max_abs_diff(&phi_p), 0.0, "threads={threads} phi");
+        }
+    }
+
+    #[test]
+    fn small_regions_stay_serial_and_correct() {
+        let dims = [8, 8, 8];
+        let t = rand_field(dims, 5, -1.0, 1.0);
+        let ci = rand_field(dims, 6, 0.1, 1.0);
+        let p = DiffusionParams { lam: 1.0, dt: 1e-4, dx: 0.1, dy: 0.1, dz: 0.1 };
+        let region = Region::interior(dims);
+        let mut serial = t.clone();
+        diffusion3d::step_region(&t, &ci, &p, region, &mut serial);
+        let mut par = t.clone();
+        diffusion_step_region(16, &t, &ci, &p, region, &mut par);
+        assert_eq!(serial.max_abs_diff(&par), 0.0);
+    }
+
+    #[test]
+    fn boundary_untouched_by_threaded_step() {
+        let dims = [36, 30, 30];
+        let t = rand_field(dims, 7, -1.0, 1.0);
+        let ci = rand_field(dims, 8, 0.1, 1.0);
+        let p = DiffusionParams { lam: 1.0, dt: 1e-4, dx: 0.1, dy: 0.1, dz: 0.1 };
+        let mut t2 = Field3D::filled(dims, 9.0);
+        diffusion_step_region(4, &t, &ci, &p, Region::interior(dims), &mut t2);
+        let [nx, ny, nz] = dims;
+        for iy in 0..ny {
+            for iz in 0..nz {
+                assert_eq!(t2.get(0, iy, iz), 9.0);
+                assert_eq!(t2.get(nx - 1, iy, iz), 9.0);
+            }
+        }
+    }
+}

@@ -72,9 +72,42 @@ pub fn step_region(
     phi2: &mut Field3D,
 ) {
     let n = pe.dims();
-    assert_eq!(phi.dims(), n, "phi dims mismatch");
     assert_eq!(pe2.dims(), n, "pe2 dims mismatch");
     assert_eq!(phi2.dims(), n, "phi2 dims mismatch");
+    step_region_into(pe, phi, p, region, pe2.as_mut_slice(), phi2.as_mut_slice());
+}
+
+/// The core loop on the full raw output slices of fields with `pe`'s dims.
+pub(crate) fn step_region_into(
+    pe: &Field3D,
+    phi: &Field3D,
+    p: &TwophaseParams,
+    region: Region,
+    pe2_out: &mut [f64],
+    phi2_out: &mut [f64],
+) {
+    assert_eq!(pe2_out.len(), pe.len(), "pe2 output length mismatch");
+    assert_eq!(phi2_out.len(), pe.len(), "phi2 output length mismatch");
+    step_region_windowed(pe, phi, p, region, pe2_out, phi2_out, 0);
+}
+
+/// As [`step_region_into`], but the outputs are *windows* of the full
+/// output arrays starting at flat index `out_start` and covering at least
+/// the region's rows. Disjoint regions touch disjoint windows — see
+/// [`crate::physics::parallel`], which hands each worker `split_at_mut`
+/// partitions of the outputs.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn step_region_windowed(
+    pe: &Field3D,
+    phi: &Field3D,
+    p: &TwophaseParams,
+    region: Region,
+    pe2_out: &mut [f64],
+    phi2_out: &mut [f64],
+    out_start: usize,
+) {
+    let n = pe.dims();
+    assert_eq!(phi.dims(), n, "phi dims mismatch");
     assert!(region.strictly_interior_to(n), "region {region:?} not interior to {n:?}");
 
     let [ox, oy, oz] = region.offset;
@@ -82,6 +115,7 @@ pub fn step_region(
     let [_, ny, nz] = n;
     let ystride = nz;
     let xstride = ny * nz;
+    assert!((ox * ny + oy) * nz + oz >= out_start, "output window starts after the region");
 
     // Mobility on the region + one-cell ring, as a dense scratch block.
     // Scratch layout: (sx+2, sy+2, sz+2), C order.
@@ -134,8 +168,8 @@ pub fn step_region(
                 let phi_c = phid[c];
                 let rpe = -divq - pe_c / (p.eta * (1.0 - phi_c));
                 let pe_new = pe_c + p.dtau * rpe;
-                pe2.as_mut_slice()[c] = pe_new;
-                phi2.as_mut_slice()[c] = phi_c + p.dt * (1.0 - phi_c) * pe_new * inv_eta;
+                pe2_out[c - out_start] = pe_new;
+                phi2_out[c - out_start] = phi_c + p.dt * (1.0 - phi_c) * pe_new * inv_eta;
             }
         }
     }

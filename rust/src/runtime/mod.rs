@@ -24,6 +24,28 @@ pub use artifacts::{ArtifactStore, ProgramSpec};
 pub use executor::{DiffusionExecutor, ExecBackend, TwophaseExecutor};
 pub use pjrt::PjrtContext;
 
+/// The loaded artifact store, when both it and a PJRT client are usable;
+/// `None` otherwise — e.g. when built against the in-tree `xla` stub
+/// (rust/vendor/xla) or before `make artifacts` has produced the HLO set.
+/// Tests and benches that exercise the PJRT backend start from this and
+/// skip gracefully on `None`, reusing the returned store rather than
+/// loading it a second time. The native backend is always available.
+pub fn pjrt_store() -> Option<ArtifactStore> {
+    if PjrtContext::cpu().is_err() {
+        return None;
+    }
+    ArtifactStore::load(artifact_dir()).ok()
+}
+
+/// Convenience boolean form of [`pjrt_store`] for call sites that gate but
+/// don't hold a store themselves (the executors reload it via their own
+/// path). Deliberately a full readiness probe: the client check is first
+/// and cheap, so stub builds — the common skip case — never touch disk;
+/// when PJRT is real, the one extra manifest parse is test-setup noise.
+pub fn pjrt_available() -> bool {
+    pjrt_store().is_some()
+}
+
 /// Locate the artifact directory: `$IGG_ARTIFACTS` if set, else
 /// `artifacts/` relative to the current directory, else relative to the
 /// crate root (so tests work from any cwd).

@@ -85,6 +85,68 @@ fn overlapped_exchange_absorbs_concurrent_work() {
     );
 }
 
+/// Non-blocking send structure: within a dimension the engine posts every
+/// send before the first wait and drains the requests after the receives.
+/// On a 3-rank periodic x-ring every rank posts TWO sends per step whose
+/// modeled injection is ~40 ms each; posting-then-draining overlaps the two
+/// injections with each other and with the receive transits, so a step
+/// costs ~1 transit (~40 ms). Waiting inline after each send (the old
+/// engine) would serialize to >= 2 injections + transit (~120 ms).
+#[test]
+fn sends_posted_before_waits_overlap_injection() {
+    let _guard = serial_guard();
+    use igg::grid::{GlobalGrid, GridOptions};
+    use igg::mpisim::Network;
+    use igg::physics::Field3D;
+
+    let n = 24usize;
+    let plane_bytes = (n * n * 8) as f64;
+    let transit_s = 0.04;
+    let net_model = NetModel { latency_s: 0.0, bw_bytes_per_s: plane_bytes / transit_s };
+    let nsteps = 3;
+
+    let run = || -> f64 {
+        let network = Network::with_model(3, net_model);
+        let handles: Vec<_> = (0..3)
+            .map(|r| {
+                let comm = network.comm(r);
+                std::thread::spawn(move || {
+                    let opts = GridOptions { periods: [true, false, false], ..Default::default() };
+                    let g = GlobalGrid::init(comm, [n; 3], opts).unwrap();
+                    assert!(
+                        g.cart().neighbor(0, -1).is_some() && g.cart().neighbor(0, 1).is_some(),
+                        "periodic ring: two sends per rank per step"
+                    );
+                    let mut f = Field3D::filled([n; 3], g.rank() as f64);
+                    g.update_halo(&mut [&mut f]).unwrap(); // warm buffers
+                    g.comm().barrier();
+                    let t0 = Instant::now();
+                    for _ in 0..nsteps {
+                        g.update_halo(&mut [&mut f]).unwrap();
+                    }
+                    t0.elapsed().as_secs_f64() / nsteps as f64
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).fold(0.0f64, f64::max)
+    };
+
+    // serialized would be >= 3 * transit; posted-then-drained ~1 transit.
+    // Coarse threshold (2x) so scheduler noise cannot flake the test.
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        best = best.min(run());
+        if best < 2.0 * transit_s {
+            return;
+        }
+    }
+    panic!(
+        "sends appear serialized: {best:.4}s per step vs transit {transit_s:.3}s \
+         (expected < {:.3}s when all sends are posted before the first wait)",
+        2.0 * transit_s
+    );
+}
+
 #[test]
 fn modeled_traffic_accounted() {
     let _guard = serial_guard();
