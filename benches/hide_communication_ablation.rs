@@ -89,7 +89,7 @@ fn main() -> anyhow::Result<()> {
     let field_with = |threads: usize| -> anyhow::Result<Vec<f64>> {
         let cfg = Config { compute_threads: threads, ..thread_base.clone() };
         let fields = run_ranks(&cfg, |ctx| {
-            Ok(igg::coordinator::apps::diffusion::run(&ctx)?.field.into_vec())
+            Ok(igg::coordinator::apps::diffusion::run(&ctx)?.into_primary().into_vec())
         })?;
         Ok(fields.into_iter().next().expect("one rank"))
     };

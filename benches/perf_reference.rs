@@ -16,7 +16,10 @@
 //!     cargo bench --bench perf_reference
 
 use igg::bench::measure::{bench_samples, fmt_time, measure};
-use igg::physics::{diffusion3d, parallel, twophase, DiffusionParams, Field3D, Region, TwophaseParams};
+use igg::physics::{
+    diffusion3d, parallel, twophase, wave, DiffusionParams, Field3D, Region, TwophaseParams,
+    WaveParams,
+};
 use igg::runtime::{DiffusionExecutor, TwophaseExecutor};
 use igg::util::json::Json;
 use igg::util::prng::Rng;
@@ -106,6 +109,35 @@ fn main() -> anyhow::Result<()> {
 
         print_row("twophase", shape[0], native.median, native_t.median, threads, pjrt);
         rows.push((format!("twophase_{}", shape[0]), native.median, native_t.median, pjrt));
+    }
+
+    // The acoustic wave (third workload): no PJRT artifacts in the default
+    // set yet — native trajectory only, so its perf is tracked across PRs
+    // like the other apps' native columns.
+    for shape in [[32, 32, 32], [64, 64, 64]] {
+        let p = rand_field(shape, 5, -0.5, 0.5);
+        let vx = rand_field(shape, 6, -0.1, 0.1);
+        let vy = rand_field(shape, 7, -0.1, 0.1);
+        let vz = rand_field(shape, 8, -0.1, 0.1);
+        let prm = WaveParams::stable(1.0, 0.1, 0.1, 0.1);
+        let interior = Region::interior(shape);
+
+        let (mut p2, mut vx2, mut vy2, mut vz2) =
+            (p.clone(), vx.clone(), vy.clone(), vz.clone());
+        let native = measure(samples, 3, || {
+            wave::step(&p, &vx, &vy, &vz, &prm, &mut p2, &mut vx2, &mut vy2, &mut vz2)
+        });
+        let (mut p2t, mut vx2t, mut vy2t, mut vz2t) =
+            (p.clone(), vx.clone(), vy.clone(), vz.clone());
+        let native_t = measure(samples, 3, || {
+            parallel::wave_step_region(
+                threads, &p, &vx, &vy, &vz, &prm, interior, &mut p2t, &mut vx2t, &mut vy2t,
+                &mut vz2t,
+            )
+        });
+
+        print_row("wave", shape[0], native.median, native_t.median, threads, None);
+        rows.push((format!("wave_{}", shape[0]), native.median, native_t.median, None));
     }
 
     igg::bench::report::write_json_report(

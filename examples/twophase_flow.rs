@@ -75,7 +75,7 @@ fn main() -> anyhow::Result<()> {
                     tp::step_region(&s.pe, &s.phi, &s.p, r, &mut s.pe2, &mut s.phi2);
                     Ok(())
                 },
-                |s| vec![&mut s.pe2, &mut s.phi2],
+                |s, h| h.update(&mut [&mut s.pe2, &mut s.phi2]),
             )?;
             std::mem::swap(&mut s.pe, &mut s.pe2);
             std::mem::swap(&mut s.phi, &mut s.phi2);

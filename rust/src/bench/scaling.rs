@@ -18,8 +18,8 @@
 //! after sends within a dim) and is calibrated against a measured multi-rank
 //! point when available.
 
-use crate::coordinator::apps::{self};
-use crate::coordinator::config::{AppKind, Config};
+use crate::coordinator::apps;
+use crate::coordinator::config::Config;
 use crate::coordinator::launcher::run_ranks;
 use crate::coordinator::metrics::RunMetrics;
 use crate::halo::slicing::plane_len;
@@ -56,10 +56,7 @@ pub fn normalized_efficiency(t1: f64, tp: f64, nranks: usize) -> f64 {
 
 /// Dispatch an application run on every rank; returns aggregated metrics.
 pub fn run_app_once(cfg: &Config, warmup: usize) -> anyhow::Result<RunMetrics> {
-    let results = run_ranks(cfg, move |ctx| match ctx.cfg.app {
-        AppKind::Diffusion => apps::diffusion::run_with_warmup(&ctx, warmup),
-        AppKind::Twophase => apps::twophase::run_with_warmup(&ctx, warmup),
-    })?;
+    let results = run_ranks(cfg, move |ctx| apps::run_app(&ctx, warmup))?;
     Ok(RunMetrics::new(results.into_iter().map(|r| r.metrics).collect()))
 }
 

@@ -1,4 +1,5 @@
-//! Distributed 3-D heat diffusion — the paper's Fig. 1 program.
+//! Distributed 3-D heat diffusion — the paper's Fig. 1 program, as a
+//! [`StencilApp`].
 //!
 //! ```text
 //! T    : temperature, Gaussian bump centred in the global domain
@@ -6,29 +7,24 @@
 //! dt   : min(dx,dy,dz)^2 / lam / max(Ci) / 6.1
 //! loop nt:  @hide_communication { step!(T2, T, Ci, ...); update_halo!(T2) }
 //! ```
-
-use std::time::Instant;
+//!
+//! Everything around the physics — warmup, hide-width handling, the
+//! overlapped/plain dispatch, metrics — lives in
+//! [`crate::coordinator::TimeLoop`].
 
 use crate::coordinator::config::Config;
 use crate::coordinator::launcher::RankCtx;
-use crate::coordinator::metrics::StepMetrics;
-use crate::overlap::scheduler::{hide_communication, plain_step};
+use crate::coordinator::timeloop::{AppResult, StencilApp, TimeLoop};
 use crate::physics::{DiffusionParams, Field3D, Region};
 use crate::runtime::{artifact_dir, ArtifactStore, DiffusionExecutor, ExecBackend};
 
-/// Per-step state threaded through the overlap scheduler.
-struct State {
+/// The diffusion application state: fields + parameters + executor.
+pub struct Diffusion {
     t: Field3D,
     t2: Field3D,
     ci: Field3D,
     p: DiffusionParams,
     exec: DiffusionExecutor,
-}
-
-impl State {
-    fn compute(&mut self, r: Region) -> anyhow::Result<()> {
-        self.exec.step_region(&self.t, &self.ci, &self.p, r, &mut self.t2)
-    }
 }
 
 /// Initial temperature: Gaussian bump at the global domain center — built
@@ -61,71 +57,53 @@ fn make_executor(ctx: &RankCtx) -> anyhow::Result<DiffusionExecutor> {
     }
 }
 
-/// Run the full time loop on this rank. `warmup` steps are excluded from
-/// the measured wall time (compile/caches warm, as in the paper's protocol).
-pub fn run_with_warmup(ctx: &RankCtx, warmup: usize) -> anyhow::Result<super::AppResult> {
-    let local = ctx.grid.local_dims();
-    let p = params_for(&ctx.cfg, ctx.grid.dims_g());
-    let t = initial_temperature(ctx);
-    let mut state = State {
-        t2: t.clone(),
-        t,
-        ci: Field3D::filled(local, 1.0 / 2.0),
-        p,
-        exec: make_executor(ctx)?,
-    };
+impl StencilApp for Diffusion {
+    const NAME: &'static str = "diffusion";
+    const D_U: usize = 1; // T read+updated
+    const D_K: usize = 1; // Ci read-only
 
-    // Dimensions without neighbours gain nothing from boundary slabs;
-    // prune them on the native backend (PJRT widths must match artifacts).
-    let hide = ctx.cfg.effective_hide().map(|w| match ctx.cfg.backend {
-        ExecBackend::Native => crate::overlap::scheduler::prune_widths(&ctx.grid, w),
-        ExecBackend::Pjrt => w,
-    });
-
-    let mut measured_wall = 0.0f64;
-    let total = ctx.cfg.nt + warmup;
-    for it in 0..total {
-        if it == warmup {
-            ctx.grid.comm().barrier(); // synchronized start of measurement
-            measured_wall = 0.0;
-        }
-        let t0 = Instant::now();
-        match hide {
-            Some(widths) => {
-                hide_communication(
-                    &ctx.grid,
-                    widths,
-                    local,
-                    &mut state,
-                    |s, r| s.compute(r),
-                    |s| vec![&mut s.t2],
-                )?;
-            }
-            None => {
-                plain_step(&ctx.grid, local, &mut state, |s, r| s.compute(r), |s| {
-                    vec![&mut s.t2]
-                })?;
-            }
-        }
-        std::mem::swap(&mut state.t, &mut state.t2);
-        measured_wall += t0.elapsed().as_secs_f64();
+    fn init(ctx: &RankCtx) -> anyhow::Result<Self> {
+        let t = initial_temperature(ctx);
+        Ok(Diffusion {
+            t2: t.clone(),
+            t,
+            ci: Field3D::filled(ctx.grid.local_dims(), 1.0 / 2.0),
+            p: params_for(&ctx.cfg, ctx.grid.dims_g()),
+            exec: make_executor(ctx)?,
+        })
     }
 
-    let metrics = StepMetrics {
-        rank: ctx.grid.rank(),
-        nranks: ctx.grid.nprocs(),
-        steps: ctx.cfg.nt.max(1),
-        wall_s: measured_wall,
-        local_cells: local.iter().product(),
-        d_u: 1, // T read+updated
-        d_k: 1, // Ci read-only
-        halo: ctx.grid.halo_stats(),
-        final_norm: state.t.abs_max(),
-    };
-    Ok(super::AppResult { metrics, field: state.t, extra: None })
+    fn compute(&mut self, r: Region) -> anyhow::Result<()> {
+        self.exec.step_region(&self.t, &self.ci, &self.p, r, &mut self.t2)
+    }
+
+    fn halo_fields<R, F>(&mut self, exchange: F) -> R
+    where
+        F: FnOnce(&mut [&mut Field3D]) -> R,
+    {
+        exchange(&mut [&mut self.t2])
+    }
+
+    fn swap(&mut self) {
+        std::mem::swap(&mut self.t, &mut self.t2);
+    }
+
+    fn final_norm(&self) -> f64 {
+        self.t.abs_max()
+    }
+
+    fn into_fields(self) -> Vec<(&'static str, Field3D)> {
+        vec![("T", self.t)]
+    }
 }
 
-pub fn run(ctx: &RankCtx) -> anyhow::Result<super::AppResult> {
+/// Run the full time loop on this rank. `warmup` steps are excluded from
+/// the measured wall time (compile/caches warm, as in the paper's protocol).
+pub fn run_with_warmup(ctx: &RankCtx, warmup: usize) -> anyhow::Result<AppResult> {
+    TimeLoop::new(warmup).run::<Diffusion>(ctx)
+}
+
+pub fn run(ctx: &RankCtx) -> anyhow::Result<AppResult> {
     run_with_warmup(ctx, 0)
 }
 
@@ -150,7 +128,7 @@ mod tests {
     fn single_rank_runs_and_diffuses() {
         let results = run_ranks(&cfg(1, 12, 20), |ctx| run(&ctx)).unwrap();
         let r = &results[0];
-        assert!(r.field.all_finite());
+        assert!(r.primary().all_finite());
         // diffusion shrinks the bump: max(T) must drop below the initial 2.7
         assert!(r.metrics.final_norm < 2.7);
         assert!(r.metrics.final_norm > 1.7);
@@ -162,13 +140,13 @@ mod tests {
         // 8-rank local 10^3 -> global 18^3; single-rank 18^3 must match
         let multi = run_ranks(&cfg(8, 10, 10), |ctx| {
             let res = run(&ctx)?;
-            Ok(ctx.grid.gather_check_overlap(&res.field, 0))
+            Ok(ctx.grid.gather_check_overlap(res.primary(), 0))
         })
         .unwrap();
         let (global_multi, overlap_dev) = multi[0].clone().expect("root has the gather");
         assert_eq!(overlap_dev, 0.0, "halo-shared planes must agree bitwise");
 
-        let single = run_ranks(&cfg(1, 18, 10), |ctx| Ok(run(&ctx)?.field)).unwrap();
+        let single = run_ranks(&cfg(1, 18, 10), |ctx| Ok(run(&ctx)?.into_primary())).unwrap();
         let diff = global_multi.max_abs_diff(&single[0]);
         assert_eq!(diff, 0.0, "8-rank and 1-rank global fields must be bitwise equal");
     }
@@ -177,8 +155,8 @@ mod tests {
     fn hidden_communication_distributed_equals_plain() {
         let base = cfg(8, 12, 8);
         let hidden = Config { hide: Some(HideWidths([3, 2, 2])), ..base.clone() };
-        let a = run_ranks(&base, |ctx| Ok(run(&ctx)?.field.into_vec())).unwrap();
-        let b = run_ranks(&hidden, |ctx| Ok(run(&ctx)?.field.into_vec())).unwrap();
+        let a = run_ranks(&base, |ctx| Ok(run(&ctx)?.into_primary().into_vec())).unwrap();
+        let b = run_ranks(&hidden, |ctx| Ok(run(&ctx)?.into_primary().into_vec())).unwrap();
         for (ra, rb) in a.iter().zip(&b) {
             assert_eq!(ra, rb, "hide_communication must not change results");
         }
@@ -195,8 +173,8 @@ mod tests {
             ..cfg(2, 32, 4)
         };
         let threaded = Config { compute_threads: 3, ..base.clone() };
-        let a = run_ranks(&base, |ctx| Ok(run(&ctx)?.field.into_vec())).unwrap();
-        let b = run_ranks(&threaded, |ctx| Ok(run(&ctx)?.field.into_vec())).unwrap();
+        let a = run_ranks(&base, |ctx| Ok(run(&ctx)?.into_primary().into_vec())).unwrap();
+        let b = run_ranks(&threaded, |ctx| Ok(run(&ctx)?.into_primary().into_vec())).unwrap();
         for (ra, rb) in a.iter().zip(&b) {
             assert_eq!(ra, rb, "compute_threads must not change results");
         }

@@ -1,26 +1,35 @@
-//! The applications: distributed drivers for the two solvers.
+//! The applications: [`crate::coordinator::StencilApp`] physics
+//! definitions for the three workloads, plus the [`AppKind`] dispatch into
+//! the unified [`crate::coordinator::TimeLoop`].
 //!
-//! Each `run` is the Rust analog of the paper's Fig. 1 program: build the
-//! implicit global grid (done by the launcher), set up global initial
-//! conditions from global coordinates, time-step with `update_halo!` (hidden
-//! behind computation when configured), and report metrics.
+//! Each app is the Rust analog of the paper's Fig. 1 program reduced to
+//! what the paper's API promises the user writes: fields, initial
+//! conditions from global coordinates, a region step, and which fields
+//! exchange halos. The surrounding machinery — warmup/measurement
+//! barriers, hide-width validation and pruning, the overlapped/plain
+//! dispatch, metrics — lives once in the driver.
 
 pub mod diffusion;
 pub mod twophase;
+pub mod wave;
 
 use crate::coordinator::config::{AppKind, Config};
-use crate::coordinator::launcher::run_ranks;
-use crate::coordinator::metrics::StepMetrics;
-use crate::physics::Field3D;
+use crate::coordinator::launcher::{run_ranks, RankCtx};
+use crate::coordinator::timeloop::TimeLoop;
 use crate::OVERLAP;
 
-/// Result of one rank's application run.
-pub struct AppResult {
-    pub metrics: StepMetrics,
-    /// Final primary field (T for diffusion, Pe for two-phase).
-    pub field: Field3D,
-    /// Final secondary field (phi for two-phase).
-    pub extra: Option<Field3D>,
+pub use crate::coordinator::timeloop::AppResult;
+
+/// Run `ctx.cfg.app` through the unified driver with `warmup` unmeasured
+/// steps — the single dispatch point from [`AppKind`] to the statically
+/// typed [`crate::coordinator::StencilApp`] implementations.
+pub fn run_app(ctx: &RankCtx, warmup: usize) -> anyhow::Result<AppResult> {
+    let tl = TimeLoop::new(warmup);
+    match ctx.cfg.app {
+        AppKind::Diffusion => tl.run::<diffusion::Diffusion>(ctx),
+        AppKind::Twophase => tl.run::<twophase::Twophase>(ctx),
+        AppKind::Wave => tl.run::<wave::Wave>(ctx),
+    }
 }
 
 /// Global grid size implied by `cfg` (dims_create + the overlap formula),
@@ -35,9 +44,10 @@ pub fn global_dims(cfg: &Config) -> anyhow::Result<[usize; 3]> {
 }
 
 /// The end-to-end correctness check behind `igg validate`: run `cfg` on its
-/// N ranks, gather the global field(s), run the identical physics on one
-/// rank covering the whole global grid, and compare bitwise. Returns a
-/// human-readable report; errors if any deviation is found.
+/// N ranks, gather *every* persistent field globally, run the identical
+/// physics on one rank covering the whole global grid, and compare each
+/// field bitwise. Returns a human-readable report; errors if any deviation
+/// is found.
 pub fn validate_equivalence(cfg: &Config) -> anyhow::Result<String> {
     let gdims = global_dims(cfg)?;
     // The PJRT backend would need artifacts for the global size too; the
@@ -53,51 +63,44 @@ pub fn validate_equivalence(cfg: &Config) -> anyhow::Result<String> {
         ..cfg.clone()
     };
 
-    let app = cfg.app;
     let multi = run_ranks(&multi_cfg, move |ctx| {
-        let res = match app {
-            AppKind::Diffusion => diffusion::run(&ctx)?,
-            AppKind::Twophase => twophase::run(&ctx)?,
-        };
-        let primary = ctx.grid.gather_check_overlap(&res.field, 0);
-        let extra = res.extra.map(|f| ctx.grid.gather_check_overlap(&f, 0));
-        Ok(primary.map(|p| (p, extra.flatten())))
+        let res = run_app(&ctx, 0)?;
+        let gathered: Option<Vec<_>> = res
+            .fields
+            .iter()
+            .map(|(name, f)| ctx.grid.gather_check_overlap(f, 0).map(|g| (*name, g)))
+            .collect();
+        Ok(gathered)
     })?;
-    let (primary, extra) = multi
+    let gathered = multi
         .into_iter()
         .next()
         .flatten()
         .ok_or_else(|| anyhow::anyhow!("root rank produced no gather"))?;
-    let (global_primary, dev_primary) = primary;
 
-    let single = run_ranks(&single_cfg, move |ctx| {
-        let res = match app {
-            AppKind::Diffusion => diffusion::run(&ctx)?,
-            AppKind::Twophase => twophase::run(&ctx)?,
-        };
-        Ok((res.field, res.extra))
-    })?;
-    let (single_primary, single_extra) = single.into_iter().next().expect("one rank");
+    let single = run_ranks(&single_cfg, move |ctx| Ok(run_app(&ctx, 0)?.fields))?;
+    let single_fields = single.into_iter().next().expect("one rank");
 
-    let diff_primary = global_primary.max_abs_diff(&single_primary);
+    anyhow::ensure!(
+        gathered.len() == single_fields.len(),
+        "field-count mismatch between N-rank and 1-rank runs"
+    );
     let mut report = format!(
-        "validate {}: ranks={} local={:?} global={:?} nt={}\n\
-           overlap coherence (primary): {dev_primary:e}\n\
-           N-rank vs 1-rank (primary) : {diff_primary:e}\n",
+        "validate {}: ranks={} local={:?} global={:?} nt={}\n",
         cfg.app.name(),
         cfg.nranks,
         cfg.local,
         gdims,
         cfg.nt,
     );
-    let mut ok = dev_primary == 0.0 && diff_primary == 0.0;
-    if let (Some((global_extra, dev_extra)), Some(single_extra)) = (extra, single_extra) {
-        let diff_extra = global_extra.max_abs_diff(&single_extra);
+    let mut ok = true;
+    for ((name, (global, dev)), (sname, single_field)) in gathered.iter().zip(&single_fields) {
+        debug_assert_eq!(name, sname, "field order must match across runs");
+        let diff = global.max_abs_diff(single_field);
         report.push_str(&format!(
-            "  overlap coherence (extra)  : {dev_extra:e}\n\
-             \x20 N-rank vs 1-rank (extra)   : {diff_extra:e}\n"
+            "  {name:<4} overlap coherence: {dev:e}  N-rank vs 1-rank: {diff:e}\n"
         ));
-        ok &= dev_extra == 0.0 && diff_extra == 0.0;
+        ok &= *dev == 0.0 && diff == 0.0;
     }
     report.push_str(if ok { "PASS (bitwise equal)" } else { "FAIL" });
     anyhow::ensure!(ok, "{report}");
@@ -135,5 +138,23 @@ mod tests {
         };
         let report = validate_equivalence(&cfg).unwrap();
         assert!(report.contains("PASS"), "{report}");
+    }
+
+    #[test]
+    fn validate_equivalence_wave_covers_all_four_fields() {
+        let cfg = Config {
+            app: AppKind::Wave,
+            nranks: 4,
+            local: [8, 8, 8],
+            nt: 4,
+            ..Default::default()
+        };
+        let report = validate_equivalence(&cfg).unwrap();
+        assert!(report.contains("PASS"), "{report}");
+        for f in ["p", "vx", "vy", "vz"] {
+            // match the exact per-field report row, not a bare substring
+            let row = format!("  {f:<4} overlap coherence");
+            assert!(report.contains(&row), "report lists field {f}: {report}");
+        }
     }
 }

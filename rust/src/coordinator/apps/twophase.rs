@@ -1,33 +1,26 @@
 //! Distributed two-phase flow — the paper's Fig. 3 workload (porosity-wave
-//! core; see DESIGN.md §2 for the solver-reduction note).
+//! core; see DESIGN.md §2 for the solver-reduction note), as a
+//! [`StencilApp`].
 //!
 //! Two halo-exchanged center fields (Pe, phi) advance per pseudo-transient
 //! iteration; the staggered Darcy fluxes stay kernel-local. Initial
 //! condition: porosity blob low in the global domain, zero effective
 //! pressure; buoyancy then drives a rising porosity wave.
 
-use std::time::Instant;
-
 use crate::coordinator::config::Config;
 use crate::coordinator::launcher::RankCtx;
-use crate::coordinator::metrics::StepMetrics;
-use crate::overlap::scheduler::{hide_communication, plain_step};
+use crate::coordinator::timeloop::{AppResult, StencilApp, TimeLoop};
 use crate::physics::{twophase, Field3D, Region, TwophaseParams};
 use crate::runtime::{artifact_dir, ArtifactStore, ExecBackend, TwophaseExecutor};
 
-struct State {
+/// The two-phase application state: fields + parameters + executor.
+pub struct Twophase {
     pe: Field3D,
     phi: Field3D,
     pe2: Field3D,
     phi2: Field3D,
     p: TwophaseParams,
     exec: TwophaseExecutor,
-}
-
-impl State {
-    fn compute(&mut self, r: Region) -> anyhow::Result<()> {
-        self.exec.step_region(&self.pe, &self.phi, &self.p, r, &mut self.pe2, &mut self.phi2)
-    }
 }
 
 pub fn initial_porosity(ctx: &RankCtx) -> Field3D {
@@ -58,71 +51,54 @@ fn make_executor(ctx: &RankCtx) -> anyhow::Result<TwophaseExecutor> {
     }
 }
 
-pub fn run_with_warmup(ctx: &RankCtx, warmup: usize) -> anyhow::Result<super::AppResult> {
-    let local = ctx.grid.local_dims();
-    let p = params_for(&ctx.cfg, ctx.grid.dims_g());
-    let phi = initial_porosity(ctx);
-    let mut state = State {
-        pe: Field3D::zeros(local),
-        pe2: Field3D::zeros(local),
-        phi2: phi.clone(),
-        phi,
-        p,
-        exec: make_executor(ctx)?,
-    };
+impl StencilApp for Twophase {
+    const NAME: &'static str = "twophase";
+    const D_U: usize = 2; // Pe and phi read+updated
+    const D_K: usize = 0;
 
-    // Dimensions without neighbours gain nothing from boundary slabs;
-    // prune them on the native backend (PJRT widths must match artifacts).
-    let hide = ctx.cfg.effective_hide().map(|w| match ctx.cfg.backend {
-        ExecBackend::Native => crate::overlap::scheduler::prune_widths(&ctx.grid, w),
-        ExecBackend::Pjrt => w,
-    });
-
-    let mut measured_wall = 0.0f64;
-    let total = ctx.cfg.nt + warmup;
-    for it in 0..total {
-        if it == warmup {
-            ctx.grid.comm().barrier();
-            measured_wall = 0.0;
-        }
-        let t0 = Instant::now();
-        match hide {
-            Some(widths) => {
-                hide_communication(
-                    &ctx.grid,
-                    widths,
-                    local,
-                    &mut state,
-                    |s, r| s.compute(r),
-                    |s| vec![&mut s.pe2, &mut s.phi2],
-                )?;
-            }
-            None => {
-                plain_step(&ctx.grid, local, &mut state, |s, r| s.compute(r), |s| {
-                    vec![&mut s.pe2, &mut s.phi2]
-                })?;
-            }
-        }
-        std::mem::swap(&mut state.pe, &mut state.pe2);
-        std::mem::swap(&mut state.phi, &mut state.phi2);
-        measured_wall += t0.elapsed().as_secs_f64();
+    fn init(ctx: &RankCtx) -> anyhow::Result<Self> {
+        let local = ctx.grid.local_dims();
+        let phi = initial_porosity(ctx);
+        Ok(Twophase {
+            pe: Field3D::zeros(local),
+            pe2: Field3D::zeros(local),
+            phi2: phi.clone(),
+            phi,
+            p: params_for(&ctx.cfg, ctx.grid.dims_g()),
+            exec: make_executor(ctx)?,
+        })
     }
 
-    let metrics = StepMetrics {
-        rank: ctx.grid.rank(),
-        nranks: ctx.grid.nprocs(),
-        steps: ctx.cfg.nt.max(1),
-        wall_s: measured_wall,
-        local_cells: local.iter().product(),
-        d_u: 2, // Pe and phi read+updated
-        d_k: 0,
-        halo: ctx.grid.halo_stats(),
-        final_norm: state.pe.abs_max(),
-    };
-    Ok(super::AppResult { metrics, field: state.pe, extra: Some(state.phi) })
+    fn compute(&mut self, r: Region) -> anyhow::Result<()> {
+        self.exec.step_region(&self.pe, &self.phi, &self.p, r, &mut self.pe2, &mut self.phi2)
+    }
+
+    fn halo_fields<R, F>(&mut self, exchange: F) -> R
+    where
+        F: FnOnce(&mut [&mut Field3D]) -> R,
+    {
+        exchange(&mut [&mut self.pe2, &mut self.phi2])
+    }
+
+    fn swap(&mut self) {
+        std::mem::swap(&mut self.pe, &mut self.pe2);
+        std::mem::swap(&mut self.phi, &mut self.phi2);
+    }
+
+    fn final_norm(&self) -> f64 {
+        self.pe.abs_max()
+    }
+
+    fn into_fields(self) -> Vec<(&'static str, Field3D)> {
+        vec![("Pe", self.pe), ("phi", self.phi)]
+    }
 }
 
-pub fn run(ctx: &RankCtx) -> anyhow::Result<super::AppResult> {
+pub fn run_with_warmup(ctx: &RankCtx, warmup: usize) -> anyhow::Result<AppResult> {
+    TimeLoop::new(warmup).run::<Twophase>(ctx)
+}
+
+pub fn run(ctx: &RankCtx) -> anyhow::Result<AppResult> {
     run_with_warmup(ctx, 0)
 }
 
@@ -137,12 +113,17 @@ mod tests {
         Config { app: AppKind::Twophase, local: [local; 3], nranks, nt, ..Default::default() }
     }
 
+    fn both_fields(r: AppResult) -> (Vec<f64>, Vec<f64>) {
+        let phi = r.field("phi").expect("phi reported").clone().into_vec();
+        (r.into_primary().into_vec(), phi)
+    }
+
     #[test]
     fn single_rank_wave_stays_physical() {
         let results = run_ranks(&cfg(1, 12, 50), |ctx| run(&ctx)).unwrap();
         let r = &results[0];
-        assert!(r.field.all_finite());
-        let phi = r.extra.as_ref().unwrap();
+        assert!(r.primary().all_finite());
+        let phi = r.field("phi").unwrap();
         assert!(phi.min() > 0.0 && phi.max() < 1.0, "porosity stays in (0,1)");
         // buoyancy must generate nonzero effective pressure
         assert!(r.metrics.final_norm > 1e-12);
@@ -152,8 +133,8 @@ mod tests {
     fn distributed_equals_single_rank_both_fields() {
         let multi = run_ranks(&cfg(8, 10, 10), |ctx| {
             let res = run(&ctx)?;
-            let pe = ctx.grid.gather_check_overlap(&res.field, 0);
-            let phi = ctx.grid.gather_check_overlap(res.extra.as_ref().unwrap(), 0);
+            let pe = ctx.grid.gather_check_overlap(res.primary(), 0);
+            let phi = ctx.grid.gather_check_overlap(res.field("phi").unwrap(), 0);
             Ok(pe.zip(phi))
         })
         .unwrap();
@@ -163,7 +144,8 @@ mod tests {
 
         let single = run_ranks(&cfg(1, 18, 10), |ctx| {
             let res = run(&ctx)?;
-            Ok((res.field, res.extra.unwrap()))
+            let phi = res.field("phi").unwrap().clone();
+            Ok((res.into_primary(), phi))
         })
         .unwrap();
         assert_eq!(pe_m.max_abs_diff(&single[0].0), 0.0, "Pe global fields bitwise equal");
@@ -174,16 +156,8 @@ mod tests {
     fn hidden_communication_matches_plain() {
         let base = cfg(8, 12, 8);
         let hidden = Config { hide: Some(HideWidths([3, 2, 2])), ..base.clone() };
-        let a = run_ranks(&base, |ctx| {
-            let r = run(&ctx)?;
-            Ok((r.field.into_vec(), r.extra.unwrap().into_vec()))
-        })
-        .unwrap();
-        let b = run_ranks(&hidden, |ctx| {
-            let r = run(&ctx)?;
-            Ok((r.field.into_vec(), r.extra.unwrap().into_vec()))
-        })
-        .unwrap();
+        let a = run_ranks(&base, |ctx| Ok(both_fields(run(&ctx)?))).unwrap();
+        let b = run_ranks(&hidden, |ctx| Ok(both_fields(run(&ctx)?))).unwrap();
         for ((pa, fa), (pb, fb)) in a.iter().zip(&b) {
             assert_eq!(pa, pb);
             assert_eq!(fa, fb);
@@ -196,16 +170,8 @@ mod tests {
     fn compute_threads_bitwise_identical() {
         let base = cfg(1, 32, 3);
         let threaded = Config { compute_threads: 2, ..base.clone() };
-        let a = run_ranks(&base, |ctx| {
-            let r = run(&ctx)?;
-            Ok((r.field.into_vec(), r.extra.unwrap().into_vec()))
-        })
-        .unwrap();
-        let b = run_ranks(&threaded, |ctx| {
-            let r = run(&ctx)?;
-            Ok((r.field.into_vec(), r.extra.unwrap().into_vec()))
-        })
-        .unwrap();
+        let a = run_ranks(&base, |ctx| Ok(both_fields(run(&ctx)?))).unwrap();
+        let b = run_ranks(&threaded, |ctx| Ok(both_fields(run(&ctx)?))).unwrap();
         assert_eq!(a[0].0, b[0].0, "Pe must be bitwise identical");
         assert_eq!(a[0].1, b[0].1, "phi must be bitwise identical");
     }

@@ -17,6 +17,9 @@ pub enum AppKind {
     Diffusion,
     /// Two-phase flow (paper Fig. 3 workload).
     Twophase,
+    /// 3-D acoustic wave (velocity–pressure staggered; third workload
+    /// proving the `StencilApp` API generalizes).
+    Wave,
 }
 
 impl AppKind {
@@ -24,7 +27,8 @@ impl AppKind {
         match s {
             "diffusion" => Ok(AppKind::Diffusion),
             "twophase" => Ok(AppKind::Twophase),
-            _ => anyhow::bail!("unknown app '{s}' (want diffusion|twophase)"),
+            "wave" => Ok(AppKind::Wave),
+            _ => anyhow::bail!("unknown app '{s}' (want diffusion|twophase|wave)"),
         }
     }
 
@@ -32,8 +36,12 @@ impl AppKind {
         match self {
             AppKind::Diffusion => "diffusion",
             AppKind::Twophase => "twophase",
+            AppKind::Wave => "wave",
         }
     }
+
+    /// All runnable applications (report/inventory order).
+    pub const ALL: [AppKind; 3] = [AppKind::Diffusion, AppKind::Twophase, AppKind::Wave];
 }
 
 /// Full run configuration.
@@ -231,6 +239,14 @@ mod tests {
     fn parse(argv: &[&str]) -> anyhow::Result<Config> {
         let args = cmd().parse(&argv.iter().map(|s| s.to_string()).collect::<Vec<_>>())?;
         Config::from_args(&args)
+    }
+
+    #[test]
+    fn wave_app_parses() {
+        let c = parse(&["--app", "wave"]).unwrap();
+        assert_eq!(c.app, AppKind::Wave);
+        assert_eq!(c.app.name(), "wave");
+        assert_eq!(AppKind::ALL.len(), 3);
     }
 
     #[test]

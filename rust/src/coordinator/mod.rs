@@ -1,12 +1,18 @@
-//! The coordinator: configuration, the rank launcher, the applications
-//! (heat diffusion and two-phase flow), and metrics.
+//! The coordinator: configuration, the rank launcher, the [`timeloop`]
+//! driver, the applications (heat diffusion, two-phase flow, acoustic
+//! wave), and metrics.
 //!
 //! This is the layer a user of the library interacts with: it owns process
-//! (thread) topology, per-rank lifecycle, the time loop with or without
-//! `hide_communication`, and the performance accounting the paper reports
-//! (T_eff, parallel efficiency, medians with 95% CIs).
+//! (thread) topology, per-rank lifecycle, the unified time loop with or
+//! without `hide_communication`, and the performance accounting the paper
+//! reports (T_eff, parallel efficiency, medians with 95% CIs). A workload
+//! is a [`timeloop::StencilApp`] implementation — near-pure stencil +
+//! initial-condition code; everything else is shared.
 
 pub mod apps;
 pub mod config;
 pub mod launcher;
 pub mod metrics;
+pub mod timeloop;
+
+pub use timeloop::{AppResult, Schedule, StencilApp, TimeLoop};

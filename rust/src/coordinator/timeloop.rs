@@ -1,0 +1,359 @@
+//! The `StencilApp` trait and the unified `TimeLoop` driver.
+//!
+//! The paper's pitch is that *three calls* turn a single-device stencil
+//! code into a distributed multi-device one. This module is that promise at
+//! the application layer: a workload implements [`StencilApp`] — initial
+//! conditions, a region step, which fields exchange halos, a buffer swap —
+//! and [`TimeLoop`] owns everything else:
+//!
+//! * warmup steps and the synchronized start of the measured phase,
+//! * hide-width validation and native-backend pruning,
+//! * the `hide_communication` vs plain-step dispatch (with the
+//!   [`RegionSet`] decomposed once per run, not once per step),
+//! * [`StepMetrics`] / [`AppResult`] assembly.
+//!
+//! The steady-state step is **heap-allocation-free** on the native serial
+//! backend: the schedule is memoized in [`Schedule`], and the trait's
+//! [`StencilApp::halo_fields`] hands the exchange a stack-built
+//! `&mut [&mut Field3D]` instead of a per-step `Vec`
+//! (`tests/steady_state_alloc.rs` asserts this with a counting global
+//! allocator).
+
+use std::time::Instant;
+
+use crate::coordinator::config::Config;
+use crate::coordinator::launcher::RankCtx;
+use crate::coordinator::metrics::StepMetrics;
+use crate::grid::GlobalGrid;
+use crate::overlap::scheduler::{
+    hide_communication_prepared, plain_step, prune_widths, validate_widths,
+};
+use crate::overlap::{split_regions, RegionSet};
+use crate::physics::{Field3D, Region};
+use crate::runtime::ExecBackend;
+
+/// A distributed stencil application: the physics definition the
+/// [`TimeLoop`] drives. Implementations are near-pure stencil + initial
+/// condition code — see `coordinator::apps::wave` for the canonical ~100
+/// line example, or `examples/quickstart.rs` for a minimal one.
+pub trait StencilApp: Sized {
+    /// CLI / report name of the workload.
+    const NAME: &'static str;
+    /// Fields read *and* updated per step (the paper's `D_u`, for T_eff).
+    const D_U: usize;
+    /// Fields only read per step (`D_k`).
+    const D_K: usize;
+
+    /// Build the per-rank state: allocate fields, set global initial
+    /// conditions (from global coordinates, so every topology produces the
+    /// same global field), select the executor backend.
+    fn init(ctx: &RankCtx) -> anyhow::Result<Self>;
+
+    /// Compute `region` of the next-step fields from the current fields.
+    /// Must depend only on *current*-step values so regions compose
+    /// bitwise (the `hide_communication` contract).
+    fn compute(&mut self, region: Region) -> anyhow::Result<()>;
+
+    /// Visit the next-step fields whose halos must be exchanged. The
+    /// canonical implementation is one line building the slice on the
+    /// stack — no allocation:
+    ///
+    /// ```ignore
+    /// fn halo_fields<R, F>(&mut self, exchange: F) -> R
+    /// where
+    ///     F: FnOnce(&mut [&mut Field3D]) -> R,
+    /// {
+    ///     exchange(&mut [&mut self.t2])
+    /// }
+    /// ```
+    fn halo_fields<R, F>(&mut self, exchange: F) -> R
+    where
+        F: FnOnce(&mut [&mut Field3D]) -> R;
+
+    /// Swap next-step fields into place (`T, T2 = T2, T`).
+    fn swap(&mut self);
+
+    /// Per-step diagnostic hook, called after each step (outside the
+    /// measured wall time). Default: none.
+    fn diagnose(&mut self, _ctx: &RankCtx, _step: usize) {}
+
+    /// Solution diagnostic reported in [`StepMetrics::final_norm`]
+    /// (conventionally max |primary field|).
+    fn final_norm(&self) -> f64;
+
+    /// Surrender the persistent fields, primary first, with their report
+    /// names. Every listed field is validated bitwise by
+    /// `validate_equivalence`.
+    fn into_fields(self) -> Vec<(&'static str, Field3D)>;
+}
+
+/// Result of one rank's application run.
+pub struct AppResult {
+    pub metrics: StepMetrics,
+    /// Final persistent fields, primary first (name, field).
+    pub fields: Vec<(&'static str, Field3D)>,
+}
+
+impl AppResult {
+    /// The primary field (T for diffusion, Pe for two-phase, p for wave).
+    pub fn primary(&self) -> &Field3D {
+        &self.fields[0].1
+    }
+
+    /// The primary field, by value.
+    pub fn into_primary(mut self) -> Field3D {
+        self.fields.swap_remove(0).1
+    }
+
+    /// A field by its report name.
+    pub fn field(&self, name: &str) -> Option<&Field3D> {
+        self.fields.iter().find(|(n, _)| *n == name).map(|(_, f)| f)
+    }
+}
+
+/// The per-run step schedule, computed once before the loop: either the
+/// plain schedule or the validated + pruned `hide_communication` region
+/// decomposition. Memoizing this is what keeps the steady-state step free
+/// of per-step `split_regions` allocations.
+pub struct Schedule {
+    local: [usize; 3],
+    /// `Some(rs)` = overlapped schedule with this decomposition.
+    regions: Option<RegionSet>,
+}
+
+impl Schedule {
+    /// Plan the schedule for `ctx`: apply the config's hide widths, pruned
+    /// on the native backend (PJRT region artifacts are lowered for the
+    /// configured widths and must match exactly), validated against the
+    /// topology.
+    pub fn plan(cfg: &Config, grid: &GlobalGrid) -> anyhow::Result<Schedule> {
+        let local = grid.local_dims();
+        let regions = match cfg.effective_hide() {
+            None => None,
+            Some(w) => {
+                let w = match cfg.backend {
+                    ExecBackend::Native => prune_widths(grid, w),
+                    ExecBackend::Pjrt => w,
+                };
+                validate_widths(grid, w)?;
+                Some(split_regions(local, w)?)
+            }
+        };
+        Ok(Schedule { local, regions })
+    }
+
+    /// Is this the overlapped (`hide_communication`) schedule?
+    pub fn hides(&self) -> bool {
+        self.regions.is_some()
+    }
+}
+
+/// One steady-state step: compute + halo exchange (+ swap), dispatched to
+/// the overlapped or plain schedule. Public so the allocation tests can
+/// drive the exact loop body the driver runs.
+pub fn step<A: StencilApp>(
+    grid: &GlobalGrid,
+    schedule: &Schedule,
+    app: &mut A,
+) -> anyhow::Result<()> {
+    match &schedule.regions {
+        Some(rs) => hide_communication_prepared(
+            grid,
+            rs,
+            app,
+            |a, r| a.compute(r),
+            |a, h| a.halo_fields(|fields| h.start(fields)),
+        )?,
+        None => plain_step(
+            grid,
+            schedule.local,
+            app,
+            |a, r| a.compute(r),
+            |a, h| a.halo_fields(|fields| h.update(fields)),
+        )?,
+    }
+    app.swap();
+    Ok(())
+}
+
+/// The unified driver: runs `warmup + cfg.nt` steps of any [`StencilApp`],
+/// measuring only the post-warmup phase (compile/caches warm, synchronized
+/// start across ranks — the paper's measurement protocol).
+pub struct TimeLoop {
+    /// Unmeasured warm-up steps before the measured phase.
+    pub warmup: usize,
+}
+
+impl TimeLoop {
+    pub fn new(warmup: usize) -> Self {
+        TimeLoop { warmup }
+    }
+
+    /// Run the full time loop for application `A` on this rank.
+    pub fn run<A: StencilApp>(&self, ctx: &RankCtx) -> anyhow::Result<AppResult> {
+        let mut app = A::init(ctx).map_err(|e| e.context(format!("init app '{}'", A::NAME)))?;
+        let schedule = Schedule::plan(&ctx.cfg, &ctx.grid)
+            .map_err(|e| e.context(format!("schedule app '{}'", A::NAME)))?;
+        let mut measured_wall = 0.0f64;
+        let total = ctx.cfg.nt + self.warmup;
+        for it in 0..total {
+            if it == self.warmup {
+                ctx.grid.comm().barrier(); // synchronized start of measurement
+                measured_wall = 0.0;
+            }
+            let t0 = Instant::now();
+            step(&ctx.grid, &schedule, &mut app)?;
+            measured_wall += t0.elapsed().as_secs_f64();
+            app.diagnose(ctx, it);
+        }
+
+        let metrics = StepMetrics {
+            rank: ctx.grid.rank(),
+            nranks: ctx.grid.nprocs(),
+            steps: ctx.cfg.nt.max(1),
+            wall_s: measured_wall,
+            local_cells: schedule.local.iter().product(),
+            d_u: A::D_U,
+            d_k: A::D_K,
+            halo: ctx.grid.halo_stats(),
+            final_norm: app.final_norm(),
+        };
+        Ok(AppResult { metrics, fields: app.into_fields() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::apps::{diffusion, twophase};
+    use crate::coordinator::config::AppKind;
+    use crate::coordinator::launcher::run_ranks;
+    use crate::overlap::HideWidths;
+    use crate::physics::{diffusion3d, twophase as tp};
+
+    /// The regression pin for the refactor: diffusion through the
+    /// `TimeLoop` must be bitwise identical to the pre-refactor code path —
+    /// retained here as a hand-rolled plain loop (full-interior step,
+    /// synchronous halo update, swap).
+    #[test]
+    fn timeloop_diffusion_bitwise_equals_handrolled_loop() {
+        let cfg = Config {
+            app: AppKind::Diffusion,
+            nranks: 8,
+            local: [10, 10, 10],
+            nt: 6,
+            ..Default::default()
+        };
+        let via_timeloop = run_ranks(&cfg, |ctx| {
+            Ok(TimeLoop::new(0).run::<diffusion::Diffusion>(&ctx)?.into_primary())
+        })
+        .unwrap();
+        let handrolled = run_ranks(&cfg, |ctx| {
+            let p = diffusion::params_for(&ctx.cfg, ctx.grid.dims_g());
+            let mut t = diffusion::initial_temperature(&ctx);
+            let ci = Field3D::filled(ctx.grid.local_dims(), 1.0 / 2.0);
+            let mut t2 = t.clone();
+            for _ in 0..ctx.cfg.nt {
+                diffusion3d::step(&t, &ci, &p, &mut t2);
+                ctx.grid.update_halo(&mut [&mut t2])?;
+                std::mem::swap(&mut t, &mut t2);
+            }
+            Ok(t)
+        })
+        .unwrap();
+        for (rank, (a, b)) in via_timeloop.iter().zip(&handrolled).enumerate() {
+            assert_eq!(a.max_abs_diff(b), 0.0, "rank {rank}: TimeLoop must match the plain loop");
+        }
+    }
+
+    /// Same pin for two-phase: both persistent fields bitwise equal to the
+    /// hand-rolled plain loop.
+    #[test]
+    fn timeloop_twophase_bitwise_equals_handrolled_loop() {
+        let cfg = Config {
+            app: AppKind::Twophase,
+            nranks: 4,
+            local: [9, 9, 9],
+            nt: 5,
+            ..Default::default()
+        };
+        let via_timeloop = run_ranks(&cfg, |ctx| {
+            let r = TimeLoop::new(0).run::<twophase::Twophase>(&ctx)?;
+            let phi = r.field("phi").expect("phi reported").clone();
+            Ok((r.into_primary(), phi))
+        })
+        .unwrap();
+        let handrolled = run_ranks(&cfg, |ctx| {
+            let p = twophase::params_for(&ctx.cfg, ctx.grid.dims_g());
+            let local = ctx.grid.local_dims();
+            let mut phi = twophase::initial_porosity(&ctx);
+            let mut pe = Field3D::zeros(local);
+            let mut pe2 = Field3D::zeros(local);
+            let mut phi2 = phi.clone();
+            for _ in 0..ctx.cfg.nt {
+                tp::step(&pe, &phi, &p, &mut pe2, &mut phi2);
+                ctx.grid.update_halo(&mut [&mut pe2, &mut phi2])?;
+                std::mem::swap(&mut pe, &mut pe2);
+                std::mem::swap(&mut phi, &mut phi2);
+            }
+            Ok((pe, phi))
+        })
+        .unwrap();
+        for (rank, ((pe_a, phi_a), (pe_b, phi_b))) in
+            via_timeloop.iter().zip(&handrolled).enumerate()
+        {
+            assert_eq!(pe_a.max_abs_diff(pe_b), 0.0, "rank {rank}: Pe");
+            assert_eq!(phi_a.max_abs_diff(phi_b), 0.0, "rank {rank}: phi");
+        }
+    }
+
+    /// Warmup steps advance physics exactly like measured steps (the
+    /// measured phase just re-bases the clock): nt+warmup equals
+    /// nt'+warmup' whenever the totals agree.
+    #[test]
+    fn warmup_only_affects_timing_not_fields() {
+        let base = Config {
+            app: AppKind::Diffusion,
+            nranks: 2,
+            local: [8, 8, 8],
+            nt: 6,
+            ..Default::default()
+        };
+        let a = run_ranks(&base, |ctx| {
+            Ok(TimeLoop::new(2).run::<diffusion::Diffusion>(&ctx)?.into_primary().into_vec())
+        })
+        .unwrap();
+        let more_steps = Config { nt: 8, ..base };
+        let b = run_ranks(&more_steps, |ctx| {
+            Ok(TimeLoop::new(0).run::<diffusion::Diffusion>(&ctx)?.into_primary().into_vec())
+        })
+        .unwrap();
+        assert_eq!(a, b, "warmup steps are ordinary physics steps");
+    }
+
+    /// Schedule planning: pruning removes non-exchanging dims on native,
+    /// and invalid widths are rejected at plan time (not mid-run).
+    #[test]
+    fn schedule_plans_prune_and_validate() {
+        let cfg = Config {
+            nranks: 2,
+            local: [10, 10, 10],
+            hide: Some(HideWidths([3, 2, 2])),
+            ..Default::default()
+        };
+        run_ranks(&cfg, |ctx| {
+            let s = Schedule::plan(&ctx.cfg, &ctx.grid)?;
+            assert!(s.hides());
+            // 2 ranks split one dimension; the other two prune to width 0,
+            // leaving boundary slabs only along the exchanged dim
+            let rs = s.regions.as_ref().unwrap();
+            assert_eq!(rs.boundaries.len(), 2, "only the exchanged dim keeps slabs");
+
+            // width 1 below OVERLAP on the exchanged dim must be rejected
+            let bad = Config { hide: Some(HideWidths([1, 1, 1])), ..ctx.cfg.clone() };
+            assert!(Schedule::plan(&bad, &ctx.grid).is_err());
+            Ok(())
+        })
+        .unwrap();
+    }
+}

@@ -195,24 +195,9 @@ impl GlobalGrid {
     /// [`Self::gather_check_overlap`] asserts.
     pub fn gather_global(&self, f: &Field3D, root: usize) -> Option<Field3D> {
         assert_eq!(f.dims(), self.local, "gather_global expects a base-grid field");
-        let payload = f.as_slice();
-        let gathered = self.comm().gather(root, payload)?;
-        let gdims = self.dims_g();
-        let mut out = Field3D::zeros(gdims);
-        for (rank, data) in gathered.iter().enumerate() {
-            let coords = self.coords_of_rank(rank);
-            let rank_field = Field3D::from_vec(self.local, data.clone());
-            for ix in 0..self.local[0] {
-                let gx = coords[0] * (self.local[0] - OVERLAP) + ix;
-                for iy in 0..self.local[1] {
-                    let gy = coords[1] * (self.local[1] - OVERLAP) + iy;
-                    for iz in 0..self.local[2] {
-                        let gz = coords[2] * (self.local[2] - OVERLAP) + iz;
-                        out.set(gx, gy, gz, rank_field.get(ix, iy, iz));
-                    }
-                }
-            }
-        }
+        let gathered = self.comm().gather(root, f.as_slice())?;
+        let mut out = Field3D::zeros(self.dims_g());
+        self.place_gathered(&gathered, &mut out, |dst, row, _| dst.copy_from_slice(row));
         Some(out)
     }
 
@@ -221,36 +206,50 @@ impl GlobalGrid {
     pub fn gather_check_overlap(&self, f: &Field3D, root: usize) -> Option<(Field3D, f64)> {
         assert_eq!(f.dims(), self.local);
         let gathered = self.comm().gather(root, f.as_slice())?;
-        let gdims = self.dims_g();
-        let mut out = Field3D::zeros(gdims);
+        let mut out = Field3D::zeros(self.dims_g());
         let mut written = vec![false; out.len()];
         let mut max_dev = 0.0f64;
-        for (rank, data) in gathered.iter().enumerate() {
-            let coords = self.coords_of_rank(rank);
-            let rf = Field3D::from_vec(self.local, data.clone());
-            for ix in 0..self.local[0] {
-                let gx = coords[0] * (self.local[0] - OVERLAP) + ix;
-                for iy in 0..self.local[1] {
-                    let gy = coords[1] * (self.local[1] - OVERLAP) + iy;
-                    for iz in 0..self.local[2] {
-                        let gz = coords[2] * (self.local[2] - OVERLAP) + iz;
-                        let i = out.idx(gx, gy, gz);
-                        let v = rf.get(ix, iy, iz);
-                        if written[i] {
-                            max_dev = max_dev.max((out.as_slice()[i] - v).abs());
-                        }
-                        out.as_mut_slice()[i] = v;
-                        written[i] = true;
-                    }
+        self.place_gathered(&gathered, &mut out, |dst, row, start| {
+            for (k, (d, &v)) in dst.iter_mut().zip(row).enumerate() {
+                if written[start + k] {
+                    max_dev = max_dev.max((*d - v).abs());
                 }
+                *d = v;
+                written[start + k] = true;
             }
-        }
+        });
         Some((out, max_dev))
     }
 
-    fn coords_of_rank(&self, rank: usize) -> [usize; 3] {
-        let [_, dy, dz] = self.cart.dims();
-        [rank / (dy * dz), (rank / dz) % dy, rank % dz]
+    /// The shared placement loop of the gathers: walk every rank's payload
+    /// (indexed in place — no intermediate field copies) z-row by z-row and
+    /// hand each contiguous source row to `place` together with the matching
+    /// global output row and that row's flat start index in `out`.
+    fn place_gathered(
+        &self,
+        gathered: &[Vec<f64>],
+        out: &mut Field3D,
+        mut place: impl FnMut(&mut [f64], &[f64], usize),
+    ) {
+        let [lx, ly, lz] = self.local;
+        let gdims = out.dims();
+        let out_data = out.as_mut_slice();
+        for (rank, data) in gathered.iter().enumerate() {
+            debug_assert_eq!(data.len(), lx * ly * lz, "rank {rank} payload size");
+            let coords = self.cart.coords_of_rank(rank);
+            let g0 = [
+                coords[0] * (self.local[0] - OVERLAP),
+                coords[1] * (self.local[1] - OVERLAP),
+                coords[2] * (self.local[2] - OVERLAP),
+            ];
+            for ix in 0..lx {
+                for iy in 0..ly {
+                    let src = (ix * ly + iy) * lz;
+                    let dst = ((g0[0] + ix) * gdims[1] + (g0[1] + iy)) * gdims[2] + g0[2];
+                    place(&mut out_data[dst..dst + lz], &data[src..src + lz], dst);
+                }
+            }
+        }
     }
 }
 
@@ -314,5 +313,55 @@ mod tests {
         let f = Field3D::from_fn([5, 5, 5], |x, y, z| (x + 10 * y + 100 * z) as f64);
         let got = g.gather_global(&f, 0).unwrap();
         assert_eq!(got, f);
+    }
+
+    /// Multi-rank gather reassembles the global marker exactly, and the
+    /// overlap check reports zero deviation for coherent fields / the exact
+    /// largest deviation for an incoherent one.
+    #[test]
+    fn gather_multi_rank_places_and_checks_overlap() {
+        let net = Network::new(8);
+        let handles: Vec<_> = (0..8)
+            .map(|r| {
+                let c = net.comm(r);
+                std::thread::spawn(move || {
+                    let g = GlobalGrid::init(c, [6, 5, 4], GridOptions::default()).unwrap();
+                    let f = Field3D::from_fn(g.local_dims(), |x, y, z| {
+                        let gx = g.global_index(0, x) as f64;
+                        let gy = g.global_index(1, y) as f64;
+                        let gz = g.global_index(2, z) as f64;
+                        gx + 1e3 * gy + 1e6 * gz
+                    });
+                    let global = g.gather_global(&f, 0);
+                    let checked = g.gather_check_overlap(&f, 0);
+                    if g.rank() == 0 {
+                        let gdims = g.dims_g();
+                        let want = Field3D::from_fn(gdims, |x, y, z| {
+                            x as f64 + 1e3 * y as f64 + 1e6 * z as f64
+                        });
+                        assert_eq!(global.unwrap().max_abs_diff(&want), 0.0);
+                        let (out, dev) = checked.unwrap();
+                        assert_eq!(out.max_abs_diff(&want), 0.0);
+                        assert_eq!(dev, 0.0, "coherent overlap planes");
+                    } else {
+                        assert!(global.is_none() && checked.is_none());
+                    }
+
+                    // perturb one owned overlap-plane cell on rank 0: the
+                    // deviation must surface with exactly that magnitude
+                    let mut f2 = f.clone();
+                    if g.rank() == 0 {
+                        let [lx, _, _] = g.local_dims();
+                        f2.set(lx - 1, 1, 1, f2.get(lx - 1, 1, 1) + 0.25);
+                    }
+                    if let Some((_, dev)) = g.gather_check_overlap(&f2, 0) {
+                        assert_eq!(dev, 0.25, "overlap deviation detected exactly");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }

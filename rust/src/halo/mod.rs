@@ -21,13 +21,14 @@
 //!   network as soon as it lands, and host→device on the receive side — the
 //!   "pipelining on all stages" the paper describes.
 //!
-//! Staging buffers come from a [`BufferPool`] keyed by
+//! Staging buffers come from a [`crate::memory::BufferPool`] keyed by
 //! (field, dim, side, role) and the network payloads are recycled through
 //! the pool's size-keyed free list, so steady-state updates allocate
 //! nothing; within each dimension all sends are posted before the first
 //! wait and drained after the receives, so injections and transits overlap.
-//! The overlapped path runs on a dedicated high-priority [`Stream`],
-//! allocated once — the paper's explicit stream/buffer-reuse design.
+//! The overlapped path runs on a dedicated high-priority
+//! [`crate::memory::Stream`], allocated once — the paper's explicit
+//! stream/buffer-reuse design.
 
 mod engine;
 mod plan;

@@ -14,7 +14,7 @@ use igg::util::cli::Command;
 use igg::util::json::Json;
 
 fn run_flags(cmd: Command) -> Command {
-    cmd.value("app", Some("diffusion"), "application: diffusion|twophase")
+    cmd.value("app", Some("diffusion"), "application: diffusion|twophase|wave")
         .value("nx", Some("32"), "local grid size (cubic unless ny/nz given)")
         .value("ny", None, "local grid size y")
         .value("nz", None, "local grid size z")
@@ -89,9 +89,9 @@ fn info() -> anyhow::Result<()> {
     match ArtifactStore::load(artifact_dir()) {
         Ok(store) => {
             println!("artifacts: {} programs in {}", store.programs.len(), store.dir.display());
-            for app in ["diffusion", "twophase"] {
-                let shapes = store.shapes_of(app);
-                println!("  {app}: full-step shapes {shapes:?}");
+            for app in igg::coordinator::config::AppKind::ALL {
+                let shapes = store.shapes_of(app.name());
+                println!("  {}: full-step shapes {shapes:?}", app.name());
             }
         }
         Err(e) => println!("artifacts: not built ({e})"),

@@ -19,7 +19,23 @@ pub enum StreamPriority {
     Normal,
 }
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+/// A queued unit of work: a one-shot boxed closure, or a *shared* job — an
+/// `Arc`'d closure enqueued by reference-count bump only. Shared jobs are
+/// the allocation-free hot path: the halo engine builds its exchange job
+/// once and re-enqueues the same `Arc` every step.
+enum Job {
+    Once(Box<dyn FnOnce() + Send + 'static>),
+    Shared(Arc<dyn Fn() + Send + Sync + 'static>),
+}
+
+impl Job {
+    fn run(self) {
+        match self {
+            Job::Once(f) => f(),
+            Job::Shared(f) => f(),
+        }
+    }
+}
 
 struct State {
     queue: VecDeque<Job>,
@@ -58,7 +74,7 @@ impl Stream {
                             st = cv.wait(st).unwrap();
                         }
                     };
-                    job();
+                    job.run();
                     let (m, cv) = &*worker_state;
                     let mut st = m.lock().unwrap();
                     st.pending -= 1;
@@ -75,12 +91,30 @@ impl Stream {
 
     /// Enqueue work; returns immediately. Jobs run in enqueue order.
     pub fn enqueue(&self, job: impl FnOnce() + Send + 'static) {
+        self.push(Job::Once(Box::new(job)));
+    }
+
+    /// Enqueue a prebuilt shared job: no boxing, only an `Arc` refcount
+    /// bump, so re-enqueueing the same job every step is
+    /// heap-allocation-free once the queue's capacity has warmed up.
+    pub fn enqueue_shared(&self, job: Arc<dyn Fn() + Send + Sync + 'static>) {
+        self.push(Job::Shared(job));
+    }
+
+    fn push(&self, job: Job) {
         let (m, cv) = &*self.state;
         let mut st = m.lock().unwrap();
         assert!(!st.shutdown, "enqueue on shut-down stream");
-        st.queue.push_back(Box::new(job));
+        st.queue.push_back(job);
         st.pending += 1;
         cv.notify_all();
+    }
+
+    /// Is the queue empty with no job running? `true` guarantees every
+    /// previously enqueued job has fully completed (the worker decrements
+    /// the pending count only after a job returns).
+    pub fn is_idle(&self) -> bool {
+        self.state.0.lock().unwrap().pending == 0
     }
 
     /// Block until every job enqueued so far has finished.
@@ -141,6 +175,27 @@ mod tests {
     fn synchronize_on_empty_stream_returns() {
         let stream = Stream::new(StreamPriority::Normal);
         stream.synchronize();
+    }
+
+    #[test]
+    fn shared_job_reenqueues_and_interleaves_with_once_jobs() {
+        let stream = Stream::new(StreamPriority::High);
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&count);
+        let shared: Arc<dyn Fn() + Send + Sync> = Arc::new(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        for _ in 0..5 {
+            stream.enqueue_shared(Arc::clone(&shared));
+        }
+        let c2 = Arc::clone(&count);
+        stream.enqueue(move || {
+            c2.fetch_add(100, Ordering::SeqCst);
+        });
+        stream.enqueue_shared(shared);
+        stream.synchronize();
+        assert_eq!(count.load(Ordering::SeqCst), 106);
+        assert!(stream.is_idle(), "synchronized stream reports idle");
     }
 
     #[test]

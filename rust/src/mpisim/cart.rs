@@ -88,6 +88,15 @@ impl CartComm {
         [rank / (dy * dz), (rank / dz) % dy, rank % dz]
     }
 
+    /// Coordinates of an arbitrary rank in this topology (MPI_Cart_coords
+    /// analog). The single source of truth for the rank -> coords layout —
+    /// consumers (e.g. the grid's gather) must use this rather than
+    /// re-deriving the row-major formula.
+    pub fn coords_of_rank(&self, rank: usize) -> [usize; 3] {
+        debug_assert!(rank < self.size(), "rank {rank} out of range");
+        Self::coords_of(self.dims, rank)
+    }
+
     /// Coordinates -> rank (row-major).
     pub fn rank_of(&self, coords: [usize; 3]) -> usize {
         let [_, dy, dz] = self.dims;
@@ -181,6 +190,10 @@ mod tests {
         for r in 0..12 {
             let cart = CartComm::create(net.comm(r), [3, 2, 2], [false; 3]).unwrap();
             assert_eq!(cart.rank_of(cart.coords()), r);
+            // coords_of_rank is the same layout seen from any rank
+            for other in 0..12 {
+                assert_eq!(cart.rank_of(cart.coords_of_rank(other)), other);
+            }
         }
     }
 

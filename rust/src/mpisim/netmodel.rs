@@ -63,7 +63,7 @@ impl NetModel {
         Duration::from_secs_f64(bytes as f64 / self.bw_bytes_per_s)
     }
 
-    /// Parse "ideal", "aries", or "aries:<scale>" (e.g. "aries:32").
+    /// Parse "ideal", "aries", or `aries:<scale>` (e.g. "aries:32").
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s {
             "ideal" => Ok(Self::ideal()),

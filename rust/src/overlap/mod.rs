@@ -20,4 +20,7 @@ pub mod regions;
 pub mod scheduler;
 
 pub use regions::{split_regions, HideWidths, RegionSet};
-pub use scheduler::hide_communication;
+pub use scheduler::{
+    hide_communication, hide_communication_prepared, plain_step, prune_widths, validate_widths,
+    StartHalo, SyncHalo,
+};

@@ -1,17 +1,28 @@
 //! The `hide_communication` executor.
 //!
 //! Generic over the application's step state: the caller supplies the state
-//! `S` (its fields), a region-step function, and a projection selecting the
-//! fields whose halos are exchanged. Threading the state through the
-//! scheduler (rather than capturing it in two closures) is what lets the
-//! borrow checker verify the phases: the exchange borrows the fields only
-//! while *starting* (the in-flight [`crate::halo::PendingHalo`] accesses
-//! boundary planes through the engine's pointer contract), so the inner
-//! region can compute on `&mut S` concurrently.
+//! `S` (its fields), a region-step function, and an *exchange closure* that
+//! receives a one-shot halo handle ([`StartHalo`] / [`SyncHalo`]) and
+//! applies it to the fields whose halos are exchanged. Threading the state
+//! through the scheduler (rather than capturing it in two closures) is what
+//! lets the borrow checker verify the phases: the exchange borrows the
+//! fields only while *starting* (the in-flight [`crate::halo::PendingHalo`]
+//! accesses boundary planes through the engine's pointer contract), so the
+//! inner region can compute on `&mut S` concurrently.
+//!
+//! The exchange closure hands the handle a stack-built `&mut [&mut Field3D]`
+//! (e.g. `|s, h| h.start(&mut [&mut s.t2])`), so selecting the fields
+//! performs **no heap allocation** — this is the step-level half of the
+//! zero-allocation contract that PR 1 established inside the halo engine,
+//! asserted end to end by `tests/steady_state_alloc.rs`.
 //!
 //! The schedule, exactly as in ParallelStencil's `@hide_communication`:
 //! boundary slabs -> start exchange -> inner region -> finish exchange, with
-//! the width >= overlap precondition validated against the topology.
+//! the width >= overlap precondition validated against the topology. Steady
+//! steps go through [`hide_communication_prepared`] with a [`RegionSet`]
+//! decomposed once per run (the coordinator's `TimeLoop` memoizes it);
+//! [`hide_communication`] is the one-shot convenience that validates and
+//! splits per call.
 //!
 //! With `compute_threads > 1` the executor x-chunks the inner-region call
 //! over `physics::parallel`'s worker pool, so the inner compute saturates
@@ -20,10 +31,40 @@
 //! with the in-flight exchange.
 
 use crate::grid::GlobalGrid;
+use crate::halo::PendingHalo;
 use crate::physics::{Field3D, Region};
 use crate::OVERLAP;
 
 use super::regions::{split_regions, HideWidths, RegionSet};
+
+/// One-shot handle starting an *overlapped* halo update on the fields the
+/// exchange closure selects. Consuming `self` makes "exactly one exchange
+/// per step" a type-level guarantee.
+pub struct StartHalo<'g> {
+    grid: &'g GlobalGrid,
+}
+
+impl StartHalo<'_> {
+    /// Begin the overlapped exchange; the field borrows end when this
+    /// returns (the in-flight work accesses only boundary planes through
+    /// the engine's pointer contract).
+    pub fn start(self, fields: &mut [&mut Field3D]) -> anyhow::Result<PendingHalo> {
+        self.grid.update_halo_start(fields)
+    }
+}
+
+/// One-shot handle running a *synchronous* halo update (the plain-step
+/// analog of [`StartHalo`]).
+pub struct SyncHalo<'g> {
+    grid: &'g GlobalGrid,
+}
+
+impl SyncHalo<'_> {
+    /// Exchange the halos of `fields` on the calling thread.
+    pub fn update(self, fields: &mut [&mut Field3D]) -> anyhow::Result<()> {
+        self.grid.update_halo(fields)
+    }
+}
 
 /// Validate that `widths` are safe for overlapping a halo update on `grid`:
 /// every dimension that actually exchanges (has a neighbour) needs
@@ -61,39 +102,33 @@ pub fn prune_widths(grid: &GlobalGrid, widths: HideWidths) -> HideWidths {
     HideWidths(w)
 }
 
-/// Execute one step with hidden communication.
+/// Execute one step with hidden communication on a *prepared* region
+/// decomposition (widths already validated, [`RegionSet`] already split —
+/// the steady-state form: no per-step allocation, no re-validation).
 ///
 /// * `state` — the application's step state (previous/next fields, params).
 /// * `compute_region(state, region)` — compute the step output on `region`.
-/// * `exchange_fields(state)` — the next-step fields to halo-exchange.
-///
-/// Returns the [`RegionSet`] used (for metrics/diagnostics).
-pub fn hide_communication<S, E>(
-    grid: &GlobalGrid,
-    widths: HideWidths,
-    local_dims: [usize; 3],
+/// * `exchange_fields(state, halo)` — select the next-step fields and
+///   start their exchange: `|s, h| h.start(&mut [&mut s.t2])`.
+pub fn hide_communication_prepared<'g, S, E>(
+    grid: &'g GlobalGrid,
+    rs: &RegionSet,
     state: &mut S,
     mut compute_region: impl FnMut(&mut S, Region) -> Result<(), E>,
-    exchange_fields: impl for<'a> FnOnce(&'a mut S) -> Vec<&'a mut Field3D>,
-) -> anyhow::Result<RegionSet>
+    exchange_fields: impl FnOnce(&mut S, StartHalo<'g>) -> anyhow::Result<PendingHalo>,
+) -> anyhow::Result<()>
 where
     E: Into<anyhow::Error>,
 {
-    validate_widths(grid, widths)?;
-    let rs = split_regions(local_dims, widths)?;
-
     // Phase 1: boundary slabs (produce the planes the exchange will send).
     for &(_, r) in &rs.boundaries {
         compute_region(state, r).map_err(Into::into)?;
     }
 
     // Phase 2: start the exchange on the communication stream. The field
-    // borrow ends when `update_halo_start` returns; the in-flight exchange
+    // borrow ends when `StartHalo::start` returns; the in-flight exchange
     // accesses only boundary planes (engine pointer contract).
-    let pending = {
-        let mut fields = exchange_fields(state);
-        grid.update_halo_start(&mut fields)?
-    };
+    let pending = exchange_fields(state, StartHalo { grid })?;
 
     // Phase 3: the inner region computes here, overlapping the exchange.
     let inner_result = compute_region(state, rs.inner).map_err(Into::into);
@@ -103,25 +138,45 @@ where
     let comm_result = pending.finish();
     inner_result?;
     comm_result?;
+    Ok(())
+}
+
+/// One-shot [`hide_communication_prepared`]: validates `widths` against the
+/// topology, splits the regions, executes the step, and returns the
+/// [`RegionSet`] used (for metrics/diagnostics). Time loops should split
+/// once and call the prepared form instead.
+pub fn hide_communication<'g, S, E>(
+    grid: &'g GlobalGrid,
+    widths: HideWidths,
+    local_dims: [usize; 3],
+    state: &mut S,
+    compute_region: impl FnMut(&mut S, Region) -> Result<(), E>,
+    exchange_fields: impl FnOnce(&mut S, StartHalo<'g>) -> anyhow::Result<PendingHalo>,
+) -> anyhow::Result<RegionSet>
+where
+    E: Into<anyhow::Error>,
+{
+    validate_widths(grid, widths)?;
+    let rs = split_regions(local_dims, widths)?;
+    hide_communication_prepared(grid, &rs, state, compute_region, exchange_fields)?;
     Ok(rs)
 }
 
 /// The non-overlapped reference schedule: full interior step, then a
 /// synchronous halo update. Semantically identical to
 /// [`hide_communication`]; the ablation bench measures the difference.
-pub fn plain_step<S, E>(
-    grid: &GlobalGrid,
+pub fn plain_step<'g, S, E>(
+    grid: &'g GlobalGrid,
     local_dims: [usize; 3],
     state: &mut S,
     mut compute_region: impl FnMut(&mut S, Region) -> Result<(), E>,
-    exchange_fields: impl for<'a> FnOnce(&'a mut S) -> Vec<&'a mut Field3D>,
+    exchange_fields: impl FnOnce(&mut S, SyncHalo<'g>) -> anyhow::Result<()>,
 ) -> anyhow::Result<()>
 where
     E: Into<anyhow::Error>,
 {
     compute_region(state, Region::interior(local_dims)).map_err(Into::into)?;
-    let mut fields = exchange_fields(state);
-    grid.update_halo(&mut fields)
+    exchange_fields(state, SyncHalo { grid })
 }
 
 #[cfg(test)]
@@ -186,7 +241,7 @@ mod tests {
                     g.local_dims(),
                     &mut a,
                     |s, r| s.compute(r),
-                    |s| vec![&mut s.t2],
+                    |s, h| h.update(&mut [&mut s.t2]),
                 )
                 .unwrap();
                 std::mem::swap(&mut a.t, &mut a.t2);
@@ -197,12 +252,49 @@ mod tests {
                     g.local_dims(),
                     &mut b,
                     |s, r| s.compute(r),
-                    |s| vec![&mut s.t2],
+                    |s, h| h.start(&mut [&mut s.t2]),
                 )
                 .unwrap();
                 std::mem::swap(&mut b.t, &mut b.t2);
 
                 assert_eq!(a.t.max_abs_diff(&b.t), 0.0, "hidden and plain must agree bitwise");
+            }
+        });
+    }
+
+    /// The prepared (memoized-RegionSet) form is bitwise identical to the
+    /// one-shot form across a multi-step run — the TimeLoop's steady path.
+    #[test]
+    fn prepared_equals_one_shot() {
+        run_ranks(4, |g| {
+            let widths = HideWidths([2, 2, 2]);
+            let mut a = init_state(&g);
+            let mut b = init_state(&g);
+            validate_widths(&g, widths).unwrap();
+            let rs = split_regions(g.local_dims(), widths).unwrap();
+            for _ in 0..4 {
+                hide_communication(
+                    &g,
+                    widths,
+                    g.local_dims(),
+                    &mut a,
+                    |s, r| s.compute(r),
+                    |s, h| h.start(&mut [&mut s.t2]),
+                )
+                .unwrap();
+                std::mem::swap(&mut a.t, &mut a.t2);
+
+                hide_communication_prepared(
+                    &g,
+                    &rs,
+                    &mut b,
+                    |s, r| s.compute(r),
+                    |s, h| h.start(&mut [&mut s.t2]),
+                )
+                .unwrap();
+                std::mem::swap(&mut b.t, &mut b.t2);
+
+                assert_eq!(a.t.max_abs_diff(&b.t), 0.0, "prepared must equal one-shot");
             }
         });
     }
@@ -230,7 +322,7 @@ mod tests {
                 g.local_dims(),
                 &mut s,
                 |s, r| s.compute(r),
-                |s| vec![&mut s.t2],
+                |s, h| h.start(&mut [&mut s.t2]),
             )
             .unwrap();
             assert_eq!(rs.boundaries.len(), 6);

@@ -21,10 +21,12 @@ pub mod diffusion3d;
 pub mod field;
 pub mod parallel;
 pub mod twophase;
+pub mod wave;
 
 pub use diffusion3d::DiffusionParams;
 pub use field::Field3D;
 pub use twophase::TwophaseParams;
+pub use wave::WaveParams;
 
 /// A sub-box of a local array: offset + size per dimension, the unit of
 /// work for `hide_communication` region programs.

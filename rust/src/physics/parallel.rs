@@ -17,7 +17,7 @@
 //! communication stream exchanges halos. Tiny boundary slabs stay serial:
 //! spawning costs more than they do.
 
-use super::{diffusion3d, twophase, DiffusionParams, Field3D, Region, TwophaseParams};
+use super::{diffusion3d, twophase, wave, DiffusionParams, Field3D, Region, TwophaseParams, WaveParams};
 
 /// Regions below this many cells run serially — thread spawn/join overhead
 /// (~10 us) outweighs the compute of smaller boxes.
@@ -113,10 +113,29 @@ pub fn twophase_step_region(
     pe2: &mut Field3D,
     phi2: &mut Field3D,
 ) {
+    let mut scratch = Vec::new();
+    twophase_step_region_scratch(threads, pe, phi, p, region, pe2, phi2, &mut scratch);
+}
+
+/// As [`twophase_step_region`], with a caller-owned mobility scratch for
+/// the serial path (threaded slabs build worker-local rings — they spawn
+/// threads anyway). The executor holds one such buffer so the serial
+/// steady state is heap-allocation-free.
+#[allow(clippy::too_many_arguments)]
+pub fn twophase_step_region_scratch(
+    threads: usize,
+    pe: &Field3D,
+    phi: &Field3D,
+    p: &TwophaseParams,
+    region: Region,
+    pe2: &mut Field3D,
+    phi2: &mut Field3D,
+    scratch: &mut Vec<f64>,
+) {
     assert_eq!(pe2.dims(), pe.dims(), "pe2 dims mismatch");
     assert_eq!(phi2.dims(), pe.dims(), "phi2 dims mismatch");
     if !parallelize(threads, region) {
-        twophase::step_region(pe, phi, p, region, pe2, phi2);
+        twophase::step_region_scratch(pe, phi, p, region, pe2, phi2, scratch);
         return;
     }
     let [_, ny, nz] = pe.dims();
@@ -132,6 +151,54 @@ pub fn twophase_step_region(
             });
         }
         twophase::step_region_windowed(pe, phi, p, slabs[0], pe0, phi0, start0);
+    });
+}
+
+/// Acoustic wave step on `region`, x-chunked across `threads` workers.
+/// Bitwise-identical to [`wave::step_region`].
+#[allow(clippy::too_many_arguments)]
+pub fn wave_step_region(
+    threads: usize,
+    p: &Field3D,
+    vx: &Field3D,
+    vy: &Field3D,
+    vz: &Field3D,
+    prm: &WaveParams,
+    region: Region,
+    p2: &mut Field3D,
+    vx2: &mut Field3D,
+    vy2: &mut Field3D,
+    vz2: &mut Field3D,
+) {
+    assert_eq!(p2.dims(), p.dims(), "p2 dims mismatch");
+    assert_eq!(vx2.dims(), p.dims(), "vx2 dims mismatch");
+    assert_eq!(vy2.dims(), p.dims(), "vy2 dims mismatch");
+    assert_eq!(vz2.dims(), p.dims(), "vz2 dims mismatch");
+    if !parallelize(threads, region) {
+        wave::step_region(p, vx, vy, vz, prm, region, p2, vx2, vy2, vz2);
+        return;
+    }
+    let [_, ny, nz] = p.dims();
+    let slabs = split_x(region, threads);
+    let p_wins = windows(p2.as_mut_slice(), &slabs, ny * nz);
+    let vx_wins = windows(vx2.as_mut_slice(), &slabs, ny * nz);
+    let vy_wins = windows(vy2.as_mut_slice(), &slabs, ny * nz);
+    let vz_wins = windows(vz2.as_mut_slice(), &slabs, ny * nz);
+    std::thread::scope(|s| {
+        let mut wins = p_wins
+            .into_iter()
+            .zip(vx_wins)
+            .zip(vy_wins)
+            .zip(vz_wins)
+            .map(|(((pw, xw), yw), zw)| (pw, xw, yw, zw));
+        let ((p0, start0), (vx0, _), (vy0, _), (vz0, _)) =
+            wins.next().expect("at least one slab");
+        for (&slab, ((pw, start), (xw, _), (yw, _), (zw, _))) in slabs[1..].iter().zip(wins) {
+            s.spawn(move || {
+                wave::step_region_windowed(p, vx, vy, vz, prm, slab, pw, xw, yw, zw, start);
+            });
+        }
+        wave::step_region_windowed(p, vx, vy, vz, prm, slabs[0], p0, vx0, vy0, vz0, start0);
     });
 }
 
@@ -221,6 +288,32 @@ mod tests {
             twophase_step_region(threads, &pe, &phi, &p, region, &mut pe_p, &mut phi_p);
             assert_eq!(pe_s.max_abs_diff(&pe_p), 0.0, "threads={threads} Pe");
             assert_eq!(phi_s.max_abs_diff(&phi_p), 0.0, "threads={threads} phi");
+        }
+    }
+
+    #[test]
+    fn threaded_wave_bitwise_matches_serial() {
+        let dims = [34, 30, 30];
+        let p = rand_field(dims, 9, -0.5, 0.5);
+        let vx = rand_field(dims, 10, -0.1, 0.1);
+        let vy = rand_field(dims, 11, -0.1, 0.1);
+        let vz = rand_field(dims, 12, -0.1, 0.1);
+        let prm = WaveParams::stable(1.0, 0.1, 0.1, 0.1);
+        let region = Region::interior(dims);
+        let (mut p_s, mut vx_s, mut vy_s, mut vz_s) =
+            (p.clone(), vx.clone(), vy.clone(), vz.clone());
+        wave::step_region(&p, &vx, &vy, &vz, &prm, region, &mut p_s, &mut vx_s, &mut vy_s, &mut vz_s);
+        for threads in [2, 5] {
+            let (mut p_p, mut vx_p, mut vy_p, mut vz_p) =
+                (p.clone(), vx.clone(), vy.clone(), vz.clone());
+            wave_step_region(
+                threads, &p, &vx, &vy, &vz, &prm, region, &mut p_p, &mut vx_p, &mut vy_p,
+                &mut vz_p,
+            );
+            assert_eq!(p_s.max_abs_diff(&p_p), 0.0, "threads={threads} p");
+            assert_eq!(vx_s.max_abs_diff(&vx_p), 0.0, "threads={threads} vx");
+            assert_eq!(vy_s.max_abs_diff(&vy_p), 0.0, "threads={threads} vy");
+            assert_eq!(vz_s.max_abs_diff(&vz_p), 0.0, "threads={threads} vz");
         }
     }
 

@@ -71,31 +71,40 @@ pub fn step_region(
     pe2: &mut Field3D,
     phi2: &mut Field3D,
 ) {
-    let n = pe.dims();
-    assert_eq!(pe2.dims(), n, "pe2 dims mismatch");
-    assert_eq!(phi2.dims(), n, "phi2 dims mismatch");
-    step_region_into(pe, phi, p, region, pe2.as_mut_slice(), phi2.as_mut_slice());
+    let mut scratch = Vec::new();
+    step_region_scratch(pe, phi, p, region, pe2, phi2, &mut scratch);
 }
 
-/// The core loop on the full raw output slices of fields with `pe`'s dims.
-pub(crate) fn step_region_into(
+/// As [`step_region`], with a caller-owned mobility scratch buffer. Reusing
+/// the buffer across steps makes the serial hot path heap-allocation-free
+/// once its capacity has reached the largest region's ring (the executor
+/// owns one such buffer; see `runtime::executor`).
+pub fn step_region_scratch(
     pe: &Field3D,
     phi: &Field3D,
     p: &TwophaseParams,
     region: Region,
-    pe2_out: &mut [f64],
-    phi2_out: &mut [f64],
+    pe2: &mut Field3D,
+    phi2: &mut Field3D,
+    scratch: &mut Vec<f64>,
 ) {
-    assert_eq!(pe2_out.len(), pe.len(), "pe2 output length mismatch");
-    assert_eq!(phi2_out.len(), pe.len(), "phi2 output length mismatch");
-    step_region_windowed(pe, phi, p, region, pe2_out, phi2_out, 0);
+    let n = pe.dims();
+    assert_eq!(pe2.dims(), n, "pe2 dims mismatch");
+    assert_eq!(phi2.dims(), n, "phi2 dims mismatch");
+    step_region_windowed_scratch(
+        pe,
+        phi,
+        p,
+        region,
+        pe2.as_mut_slice(),
+        phi2.as_mut_slice(),
+        0,
+        scratch,
+    );
 }
 
-/// As [`step_region_into`], but the outputs are *windows* of the full
-/// output arrays starting at flat index `out_start` and covering at least
-/// the region's rows. Disjoint regions touch disjoint windows — see
-/// [`crate::physics::parallel`], which hands each worker `split_at_mut`
-/// partitions of the outputs.
+/// The windowed core with an internal scratch (used by the parallel
+/// workers, which each own their slab for the duration of one region).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn step_region_windowed(
     pe: &Field3D,
@@ -105,6 +114,27 @@ pub(crate) fn step_region_windowed(
     pe2_out: &mut [f64],
     phi2_out: &mut [f64],
     out_start: usize,
+) {
+    let mut scratch = Vec::new();
+    step_region_windowed_scratch(pe, phi, p, region, pe2_out, phi2_out, out_start, &mut scratch);
+}
+
+/// The core loop. The outputs are *windows* of the full output arrays
+/// starting at flat index `out_start` and covering at least the region's
+/// rows. Disjoint regions touch disjoint windows — see
+/// [`crate::physics::parallel`], which hands each worker `split_at_mut`
+/// partitions of the outputs. The mobility ring is built in `scratch`
+/// (resized in place; every element is overwritten before use).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn step_region_windowed_scratch(
+    pe: &Field3D,
+    phi: &Field3D,
+    p: &TwophaseParams,
+    region: Region,
+    pe2_out: &mut [f64],
+    phi2_out: &mut [f64],
+    out_start: usize,
+    scratch: &mut Vec<f64>,
 ) {
     let n = pe.dims();
     assert_eq!(phi.dims(), n, "phi dims mismatch");
@@ -120,7 +150,9 @@ pub(crate) fn step_region_windowed(
     // Mobility on the region + one-cell ring, as a dense scratch block.
     // Scratch layout: (sx+2, sy+2, sz+2), C order.
     let (kx, ky, kz) = (sx + 2, sy + 2, sz + 2);
-    let mut k = vec![0.0f64; kx * ky * kz];
+    scratch.clear();
+    scratch.resize(kx * ky * kz, 0.0);
+    let k: &mut [f64] = scratch;
     {
         let phid = phi.as_slice();
         let inv_phiref = 1.0 / p.phiref;

@@ -1,0 +1,377 @@
+//! Native 3-D acoustic wave step: second-order (staggered leapfrog)
+//! velocity–pressure formulation, written directly from the first-order
+//! system  ∂v/∂t = −(1/ρ) ∇p,  ∂p/∂t = −K ∇·v  (K = ρ c²).
+//!
+//! Staggered grid in the paper's style: pressure lives at cell centers;
+//! velocities live on faces — `vx[i]` stores the face value at `i + 1/2`
+//! (same for `vy`, `vz`), so all four arrays are base-grid sized and
+//! halo-exchangeable. The update is *fused*: the new velocities are
+//! computed first and the pressure divergence uses them, with the incoming
+//! (`i − 1/2`) face values recomputed inline from previous-step state —
+//! the same kernel-local-staggered-flux idiom as the two-phase solver, and
+//! what makes disjoint regions compose bitwise (every output cell depends
+//! only on previous-step values).
+
+use super::{Field3D, Region};
+
+/// Physics/discretization parameters of the acoustic wave step, in the AOT
+/// artifact scalar order (`manifest.wave_scalars`, when lowered).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WaveParams {
+    pub dt: f64,
+    pub dx: f64,
+    pub dy: f64,
+    pub dz: f64,
+    /// sound speed
+    pub c: f64,
+    /// density
+    pub rho: f64,
+}
+
+impl WaveParams {
+    /// A stable configuration: staggered-leapfrog CFL demands
+    /// `c·dt·sqrt(1/dx² + 1/dy² + 1/dz²) <= 1`; use a 0.4 safety factor.
+    pub fn stable(c: f64, dx: f64, dy: f64, dz: f64) -> Self {
+        let s = (1.0 / (dx * dx) + 1.0 / (dy * dy) + 1.0 / (dz * dz)).sqrt();
+        WaveParams { dt: 0.4 / (c * s), dx, dy, dz, c, rho: 1.0 }
+    }
+
+    /// Bulk modulus K = ρ c².
+    pub fn bulk(&self) -> f64 {
+        self.rho * self.c * self.c
+    }
+
+    pub fn scalar_vec(&self) -> Vec<f64> {
+        vec![self.dt, self.dx, self.dy, self.dz, self.c, self.rho]
+    }
+}
+
+/// Full-interior step: writes the interiors of `p2`, `vx2`, `vy2`, `vz2`.
+#[allow(clippy::too_many_arguments)]
+pub fn step(
+    p: &Field3D,
+    vx: &Field3D,
+    vy: &Field3D,
+    vz: &Field3D,
+    prm: &WaveParams,
+    p2: &mut Field3D,
+    vx2: &mut Field3D,
+    vy2: &mut Field3D,
+    vz2: &mut Field3D,
+) {
+    step_region(p, vx, vy, vz, prm, Region::interior(p.dims()), p2, vx2, vy2, vz2);
+}
+
+/// Region step: updates only `region` (strictly interior).
+#[allow(clippy::too_many_arguments)]
+pub fn step_region(
+    p: &Field3D,
+    vx: &Field3D,
+    vy: &Field3D,
+    vz: &Field3D,
+    prm: &WaveParams,
+    region: Region,
+    p2: &mut Field3D,
+    vx2: &mut Field3D,
+    vy2: &mut Field3D,
+    vz2: &mut Field3D,
+) {
+    let n = p.dims();
+    assert_eq!(p2.dims(), n, "p2 dims mismatch");
+    assert_eq!(vx2.dims(), n, "vx2 dims mismatch");
+    assert_eq!(vy2.dims(), n, "vy2 dims mismatch");
+    assert_eq!(vz2.dims(), n, "vz2 dims mismatch");
+    step_region_windowed(
+        p,
+        vx,
+        vy,
+        vz,
+        prm,
+        region,
+        p2.as_mut_slice(),
+        vx2.as_mut_slice(),
+        vy2.as_mut_slice(),
+        vz2.as_mut_slice(),
+        0,
+    );
+}
+
+/// As [`step_region`], but the outputs are *windows* of the full output
+/// arrays starting at flat index `out_start` and covering at least the
+/// region's rows. Disjoint regions touch disjoint windows — see
+/// [`crate::physics::parallel`], which hands each worker `split_at_mut`
+/// partitions of the outputs.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn step_region_windowed(
+    p: &Field3D,
+    vx: &Field3D,
+    vy: &Field3D,
+    vz: &Field3D,
+    prm: &WaveParams,
+    region: Region,
+    p2_out: &mut [f64],
+    vx2_out: &mut [f64],
+    vy2_out: &mut [f64],
+    vz2_out: &mut [f64],
+    out_start: usize,
+) {
+    let n = p.dims();
+    assert_eq!(vx.dims(), n, "vx dims mismatch");
+    assert_eq!(vy.dims(), n, "vy dims mismatch");
+    assert_eq!(vz.dims(), n, "vz dims mismatch");
+    assert!(region.strictly_interior_to(n), "region {region:?} not interior to {n:?}");
+
+    let [ox, oy, oz] = region.offset;
+    let [sx, sy, sz] = region.size;
+    let [_, ny, nz] = n;
+    let ys = nz; // +-1 in y
+    let xs = ny * nz; // +-1 in x
+    assert!((ox * ny + oy) * nz + oz >= out_start, "output window starts after the region");
+
+    let pd = p.as_slice();
+    let vxd = vx.as_slice();
+    let vyd = vy.as_slice();
+    let vzd = vz.as_slice();
+    let (rdx, rdy, rdz) = (1.0 / prm.dx, 1.0 / prm.dy, 1.0 / prm.dz);
+    let dtr = prm.dt / prm.rho;
+    let dtk = prm.dt * prm.bulk();
+
+    for ix in ox..ox + sx {
+        for iy in oy..oy + sy {
+            let base = (ix * ny + iy) * nz + oz;
+            for iz in 0..sz {
+                let c = base + iz;
+                let p_c = pd[c];
+                // outgoing faces (stored at this cell): v_{i+1/2}
+                let vxp = vxd[c] - dtr * (pd[c + xs] - p_c) * rdx;
+                let vyp = vyd[c] - dtr * (pd[c + ys] - p_c) * rdy;
+                let vzp = vzd[c] - dtr * (pd[c + 1] - p_c) * rdz;
+                // incoming faces v_{i-1/2}, recomputed inline from the
+                // previous-step state (kernel-local staggered fluxes)
+                let vxm = vxd[c - xs] - dtr * (p_c - pd[c - xs]) * rdx;
+                let vym = vyd[c - ys] - dtr * (p_c - pd[c - ys]) * rdy;
+                let vzm = vzd[c - 1] - dtr * (p_c - pd[c - 1]) * rdz;
+                let div = (vxp - vxm) * rdx + (vyp - vym) * rdy + (vzp - vzm) * rdz;
+                let w = c - out_start;
+                vx2_out[w] = vxp;
+                vy2_out[w] = vyp;
+                vz2_out[w] = vzp;
+                p2_out[w] = p_c - dtk * div;
+            }
+        }
+    }
+}
+
+/// The Gaussian pressure-pulse initial condition: amplitude `amp` centred
+/// at the middle of the *global* domain, width `sigma2` (squared, in
+/// global-fraction units). Takes global coords so every rank builds its
+/// view of the same global field. Velocities start at zero.
+pub fn pressure_pulse(
+    dims: [usize; 3],
+    global_of: impl Fn(usize, usize, usize) -> [f64; 3],
+    amp: f64,
+    sigma2: f64,
+) -> Field3D {
+    Field3D::from_fn(dims, |ix, iy, iz| {
+        let [gx, gy, gz] = global_of(ix, iy, iz); // in [0,1]^3
+        let r2 = (gx - 0.5).powi(2) + (gy - 0.5).powi(2) + (gz - 0.5).powi(2);
+        amp * (-r2 / sigma2).exp()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand_state(dims: [usize; 3], seed: u64) -> (Field3D, Field3D, Field3D, Field3D) {
+        let mut rng = Rng::new(seed);
+        let p = Field3D::from_fn(dims, |_, _, _| 0.5 * rng.normal());
+        let vx = Field3D::from_fn(dims, |_, _, _| 0.1 * rng.normal());
+        let vy = Field3D::from_fn(dims, |_, _, _| 0.1 * rng.normal());
+        let vz = Field3D::from_fn(dims, |_, _, _| 0.1 * rng.normal());
+        (p, vx, vy, vz)
+    }
+
+    fn params() -> WaveParams {
+        WaveParams { dt: 1e-3, dx: 0.1, dy: 0.12, dz: 0.09, c: 1.3, rho: 0.8 }
+    }
+
+    /// Naive per-cell implementation with explicit staggered face arrays,
+    /// mirroring the textbook formulation, to validate the fused loop.
+    #[allow(clippy::too_many_arguments)]
+    fn step_naive(
+        p: &Field3D,
+        vx: &Field3D,
+        vy: &Field3D,
+        vz: &Field3D,
+        prm: &WaveParams,
+        p2: &mut Field3D,
+        vx2: &mut Field3D,
+        vy2: &mut Field3D,
+        vz2: &mut Field3D,
+    ) {
+        let [nx, ny, nz] = p.dims();
+        let dtr = prm.dt / prm.rho;
+        let dtk = prm.dt * prm.bulk();
+        // new face velocities everywhere they are defined
+        let nvx = |i: usize, j: usize, l: usize| {
+            vx.get(i, j, l) - dtr * (p.get(i + 1, j, l) - p.get(i, j, l)) / prm.dx
+        };
+        let nvy = |i: usize, j: usize, l: usize| {
+            vy.get(i, j, l) - dtr * (p.get(i, j + 1, l) - p.get(i, j, l)) / prm.dy
+        };
+        let nvz = |i: usize, j: usize, l: usize| {
+            vz.get(i, j, l) - dtr * (p.get(i, j, l + 1) - p.get(i, j, l)) / prm.dz
+        };
+        for i in 1..nx - 1 {
+            for j in 1..ny - 1 {
+                for l in 1..nz - 1 {
+                    let div = (nvx(i, j, l) - nvx(i - 1, j, l)) / prm.dx
+                        + (nvy(i, j, l) - nvy(i, j - 1, l)) / prm.dy
+                        + (nvz(i, j, l) - nvz(i, j, l - 1)) / prm.dz;
+                    vx2.set(i, j, l, nvx(i, j, l));
+                    vy2.set(i, j, l, nvy(i, j, l));
+                    vz2.set(i, j, l, nvz(i, j, l));
+                    p2.set(i, j, l, p.get(i, j, l) - dtk * div);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_loop_matches_naive() {
+        let dims = [9, 8, 10];
+        let (p, vx, vy, vz) = rand_state(dims, 1);
+        let prm = params();
+        let (mut ap, mut avx, mut avy, mut avz) =
+            (p.clone(), vx.clone(), vy.clone(), vz.clone());
+        let (mut bp, mut bvx, mut bvy, mut bvz) =
+            (p.clone(), vx.clone(), vy.clone(), vz.clone());
+        step(&p, &vx, &vy, &vz, &prm, &mut ap, &mut avx, &mut avy, &mut avz);
+        step_naive(&p, &vx, &vy, &vz, &prm, &mut bp, &mut bvx, &mut bvy, &mut bvz);
+        assert!(ap.max_abs_diff(&bp) < 1e-13, "p {}", ap.max_abs_diff(&bp));
+        assert!(avx.max_abs_diff(&bvx) < 1e-14);
+        assert!(avy.max_abs_diff(&bvy) < 1e-14);
+        assert!(avz.max_abs_diff(&bvz) < 1e-14);
+    }
+
+    #[test]
+    fn uniform_pressure_is_fixed_point() {
+        // uniform p, zero v: no gradients -> nothing moves
+        let dims = [7, 7, 7];
+        let prm = params();
+        let p = Field3D::filled(dims, 0.3);
+        let v0 = Field3D::zeros(dims);
+        let (mut p2, mut vx2, mut vy2, mut vz2) =
+            (p.clone(), v0.clone(), v0.clone(), v0.clone());
+        step(&p, &v0, &v0, &v0, &prm, &mut p2, &mut vx2, &mut vy2, &mut vz2);
+        assert_eq!(p2.max_abs_diff(&p), 0.0);
+        assert_eq!(vx2.abs_max(), 0.0);
+        assert_eq!(vy2.abs_max(), 0.0);
+        assert_eq!(vz2.abs_max(), 0.0);
+    }
+
+    #[test]
+    fn region_updates_compose_to_full() {
+        let dims = [12, 10, 14];
+        let (p, vx, vy, vz) = rand_state(dims, 2);
+        let prm = params();
+        let (mut fp, mut fvx, mut fvy, mut fvz) =
+            (p.clone(), vx.clone(), vy.clone(), vz.clone());
+        step(&p, &vx, &vy, &vz, &prm, &mut fp, &mut fvx, &mut fvy, &mut fvz);
+        let (mut cp, mut cvx, mut cvy, mut cvz) =
+            (p.clone(), vx.clone(), vy.clone(), vz.clone());
+        for (o, s) in [(1usize, 3usize), (4, 4), (8, 3)] {
+            let r = Region::new([o, 1, 1], [s, 8, 12]);
+            step_region(&p, &vx, &vy, &vz, &prm, r, &mut cp, &mut cvx, &mut cvy, &mut cvz);
+        }
+        assert_eq!(fp.max_abs_diff(&cp), 0.0, "region composition must be bitwise (p)");
+        assert_eq!(fvx.max_abs_diff(&cvx), 0.0);
+        assert_eq!(fvy.max_abs_diff(&cvy), 0.0);
+        assert_eq!(fvz.max_abs_diff(&cvz), 0.0);
+    }
+
+    #[test]
+    fn boundary_untouched() {
+        let dims = [6, 6, 6];
+        let (p, vx, vy, vz) = rand_state(dims, 3);
+        let prm = params();
+        let mut p2 = Field3D::filled(dims, 42.0);
+        let mut vx2 = Field3D::filled(dims, 43.0);
+        let mut vy2 = Field3D::filled(dims, 44.0);
+        let mut vz2 = Field3D::filled(dims, 45.0);
+        step(&p, &vx, &vy, &vz, &prm, &mut p2, &mut vx2, &mut vy2, &mut vz2);
+        assert_eq!(p2.get(0, 3, 3), 42.0);
+        assert_eq!(p2.get(5, 3, 3), 42.0);
+        assert_eq!(vx2.get(3, 0, 3), 43.0);
+        assert_eq!(vy2.get(3, 3, 5), 44.0);
+        assert_eq!(vz2.get(3, 5, 3), 45.0);
+    }
+
+    /// A centred pulse propagates outward and stays stable under the CFL
+    /// dt: the centre amplitude drops, off-centre cells pick up signal, and
+    /// nothing blows up over many steps.
+    #[test]
+    fn pulse_propagates_and_stays_stable() {
+        let dims = [16, 16, 16];
+        let h = 1.0 / 15.0;
+        let prm = WaveParams::stable(1.0, h, h, h);
+        let n = 15.0;
+        let p0 = pressure_pulse(
+            dims,
+            |x, y, z| [x as f64 / n, y as f64 / n, z as f64 / n],
+            1.0,
+            0.005,
+        );
+        let v0 = Field3D::zeros(dims);
+        let (mut pa, mut pb) = (p0.clone(), p0.clone());
+        let (mut vxa, mut vxb) = (v0.clone(), v0.clone());
+        let (mut vya, mut vyb) = (v0.clone(), v0.clone());
+        let (mut vza, mut vzb) = (v0.clone(), v0.clone());
+        let centre0 = pa.get(8, 8, 8);
+        let probe0 = pa.get(3, 8, 8).abs();
+        for _ in 0..60 {
+            step(&pa, &vxa, &vya, &vza, &prm, &mut pb, &mut vxb, &mut vyb, &mut vzb);
+            std::mem::swap(&mut pa, &mut pb);
+            std::mem::swap(&mut vxa, &mut vxb);
+            std::mem::swap(&mut vya, &mut vyb);
+            std::mem::swap(&mut vza, &mut vzb);
+        }
+        assert!(pa.all_finite() && vxa.all_finite() && vya.all_finite() && vza.all_finite());
+        assert!(pa.abs_max() < 2.0, "CFL-stable amplitude, got {}", pa.abs_max());
+        assert!(pa.get(8, 8, 8) < centre0, "pulse centre must decay as the wave leaves");
+        assert!(pa.get(3, 8, 8).abs() > probe0, "wavefront must reach off-centre cells");
+    }
+
+    #[test]
+    fn stable_dt_formula() {
+        let prm = WaveParams::stable(2.0, 0.1, 0.1, 0.1);
+        let s = (3.0f64 / 0.01).sqrt();
+        assert!((prm.dt - 0.4 / (2.0 * s)).abs() < 1e-15);
+        assert_eq!(prm.bulk(), 2.0 * 2.0);
+        assert_eq!(prm.scalar_vec(), vec![prm.dt, 0.1, 0.1, 0.1, 2.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not interior")]
+    fn non_interior_region_rejected() {
+        let dims = [6, 6, 6];
+        let (p, vx, vy, vz) = rand_state(dims, 4);
+        let prm = params();
+        let (mut p2, mut vx2, mut vy2, mut vz2) =
+            (p.clone(), vx.clone(), vy.clone(), vz.clone());
+        step_region(
+            &p,
+            &vx,
+            &vy,
+            &vz,
+            &prm,
+            Region::new([0, 1, 1], [2, 2, 2]),
+            &mut p2,
+            &mut vx2,
+            &mut vy2,
+            &mut vz2,
+        );
+    }
+}

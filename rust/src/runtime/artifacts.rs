@@ -11,9 +11,9 @@ pub struct ProgramSpec {
     pub name: String,
     /// HLO text file, relative to the artifact dir.
     pub file: String,
-    /// "diffusion" | "twophase"
+    /// "diffusion" | "twophase" | "wave"
     pub app: String,
-    /// "full" or "region:<name>"
+    /// "full" or `region:<name>`
     pub kind: String,
     /// local array shape the program was lowered for
     pub shape: [usize; 3],

@@ -10,7 +10,7 @@
 
 use std::collections::HashMap;
 
-use crate::physics::{parallel, DiffusionParams, Field3D, Region, TwophaseParams};
+use crate::physics::{parallel, DiffusionParams, Field3D, Region, TwophaseParams, WaveParams};
 
 use super::artifacts::{ArtifactStore, ProgramSpec};
 use super::pjrt::PjrtContext;
@@ -182,6 +182,9 @@ pub struct TwophaseExecutor {
     pjrt: Option<PjrtPrograms>,
     /// Worker threads for the native backend (1 = serial).
     threads: usize,
+    /// Reusable mobility-ring scratch for the serial native path (keeps
+    /// the steady-state step heap-allocation-free).
+    scratch: Vec<f64>,
 }
 
 impl TwophaseExecutor {
@@ -191,7 +194,7 @@ impl TwophaseExecutor {
 
     /// Native backend computing big regions on `threads` workers.
     pub fn native_threads(threads: usize) -> Self {
-        TwophaseExecutor { pjrt: None, threads: threads.max(1) }
+        TwophaseExecutor { pjrt: None, threads: threads.max(1), scratch: Vec::new() }
     }
 
     pub fn pjrt(
@@ -202,6 +205,7 @@ impl TwophaseExecutor {
         Ok(TwophaseExecutor {
             pjrt: Some(PjrtPrograms::load("twophase", shape, widths, store)?),
             threads: 1,
+            scratch: Vec::new(),
         })
     }
 
@@ -225,7 +229,16 @@ impl TwophaseExecutor {
     ) -> anyhow::Result<()> {
         match &mut self.pjrt {
             None => {
-                parallel::twophase_step_region(self.threads, pe, phi, p, region, pe2, phi2);
+                parallel::twophase_step_region_scratch(
+                    self.threads,
+                    pe,
+                    phi,
+                    p,
+                    region,
+                    pe2,
+                    phi2,
+                    &mut self.scratch,
+                );
                 Ok(())
             }
             Some(progs) => progs.run_region(
@@ -234,6 +247,87 @@ impl TwophaseExecutor {
                 &[pe, phi],
                 &p.scalar_vec(),
                 &mut [pe2, phi2],
+            ),
+        }
+    }
+}
+
+/// Executor for the 3-D acoustic wave step (velocity–pressure staggered).
+pub struct WaveExecutor {
+    pjrt: Option<PjrtPrograms>,
+    /// Worker threads for the native backend (1 = serial).
+    threads: usize,
+}
+
+impl WaveExecutor {
+    pub fn native() -> Self {
+        Self::native_threads(1)
+    }
+
+    /// Native backend computing big regions on `threads` workers.
+    pub fn native_threads(threads: usize) -> Self {
+        WaveExecutor { pjrt: None, threads: threads.max(1) }
+    }
+
+    /// PJRT backend. No wave artifacts ship in the default set yet, so this
+    /// surfaces the store's standard "re-run `make artifacts` / use
+    /// --backend native" guidance until aot.py lowers the wave step.
+    pub fn pjrt(
+        shape: [usize; 3],
+        widths: Option<[usize; 3]>,
+        store: &ArtifactStore,
+    ) -> anyhow::Result<Self> {
+        Ok(WaveExecutor {
+            pjrt: Some(PjrtPrograms::load("wave", shape, widths, store)?),
+            threads: 1,
+        })
+    }
+
+    pub fn backend(&self) -> ExecBackend {
+        if self.pjrt.is_some() {
+            ExecBackend::Pjrt
+        } else {
+            ExecBackend::Native
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_region(
+        &mut self,
+        p: &Field3D,
+        vx: &Field3D,
+        vy: &Field3D,
+        vz: &Field3D,
+        prm: &WaveParams,
+        region: Region,
+        p2: &mut Field3D,
+        vx2: &mut Field3D,
+        vy2: &mut Field3D,
+        vz2: &mut Field3D,
+    ) -> anyhow::Result<()> {
+        match &mut self.pjrt {
+            None => {
+                parallel::wave_step_region(
+                    self.threads,
+                    p,
+                    vx,
+                    vy,
+                    vz,
+                    prm,
+                    region,
+                    p2,
+                    vx2,
+                    vy2,
+                    vz2,
+                );
+                Ok(())
+            }
+            Some(progs) => progs.run_region(
+                region,
+                Region::interior(p.dims()),
+                &[p, vx, vy, vz],
+                &prm.scalar_vec(),
+                &mut [p2, vx2, vy2, vz2],
             ),
         }
     }

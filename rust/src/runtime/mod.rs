@@ -21,7 +21,7 @@ pub mod executor;
 pub mod pjrt;
 
 pub use artifacts::{ArtifactStore, ProgramSpec};
-pub use executor::{DiffusionExecutor, ExecBackend, TwophaseExecutor};
+pub use executor::{DiffusionExecutor, ExecBackend, TwophaseExecutor, WaveExecutor};
 pub use pjrt::PjrtContext;
 
 /// The loaded artifact store, when both it and a PJRT client are usable;

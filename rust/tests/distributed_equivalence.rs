@@ -36,6 +36,35 @@ fn twophase_all_small_topologies() {
     }
 }
 
+/// The acceptance gate for the third workload: the acoustic wave passes
+/// the full N-rank vs 1-rank bitwise check on 8 simulated ranks — plain,
+/// with hidden communication, and with the threaded compute backend.
+#[test]
+fn wave_distributed_equivalence_8_ranks() {
+    let plain = base(AppKind::Wave, 8, 9, 6);
+    let report = validate_equivalence(&plain).unwrap();
+    assert!(report.contains("PASS"), "plain: {report}");
+
+    let hidden = Config { hide: Some(HideWidths([2, 2, 2])), ..plain.clone() };
+    let report = validate_equivalence(&hidden).unwrap();
+    assert!(report.contains("PASS"), "hidden: {report}");
+
+    let threaded = Config { compute_threads: 2, ..hidden };
+    let report = validate_equivalence(&threaded).unwrap();
+    assert!(report.contains("PASS"), "hidden+threads: {report}");
+}
+
+#[test]
+fn wave_twelve_ranks_anisotropic() {
+    let cfg = Config {
+        local: [10, 8, 7],
+        dims: [3, 2, 2],
+        ..base(AppKind::Wave, 12, 8, 5)
+    };
+    let report = validate_equivalence(&cfg).unwrap();
+    assert!(report.contains("PASS"), "{report}");
+}
+
 #[test]
 fn diffusion_hidden_communication_12_ranks() {
     let cfg = Config {
@@ -50,8 +79,8 @@ fn diffusion_hidden_communication_12_ranks() {
 fn staged_path_equals_rdma_path() {
     let rdma = base(AppKind::Diffusion, 8, 10, 6);
     let staged = Config { path: TransferPath::Staged, pipeline_chunks: 3, ..rdma.clone() };
-    let a = run_ranks(&rdma, |ctx| Ok(diffusion::run(&ctx)?.field.into_vec())).unwrap();
-    let b = run_ranks(&staged, |ctx| Ok(diffusion::run(&ctx)?.field.into_vec())).unwrap();
+    let a = run_ranks(&rdma, |ctx| Ok(diffusion::run(&ctx)?.into_primary().into_vec())).unwrap();
+    let b = run_ranks(&staged, |ctx| Ok(diffusion::run(&ctx)?.into_primary().into_vec())).unwrap();
     assert_eq!(a, b, "transfer path must not affect results");
 }
 

@@ -25,13 +25,14 @@ fn cfg(app: AppKind, backend: Backend, hide: Option<HideWidths>) -> Config {
 }
 
 fn run_diffusion(c: &Config) -> Vec<Vec<f64>> {
-    run_ranks(c, |ctx| Ok(diffusion::run(&ctx)?.field.into_vec())).unwrap()
+    run_ranks(c, |ctx| Ok(diffusion::run(&ctx)?.into_primary().into_vec())).unwrap()
 }
 
 fn run_twophase(c: &Config) -> Vec<(Vec<f64>, Vec<f64>)> {
     run_ranks(c, |ctx| {
         let r = twophase::run(&ctx)?;
-        Ok((r.field.into_vec(), r.extra.unwrap().into_vec()))
+        let phi = r.field("phi").expect("phi reported").clone().into_vec();
+        Ok((r.into_primary().into_vec(), phi))
     })
     .unwrap()
 }

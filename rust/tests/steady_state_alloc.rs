@@ -1,0 +1,194 @@
+//! The step-level zero-allocation contract: after warmup, the full
+//! `TimeLoop` step — compute, halo exchange (plain *and* overlapped), swap
+//! — performs **zero heap allocations** on the native serial backend. PR 1
+//! established this inside the halo engine (`HaloEngine::allocations`);
+//! the `StencilApp` redesign extends it through the whole steady-state
+//! step: the schedule ([`RegionSet`]) is memoized per run, the exchange
+//! selects fields via a stack-built `&mut [&mut Field3D]` (no per-step
+//! `Vec`), the overlapped start re-enqueues one shared job `Arc`, and the
+//! two-phase mobility ring lives in an executor-owned scratch buffer.
+//!
+//! Measured with a counting global allocator, so *anything* that touches
+//! the heap between the warmup barrier and the final barrier fails the
+//! test — engine, transport, scheduler, driver alike. This file contains
+//! exactly one #[test] so no concurrent test in the same binary can
+//! pollute the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use igg::coordinator::config::{AppKind, Config};
+use igg::coordinator::launcher::RankCtx;
+use igg::coordinator::timeloop::{self, Schedule, StencilApp};
+use igg::coordinator::apps::{diffusion::Diffusion, twophase::Twophase, wave::Wave};
+use igg::mpisim::Network;
+use igg::grid::GlobalGrid;
+use igg::overlap::HideWidths;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: delegates to `System` verbatim; only adds a relaxed counter.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const WARMUP: usize = 5;
+const STEADY: usize = 10;
+
+/// Run one scenario: `nranks` rank threads drive `timeloop::step` (the
+/// exact loop body `TimeLoop::run` executes) for WARMUP steps, rendezvous,
+/// snapshot the global allocation counter, run STEADY more steps on every
+/// rank, rendezvous again, and assert the counter did not move.
+fn assert_steady_state_alloc_free<A>(label: &'static str, cfg: Config)
+where
+    A: StencilApp + Send + 'static,
+{
+    let nranks = cfg.nranks;
+    let net = Network::new(nranks);
+    let before = Arc::new(AtomicUsize::new(0));
+    let after = Arc::new(AtomicUsize::new(0));
+    let handles: Vec<_> = (0..nranks)
+        .map(|r| {
+            let comm = net.comm(r);
+            let cfg = cfg.clone();
+            let before = Arc::clone(&before);
+            let after = Arc::clone(&after);
+            std::thread::Builder::new()
+                .name(format!("alloc-rank-{r}"))
+                .spawn(move || {
+                    let grid = GlobalGrid::init(comm, cfg.local, cfg.grid_options()).unwrap();
+                    let ctx = RankCtx { grid, cfg };
+                    let schedule = Schedule::plan(&ctx.cfg, &ctx.grid).unwrap();
+                    let mut app = A::init(&ctx).unwrap();
+
+                    for _ in 0..WARMUP {
+                        timeloop::step(&ctx.grid, &schedule, &mut app).unwrap();
+                    }
+                    let engine_warm = ctx.grid.halo_allocations();
+                    ctx.grid.comm().barrier(); // all ranks warmed
+                    if r == 0 {
+                        before.store(ALLOCS.load(Ordering::SeqCst), Ordering::SeqCst);
+                    }
+                    ctx.grid.comm().barrier(); // counter snapshotted
+
+                    for _ in 0..STEADY {
+                        timeloop::step(&ctx.grid, &schedule, &mut app).unwrap();
+                    }
+
+                    ctx.grid.comm().barrier(); // all ranks done stepping
+                    if r == 0 {
+                        after.store(ALLOCS.load(Ordering::SeqCst), Ordering::SeqCst);
+                    }
+                    // hold every rank until the counter is read, so no
+                    // thread-exit bookkeeping races it; all assertions
+                    // happen on the main thread after join (a panic here
+                    // would strand the other ranks in the barrier)
+                    ctx.grid.comm().barrier();
+                    (engine_warm, ctx.grid.halo_allocations())
+                })
+                .expect("spawn rank thread")
+        })
+        .collect();
+    for (r, h) in handles.into_iter().enumerate() {
+        let (engine_warm, engine_after) = h.join().unwrap();
+        assert_eq!(
+            engine_after, engine_warm,
+            "{label}: engine allocated in steady state (rank {r})"
+        );
+    }
+    let delta = after.load(Ordering::SeqCst) - before.load(Ordering::SeqCst);
+    assert_eq!(
+        delta, 0,
+        "{label}: {delta} heap allocations during {STEADY} steady-state steps \
+         across {nranks} ranks (want 0)"
+    );
+}
+
+#[test]
+fn timeloop_steady_state_is_allocation_free() {
+    // Plain schedule, synchronous exchange, 2 ranks actually exchanging.
+    assert_steady_state_alloc_free::<Diffusion>(
+        "diffusion/plain/2 ranks",
+        Config {
+            app: AppKind::Diffusion,
+            nranks: 2,
+            local: [12, 12, 12],
+            nt: 1,
+            ..Default::default()
+        },
+    );
+
+    // Overlapped schedule: boundary slabs + shared-job stream exchange.
+    assert_steady_state_alloc_free::<Diffusion>(
+        "diffusion/hide/2 ranks",
+        Config {
+            app: AppKind::Diffusion,
+            nranks: 2,
+            local: [12, 12, 12],
+            nt: 1,
+            hide: Some(HideWidths([3, 2, 2])),
+            ..Default::default()
+        },
+    );
+
+    // Single rank with hide widths: prunes to an inner-only schedule but
+    // still runs the full overlapped start/finish machinery.
+    assert_steady_state_alloc_free::<Diffusion>(
+        "diffusion/hide/1 rank",
+        Config {
+            app: AppKind::Diffusion,
+            nranks: 1,
+            local: [12, 12, 12],
+            nt: 1,
+            hide: Some(HideWidths([2, 2, 2])),
+            ..Default::default()
+        },
+    );
+
+    // Two-phase: the mobility-ring scratch must come from the executor's
+    // reusable buffer, not a per-region Vec.
+    assert_steady_state_alloc_free::<Twophase>(
+        "twophase/hide/2 ranks",
+        Config {
+            app: AppKind::Twophase,
+            nranks: 2,
+            local: [12, 12, 12],
+            nt: 1,
+            hide: Some(HideWidths([2, 2, 2])),
+            ..Default::default()
+        },
+    );
+
+    // Acoustic wave: four halo-exchanged fields through the same path.
+    assert_steady_state_alloc_free::<Wave>(
+        "wave/hide/2 ranks",
+        Config {
+            app: AppKind::Wave,
+            nranks: 2,
+            local: [12, 12, 12],
+            nt: 1,
+            hide: Some(HideWidths([2, 2, 2])),
+            ..Default::default()
+        },
+    );
+}
