@@ -8,6 +8,14 @@
 //! shared. The same program then runs on 1 or 8 (or N) simulated devices.
 //!
 //!     cargo run --release --example quickstart
+//!
+//! The run below uses the ideal (zero-cost) transport. To measure under a
+//! realistic interconnect set `net` in the `Config` (or `--net` on the
+//! CLI): `NetModel::aries_scaled(64.0)` reproduces the paper's
+//! comm/compute ratio on this testbed, and `.with_serial_nic()` (CLI
+//! `--net aries:64,serial-nic`) additionally serializes each rank's send
+//! injections through its NIC — the honest setting for quoting
+//! hide-communication speedups. See EXPERIMENTS.md §Netmodel.
 
 use igg::prelude::*;
 

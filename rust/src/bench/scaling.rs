@@ -263,7 +263,7 @@ mod tests {
 
     #[test]
     fn hiding_beats_no_hiding_on_slow_networks() {
-        let slow = NetModel { latency_s: 1e-4, bw_bytes_per_s: 1e9 };
+        let slow = NetModel::new(1e-4, 1e9);
         let e_plain = model(false, slow).efficiency(27).unwrap();
         let e_hide = model(true, slow).efficiency(27).unwrap();
         assert!(e_hide > e_plain, "hide {e_hide} <= plain {e_plain}");
@@ -271,7 +271,7 @@ mod tests {
 
     #[test]
     fn efficiency_monotone_in_neighbor_count() {
-        let net = NetModel { latency_s: 1e-5, bw_bytes_per_s: 5e9 };
+        let net = NetModel::new(1e-5, 5e9);
         let m = model(false, net);
         let e2 = m.efficiency(2).unwrap(); // 1 exchanged dim
         let e8 = m.efficiency(8).unwrap(); // 3 exchanged dims
@@ -282,7 +282,7 @@ mod tests {
 
     #[test]
     fn hidden_efficiency_saturates_when_comm_fits_inner() {
-        let net = NetModel { latency_s: 1e-6, bw_bytes_per_s: 10e9 };
+        let net = NetModel::new(1e-6, 10e9);
         let m = model(true, net);
         // t_halo ~ 2*(1e-6 + 8192/1e10 + 1e-6)*3 ~ 1.7e-5 << t_inner 8e-4
         let e = m.efficiency(2197).unwrap();

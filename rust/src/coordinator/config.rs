@@ -85,7 +85,10 @@ impl Default for Config {
             path: TransferPath::Rdma,
             pipeline_chunks: 4,
             compute_threads: 1,
-            net: NetModel::ideal(),
+            // ideal unless the IGG_NET environment variable selects a
+            // preset (the CI contended matrix leg runs the whole suite
+            // with IGG_NET=aries,serial-nic)
+            net: NetModel::default_preset(),
             seed: 42,
             lx: 1.0,
         }
@@ -208,6 +211,7 @@ impl Config {
                     Json::Null
                 },
             ),
+            ("net_contended", Json::Bool(self.net.is_contended())),
             ("seed", Json::Num(self.seed as f64)),
         ])
     }
@@ -287,7 +291,17 @@ mod tests {
         let j = c.to_json();
         assert_eq!(j.get("app").unwrap().as_str().unwrap(), "diffusion");
         assert_eq!(j.get("net_latency_s").unwrap().as_f64().unwrap(), 1.5e-6);
+        assert_eq!(j.get("net_contended").unwrap().as_bool(), Some(false));
         let parsed = Json::from_str(&j.to_string()).unwrap();
         assert_eq!(parsed.get_usize_list("local").unwrap(), vec![32, 32, 32]);
+    }
+
+    #[test]
+    fn contended_net_flag_parses_and_reports() {
+        let c = parse(&["--net", "aries:8,serial-nic"]).unwrap();
+        assert!(c.net.is_contended());
+        assert_eq!(c.net.latency_s, 1.5e-6 * 8.0);
+        assert_eq!(c.to_json().get("net_contended").unwrap().as_bool(), Some(true));
+        assert!(parse(&["--net", "aries,bogus-nic"]).is_err());
     }
 }

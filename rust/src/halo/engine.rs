@@ -14,7 +14,12 @@
 //! * **Posted sends, drained later** — within each dimension every send is
 //!   posted (non-blocking) before the first wait of any kind; the collected
 //!   [`SendRequest`]s are completed in a drain phase after the receives, so
-//!   all modeled injections and transits overlap.
+//!   the modeled injections overlap the receive transits. Whether the
+//!   injections also overlap *each other* is the network model's call:
+//!   fully under `NicMode::Independent`, serialized through the rank's NIC
+//!   under `NicMode::SerialNic` — the engine's posting discipline is
+//!   optimal either way, the drain simply observes later completion
+//!   instants under contention.
 //! * **Payload recycling** — the vectors that travel through the network
 //!   come from the pool's size-keyed payload free list and every received
 //!   payload is recycled back into it ([`BufRole::Payload`]); halo traffic
@@ -450,8 +455,22 @@ impl Drop for PendingHalo {
 ///
 /// Per dimension: post every receive, post every send (packing straight
 /// into pooled payload buffers — no waits anywhere in this phase), then
-/// wait+unpack the receives, and finally drain the send requests. All
-/// modeled injections and transits of a dimension therefore overlap.
+/// wait+unpack the receives, and finally drain the send requests. The
+/// modeled injections and transits of a dimension therefore overlap (the
+/// injections with each other only as far as the NIC contention model
+/// allows).
+///
+/// On a receive error, every posted receive and send of the erroring
+/// dimension is drained before the error is returned — nothing of later
+/// dimensions has been posted yet (dimensions run sequentially), so no
+/// request this update posted is ever abandoned with its payload left to
+/// FIFO-match a same-tag receive of a later update. Scope of the
+/// guarantee: it makes continuing after an error exact on topologies with
+/// a single exchanged dimension (the regression tests' shape). On
+/// multi-dimension rank grids a *peer* that cleanly finished this
+/// dimension will have deposited its next-dimension planes before it
+/// blocks waiting for ours — recovering there additionally needs an
+/// application-level agreement to abandon the update on every rank.
 ///
 /// SAFETY (caller): no other thread may access the boundary planes of the
 /// fields behind `raws` during the call; the field allocations must outlive
@@ -516,17 +535,43 @@ unsafe fn exchange(
 
         // Phase 3: wait + unpack receives (pipelined recv+h2d for the
         // staged path); received payloads are recycled into the pool.
+        //
+        // Error hygiene: on a receive error the remaining posted receives
+        // are still drained (payloads recycled) before the error surfaces —
+        // an abandoned posted receive would leave its matched payload in
+        // the mailbox, where it would FIFO-match the same-tag receive of
+        // the *next* update if the caller continued after the error. The
+        // drain blocks until each matching message arrives; every live
+        // peer posts all its sends of a dimension before its first wait,
+        // so these waits are bounded. A peer that dies mid-update leaves
+        // the drain blocked — but a dead rank hangs any later receive or
+        // collective in this substrate anyway; rank death is fatal to the
+        // run, not something the error path recovers from.
+        let mut recv_err: Option<anyhow::Error> = None;
         {
             let mut reqs = scratch.recv_reqs.drain(..);
             for &(i, n_chunks) in &scratch.recv_ops {
-                recv_plane(&ops[i], &mut reqs, n_chunks, raws, path, device, &mut pool_g)?;
+                match recv_plane(&ops[i], &mut reqs, n_chunks, raws, path, device, &mut pool_g) {
+                    Ok(()) => {}
+                    Err(e) => {
+                        recv_err = Some(e);
+                        break;
+                    }
+                }
+            }
+            for req in reqs {
+                pool_g.restore_payload(req.wait());
             }
         }
 
         // Phase 4: drain the posted sends (completes their modeled
-        // injection; usually already elapsed under the receive waits).
+        // injection; usually already elapsed under the receive waits) —
+        // also on the error path, so no send request is abandoned.
         for req in scratch.sends.drain(..) {
             req.wait();
+        }
+        if let Some(e) = recv_err {
+            return Err(e);
         }
     }
     let mut st = stats.lock().unwrap();
@@ -617,35 +662,50 @@ unsafe fn recv_plane(
         TransferPath::Rdma => {
             debug_assert_eq!(n_chunks, 1);
             let payload = reqs.next().expect("one posted receive per rdma op").wait();
+            let got = payload.len();
+            if got == op.plane_cells {
+                unpack_plane_raw(data, rf.dims, op.dim, op.recv_plane, &payload);
+            }
+            // recycled even on mismatch: the bad payload must not linger
+            pool.restore_payload(payload);
             anyhow::ensure!(
-                payload.len() == op.plane_cells,
-                "halo message size mismatch: got {}, want {} (field {}, dim {})",
-                payload.len(),
+                got == op.plane_cells,
+                "halo message size mismatch: got {got}, want {} (field {}, dim {})",
                 op.plane_cells,
                 op.field,
                 op.dim
             );
-            unpack_plane_raw(data, rf.dims, op.dim, op.recv_plane, &payload);
-            pool.restore_payload(payload);
         }
         TransferPath::Staged => {
             let side = usize::from(op.dir < 0); // dir -1 receives into the high plane
             let key = BufKey { field: op.field, dim: op.dim, side, role: BufRole::Recv };
             let mut dev_buf = pool.checkout(key, op.plane_cells);
+            // On a chunk-size mismatch the remaining chunks of this op are
+            // still waited and recycled (and the staging buffer restored)
+            // before the error is returned, keeping the drain accounting
+            // exact for the caller's error-path cleanup.
+            let mut res = Ok(());
             for c in 0..n_chunks {
                 let (lo, hi) = chunk_range(op.plane_cells, n_chunks, c);
                 let payload = reqs.next().expect("one posted receive per chunk").wait();
-                anyhow::ensure!(
-                    payload.len() == hi - lo,
-                    "halo chunk size mismatch: got {}, want {}",
-                    payload.len(),
-                    hi - lo
-                );
-                device.h2d(&payload, &mut dev_buf[lo..hi]);
+                if res.is_ok() {
+                    if payload.len() == hi - lo {
+                        device.h2d(&payload, &mut dev_buf[lo..hi]);
+                    } else {
+                        res = Err(anyhow::anyhow!(
+                            "halo chunk size mismatch: got {}, want {}",
+                            payload.len(),
+                            hi - lo
+                        ));
+                    }
+                }
                 pool.restore_payload(payload);
             }
-            unpack_plane_raw(data, rf.dims, op.dim, op.recv_plane, &dev_buf);
+            if res.is_ok() {
+                unpack_plane_raw(data, rf.dims, op.dim, op.recv_plane, &dev_buf);
+            }
             pool.restore(key, dev_buf);
+            res?;
         }
     }
     Ok(())
@@ -962,6 +1022,147 @@ mod tests {
             }
             assert_eq!(g.halo_allocations(), warm, "overlapped path must reuse pooled buffers");
         });
+    }
+
+    /// Error hygiene (rdma path): a wrong-size message matching a posted
+    /// halo receive fails the exchange, but the failure drains every posted
+    /// request of the dimension first. On this single-exchanged-dimension
+    /// topology (2 ranks along x) that makes continuing exact: the
+    /// mailboxes end clean and the next update matches only its own
+    /// messages, restoring the global marker bitwise. (On multi-dimension
+    /// rank grids, peers that finished the dimension cleanly have already
+    /// deposited next-dimension traffic — see the scope note on
+    /// `exchange`.)
+    #[test]
+    fn receive_error_drains_requests_and_leaves_mailbox_clean() {
+        // Tags for (field 0, dim 0) on this topology, per ExchangeOp::tag:
+        // dir -1 (what rank 0 receives from rank 1) = 0; dir +1 = MAX_CHUNKS.
+        let tag_down = 0u64;
+        let tag_up = MAX_CHUNKS as u64;
+        let net = Network::new(2);
+        let handles: Vec<_> = (0..2)
+            .map(|r| {
+                let comm = net.comm(r);
+                let net = std::sync::Arc::clone(&net);
+                std::thread::spawn(move || {
+                    let g = GlobalGrid::init(comm, [6, 6, 6], GridOptions::default()).unwrap();
+                    assert_eq!(g.dims(), [2, 1, 1], "test assumes an x-split pair");
+                    let want = marker(&g);
+
+                    // Round A: clean warm-up (plan + pooled buffers).
+                    let mut f = want.clone();
+                    g.update_halo(&mut [&mut f]).unwrap();
+
+                    // Round B: rank 1 impersonates a broken peer — it sends
+                    // a 5-cell payload where rank 0's posted receive expects
+                    // a 36-cell plane, and absorbs rank 0's genuine send.
+                    if g.rank() == 0 {
+                        let mut f = want.clone();
+                        let err = g.update_halo(&mut [&mut f]).unwrap_err();
+                        assert!(
+                            format!("{err:#}").contains("size mismatch"),
+                            "unexpected error: {err:#}"
+                        );
+                    } else {
+                        g.comm().send(0, tag_down, &[-5.0; 5]);
+                        let absorbed = g.comm().recv(0, tag_up);
+                        assert_eq!(absorbed.len(), 36, "rank 0 posted its send before erroring");
+                    }
+                    g.comm().barrier();
+                    assert_eq!(
+                        net.mailbox_depth(g.rank()),
+                        0,
+                        "rank {}'s mailbox must be clean after the failed exchange",
+                        g.rank()
+                    );
+
+                    // Round C: a normal update must recover — nothing stale
+                    // may FIFO-match, so the marker is restored bitwise.
+                    let mut f = want.clone();
+                    let side = if g.rank() == 0 { 5 } else { 0 };
+                    for y in 0..6 {
+                        for z in 0..6 {
+                            f.set(side, y, z, -1.0);
+                        }
+                    }
+                    g.update_halo(&mut [&mut f]).unwrap();
+                    assert_eq!(f.max_abs_diff(&want), 0.0, "post-error update must be clean");
+                    assert_eq!(net.mailbox_depth(g.rank()), 0, "mailbox clean after recovery");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    /// Error hygiene (staged path): a chunk-size mismatch on the first
+    /// chunk still waits and recycles the op's remaining chunks and every
+    /// other posted request before the error returns.
+    #[test]
+    fn staged_receive_error_drains_remaining_chunks() {
+        let chunks = 4usize;
+        let tag_down = 0u64; // chunk c of (field 0, dim 0, dir -1) = c
+        let tag_up = MAX_CHUNKS as u64;
+        let net = Network::new(2);
+        let handles: Vec<_> = (0..2)
+            .map(|r| {
+                let comm = net.comm(r);
+                let net = std::sync::Arc::clone(&net);
+                std::thread::spawn(move || {
+                    let opts = GridOptions {
+                        path: TransferPath::Staged,
+                        pipeline_chunks: chunks,
+                        ..Default::default()
+                    };
+                    let g = GlobalGrid::init(comm, [6, 6, 6], opts).unwrap();
+                    let want = marker(&g);
+                    let mut f = want.clone();
+                    g.update_halo(&mut [&mut f]).unwrap(); // warm-up
+
+                    // 36-cell plane in 4 chunks of 9: rank 1 sends a bogus
+                    // 5-cell chunk 0 and genuine 9-cell chunks 1..3.
+                    if g.rank() == 0 {
+                        let mut f = want.clone();
+                        let err = g.update_halo(&mut [&mut f]).unwrap_err();
+                        assert!(
+                            format!("{err:#}").contains("chunk size mismatch"),
+                            "unexpected error: {err:#}"
+                        );
+                    } else {
+                        g.comm().send(0, tag_down, &[-5.0; 5]);
+                        for c in 1..chunks as u64 {
+                            g.comm().send(0, tag_down + c, &[0.0; 9]);
+                        }
+                        for c in 0..chunks as u64 {
+                            let absorbed = g.comm().recv(0, tag_up + c);
+                            assert_eq!(absorbed.len(), 9);
+                        }
+                    }
+                    g.comm().barrier();
+                    assert_eq!(
+                        net.mailbox_depth(g.rank()),
+                        0,
+                        "rank {}'s mailbox must be clean after the failed staged exchange",
+                        g.rank()
+                    );
+
+                    // Recovery: bitwise-correct update afterwards.
+                    let mut f = want.clone();
+                    let side = if g.rank() == 0 { 5 } else { 0 };
+                    for y in 0..6 {
+                        for z in 0..6 {
+                            f.set(side, y, z, -1.0);
+                        }
+                    }
+                    g.update_halo(&mut [&mut f]).unwrap();
+                    assert_eq!(f.max_abs_diff(&want), 0.0, "post-error staged update clean");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

@@ -88,7 +88,13 @@
 //! * [`mpisim`] — message-passing substrate (MPI.jl stand-in): in-process
 //!   ranks, non-blocking p2p with request objects carrying deferred
 //!   (injection-modeled) send completion, Cartesian communicators,
-//!   collectives, and a calibrated interconnect timing model.
+//!   collectives, and a calibrated interconnect timing model. The model
+//!   has an opt-in shared-NIC contention mode (`--net ...,serial-nic`,
+//!   [`mpisim::NicMode::SerialNic`]): a rank's concurrently posted sends
+//!   then serialize through a per-rank busy-until instant instead of each
+//!   injecting at full bandwidth, so overlap measurements are charged a
+//!   realistic injection cost — contended hide-ratios are the honest
+//!   headline numbers (EXPERIMENTS.md §Netmodel).
 //! * [`memory`] — device-memory substrate (CUDA.jl stand-in): host/device
 //!   spaces, priority streams, pooled reusable communication buffers plus
 //!   the size-keyed payload free list that recycles received network
@@ -139,7 +145,7 @@ pub mod prelude {
     pub use crate::coordinator::{AppResult, Schedule, StencilApp, TimeLoop};
     pub use crate::grid::{GlobalGrid, GridOptions};
     pub use crate::halo::TransferPath;
-    pub use crate::mpisim::{CartComm, Comm, Network, NetModel};
+    pub use crate::mpisim::{CartComm, Comm, Network, NetModel, NicMode};
     pub use crate::overlap::HideWidths;
     pub use crate::physics::{Field3D, Region};
 }

@@ -26,7 +26,11 @@ fn run_flags(cmd: Command) -> Command {
         .value("path", Some("rdma"), "halo transfer path: rdma|staged")
         .value("chunks", Some("4"), "pipeline chunks for the staged path")
         .value("compute-threads", Some("1"), "worker threads per rank (native backend)")
-        .value("net", Some("ideal"), "network model: ideal|aries|aries:<scale>")
+        .value(
+            "net",
+            Some("ideal"),
+            "network model: ideal|aries|aries:<scale>[,serial-nic]",
+        )
         .value("seed", None, "base RNG seed")
 }
 

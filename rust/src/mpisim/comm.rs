@@ -39,7 +39,11 @@ impl Comm {
 
     /// Non-blocking send taking ownership of the payload (no copy). The
     /// request completes once the modeled injection has elapsed; post all
-    /// sends before waiting on any to overlap their injections.
+    /// sends before waiting on any so their injections overlap the receive
+    /// transits. How much the injections overlap *each other* is the
+    /// model's call: fully under [`super::NicMode::Independent`],
+    /// serialized through this rank's NIC (queued behind its busy-until
+    /// instant) under [`super::NicMode::SerialNic`].
     pub fn isend(&self, dst: usize, tag: u64, data: Vec<f64>) -> SendRequest {
         assert!(dst < self.size(), "send to invalid rank {dst}");
         assert!(dst != self.rank, "self-sends are a deadlock footgun; use a local copy");

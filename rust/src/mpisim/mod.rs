@@ -13,11 +13,17 @@
 //! communication cost structure of a real interconnect — the thing the
 //! paper's `@hide_communication` exists to hide — is present in measurements
 //! even though the underlying transport is shared memory (DESIGN.md §2).
+//! Shared-NIC injection contention is modeled too, as an opt-in
+//! ([`NicMode::SerialNic`], CLI `--net ...,serial-nic`): a rank's
+//! concurrently posted sends then serialize through a per-rank busy-until
+//! instant instead of each injecting at full bandwidth, which is what
+//! separates modeled from measured scaling on bandwidth-bound planes (see
+//! EXPERIMENTS.md §Netmodel).
 //!
-//! What is deliberately *not* modeled: link contention, topology-dependent
-//! routing, and MPI unexpected-message buffers. Halo exchange is
-//! nearest-neighbour with one message in flight per (array, dim, side), so
-//! these effects are second-order for the workloads reproduced here.
+//! What is deliberately *not* modeled: topology-dependent routing,
+//! switch-level (cross-rank) link sharing, and MPI unexpected-message
+//! buffers. Halo exchange is nearest-neighbour, so these effects are
+//! second-order for the workloads reproduced here.
 
 mod cart;
 mod collective;
@@ -28,7 +34,7 @@ mod request;
 
 pub use cart::{dims_create, CartComm};
 pub use comm::Comm;
-pub use netmodel::NetModel;
+pub use netmodel::{NetModel, NicMode};
 pub use network::{Network, TrafficStats};
 pub use request::{wait_all, RecvRequest, SendRequest};
 
@@ -100,7 +106,7 @@ mod tests {
 
     #[test]
     fn netmodel_delays_arrival() {
-        let model = NetModel { latency_s: 0.02, bw_bytes_per_s: 1e12 };
+        let model = NetModel::new(0.02, 1e12);
         let net = Network::with_model(2, model);
         let c0 = net.comm(0);
         let c1 = net.comm(1);
@@ -113,7 +119,7 @@ mod tests {
     #[test]
     fn netmodel_bandwidth_term() {
         // 8 MB at 100 MB/s = 80 ms of modeled transit
-        let model = NetModel { latency_s: 0.0, bw_bytes_per_s: 100e6 };
+        let model = NetModel::new(0.0, 100e6);
         let net = Network::with_model(2, model);
         let c0 = net.comm(0);
         let c1 = net.comm(1);

@@ -5,26 +5,66 @@
 //! arrival instant, so transit cost lands on the receiver's critical path —
 //! unless the receiver overlaps it with computation, which is exactly the
 //! behaviour `@hide_communication` exploits and the ablation bench measures.
+//!
+//! ## NIC injection contention
+//!
+//! Two sub-models govern how concurrently posted sends of one rank share
+//! that rank's NIC ([`NicMode`]):
+//!
+//! * [`NicMode::Independent`] — every send injects at full bandwidth no
+//!   matter what else the rank has in flight. This is the seed model; it is
+//!   optimistic on bandwidth-bound planes because a rank that posts all its
+//!   sends before waiting is charged only *one* injection of wall-time.
+//! * [`NicMode::SerialNic`] — sends of one rank serialize through its NIC:
+//!   each injection starts when the previous one has drained (tracked as a
+//!   per-rank busy-until instant inside [`super::Network`]), so both the
+//!   sender's completion and the receiver's arrival shift by the queueing
+//!   delay. Distinct ranks' NICs stay independent. This matches how
+//!   per-link injection serialization separates modeled from measured
+//!   scaling curves on real machines (see EXPERIMENTS.md §Netmodel), and
+//!   its hide-ratios are the honest headline numbers.
+//!
+//! Select with the `,serial-nic` suffix on any preset: `--net
+//! aries,serial-nic`, `--net aries:32,serial-nic`.
 
 use std::time::Duration;
 
-/// Per-message latency/bandwidth model (per direction, per link).
+/// How concurrently posted sends of one rank share that rank's NIC.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NicMode {
+    /// Each send injects at full bandwidth regardless of the rank's other
+    /// in-flight sends (optimistic; the seed behaviour).
+    Independent,
+    /// A rank's sends serialize through its NIC: injections queue behind a
+    /// per-rank busy-until instant. Distinct ranks remain independent.
+    SerialNic,
+}
+
+/// Per-message latency/bandwidth model (per direction, per link) plus the
+/// NIC contention sub-model.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NetModel {
     pub latency_s: f64,
     pub bw_bytes_per_s: f64,
+    /// Injection-contention sub-model; see [`NicMode`].
+    pub nic: NicMode,
 }
 
 impl NetModel {
+    /// A latency/bandwidth model with the default (independent) NIC mode.
+    pub fn new(latency_s: f64, bw_bytes_per_s: f64) -> Self {
+        NetModel { latency_s, bw_bytes_per_s, nic: NicMode::Independent }
+    }
+
     /// No modeled cost: raw shared-memory transport (for unit tests).
     pub fn ideal() -> Self {
-        NetModel { latency_s: 0.0, bw_bytes_per_s: f64::INFINITY }
+        Self::new(0.0, f64::INFINITY)
     }
 
     /// Cray Aries (Piz Daint, the paper's testbed): ~1.5 us MPI latency,
     /// ~10 GB/s effective per-direction point-to-point bandwidth.
     pub fn aries() -> Self {
-        NetModel { latency_s: 1.5e-6, bw_bytes_per_s: 10e9 }
+        Self::new(1.5e-6, 10e9)
     }
 
     /// Aries scaled so that the comm/compute ratio of the paper's P100 +
@@ -34,14 +74,41 @@ impl NetModel {
     /// than one CPU thread while local problems here are ~512x smaller, so
     /// the network is scaled down to preserve t_comm / t_comp.
     pub fn aries_scaled(factor: f64) -> Self {
-        NetModel { latency_s: 1.5e-6 * factor, bw_bytes_per_s: 10e9 / factor }
+        Self::new(1.5e-6 * factor, 10e9 / factor)
+    }
+
+    /// The same model with serialized per-rank NIC injection.
+    pub fn with_serial_nic(mut self) -> Self {
+        self.nic = NicMode::SerialNic;
+        self
     }
 
     pub fn is_ideal(&self) -> bool {
         self.latency_s == 0.0 && self.bw_bytes_per_s.is_infinite()
     }
 
-    /// Modeled transit duration for a message of `bytes`.
+    /// Does this model serialize a rank's concurrent injections?
+    pub fn is_contended(&self) -> bool {
+        self.nic == NicMode::SerialNic
+    }
+
+    /// The model used by `Config::default()`: [`Self::ideal`], unless the
+    /// `IGG_NET` environment variable names another preset — the CI
+    /// contended matrix leg sets `IGG_NET=aries,serial-nic` to run the
+    /// whole test suite against the contended model. An unparsable value
+    /// panics: the variable is an explicit opt-in, and silently falling
+    /// back to the ideal model would defeat that leg's purpose.
+    pub fn default_preset() -> Self {
+        match std::env::var("IGG_NET") {
+            Ok(s) if !s.is_empty() => {
+                Self::parse(&s).unwrap_or_else(|e| panic!("invalid IGG_NET value '{s}': {e}"))
+            }
+            _ => Self::ideal(),
+        }
+    }
+
+    /// Modeled transit duration for a message of `bytes`: what separates a
+    /// send's *injection start* from the receiver's arrival instant.
     pub fn transit(&self, bytes: usize) -> Duration {
         if self.is_ideal() {
             return Duration::ZERO;
@@ -50,12 +117,12 @@ impl NetModel {
         Duration::from_secs_f64(secs)
     }
 
-    /// Modeled sender-side injection time: how long until the NIC has
-    /// drained the send buffer and the sender may reuse it (the completion
+    /// Modeled sender-side injection time: how long the NIC needs to drain
+    /// the send buffer, measured from the injection *start* (the completion
     /// point of a non-blocking send). Only the bandwidth term is charged —
     /// the latency term is wire time, which the *receiver* pays as part of
-    /// [`Self::transit`]. This is what makes posting all sends before any
-    /// wait measurably better than waiting inline after each send.
+    /// [`Self::transit`]. Under [`NicMode::SerialNic`] the start itself is
+    /// queued behind the rank's previous injections.
     pub fn injection(&self, bytes: usize) -> Duration {
         if self.is_ideal() {
             return Duration::ZERO;
@@ -63,22 +130,37 @@ impl NetModel {
         Duration::from_secs_f64(bytes as f64 / self.bw_bytes_per_s)
     }
 
-    /// Parse "ideal", "aries", or `aries:<scale>` (e.g. "aries:32").
+    /// Parse `ideal`, `aries`, or `aries:<scale>` (e.g. "aries:32"), each
+    /// optionally followed by a NIC-mode suffix: `,serial-nic` (contended)
+    /// or `,independent` (explicit default).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
-        match s {
-            "ideal" => Ok(Self::ideal()),
-            "aries" => Ok(Self::aries()),
+        let (base, nic) = match s.split_once(',') {
+            None => (s, NicMode::Independent),
+            Some((base, "serial-nic")) => (base, NicMode::SerialNic),
+            Some((base, "independent")) => (base, NicMode::Independent),
+            Some((_, mode)) => {
+                anyhow::bail!("unknown NIC mode '{mode}' (want serial-nic|independent)")
+            }
+        };
+        let mut model = match base {
+            "ideal" => Self::ideal(),
+            "aries" => Self::aries(),
             _ => {
-                if let Some(f) = s.strip_prefix("aries:") {
+                if let Some(f) = base.strip_prefix("aries:") {
                     let factor: f64 = f
                         .parse()
                         .map_err(|_| anyhow::anyhow!("bad net model scale '{f}'"))?;
-                    Ok(Self::aries_scaled(factor))
+                    Self::aries_scaled(factor)
                 } else {
-                    anyhow::bail!("unknown net model '{s}' (want ideal|aries|aries:<scale>)")
+                    anyhow::bail!(
+                        "unknown net model '{base}' \
+                         (want ideal|aries|aries:<scale>[,serial-nic])"
+                    )
                 }
             }
-        }
+        };
+        model.nic = nic;
+        Ok(model)
     }
 }
 
@@ -94,14 +176,14 @@ mod tests {
 
     #[test]
     fn injection_charges_bandwidth_only() {
-        let m = NetModel { latency_s: 1e-3, bw_bytes_per_s: 1e6 };
+        let m = NetModel::new(1e-3, 1e6);
         let t = m.injection(500); // 0.5 ms, no latency term
         assert!((t.as_secs_f64() - 0.5e-3).abs() < 1e-9);
     }
 
     #[test]
     fn transit_combines_latency_and_bandwidth() {
-        let m = NetModel { latency_s: 1e-3, bw_bytes_per_s: 1e6 };
+        let m = NetModel::new(1e-3, 1e6);
         let t = m.transit(500); // 1 ms + 0.5 ms
         assert!((t.as_secs_f64() - 1.5e-3).abs() < 1e-9);
     }
@@ -114,5 +196,33 @@ mod tests {
         assert!((s.bw_bytes_per_s - 10e9 / 32.0).abs() < 1.0);
         assert!(NetModel::parse("bogus").is_err());
         assert!(NetModel::parse("aries:x").is_err());
+    }
+
+    #[test]
+    fn parse_nic_modes() {
+        let c = NetModel::parse("aries,serial-nic").unwrap();
+        assert!(c.is_contended());
+        assert_eq!(NetModel { nic: NicMode::Independent, ..c }, NetModel::aries());
+
+        let s = NetModel::parse("aries:32,serial-nic").unwrap();
+        assert!(s.is_contended());
+        assert!((s.bw_bytes_per_s - 10e9 / 32.0).abs() < 1.0);
+
+        assert!(!NetModel::parse("aries,independent").unwrap().is_contended());
+        assert!(!NetModel::parse("ideal").unwrap().is_contended());
+        assert!(NetModel::parse("aries,bogus").is_err());
+        assert!(NetModel::parse("bogus,serial-nic").is_err());
+    }
+
+    #[test]
+    fn with_serial_nic_builder() {
+        let m = NetModel::aries_scaled(8.0).with_serial_nic();
+        assert!(m.is_contended());
+        assert_eq!(m.latency_s, NetModel::aries_scaled(8.0).latency_s);
+        assert_eq!(m.bw_bytes_per_s, NetModel::aries_scaled(8.0).bw_bytes_per_s);
+        // contention never changes the per-message durations, only when an
+        // injection may start
+        assert_eq!(m.transit(4096), NetModel::aries_scaled(8.0).transit(4096));
+        assert_eq!(m.injection(4096), NetModel::aries_scaled(8.0).injection(4096));
     }
 }

@@ -11,7 +11,9 @@ pub(super) struct Envelope {
     pub src: usize,
     pub tag: u64,
     pub data: Vec<f64>,
-    /// Modeled arrival instant (send instant + NetModel transit).
+    /// Modeled arrival instant (injection start + NetModel transit; the
+    /// injection start is queued behind the sender's NIC under the
+    /// contended model).
     pub arrival: Instant,
 }
 
@@ -33,6 +35,17 @@ pub(super) struct BarrierState {
     pub generation: u64,
 }
 
+/// Per-rank NIC injection timeline for the contended model
+/// ([`super::NicMode::SerialNic`]): the instant this rank's NIC finishes
+/// draining its last accepted send. Allocated once per network, one slot
+/// per rank — the deposit hot path only locks and rewrites the slot, so the
+/// busy-until bookkeeping adds no per-send heap traffic.
+#[derive(Default)]
+struct NicState {
+    /// `None` until the rank's first modeled send.
+    busy_until: Option<Instant>,
+}
+
 /// The in-process "interconnect": one mailbox per rank plus the model and
 /// the collective rendezvous state. Shared by all ranks via `Arc`.
 pub struct Network {
@@ -40,6 +53,10 @@ pub struct Network {
     pub(super) model: NetModel,
     pub(super) barrier: Mutex<BarrierState>,
     pub(super) barrier_cv: Condvar,
+    /// One injection timeline per rank (only consulted by the contended
+    /// model; a rank's main thread and its comm stream may deposit
+    /// concurrently, hence the per-slot lock).
+    nics: Vec<Mutex<NicState>>,
     msg_count: AtomicU64,
     byte_count: AtomicU64,
 }
@@ -57,6 +74,7 @@ impl Network {
             model,
             barrier: Mutex::new(BarrierState { count: 0, generation: 0 }),
             barrier_cv: Condvar::new(),
+            nics: (0..n).map(|_| Mutex::new(NicState::default())).collect(),
             msg_count: AtomicU64::new(0),
             byte_count: AtomicU64::new(0),
         })
@@ -87,7 +105,15 @@ impl Network {
     /// is owned by the envelope from here on), but the *send operation* is
     /// only modeled complete once the NIC has drained the buffer: the
     /// returned instant is when the sender's [`super::SendRequest`] may
-    /// complete — `now + injection` for modeled traffic, `now` otherwise.
+    /// complete — `injection start + injection` for modeled traffic, `now`
+    /// otherwise.
+    ///
+    /// The injection start is `now` under the independent model. Under the
+    /// contended model ([`super::NicMode::SerialNic`]) it is
+    /// `max(now, src's busy-until)`: a rank's concurrent sends serialize
+    /// through its NIC, shifting both the sender-side completion and the
+    /// receiver's arrival instant by the queueing delay, while distinct
+    /// sender NICs progress independently.
     pub(super) fn deposit(&self, src: usize, dst: usize, tag: u64, data: Vec<f64>) -> Instant {
         let bytes = data.len() * std::mem::size_of::<f64>();
         // Internal (collective) traffic is not charged to the model or the
@@ -100,7 +126,18 @@ impl Network {
         } else {
             self.msg_count.fetch_add(1, Ordering::Relaxed);
             self.byte_count.fetch_add(bytes as u64, Ordering::Relaxed);
-            (now + self.model.transit(bytes), now + self.model.injection(bytes))
+            let start = if self.model.is_contended() && !self.model.is_ideal() {
+                let mut nic = self.nics[src].lock().unwrap();
+                let start = match nic.busy_until {
+                    Some(busy) if busy > now => busy,
+                    _ => now,
+                };
+                nic.busy_until = Some(start + self.model.injection(bytes));
+                start
+            } else {
+                now
+            };
+            (start + self.model.transit(bytes), start + self.model.injection(bytes))
         };
         let mb = &self.mailboxes[dst];
         let mut q = mb.queue.lock().unwrap();
@@ -137,6 +174,14 @@ impl Network {
         let q = self.mailboxes[me].queue.lock().unwrap();
         q.iter().any(|e| e.src == src && e.tag == tag && e.arrival <= Instant::now())
     }
+
+    /// Number of messages (arrived or still in modeled transit) queued in
+    /// `rank`'s mailbox. Diagnostic for error-hygiene tests: after a failed
+    /// halo exchange has drained its posted receives, no stale payload may
+    /// remain here to FIFO-match a same-tag receive of a later update.
+    pub fn mailbox_depth(&self, rank: usize) -> usize {
+        self.mailboxes[rank].queue.lock().unwrap().len()
+    }
 }
 
 #[cfg(test)]
@@ -170,5 +215,71 @@ mod tests {
         let net = Network::new(2);
         net.deposit(1, 0, super::super::INTERNAL_TAG_BASE + 1, vec![1.0]);
         assert_eq!(net.traffic().messages, 0);
+    }
+
+    #[test]
+    fn mailbox_depth_tracks_undelivered_messages() {
+        let net = Network::new(2);
+        assert_eq!(net.mailbox_depth(0), 0);
+        net.deposit(1, 0, 3, vec![1.0]);
+        net.deposit(1, 0, 4, vec![2.0]);
+        assert_eq!(net.mailbox_depth(0), 2);
+        assert_eq!(net.mailbox_depth(1), 0);
+        let _ = net.collect(0, 1, 3);
+        assert_eq!(net.mailbox_depth(0), 1);
+    }
+
+    /// The contended model's core semantics, asserted on the *modeled*
+    /// instants deposit returns (no wall-clock sleeps, so no flakes): a
+    /// rank's back-to-back deposits get completion instants spaced a full
+    /// injection apart, regardless of destination.
+    #[test]
+    fn serial_nic_deposits_queue_behind_busy_until() {
+        use std::time::Duration;
+        // 1024 f64 = 8192 bytes at 8192/0.05 B/s: 50 ms per injection.
+        // Assertions use a 1 ms slack under the exact spacing so f64 ->
+        // Duration rounding can never flip them.
+        let inj = Duration::from_millis(49);
+        let model = NetModel::new(0.0, 8192.0 / 0.05).with_serial_nic();
+        let net = Network::with_model(3, model);
+        let t0 = Instant::now();
+        let c1 = net.deposit(0, 1, 1, vec![0.0; 1024]);
+        let c2 = net.deposit(0, 2, 1, vec![0.0; 1024]); // distinct link, same NIC
+        let c3 = net.deposit(0, 1, 2, vec![0.0; 1024]);
+        let posted = Instant::now();
+        for (i, w) in [[c1, c2], [c2, c3]].iter().enumerate() {
+            assert!(
+                w[1] >= w[0] + inj,
+                "deposit {} must queue a full injection behind the previous one",
+                i + 1
+            );
+        }
+        assert!(c3 >= t0 + 3 * inj, "total completion must be the sum of injections");
+        assert!(
+            c3 <= posted + 3 * Duration::from_millis(51),
+            "queueing must not overcharge beyond the sum"
+        );
+        // another rank's NIC is idle: its deposit completes one injection
+        // after its own post even though rank 0's NIC is still busy
+        let c_other = net.deposit(1, 2, 1, vec![0.0; 1024]);
+        assert!(
+            c_other <= Instant::now() + Duration::from_millis(51),
+            "distinct NICs must not contend"
+        );
+    }
+
+    /// The independent (seed) model is unchanged by the NIC table: every
+    /// deposit completes one injection after its own post instant.
+    #[test]
+    fn independent_deposits_do_not_queue() {
+        use std::time::Duration;
+        let inj = Duration::from_millis(51); // 50 ms modeled + rounding slack
+        let model = NetModel::new(0.0, 8192.0 / 0.05);
+        let net = Network::with_model(2, model);
+        let c1 = net.deposit(0, 1, 1, vec![0.0; 1024]);
+        let c2 = net.deposit(0, 1, 2, vec![0.0; 1024]);
+        let posted = Instant::now();
+        assert!(c1 <= posted + inj);
+        assert!(c2 <= posted + inj, "independent injections must overlap, not queue");
     }
 }

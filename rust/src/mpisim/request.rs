@@ -2,10 +2,14 @@
 //!
 //! Sends are buffered, but completion is *deferred*: a [`SendRequest`]
 //! carries the modeled instant at which the NIC has drained the send buffer
-//! (`send instant + NetModel::injection`). `wait()` blocks until then —
+//! (`injection start + NetModel::injection`). `wait()` blocks until then —
 //! which is why the halo engine posts every send of a dimension before it
-//! waits on anything, and drains the requests in a separate phase: N
-//! injections overlap instead of serializing. Under the ideal model the
+//! waits on anything, and drains the requests in a separate phase. How much
+//! the posted injections overlap is the network model's call: under
+//! [`super::NicMode::Independent`] all N injections of a rank overlap fully
+//! (total ~1 injection); under [`super::NicMode::SerialNic`] they serialize
+//! through the rank's NIC (total ~N injections), but still overlap the
+//! receive transits the engine waits on. Under the ideal model the
 //! completion instant is the send instant and `wait()` returns immediately.
 //! A [`RecvRequest`] represents a posted receive; `wait()` blocks until a
 //! matching message has (model-)arrived, `test()` polls.
@@ -38,6 +42,15 @@ impl SendRequest {
     /// Has the operation completed?
     pub fn test(&self) -> bool {
         Instant::now() >= self.complete_at
+    }
+
+    /// The modeled instant this send's injection completes (the NIC has
+    /// drained the buffer). Under the contended model, concurrently posted
+    /// sends of one rank carry strictly increasing instants; tests assert
+    /// that serialization deterministically through this accessor instead
+    /// of through wall-clock timing.
+    pub fn completion_instant(&self) -> Instant {
+        self.complete_at
     }
 }
 
@@ -122,14 +135,14 @@ mod tests {
         // load-robust assertions are made: test() uses a multi-second
         // injection window, and wait() asserts a *lower* bound.
         // 8 KB at 4 KB/s: ~2 s of injection before the buffer is free.
-        let slow = NetModel { latency_s: 0.0, bw_bytes_per_s: 4096.0 };
+        let slow = NetModel::new(0.0, 4096.0);
         let net = Network::with_model(2, slow);
         let s = net.comm(0).isend(1, 1, vec![0.0; 1024]);
         assert!(!s.test(), "injection of 8 KB at 4 KB/s cannot be instant");
         drop(s); // don't pay the 2 s wait; completion is modeled, not real
 
         // 8 KB at 100 KB/s: wait() must block ~80 ms (>= 50 ms asserted).
-        let fast = NetModel { latency_s: 0.0, bw_bytes_per_s: 100e3 };
+        let fast = NetModel::new(0.0, 100e3);
         let net = Network::with_model(2, fast);
         let c0 = net.comm(0);
         let t0 = Instant::now();
@@ -149,7 +162,7 @@ mod tests {
         // one injection, not two. Upper-bound timing can flake under
         // scheduler load (parallel unit tests), so retry a few times and
         // pass on the first clean trial.
-        let model = NetModel { latency_s: 0.0, bw_bytes_per_s: 100e3 };
+        let model = NetModel::new(0.0, 100e3);
         let mut best = f64::INFINITY;
         for _ in 0..3 {
             let net = Network::with_model(2, model);

@@ -29,6 +29,14 @@
 //! the "xPU" while the communication stream exchanges — the workers stay
 //! strictly inside the boundary width, preserving the disjointness contract
 //! with the in-flight exchange.
+//!
+//! The hide window (phase 3's inner compute) absorbs whatever instants the
+//! network model produces. Under the contended model
+//! (`mpisim::NicMode::SerialNic`) a rank's posted sends serialize through
+//! its NIC, so the in-flight exchange finishes at the *sum* of its
+//! injections rather than their max — the overlap machinery is unchanged,
+//! but the window it must cover grows; the contended hide-ratios reported
+//! by `hide_communication_ablation` are the honest headline numbers.
 
 use crate::grid::GlobalGrid;
 use crate::halo::PendingHalo;

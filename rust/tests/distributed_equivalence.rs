@@ -9,7 +9,7 @@ use igg::coordinator::config::{AppKind, Config};
 use igg::coordinator::launcher::run_ranks;
 use igg::grid::{GlobalGrid, GridOptions};
 use igg::halo::TransferPath;
-use igg::mpisim::Network;
+use igg::mpisim::{NetModel, Network};
 use igg::overlap::HideWidths;
 use igg::physics::Field3D;
 use igg::util::quickcheck::{ensure, for_all};
@@ -181,6 +181,84 @@ fn periodic_diffusion_conserves_heat() {
     .unwrap();
     let g = sums.into_iter().next().flatten().expect("root gather");
     assert!(g.all_finite());
+}
+
+/// Randomized decomposition sweep: ~20 seeded combos over (rank count,
+/// explicit rank grid, anisotropic local dims, hide widths, compute
+/// threads, netmodel ∈ {ideal, contended aries}) — each combo asserting,
+/// for **all three apps**, that the distributed fields are bitwise
+/// identical to the 1-rank reference. The contended model only shifts
+/// modeled instants, never payloads, so equivalence must be exact there
+/// too; any seed failure reproduces from the printed case seed.
+#[test]
+fn prop_randomized_decomposition_sweep_all_apps() {
+    #[derive(Debug)]
+    struct Case {
+        nranks: usize,
+        dims: [usize; 3],
+        local: [usize; 3],
+        nt: usize,
+        hide: Option<HideWidths>,
+        threads: usize,
+        contended: bool,
+    }
+
+    // Rank grids must factor the rank count; [0,0,0] = automatic.
+    const GRIDS: [(usize, &[[usize; 3]]); 4] = [
+        (2, &[[0, 0, 0], [2, 1, 1], [1, 2, 1], [1, 1, 2]]),
+        (3, &[[0, 0, 0], [3, 1, 1], [1, 3, 1]]),
+        (4, &[[0, 0, 0], [2, 2, 1], [1, 2, 2], [4, 1, 1]]),
+        (8, &[[0, 0, 0], [2, 2, 2], [4, 2, 1], [1, 2, 4]]),
+    ];
+
+    for_all(
+        20,
+        0x5EED_C0DE,
+        |g| {
+            let (nranks, grids) = *g.choose(&GRIDS);
+            let dims = *g.choose(grids);
+            let local = [g.usize_in(7, 9), g.usize_in(7, 9), g.usize_in(7, 9)];
+            // widths must satisfy 2w <= n-2 per dim: w=2 fits every local
+            // choice; the x width stretches to 3 when local allows it
+            let hide = match g.usize_in(0, 2) {
+                0 => None,
+                1 => Some(HideWidths([2, 2, 2])),
+                _ => Some(HideWidths([((local[0] - 2) / 2).min(3), 2, 2])),
+            };
+            Case {
+                nranks,
+                dims,
+                local,
+                nt: g.usize_in(2, 4),
+                hide,
+                threads: g.usize_in(1, 2),
+                contended: g.bool(),
+            }
+        },
+        |case| {
+            let net = if case.contended {
+                NetModel::aries().with_serial_nic()
+            } else {
+                NetModel::ideal()
+            };
+            for app in AppKind::ALL {
+                let cfg = Config {
+                    app,
+                    nranks: case.nranks,
+                    dims: case.dims,
+                    local: case.local,
+                    nt: case.nt,
+                    hide: case.hide,
+                    compute_threads: case.threads,
+                    net,
+                    ..Default::default()
+                };
+                let report = validate_equivalence(&cfg).map_err(|e| e.to_string())?;
+                ensure(report.contains("PASS"), format!("{}: {report}", app.name()))?;
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

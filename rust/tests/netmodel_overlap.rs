@@ -1,13 +1,23 @@
-//! Timing-behaviour integration: under a slow modeled interconnect,
-//! `hide_communication` must actually hide the transit — the hidden step is
-//! measurably faster than the plain step — and the staged path's pipelining
-//! must beat unpipelined staging when PCIe copies are modeled.
+//! Timing-behaviour integration for the interconnect model, including the
+//! shared-NIC contention sub-model (`--net ...,serial-nic`):
 //!
-//! Timing assertions use coarse ratios (>= 20% differences) so scheduler
-//! noise cannot flake them.
+//! * same-rank sends serialize through the rank's NIC — injection
+//!   completions are strictly ordered and the total equals the *sum* of
+//!   `bytes/bw`, not their max;
+//! * sends on distinct ranks stay independent (per-NIC, not global);
+//! * `hide_communication` still hides a *contended* z-plane exchange
+//!   behind the inner region;
+//! * the engine's posted-before-wait discipline overlaps injections under
+//!   the optimistic model and is charged serialized injections under the
+//!   contended one.
+//!
+//! Serialization itself is asserted on the *modeled completion instants*
+//! (`SendRequest::completion_instant`), which are exact regardless of
+//! scheduler load. Wall-clock assertions are either lower bounds (load can
+//! only increase elapsed time) or coarse >= 20% ratios with retries.
 
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Timing tests must not time-share the core with each other.
 static SERIAL: Mutex<()> = Mutex::new(());
@@ -20,7 +30,96 @@ fn serial_guard() -> std::sync::MutexGuard<'static, ()> {
 use igg::coordinator::apps::diffusion;
 use igg::coordinator::config::{AppKind, Config};
 use igg::coordinator::launcher::run_ranks;
-use igg::mpisim::NetModel;
+use igg::grid::{GlobalGrid, GridOptions};
+use igg::mpisim::{NetModel, Network};
+use igg::physics::Field3D;
+
+/// 1024 f64 payloads at this bandwidth give `INJ` of modeled injection.
+const INJ: Duration = Duration::from_millis(50);
+const PAYLOAD: usize = 1024;
+
+fn contended_model() -> NetModel {
+    let bytes = (PAYLOAD * 8) as f64;
+    NetModel::new(0.0, bytes / INJ.as_secs_f64()).with_serial_nic()
+}
+
+/// Same-rank serialization, asserted deterministically on the modeled
+/// instants: four sends posted back to back (alternating destinations, so
+/// it is the *NIC*, not the link, that serializes) complete strictly
+/// ordered, a full injection apart, and the last completes at the sum of
+/// the injections.
+#[test]
+fn serial_nic_same_rank_sends_serialize() {
+    let net = Network::with_model(3, contended_model());
+    let c0 = net.comm(0);
+    let t0 = Instant::now();
+    let reqs: Vec<_> = (0..4)
+        .map(|i| c0.isend(1 + (i % 2), (i + 1) as u64, vec![0.0; PAYLOAD]))
+        .collect();
+    let posted = Instant::now();
+    let completions: Vec<Instant> = reqs.iter().map(|r| r.completion_instant()).collect();
+
+    // strictly ordered: each injection queues a full `bytes/bw` behind the
+    // previous one (1 ms slack absorbs f64 -> Duration rounding)
+    let spacing = INJ - Duration::from_millis(1);
+    for (i, w) in completions.windows(2).enumerate() {
+        assert!(
+            w[1] >= w[0] + spacing,
+            "send {} must complete a full injection after send {}",
+            i + 1,
+            i
+        );
+    }
+    // total ~= sum of bytes/bw: bounded below by 4 injections from the
+    // first post and above by 4 injections from the last post
+    assert!(completions[3] >= t0 + 4 * spacing, "total must be the sum of injections");
+    assert!(
+        completions[3] <= posted + 4 * (INJ + Duration::from_millis(1)),
+        "queueing must not overcharge beyond the sum of injections"
+    );
+    // modeled completions only — the requests are dropped unwaited, so the
+    // test never sleeps the full 200 ms
+}
+
+/// Cross-rank independence: two ranks posting "concurrently" each complete
+/// one injection after their own post — rank 1's NIC never sees rank 0's
+/// traffic, even when both target the same destination rank.
+#[test]
+fn serial_nic_distinct_ranks_inject_independently() {
+    let net = Network::with_model(3, contended_model());
+    let t0 = Instant::now();
+    let s0 = net.comm(0).isend(2, 1, vec![0.0; PAYLOAD]);
+    let s1 = net.comm(1).isend(2, 2, vec![0.0; PAYLOAD]);
+    let posted = Instant::now();
+    let bound = INJ + Duration::from_millis(1);
+    for (who, s) in [("rank 0", &s0), ("rank 1", &s1)] {
+        let c = s.completion_instant();
+        assert!(c >= t0, "{who}: completion before posting?");
+        assert!(
+            c <= posted + bound,
+            "{who}: a single send must complete one injection after its post \
+             (distinct NICs must not contend)"
+        );
+    }
+}
+
+/// The optimistic (independent) model is unchanged: back-to-back posted
+/// sends complete ~1 injection after their posts, fully overlapped.
+#[test]
+fn independent_model_sends_overlap_injection() {
+    let model = NetModel { nic: igg::mpisim::NicMode::Independent, ..contended_model() };
+    let net = Network::with_model(2, model);
+    let c0 = net.comm(0);
+    let s1 = c0.isend(1, 1, vec![0.0; PAYLOAD]);
+    let s2 = c0.isend(1, 2, vec![0.0; PAYLOAD]);
+    let posted = Instant::now();
+    let bound = INJ + Duration::from_millis(1);
+    assert!(s1.completion_instant() <= posted + bound);
+    assert!(
+        s2.completion_instant() <= posted + bound,
+        "independent injections must overlap, not queue"
+    );
+}
 
 /// The overlap mechanism itself: an in-flight halo update's modeled transit
 /// must absorb work done between start and finish. "Work" here is a timed
@@ -32,12 +131,31 @@ use igg::mpisim::NetModel;
 #[test]
 fn overlapped_exchange_absorbs_concurrent_work() {
     let _guard = serial_guard();
-    use igg::grid::{GlobalGrid, GridOptions};
-    use igg::mpisim::Network;
-    use igg::physics::Field3D;
+    let net_model = NetModel::new(3e-3, 1e9); // ~3 ms/plane
+    overlap_absorbs_work(net_model, GridOptions::default(), 1);
+}
 
-    let net_model = NetModel { latency_s: 3e-3, bw_bytes_per_s: 1e9 }; // ~3 ms/plane
-    let work = std::time::Duration::from_millis(3);
+/// The same guarantee under the *contended* model, on the z-split topology
+/// (strided worst-case planes): two fields exchanged per step mean two
+/// sends per rank that now serialize through the NIC, yet the serialized
+/// exchange still hides behind the inner-region work window.
+#[test]
+fn hide_communication_hides_contended_z_exchange() {
+    let _guard = serial_guard();
+    let n = 24usize;
+    let plane_bytes = (n * n * 8) as f64;
+    // ~3 ms of injection per plane; 2 fields -> ~6 ms serialized exchange
+    let net_model = NetModel::new(0.0, plane_bytes / 3e-3).with_serial_nic();
+    let opts = GridOptions { dims: [1, 1, 2], ..Default::default() };
+    overlap_absorbs_work(net_model, opts, 2);
+}
+
+/// Shared harness: per-step time of `plain update+work` vs `overlapped
+/// start/work/finish` on 2 ranks; the overlapped form must be measurably
+/// faster (>= 25% with best-of-3 retries, immune to slowdown flakes).
+fn overlap_absorbs_work(net_model: NetModel, opts: GridOptions, nfields: usize) {
+    let n = 24usize;
+    let work = Duration::from_millis(3 * nfields as u64);
     let nsteps = 5;
 
     let run = |overlapped: bool| -> f64 {
@@ -45,20 +163,36 @@ fn overlapped_exchange_absorbs_concurrent_work() {
         let handles: Vec<_> = (0..2)
             .map(|r| {
                 let comm = network.comm(r);
+                let opts = opts.clone();
                 std::thread::spawn(move || {
-                    let g = GlobalGrid::init(comm, [24, 24, 24], GridOptions::default())
-                        .unwrap();
-                    let mut f = Field3D::filled([24, 24, 24], g.rank() as f64);
-                    g.update_halo(&mut [&mut f]).unwrap(); // warm buffers
+                    let g = GlobalGrid::init(comm, [n; 3], opts).unwrap();
+                    let mut fields: Vec<Field3D> =
+                        (0..nfields).map(|i| Field3D::filled([n; 3], i as f64)).collect();
+                    let exchange_all = |g: &GlobalGrid, fs: &mut [Field3D], ov: bool| {
+                        match (ov, fs) {
+                            (false, [a]) => g.update_halo(&mut [a]).unwrap(),
+                            (false, [a, b]) => g.update_halo(&mut [a, b]).unwrap(),
+                            (true, [a]) => {
+                                let p = g.update_halo_start(&mut [a]).unwrap();
+                                igg::util::timing::precise_sleep(work);
+                                p.finish().unwrap();
+                            }
+                            (true, [a, b]) => {
+                                let p = g.update_halo_start(&mut [a, b]).unwrap();
+                                igg::util::timing::precise_sleep(work);
+                                p.finish().unwrap();
+                            }
+                            _ => unreachable!("1 or 2 fields"),
+                        }
+                    };
+                    exchange_all(&g, &mut fields, false); // warm buffers
                     g.comm().barrier();
                     let t0 = Instant::now();
                     for _ in 0..nsteps {
                         if overlapped {
-                            let pending = g.update_halo_start(&mut [&mut f]).unwrap();
-                            igg::util::timing::precise_sleep(work); // "inner compute"
-                            pending.finish().unwrap();
+                            exchange_all(&g, &mut fields, true);
                         } else {
-                            g.update_halo(&mut [&mut f]).unwrap();
+                            exchange_all(&g, &mut fields, false);
                             igg::util::timing::precise_sleep(work);
                         }
                     }
@@ -69,8 +203,7 @@ fn overlapped_exchange_absorbs_concurrent_work() {
         handles.into_iter().map(|h| h.join().unwrap()).fold(0.0f64, f64::max)
     };
 
-    // plain: transit (~3 ms) + work (3 ms) ~ 6 ms/step;
-    // overlapped: max(transit, work) ~ 3 ms/step.
+    // plain: exchange + work sequentially; overlapped: max(exchange, work).
     let mut best = (f64::INFINITY, f64::INFINITY);
     for _ in 0..3 {
         best.0 = best.0.min(run(false));
@@ -80,29 +213,60 @@ fn overlapped_exchange_absorbs_concurrent_work() {
         }
     }
     panic!(
-        "overlap did not absorb transit: overlapped {:.4}s vs sequential {:.4}s per step",
+        "overlap did not absorb the exchange: overlapped {:.4}s vs sequential {:.4}s per step",
         best.1, best.0
     );
 }
 
-/// Non-blocking send structure: within a dimension the engine posts every
-/// send before the first wait and drains the requests after the receives.
-/// On a 3-rank periodic x-ring every rank posts TWO sends per step whose
-/// modeled injection is ~40 ms each; posting-then-draining overlaps the two
-/// injections with each other and with the receive transits, so a step
-/// costs ~1 transit (~40 ms). Waiting inline after each send (the old
-/// engine) would serialize to >= 2 injections + transit (~120 ms).
+/// Non-blocking send structure under the *optimistic* model: within a
+/// dimension the engine posts every send before the first wait and drains
+/// the requests after the receives. On a 3-rank periodic x-ring every rank
+/// posts TWO sends per step whose modeled injection is ~40 ms each;
+/// posting-then-draining overlaps the two injections with each other and
+/// with the receive transits, so a step costs ~1 transit (~40 ms). Waiting
+/// inline after each send (the old engine) would serialize to >= 2
+/// injections + transit (~120 ms).
 #[test]
 fn sends_posted_before_waits_overlap_injection() {
     let _guard = serial_guard();
-    use igg::grid::{GlobalGrid, GridOptions};
-    use igg::mpisim::Network;
-    use igg::physics::Field3D;
+    let (transit_s, best) = ring_step_time(false);
+    // serialized would be >= 3 * transit; posted-then-drained ~1 transit.
+    // Coarse threshold (2x) so scheduler noise cannot flake the test.
+    assert!(
+        best < 2.0 * transit_s,
+        "sends appear serialized under the independent model: {best:.4}s per step vs \
+         transit {transit_s:.3}s (expected < {:.3}s)",
+        2.0 * transit_s
+    );
+}
 
+/// The same ring under the *contended* model: the two posted sends of each
+/// rank now serialize through its NIC, so draining them costs >= 2
+/// injections of wall-time — a pure lower bound, which scheduler load can
+/// only push further up, so no retries are needed. This is exactly the
+/// optimism the serial-nic knob removes (and what the engine's drain path
+/// observes through the shifted completion instants).
+#[test]
+fn serial_nic_ring_serializes_injections() {
+    let _guard = serial_guard();
+    let (transit_s, best) = ring_step_time(true);
+    assert!(
+        best >= 1.9 * transit_s,
+        "contended ring step took {best:.4}s — two serialized ~{transit_s:.3}s \
+         injections must cost >= 2 injections of wall-time"
+    );
+}
+
+/// Per-step halo-update time on a 3-rank periodic x-ring (best of 3 for
+/// the optimistic run; single trial for the contended lower bound).
+fn ring_step_time(contended: bool) -> (f64, f64) {
     let n = 24usize;
     let plane_bytes = (n * n * 8) as f64;
     let transit_s = 0.04;
-    let net_model = NetModel { latency_s: 0.0, bw_bytes_per_s: plane_bytes / transit_s };
+    let mut net_model = NetModel::new(0.0, plane_bytes / transit_s);
+    if contended {
+        net_model = net_model.with_serial_nic();
+    }
     let nsteps = 3;
 
     let run = || -> f64 {
@@ -131,20 +295,15 @@ fn sends_posted_before_waits_overlap_injection() {
         handles.into_iter().map(|h| h.join().unwrap()).fold(0.0f64, f64::max)
     };
 
-    // serialized would be >= 3 * transit; posted-then-drained ~1 transit.
-    // Coarse threshold (2x) so scheduler noise cannot flake the test.
+    let trials = if contended { 1 } else { 3 };
     let mut best = f64::INFINITY;
-    for _ in 0..3 {
+    for _ in 0..trials {
         best = best.min(run());
-        if best < 2.0 * transit_s {
-            return;
+        if !contended && best < 2.0 * transit_s {
+            break;
         }
     }
-    panic!(
-        "sends appear serialized: {best:.4}s per step vs transit {transit_s:.3}s \
-         (expected < {:.3}s when all sends are posted before the first wait)",
-        2.0 * transit_s
-    );
+    (transit_s, best)
 }
 
 #[test]
@@ -168,5 +327,29 @@ fn modeled_traffic_accounted() {
         assert_eq!(st.updates, 3);
         assert_eq!(st.planes_sent, 3);
         assert_eq!(st.bytes_sent, 3 * 16 * 16 * 8);
+    }
+}
+
+/// Traffic accounting is model-independent: the contended preset counts
+/// the same messages and bytes as the optimistic one.
+#[test]
+fn contended_traffic_matches_optimistic() {
+    let cfg = Config {
+        app: AppKind::Diffusion,
+        nranks: 2,
+        local: [12, 12, 12],
+        nt: 2,
+        net: NetModel::aries().with_serial_nic(),
+        ..Default::default()
+    };
+    let stats = run_ranks(&cfg, |ctx| {
+        diffusion::run(&ctx)?;
+        Ok(ctx.grid.halo_stats())
+    })
+    .unwrap();
+    for st in stats {
+        assert_eq!(st.updates, 2);
+        assert_eq!(st.planes_sent, 2);
+        assert_eq!(st.bytes_sent, 2 * 12 * 12 * 8);
     }
 }

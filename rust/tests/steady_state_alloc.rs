@@ -10,9 +10,11 @@
 //!
 //! Measured with a counting global allocator, so *anything* that touches
 //! the heap between the warmup barrier and the final barrier fails the
-//! test — engine, transport, scheduler, driver alike. This file contains
-//! exactly one #[test] so no concurrent test in the same binary can
-//! pollute the counter.
+//! test — engine, transport, scheduler, driver alike. The scenarios cover
+//! the contended netmodel too (`serial-nic`): its per-rank NIC busy-until
+//! bookkeeping must live entirely in the network's preallocated tables.
+//! This file contains exactly one #[test] so no concurrent test in the
+//! same binary can pollute the counter.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -22,7 +24,7 @@ use igg::coordinator::config::{AppKind, Config};
 use igg::coordinator::launcher::RankCtx;
 use igg::coordinator::timeloop::{self, Schedule, StencilApp};
 use igg::coordinator::apps::{diffusion::Diffusion, twophase::Twophase, wave::Wave};
-use igg::mpisim::Network;
+use igg::mpisim::{NetModel, Network};
 use igg::grid::GlobalGrid;
 use igg::overlap::HideWidths;
 
@@ -64,7 +66,7 @@ where
     A: StencilApp + Send + 'static,
 {
     let nranks = cfg.nranks;
-    let net = Network::new(nranks);
+    let net = Network::with_model(nranks, cfg.net);
     let before = Arc::new(AtomicUsize::new(0));
     let after = Arc::new(AtomicUsize::new(0));
     let handles: Vec<_> = (0..nranks)
@@ -188,6 +190,36 @@ fn timeloop_steady_state_is_allocation_free() {
             local: [12, 12, 12],
             nt: 1,
             hide: Some(HideWidths([2, 2, 2])),
+            ..Default::default()
+        },
+    );
+
+    // Contended netmodel (serial-NIC injection serialization): the per-rank
+    // busy-until bookkeeping lives in the network's preallocated tables, so
+    // the synchronous exchange stays allocation-free per steady step.
+    assert_steady_state_alloc_free::<Diffusion>(
+        "diffusion/plain/2 ranks/serial-nic",
+        Config {
+            app: AppKind::Diffusion,
+            nranks: 2,
+            local: [12, 12, 12],
+            nt: 1,
+            net: NetModel::aries().with_serial_nic(),
+            ..Default::default()
+        },
+    );
+
+    // ... and so does the overlapped (hidden) path, where the comm stream
+    // and the main thread both deposit through the same rank's NIC slot.
+    assert_steady_state_alloc_free::<Diffusion>(
+        "diffusion/hide/2 ranks/serial-nic",
+        Config {
+            app: AppKind::Diffusion,
+            nranks: 2,
+            local: [12, 12, 12],
+            nt: 1,
+            hide: Some(HideWidths([3, 2, 2])),
+            net: NetModel::aries().with_serial_nic(),
             ..Default::default()
         },
     );
