@@ -16,6 +16,11 @@
 //! `--net aries:64,serial-nic`) additionally serializes each rank's send
 //! injections through its NIC — the honest setting for quoting
 //! hide-communication speedups. See EXPERIMENTS.md §Netmodel.
+//!
+//! To scale one rank onto many cores set `compute_threads` (x-chunks the
+//! stencil regions) and `comm_threads` (threads the halo plane
+//! pack/unpack — pays on wide z-planes); both stay bitwise identical to
+//! the serial paths (`--compute-threads` / `--comm-threads`).
 
 use igg::prelude::*;
 

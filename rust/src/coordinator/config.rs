@@ -65,6 +65,11 @@ pub struct Config {
     /// Large regions — in particular the inner region under
     /// `hide_communication` — are x-chunked across this many threads.
     pub compute_threads: usize,
+    /// Worker threads per rank for the halo engine's plane pack/unpack
+    /// (1 = scalar). Planes below the pack threshold stay scalar either
+    /// way; threading pays on wide planes — the z-plane strided
+    /// gather/scatter above all.
+    pub comm_threads: usize,
     pub net: NetModel,
     pub seed: u64,
     /// Physical domain edge length (cubic domain, as in the paper).
@@ -85,6 +90,10 @@ impl Default for Config {
             path: TransferPath::Rdma,
             pipeline_chunks: 4,
             compute_threads: 1,
+            // 1 unless the IGG_COMM_THREADS environment variable raises it
+            // (the CI comm-threads matrix leg runs the whole suite with
+            // IGG_COMM_THREADS=4), mirroring the IGG_NET preset below
+            comm_threads: default_comm_threads(),
             // ideal unless the IGG_NET environment variable selects a
             // preset (the CI contended matrix leg runs the whole suite
             // with IGG_NET=aries,serial-nic)
@@ -93,6 +102,17 @@ impl Default for Config {
             lx: 1.0,
         }
     }
+}
+
+/// `IGG_COMM_THREADS` environment default for [`Config::comm_threads`]:
+/// lets the CI matrix (and ad-hoc runs) thread the halo pack path without
+/// touching every invocation. Unset, empty, or invalid values mean 1.
+fn default_comm_threads() -> usize {
+    std::env::var("IGG_COMM_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
 }
 
 impl Config {
@@ -136,6 +156,9 @@ impl Config {
         if let Some(t) = args.get_usize("compute-threads")? {
             cfg.compute_threads = t;
         }
+        if let Some(t) = args.get_usize("comm-threads")? {
+            cfg.comm_threads = t;
+        }
         if let Some(n) = args.get("net") {
             cfg.net = NetModel::parse(n)?;
         }
@@ -151,6 +174,7 @@ impl Config {
         anyhow::ensure!(self.nt >= 1, "need at least one step");
         anyhow::ensure!(self.pipeline_chunks >= 1, "need at least one pipeline chunk");
         anyhow::ensure!(self.compute_threads >= 1, "need at least one compute thread");
+        anyhow::ensure!(self.comm_threads >= 1, "need at least one comm thread");
         for (d, &n) in self.local.iter().enumerate() {
             anyhow::ensure!(n >= 3, "local dim {d} = {n} too small (need >= 3)");
         }
@@ -163,6 +187,7 @@ impl Config {
             periods: self.periods,
             path: self.path,
             pipeline_chunks: self.pipeline_chunks,
+            comm_threads: self.comm_threads,
         }
     }
 
@@ -202,6 +227,7 @@ impl Config {
             ),
             ("pipeline_chunks", Json::Num(self.pipeline_chunks as f64)),
             ("compute_threads", Json::Num(self.compute_threads as f64)),
+            ("comm_threads", Json::Num(self.comm_threads as f64)),
             ("net_latency_s", Json::Num(self.net.latency_s)),
             (
                 "net_bw_bytes_per_s",
@@ -236,6 +262,7 @@ mod tests {
             .value("path", None, "")
             .value("chunks", None, "")
             .value("compute-threads", None, "")
+            .value("comm-threads", None, "")
             .value("net", None, "")
             .value("seed", None, "")
     }
@@ -275,6 +302,22 @@ mod tests {
         let c = parse(&["--compute-threads", "4"]).unwrap();
         assert_eq!(c.compute_threads, 4);
         assert!(parse(&["--compute-threads", "0"]).is_err());
+    }
+
+    #[test]
+    fn comm_threads_flag() {
+        // default 1 unless IGG_COMM_THREADS is exported (the CI matrix leg)
+        let want = std::env::var("IGG_COMM_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(1);
+        assert_eq!(parse(&[]).unwrap().comm_threads, want);
+        let c = parse(&["--comm-threads", "4"]).unwrap();
+        assert_eq!(c.comm_threads, 4);
+        assert_eq!(c.grid_options().comm_threads, 4);
+        assert_eq!(c.to_json().get("comm_threads").unwrap().as_usize(), Some(4));
+        assert!(parse(&["--comm-threads", "0"]).is_err());
     }
 
     #[test]

@@ -17,7 +17,10 @@
 //! [`StencilApp::halo_fields`] hands the exchange a stack-built
 //! `&mut [&mut Field3D]` instead of a per-step `Vec`
 //! (`tests/steady_state_alloc.rs` asserts this with a counting global
-//! allocator).
+//! allocator). The contract holds for both thread knobs: `compute_threads`
+//! (stencil regions) and `comm_threads` (halo pack/unpack) engage scoped
+//! workers only above their size thresholds, so small-grid steady steps
+//! never spawn.
 
 use std::time::Instant;
 

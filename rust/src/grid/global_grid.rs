@@ -21,11 +21,20 @@ pub struct GridOptions {
     pub path: TransferPath,
     /// Chunks per message for the staged path's software pipeline.
     pub pipeline_chunks: usize,
+    /// Comm-side pack/unpack worker threads (1 = scalar; planes below the
+    /// size threshold stay scalar regardless).
+    pub comm_threads: usize,
 }
 
 impl Default for GridOptions {
     fn default() -> Self {
-        GridOptions { dims: [0; 3], periods: [false; 3], path: TransferPath::Rdma, pipeline_chunks: 4 }
+        GridOptions {
+            dims: [0; 3],
+            periods: [false; 3],
+            path: TransferPath::Rdma,
+            pipeline_chunks: 4,
+            comm_threads: 1,
+        }
     }
 }
 
@@ -50,15 +59,25 @@ impl GlobalGrid {
         }
         let dims = select_dims(comm.size(), local, opts.dims)?;
         let cart = CartComm::create(comm, dims, opts.periods)?;
-        let engine = HaloEngine::new(&cart, opts.path, opts.pipeline_chunks);
+        let engine = Self::engine_for(&cart, &opts);
         Ok(GlobalGrid { cart, local, engine: Mutex::new(engine) })
     }
 
     /// Use an existing Cartesian communicator (the paper: "alternatively, an
     /// MPI communicator can be passed to ImplicitGlobalGrid for usage").
     pub fn init_cart(cart: CartComm, local: [usize; 3], opts: GridOptions) -> anyhow::Result<Self> {
-        let engine = HaloEngine::new(&cart, opts.path, opts.pipeline_chunks);
+        let engine = Self::engine_for(&cart, &opts);
         Ok(GlobalGrid { cart, local, engine: Mutex::new(engine) })
+    }
+
+    fn engine_for(cart: &CartComm, opts: &GridOptions) -> HaloEngine {
+        HaloEngine::with_config(
+            cart,
+            opts.path,
+            opts.pipeline_chunks,
+            crate::memory::CopyModel::ideal(),
+            opts.comm_threads,
+        )
     }
 
     // ---- queries --------------------------------------------------------
@@ -172,6 +191,12 @@ impl GlobalGrid {
     /// Pipeline chunk count the halo engine was configured with.
     pub fn halo_chunks(&self) -> usize {
         self.engine.lock().unwrap().chunks()
+    }
+
+    /// Comm-side pack/unpack worker count the halo engine was configured
+    /// with (`comm_threads`).
+    pub fn halo_comm_threads(&self) -> usize {
+        self.engine.lock().unwrap().comm_threads()
     }
 
     /// Cumulative engine-attributed heap allocations (pooled buffers,

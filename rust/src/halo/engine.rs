@@ -20,6 +20,17 @@
 //!   under `NicMode::SerialNic` — the engine's posting discipline is
 //!   optimal either way, the drain simply observes later completion
 //!   instants under contention.
+//! * **Cross-field pipelining** — within a dimension the fields are not
+//!   barriered against each other: posting walks the plan's per-field
+//!   segments (field B's receives post and B packs while field A's sends
+//!   are in flight), and a completion pump with one progress cursor per
+//!   field unpacks each field as soon as its own receives complete.
+//!   Dimensions still run strictly sequentially (corner propagation).
+//! * **Threaded pack/unpack** — with `comm_threads > 1` the plane
+//!   gather/scatter runs across scoped workers
+//!   ([`super::slicing::pack_plane_threaded`]), bitwise identical to the
+//!   scalar path; planes below the size threshold stay scalar, so small
+//!   grids never pay a spawn (and stay allocation-free).
 //! * **Payload recycling** — the vectors that travel through the network
 //!   come from the pool's size-keyed payload free list and every received
 //!   payload is recycled back into it ([`BufRole::Payload`]); halo traffic
@@ -49,10 +60,11 @@ use std::sync::{Arc, Mutex};
 
 use crate::memory::{BufKey, BufRole, BufferPool, CopyModel, SimDevice, Stream, StreamPriority};
 use crate::mpisim::{CartComm, Comm, RecvRequest, SendRequest};
+use crate::physics::parallel::chunk_range;
 use crate::physics::Field3D;
 
 use super::plan::{ExchangeOp, HaloPlan, MAX_CHUNKS};
-use super::slicing::{pack_plane_raw, unpack_plane_raw};
+use super::slicing::{pack_plane_threaded, unpack_plane_threaded};
 use super::TransferPath;
 
 /// Halo traffic counters (cumulative per engine).
@@ -121,17 +133,49 @@ struct PlanCache {
     plan: Arc<HaloPlan>,
 }
 
+/// Receive progress of one op of the current dimension: identity, the
+/// posted-request window, and how many chunks have been absorbed. One entry
+/// per op with a peer to receive from, in op order.
+struct RecvState {
+    /// Index into the dimension's op list.
+    op: usize,
+    /// First chunk request index in [`ExchangeScratch::recv_reqs`].
+    req_base: usize,
+    n_chunks: usize,
+    /// Chunks waited and absorbed so far.
+    done: usize,
+    /// Staged-path device staging buffer, checked out on the first chunk
+    /// and restored when the op finalizes.
+    dev_buf: Option<Vec<f64>>,
+    /// First size-mismatch error of this op; the op still drains its
+    /// remaining chunks before the error surfaces.
+    err: Option<anyhow::Error>,
+}
+
+/// Per-field progress cursor of the completion pump: the front
+/// not-yet-finalized op and the end of this field's window into
+/// [`ExchangeScratch::recv_states`]. Fields advance independently — no
+/// completion barrier between them.
+struct FieldCursor {
+    /// Next op to finalize; starts at the window's first op.
+    next: usize,
+    /// One past the window's last op.
+    hi: usize,
+}
+
 /// Reusable request storage for one in-flight exchange; capacities are
 /// retained across updates so the steady state performs no allocation.
 #[derive(Default)]
 struct ExchangeScratch {
     /// Send requests of the current dimension, drained after the receives.
     sends: Vec<SendRequest>,
-    /// Posted receives of the current dimension, in op order.
-    recv_reqs: Vec<RecvRequest>,
-    /// (index into the dim's ops, chunk count) per receiving op, in the
-    /// order their requests appear in `recv_reqs`.
-    recv_ops: Vec<(usize, usize)>,
+    /// Posted receives of the current dimension, in op order; slots are
+    /// `take()`n as the pump absorbs them (possibly out of posting order).
+    recv_reqs: Vec<Option<RecvRequest>>,
+    /// Per receiving op of the current dimension, in op order.
+    recv_states: Vec<RecvState>,
+    /// One cursor per field segment of the current dimension.
+    cursors: Vec<FieldCursor>,
 }
 
 /// Per-step input of the overlapped exchange job, refilled in place by
@@ -151,6 +195,7 @@ struct StreamJob {
     comm: Comm,
     path: TransferPath,
     chunks: usize,
+    comm_threads: usize,
     device: Arc<SimDevice>,
     pool: Arc<Mutex<BufferPool>>,
     stats: Arc<Mutex<HaloStats>>,
@@ -188,6 +233,7 @@ impl StreamJob {
                 &input.raws,
                 self.path,
                 self.chunks,
+                self.comm_threads,
                 &self.device,
                 &self.pool,
                 &self.stats,
@@ -205,6 +251,8 @@ pub struct HaloEngine {
     comm: Comm,
     path: TransferPath,
     chunks: usize,
+    /// Scoped workers for plane pack/unpack on the comm side (1 = scalar).
+    comm_threads: usize,
     device: Arc<SimDevice>,
     pool: Arc<Mutex<BufferPool>>,
     stream: Arc<Stream>,
@@ -233,7 +281,21 @@ impl HaloEngine {
         pipeline_chunks: usize,
         copy_model: CopyModel,
     ) -> Self {
+        Self::with_config(cart, path, pipeline_chunks, copy_model, 1)
+    }
+
+    /// Full constructor: transfer path, staged pipeline chunks, copy model,
+    /// and the comm-side pack/unpack worker count (`comm_threads`; planes
+    /// below [`super::slicing::PACK_PAR_MIN_CELLS`] stay scalar).
+    pub fn with_config(
+        cart: &CartComm,
+        path: TransferPath,
+        pipeline_chunks: usize,
+        copy_model: CopyModel,
+        comm_threads: usize,
+    ) -> Self {
         assert!(pipeline_chunks >= 1 && pipeline_chunks <= MAX_CHUNKS);
+        assert!(comm_threads >= 1, "need at least one comm thread");
         let device = Arc::new(SimDevice::new(copy_model));
         let pool = Arc::new(Mutex::new(BufferPool::new()));
         let stats = Arc::new(Mutex::new(HaloStats::default()));
@@ -241,6 +303,7 @@ impl HaloEngine {
             comm: cart.comm().clone(),
             path,
             chunks: pipeline_chunks,
+            comm_threads,
             device: Arc::clone(&device),
             pool: Arc::clone(&pool),
             stats: Arc::clone(&stats),
@@ -255,6 +318,7 @@ impl HaloEngine {
             comm: cart.comm().clone(),
             path,
             chunks: pipeline_chunks,
+            comm_threads,
             device,
             pool,
             stream: Arc::new(Stream::new(StreamPriority::High)),
@@ -279,6 +343,11 @@ impl HaloEngine {
     /// Configured pipeline chunk count (effective only on the staged path).
     pub fn chunks(&self) -> usize {
         self.chunks
+    }
+
+    /// Configured comm-side pack/unpack worker count.
+    pub fn comm_threads(&self) -> usize {
+        self.comm_threads
     }
 
     /// Cumulative engine-attributed heap allocations: pooled buffer
@@ -331,6 +400,7 @@ impl HaloEngine {
                 &self.raw_scratch,
                 self.path,
                 self.chunks,
+                self.comm_threads,
                 &self.device,
                 &self.pool,
                 &self.stats,
@@ -397,6 +467,7 @@ impl HaloEngine {
                     &raws,
                     job.path,
                     job.chunks,
+                    job.comm_threads,
                     &job.device,
                     &job.pool,
                     &job.stats,
@@ -451,14 +522,29 @@ impl Drop for PendingHalo {
     }
 }
 
-/// The sequential-by-dimension exchange at the heart of `update_halo!`.
+/// The sequential-by-dimension, cross-field-pipelined exchange at the heart
+/// of `update_halo!`.
 ///
-/// Per dimension: post every receive, post every send (packing straight
-/// into pooled payload buffers — no waits anywhere in this phase), then
-/// wait+unpack the receives, and finally drain the send requests. The
-/// modeled injections and transits of a dimension therefore overlap (the
-/// injections with each other only as far as the NIC contention model
-/// allows).
+/// Per dimension, two stages:
+///
+/// * **Staggered posting**, field segment by field segment (the plan's
+///   [`super::plan::FieldOps`]): post field A's receives, pack (threaded,
+///   see `comm_threads`) and post its sends, then move on to field B — so
+///   field B's receives are posted and B packs while A's modeled send
+///   injections are still in flight. No wait of any kind happens in this
+///   stage, preserving the posted-before-waits discipline the netmodel
+///   tests pin.
+/// * **Completion pump** with one progress cursor per field: each field's
+///   front op absorbs whatever chunks have arrived (`RecvRequest::test`)
+///   and unpacks as soon as its own receives complete — no completion
+///   barrier between fields, so a late field never delays an early one's
+///   unpack. When nothing is testable anywhere the pump blocks on the
+///   earliest pending chunk in op order (the wait the strictly-ordered
+///   engine performed) instead of spinning on probes.
+///
+/// Dimensions still run strictly sequentially — the corner-propagation
+/// contract that makes the distributed result bitwise equal to the
+/// single-device one.
 ///
 /// On a receive error, every posted receive and send of the erroring
 /// dimension is drained before the error is returned — nothing of later
@@ -482,6 +568,7 @@ unsafe fn exchange(
     raws: &[RawField],
     path: TransferPath,
     chunks: usize,
+    comm_threads: usize,
     device: &SimDevice,
     pool: &Mutex<BufferPool>,
     stats: &Mutex<HaloStats>,
@@ -489,90 +576,164 @@ unsafe fn exchange(
 ) -> anyhow::Result<()> {
     // Stats are accumulated here and flushed once at the end of the update.
     let mut local = HaloStats { updates: 1, ..HaloStats::default() };
-    for ops in &plan.per_dim {
+    let mut first_err: Option<anyhow::Error> = None;
+    for (d, ops) in plan.per_dim.iter().enumerate() {
         if ops.is_empty() {
             continue;
         }
         // One pool lock per dimension covers every checkout/restore below.
         let mut pool_g = pool.lock().unwrap();
+        let ExchangeScratch { sends, recv_reqs, recv_states, cursors } = &mut *scratch;
+        sends.clear();
+        recv_reqs.clear();
+        recv_states.clear();
+        cursors.clear();
 
-        // Phase 1: post all receives for this dimension.
-        scratch.recv_ops.clear();
-        scratch.recv_reqs.clear();
-        scratch.sends.clear();
-        for (i, op) in ops.iter().enumerate() {
-            if let Some(src) = op.recv_from {
-                let n_chunks = effective_chunks(path, chunks, op.plane_cells);
-                for c in 0..n_chunks {
-                    scratch.recv_reqs.push(comm.irecv(src, op.tag(c)));
+        // Stage 1: staggered posting. Per field segment: receives first,
+        // then pack + post the sends. Packing field B here overlaps field
+        // A's in-flight injections; every send of the dimension is on the
+        // wire before the first wait below.
+        for seg in &plan.fields_per_dim[d] {
+            let lo = recv_states.len();
+            for i in seg.start..seg.end {
+                let op = &ops[i];
+                if let Some(src) = op.recv_from {
+                    let n_chunks = effective_chunks(path, chunks, op.plane_cells);
+                    let req_base = recv_reqs.len();
+                    for c in 0..n_chunks {
+                        recv_reqs.push(Some(comm.irecv(src, op.tag(c))));
+                    }
+                    recv_states.push(RecvState {
+                        op: i,
+                        req_base,
+                        n_chunks,
+                        done: 0,
+                        dev_buf: None,
+                        err: None,
+                    });
                 }
-                scratch.recv_ops.push((i, n_chunks));
             }
+            for op in &ops[seg.start..seg.end] {
+                if op.self_wrap {
+                    wrap_copy(op, raws, comm_threads, &mut pool_g, &mut local);
+                } else if let Some(dst) = op.send_to {
+                    send_plane(
+                        comm,
+                        op,
+                        dst,
+                        raws,
+                        path,
+                        chunks,
+                        comm_threads,
+                        device,
+                        &mut pool_g,
+                        &mut local,
+                        sends,
+                    );
+                }
+            }
+            cursors.push(FieldCursor { next: lo, hi: recv_states.len() });
         }
 
-        // Phase 2: pack and post all sends — no wait happens before the
-        // last send of the dimension is on the wire.
-        for op in ops {
-            if op.self_wrap {
-                wrap_copy(op, raws, &mut pool_g, &mut local);
-                continue;
+        // Stage 2: completion pump. Received payloads are recycled into
+        // the pool; the pump runs until every posted receive of the
+        // dimension is drained — also on the error path, where an
+        // abandoned posted receive would leave its matched payload in the
+        // mailbox to FIFO-match the same-tag receive of the next update.
+        // The fallback waits block until the matching message arrives;
+        // every live peer posts all its sends of a dimension before its
+        // first wait, so these waits are bounded. (A peer that dies
+        // mid-update hangs any later receive or collective in this
+        // substrate anyway; rank death is fatal to the run.)
+        let mut pending = recv_states.len();
+        while pending > 0 {
+            let mut progressed = false;
+            for cur in cursors.iter_mut() {
+                while cur.next < cur.hi {
+                    let st = &mut recv_states[cur.next];
+                    // absorb every chunk of the front op that has arrived
+                    while st.done < st.n_chunks {
+                        let slot = &recv_reqs[st.req_base + st.done];
+                        if !slot.as_ref().is_some_and(|r| r.test()) {
+                            break;
+                        }
+                        let req = recv_reqs[st.req_base + st.done].take().expect("tested");
+                        absorb_chunk(
+                            &ops[st.op],
+                            st,
+                            req.wait(),
+                            raws,
+                            path,
+                            comm_threads,
+                            device,
+                            &mut pool_g,
+                        );
+                        progressed = true;
+                    }
+                    if st.done < st.n_chunks {
+                        break; // front op incomplete: give other fields a turn
+                    }
+                    finalize_op(
+                        &ops[st.op],
+                        st,
+                        raws,
+                        path,
+                        comm_threads,
+                        &mut pool_g,
+                        &mut first_err,
+                    );
+                    cur.next += 1;
+                    pending -= 1;
+                    progressed = true;
+                }
             }
-            if let Some(dst) = op.send_to {
-                send_plane(
-                    comm,
-                    op,
-                    dst,
+            if pending > 0 && !progressed {
+                // Nothing testable anywhere: block on the earliest pending
+                // chunk in op order rather than spinning on probes.
+                let cur = cursors.iter_mut().find(|c| c.next < c.hi).expect("pending ops exist");
+                let st = &mut recv_states[cur.next];
+                let req =
+                    recv_reqs[st.req_base + st.done].take().expect("pending chunk posted");
+                absorb_chunk(
+                    &ops[st.op],
+                    st,
+                    req.wait(),
                     raws,
                     path,
-                    chunks,
+                    comm_threads,
                     device,
                     &mut pool_g,
-                    &mut local,
-                    &mut scratch.sends,
                 );
-            }
-        }
-
-        // Phase 3: wait + unpack receives (pipelined recv+h2d for the
-        // staged path); received payloads are recycled into the pool.
-        //
-        // Error hygiene: on a receive error the remaining posted receives
-        // are still drained (payloads recycled) before the error surfaces —
-        // an abandoned posted receive would leave its matched payload in
-        // the mailbox, where it would FIFO-match the same-tag receive of
-        // the *next* update if the caller continued after the error. The
-        // drain blocks until each matching message arrives; every live
-        // peer posts all its sends of a dimension before its first wait,
-        // so these waits are bounded. A peer that dies mid-update leaves
-        // the drain blocked — but a dead rank hangs any later receive or
-        // collective in this substrate anyway; rank death is fatal to the
-        // run, not something the error path recovers from.
-        let mut recv_err: Option<anyhow::Error> = None;
-        {
-            let mut reqs = scratch.recv_reqs.drain(..);
-            for &(i, n_chunks) in &scratch.recv_ops {
-                match recv_plane(&ops[i], &mut reqs, n_chunks, raws, path, device, &mut pool_g) {
-                    Ok(()) => {}
-                    Err(e) => {
-                        recv_err = Some(e);
-                        break;
-                    }
+                if st.done == st.n_chunks {
+                    finalize_op(
+                        &ops[st.op],
+                        st,
+                        raws,
+                        path,
+                        comm_threads,
+                        &mut pool_g,
+                        &mut first_err,
+                    );
+                    cur.next += 1;
+                    pending -= 1;
                 }
             }
-            for req in reqs {
-                pool_g.restore_payload(req.wait());
-            }
         }
 
-        // Phase 4: drain the posted sends (completes their modeled
+        // Stage 3: drain the posted sends (completes their modeled
         // injection; usually already elapsed under the receive waits) —
         // also on the error path, so no send request is abandoned.
-        for req in scratch.sends.drain(..) {
+        for req in sends.drain(..) {
             req.wait();
         }
-        if let Some(e) = recv_err {
-            return Err(e);
+        if first_err.is_some() {
+            // Nothing of later dimensions has been posted; surface the
+            // error with this dimension fully drained.
+            break;
         }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
     }
     let mut st = stats.lock().unwrap();
     st.updates += local.updates;
@@ -589,16 +750,6 @@ fn effective_chunks(path: TransferPath, chunks: usize, cells: usize) -> usize {
     }
 }
 
-/// The `i`-th of `n` nearly equal chunk ranges of `len` (allocation-free
-/// form of splitting `0..len` into `n` pieces).
-fn chunk_range(len: usize, n: usize, i: usize) -> (usize, usize) {
-    let base = len / n;
-    let rem = len % n;
-    let lo = i * base + i.min(rem);
-    let hi = lo + base + usize::from(i < rem);
-    (lo, hi)
-}
-
 #[allow(clippy::too_many_arguments)]
 unsafe fn send_plane(
     comm: &Comm,
@@ -607,6 +758,7 @@ unsafe fn send_plane(
     raws: &[RawField],
     path: TransferPath,
     chunks: usize,
+    comm_threads: usize,
     device: &SimDevice,
     pool: &mut BufferPool,
     stats: &mut HaloStats,
@@ -620,7 +772,7 @@ unsafe fn send_plane(
             // migrates to the receiver, and a payload received this step
             // replaces it in the pool, so the steady state allocates nothing.
             let mut payload = pool.checkout_payload(op.plane_cells);
-            pack_plane_raw(data, rf.dims, op.dim, op.send_plane, &mut payload);
+            pack_plane_threaded(data, rf.dims, op.dim, op.send_plane, &mut payload, comm_threads);
             sends.push(comm.isend(dst, op.tag(0), payload));
             stats.planes_sent += 1;
             stats.bytes_sent += (op.plane_cells * 8) as u64;
@@ -632,7 +784,7 @@ unsafe fn send_plane(
             let side = usize::from(op.dir > 0);
             let key = BufKey { field: op.field, dim: op.dim, side, role: BufRole::Send };
             let mut dev_buf = pool.checkout(key, op.plane_cells);
-            pack_plane_raw(data, rf.dims, op.dim, op.send_plane, &mut dev_buf);
+            pack_plane_threaded(data, rf.dims, op.dim, op.send_plane, &mut dev_buf, comm_threads);
             let n_chunks = effective_chunks(path, chunks, op.plane_cells);
             for c in 0..n_chunks {
                 let (lo, hi) = chunk_range(op.plane_cells, n_chunks, c);
@@ -647,73 +799,116 @@ unsafe fn send_plane(
     }
 }
 
-unsafe fn recv_plane(
+/// Absorb one arrived chunk `payload` into the op's receive state: rdma
+/// payloads unpack straight into the field (threaded); staged chunks h2d
+/// into the lazily checked-out staging buffer. Size mismatches are
+/// *recorded* in the state rather than returned — the op keeps draining
+/// its remaining chunks so the pump's request accounting stays exact, and
+/// [`finalize_op`] promotes the error once the op is fully drained.
+#[allow(clippy::too_many_arguments)]
+unsafe fn absorb_chunk(
     op: &ExchangeOp,
-    reqs: &mut std::vec::Drain<'_, RecvRequest>,
-    n_chunks: usize,
+    st: &mut RecvState,
+    payload: Vec<f64>,
     raws: &[RawField],
     path: TransferPath,
+    comm_threads: usize,
     device: &SimDevice,
     pool: &mut BufferPool,
-) -> anyhow::Result<()> {
-    let rf = raws[op.field];
-    let data = rf.slice_mut();
+) {
     match path {
         TransferPath::Rdma => {
-            debug_assert_eq!(n_chunks, 1);
-            let payload = reqs.next().expect("one posted receive per rdma op").wait();
-            let got = payload.len();
-            if got == op.plane_cells {
-                unpack_plane_raw(data, rf.dims, op.dim, op.recv_plane, &payload);
+            debug_assert_eq!(st.n_chunks, 1);
+            let rf = raws[op.field];
+            if payload.len() == op.plane_cells {
+                unpack_plane_threaded(
+                    rf.slice_mut(),
+                    rf.dims,
+                    op.dim,
+                    op.recv_plane,
+                    &payload,
+                    comm_threads,
+                );
+            } else if st.err.is_none() {
+                st.err = Some(anyhow::anyhow!(
+                    "halo message size mismatch: got {}, want {} (field {}, dim {})",
+                    payload.len(),
+                    op.plane_cells,
+                    op.field,
+                    op.dim
+                ));
             }
             // recycled even on mismatch: the bad payload must not linger
             pool.restore_payload(payload);
-            anyhow::ensure!(
-                got == op.plane_cells,
-                "halo message size mismatch: got {got}, want {} (field {}, dim {})",
-                op.plane_cells,
-                op.field,
-                op.dim
-            );
         }
         TransferPath::Staged => {
             let side = usize::from(op.dir < 0); // dir -1 receives into the high plane
             let key = BufKey { field: op.field, dim: op.dim, side, role: BufRole::Recv };
-            let mut dev_buf = pool.checkout(key, op.plane_cells);
-            // On a chunk-size mismatch the remaining chunks of this op are
-            // still waited and recycled (and the staging buffer restored)
-            // before the error is returned, keeping the drain accounting
-            // exact for the caller's error-path cleanup.
-            let mut res = Ok(());
-            for c in 0..n_chunks {
-                let (lo, hi) = chunk_range(op.plane_cells, n_chunks, c);
-                let payload = reqs.next().expect("one posted receive per chunk").wait();
-                if res.is_ok() {
-                    if payload.len() == hi - lo {
-                        device.h2d(&payload, &mut dev_buf[lo..hi]);
-                    } else {
-                        res = Err(anyhow::anyhow!(
-                            "halo chunk size mismatch: got {}, want {}",
-                            payload.len(),
-                            hi - lo
-                        ));
-                    }
+            if st.dev_buf.is_none() {
+                st.dev_buf = Some(pool.checkout(key, op.plane_cells));
+            }
+            let dev_buf = st.dev_buf.as_mut().expect("checked out above");
+            let (lo, hi) = chunk_range(op.plane_cells, st.n_chunks, st.done);
+            // an op already failing only drains its remaining chunks
+            if st.err.is_none() {
+                if payload.len() == hi - lo {
+                    device.h2d(&payload, &mut dev_buf[lo..hi]);
+                } else {
+                    st.err = Some(anyhow::anyhow!(
+                        "halo chunk size mismatch: got {}, want {}",
+                        payload.len(),
+                        hi - lo
+                    ));
                 }
-                pool.restore_payload(payload);
             }
-            if res.is_ok() {
-                unpack_plane_raw(data, rf.dims, op.dim, op.recv_plane, &dev_buf);
-            }
-            pool.restore(key, dev_buf);
-            res?;
+            pool.restore_payload(payload);
         }
     }
-    Ok(())
+    st.done += 1;
+}
+
+/// Finalize a fully drained op: staged receives unpack their staging
+/// buffer into the field (threaded) and restore it; the op's recorded
+/// error, if any, is promoted into the dimension's first-error slot.
+unsafe fn finalize_op(
+    op: &ExchangeOp,
+    st: &mut RecvState,
+    raws: &[RawField],
+    path: TransferPath,
+    comm_threads: usize,
+    pool: &mut BufferPool,
+    first_err: &mut Option<anyhow::Error>,
+) {
+    debug_assert_eq!(st.done, st.n_chunks);
+    if path == TransferPath::Staged {
+        if let Some(dev_buf) = st.dev_buf.take() {
+            if st.err.is_none() {
+                let rf = raws[op.field];
+                unpack_plane_threaded(
+                    rf.slice_mut(),
+                    rf.dims,
+                    op.dim,
+                    op.recv_plane,
+                    &dev_buf,
+                    comm_threads,
+                );
+            }
+            let side = usize::from(op.dir < 0);
+            let key = BufKey { field: op.field, dim: op.dim, side, role: BufRole::Recv };
+            pool.restore(key, dev_buf);
+        }
+    }
+    if let Some(e) = st.err.take() {
+        if first_err.is_none() {
+            *first_err = Some(e);
+        }
+    }
 }
 
 unsafe fn wrap_copy(
     op: &ExchangeOp,
     raws: &[RawField],
+    comm_threads: usize,
     pool: &mut BufferPool,
     stats: &mut HaloStats,
 ) {
@@ -722,8 +917,8 @@ unsafe fn wrap_copy(
     let side = usize::from(op.dir > 0);
     let key = BufKey { field: op.field, dim: op.dim, side, role: BufRole::Wrap };
     let mut buf = pool.checkout(key, op.plane_cells);
-    pack_plane_raw(data, rf.dims, op.dim, op.send_plane, &mut buf);
-    unpack_plane_raw(data, rf.dims, op.dim, op.recv_plane, &buf);
+    pack_plane_threaded(data, rf.dims, op.dim, op.send_plane, &mut buf, comm_threads);
+    unpack_plane_threaded(data, rf.dims, op.dim, op.recv_plane, &buf, comm_threads);
     pool.restore(key, buf);
     stats.wrap_copies += 1;
 }
@@ -825,7 +1020,8 @@ mod tests {
 
     #[test]
     fn staged_pipelined_matches() {
-        let opts = GridOptions { path: TransferPath::Staged, pipeline_chunks: 4, ..Default::default() };
+        let opts =
+            GridOptions { path: TransferPath::Staged, pipeline_chunks: 4, ..Default::default() };
         on_grid(8, [6, 6, 6], opts, |g| {
             check_halo_coherent(g, TransferPath::Staged, 4);
         });
@@ -1165,22 +1361,67 @@ mod tests {
         }
     }
 
+    /// The threaded pack/unpack path through the full engine: a z-split
+    /// pair exchanging a plane above the threading threshold, with
+    /// `comm_threads = 4`, must restore the global marker bitwise on both
+    /// transfer paths (chunked staging included).
     #[test]
-    fn chunk_range_covers() {
-        let ranges = |len: usize, n: usize| -> Vec<(usize, usize)> {
-            (0..n).map(|i| chunk_range(len, n, i)).collect()
-        };
-        assert_eq!(ranges(10, 3), vec![(0, 4), (4, 7), (7, 10)]);
-        assert_eq!(ranges(4, 4), vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
-        assert_eq!(ranges(5, 1), vec![(0, 5)]);
-        // contiguity and coverage for awkward splits
-        for (len, n) in [(17, 5), (64, 7), (3, 3)] {
-            let rs = ranges(len, n);
-            assert_eq!(rs[0].0, 0);
-            assert_eq!(rs[n - 1].1, len);
-            for w in rs.windows(2) {
-                assert_eq!(w[0].1, w[1].0);
-            }
+    fn comm_threads_z_exchange_coherent() {
+        for (path, chunks) in [(TransferPath::Rdma, 1), (TransferPath::Staged, 4)] {
+            let opts = GridOptions {
+                dims: [1, 1, 2],
+                path,
+                pipeline_chunks: chunks,
+                comm_threads: 4,
+                ..Default::default()
+            };
+            // z-plane cells = 96*96 = 9216 >= PACK_PAR_MIN_CELLS: the
+            // scoped pack workers really engage.
+            on_grid(2, [96, 96, 6], opts, move |g| {
+                assert_eq!(g.halo_comm_threads(), 4, "engine comm threads");
+                check_halo_coherent(g, path, chunks);
+            });
         }
+    }
+
+    /// Cross-field pipelining: four fields exchanged in one call (the wave
+    /// app's shape) stay bitwise correct — each field's progress cursor
+    /// must unpack its own receives, never a neighbour segment's.
+    #[test]
+    fn pipelined_four_field_update_coherent() {
+        on_grid(8, [6, 6, 6], GridOptions::default(), |g| {
+            let wants: Vec<Field3D> = (0..4)
+                .map(|i| {
+                    let mut m = marker(g);
+                    for v in m.as_mut_slice() {
+                        *v += i as f64 * 0.25;
+                    }
+                    m
+                })
+                .collect();
+            let mut fields = wants.clone();
+            for f in &mut fields {
+                let dims = f.dims();
+                for x in 0..dims[0] {
+                    for y in 0..dims[1] {
+                        for z in 0..dims[2] {
+                            let c = [x, y, z];
+                            let on_recv_plane = (0..3).any(|d| {
+                                (c[d] == 0 && g.cart().neighbor(d, -1).is_some())
+                                    || (c[d] == dims[d] - 1 && g.cart().neighbor(d, 1).is_some())
+                            });
+                            if on_recv_plane {
+                                f.set(x, y, z, -3.0);
+                            }
+                        }
+                    }
+                }
+            }
+            let [a, b, c, d] = &mut fields[..] else { unreachable!("four fields") };
+            g.update_halo(&mut [a, b, c, d]).unwrap();
+            for (i, (f, want)) in fields.iter().zip(&wants).enumerate() {
+                assert_eq!(f.max_abs_diff(want), 0.0, "field {i} must be restored");
+            }
+        });
     }
 }

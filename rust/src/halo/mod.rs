@@ -26,6 +26,9 @@
 //! the pool's size-keyed free list, so steady-state updates allocate
 //! nothing; within each dimension all sends are posted before the first
 //! wait and drained after the receives, so injections and transits overlap.
+//! Fields are pipelined against each other within a dimension (per-field
+//! progress cursors — see `engine.rs`), and the plane pack/unpack threads
+//! across `comm_threads` scoped workers for wide planes (`slicing.rs`).
 //! The overlapped path runs on a dedicated high-priority
 //! [`crate::memory::Stream`], allocated once — the paper's explicit
 //! stream/buffer-reuse design.
@@ -35,8 +38,10 @@ mod plan;
 pub mod slicing;
 
 pub use engine::{HaloEngine, HaloStats, PendingHalo};
-pub use plan::{ExchangeOp, HaloPlan};
-pub use slicing::{pack_plane, unpack_plane};
+pub use plan::{ExchangeOp, FieldOps, HaloPlan};
+pub use slicing::{
+    pack_plane, pack_plane_threaded, unpack_plane, unpack_plane_threaded, PACK_PAR_MIN_CELLS,
+};
 
 /// Which transfer path `update_halo!` uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -118,11 +118,32 @@ pub fn ops_for_dim(
     ]
 }
 
-/// Full plan: per dimension (outer, executed sequentially), the ops of all
-/// fields (inner, may be interleaved/batched).
+/// The contiguous op range of one field within one dimension's op list —
+/// the unit of the engine's cross-field pipeline. Per dimension the engine
+/// walks these segments in order: it posts segment B's receives and packs
+/// segment B while segment A's sends are in flight, and keeps one *progress
+/// cursor* per segment so each field unpacks as soon as its own receives
+/// complete, with no completion barrier between fields.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FieldOps {
+    pub field: usize,
+    /// First index into `HaloPlan::per_dim[dim]`.
+    pub start: usize,
+    /// One past the last index into `HaloPlan::per_dim[dim]`.
+    pub end: usize,
+}
+
+/// Full plan: per dimension (outer, executed sequentially — the
+/// corner-propagation contract), the ops of all fields (inner, pipelined
+/// across fields by the engine), plus the per-field segmentation of each
+/// dimension's op list.
 #[derive(Debug, Clone)]
 pub struct HaloPlan {
     pub per_dim: [Vec<ExchangeOp>; 3],
+    /// Per dimension: the contiguous per-field segments of `per_dim`, in
+    /// execution order (one entry per field that exchanges along the
+    /// dimension).
+    pub fields_per_dim: [Vec<FieldOps>; 3],
 }
 
 impl HaloPlan {
@@ -132,6 +153,7 @@ impl HaloPlan {
         base: [usize; 3],
     ) -> anyhow::Result<Self> {
         let mut per_dim: [Vec<ExchangeOp>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        let mut fields_per_dim: [Vec<FieldOps>; 3] = [Vec::new(), Vec::new(), Vec::new()];
         for (fi, &fdims) in field_dims.iter().enumerate() {
             let offsets = staggered::offset_of(fdims, base)?;
             for (d, ops) in per_dim.iter_mut().enumerate() {
@@ -145,10 +167,14 @@ impl HaloPlan {
                          center fields"
                     );
                 }
+                let start = ops.len();
                 ops.extend(ops_for_dim(cart, fi, fdims, offsets, d));
+                if ops.len() > start {
+                    fields_per_dim[d].push(FieldOps { field: fi, start, end: ops.len() });
+                }
             }
         }
-        Ok(HaloPlan { per_dim })
+        Ok(HaloPlan { per_dim, fields_per_dim })
     }
 
     /// Total bytes this plan moves per update (send direction).
@@ -234,6 +260,42 @@ mod tests {
                 assert!(tags.insert(op.tag(0)), "duplicate tag for {op:?}");
             }
         }
+    }
+
+    /// The per-field segments tile each dimension's op list exactly, in
+    /// field order — the invariant the engine's cross-field cursors build
+    /// on.
+    #[test]
+    fn field_segments_tile_each_dim() {
+        let c = cart(8, [2, 2, 2], [false; 3]);
+        let plan = HaloPlan::build(&c, &[[8, 8, 8], [9, 8, 9], [8, 9, 8]], [8, 8, 8]).unwrap();
+        for d in 0..3 {
+            let segs = &plan.fields_per_dim[d];
+            let mut at = 0usize;
+            let mut last_field = None;
+            for seg in segs {
+                assert_eq!(seg.start, at, "segments must be contiguous in dim {d}");
+                assert!(seg.end > seg.start, "no empty segments");
+                assert!(last_field < Some(seg.field), "segments in field order");
+                for op in &plan.per_dim[d][seg.start..seg.end] {
+                    assert_eq!(op.field, seg.field, "segment ops belong to the field");
+                }
+                at = seg.end;
+                last_field = Some(seg.field);
+            }
+            assert_eq!(at, plan.per_dim[d].len(), "segments cover dim {d} exactly");
+        }
+    }
+
+    /// Degenerate dims produce no segments at all.
+    #[test]
+    fn field_segments_skip_degenerate_dims() {
+        let c = cart(1, [1, 1, 1], [true; 3]);
+        let plan = HaloPlan::build(&c, &[[8, 8, 1], [9, 8, 1]], [8, 8, 1]).unwrap();
+        assert_eq!(plan.fields_per_dim[0].len(), 2, "both fields exchange along x");
+        assert_eq!(plan.fields_per_dim[0][0].field, 0);
+        assert_eq!(plan.fields_per_dim[0][1].field, 1);
+        assert!(plan.fields_per_dim[2].is_empty(), "1-wide z: nothing to segment");
     }
 
     #[test]

@@ -13,69 +13,280 @@
 //! The `_raw` variants work on bare slices so the overlapped exchange (which
 //! accesses fields through pointers from the communication stream, see
 //! `engine.rs`) shares the exact same code as the synchronous path.
+//!
+//! ## Threaded pack/unpack (`comm_threads`)
+//!
+//! The `_threaded` variants split the *buffer* index range `0..plane_cells`
+//! into near-equal contiguous chunks ([`chunk_range`]) and run one chunk per
+//! worker on a scoped pool ([`scoped_chunks`]). Chunking by buffer index —
+//! rather than by a field axis — means every chunk is a contiguous buffer
+//! window, non-divisible cell counts just make the last chunks one cell
+//! shorter, and the dim-2 strided gather/scatter subdivides along y *within*
+//! each x-row, so even a 1-x-wide z-plane parallelizes. Every plane cell is
+//! copied by exactly one worker with the same arithmetic as the serial path,
+//! so the threaded result is bitwise identical to [`pack_plane_raw`] /
+//! [`unpack_plane_raw`] (`tests/pack_threading.rs` sweeps this). Planes
+//! below [`PACK_PAR_MIN_CELLS`] take the scalar path — spawn/join overhead
+//! outweighs the copy, and the steady-state zero-allocation contract on
+//! small grids stays intact because no thread is ever spawned for them.
 
+use crate::physics::parallel::{chunk_range, scoped_chunks};
 use crate::physics::Field3D;
 
-/// Pack plane `plane` of dimension `dim` from `data` (dims `dims`) into `buf`.
-pub fn pack_plane_raw(data: &[f64], dims: [usize; 3], dim: usize, plane: usize, buf: &mut [f64]) {
-    let [nx, ny, nz] = dims;
-    debug_assert!(plane < dims[dim]);
+/// Planes below this many cells pack/unpack serially even when
+/// `comm_threads > 1`: scoped spawn/join costs ~10 us, which outweighs
+/// copying smaller planes (and keeps small-grid steady-state steps free of
+/// thread spawns, preserving the zero-allocation contract there).
+pub const PACK_PAR_MIN_CELLS: usize = 8 * 1024;
+
+/// Worker count actually used for a plane of `cells` cells: 1 below the
+/// size threshold (scalar fallback), otherwise `threads` capped so every
+/// chunk is non-empty.
+pub fn effective_pack_threads(threads: usize, cells: usize) -> usize {
+    if threads <= 1 || cells < PACK_PAR_MIN_CELLS {
+        1
+    } else {
+        threads.min(cells)
+    }
+}
+
+/// A plane buffer (or field allocation) shared across pack workers as a raw
+/// pointer: the workers' index sets are disjoint by construction, which the
+/// borrow checker cannot see through one slice.
+///
+/// SAFETY: constructed from a live `&mut [f64]`; the scoped workers are
+/// joined before that borrow ends, and each index is touched by at most one
+/// worker.
+#[derive(Clone, Copy)]
+struct SharedSlice {
+    ptr: *mut f64,
+    len: usize,
+}
+
+unsafe impl Send for SharedSlice {}
+unsafe impl Sync for SharedSlice {}
+
+impl SharedSlice {
+    fn of(s: &mut [f64]) -> Self {
+        SharedSlice { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// SAFETY: callers must pass disjoint `[lo, hi)` windows across
+    /// concurrently live borrows.
+    unsafe fn window<'a>(&self, lo: usize, hi: usize) -> &'a mut [f64] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+}
+
+/// Pack the buffer window `[b0, b0 + out.len())` of plane `plane` of
+/// dimension `dim` into `out` — the chunk-granular core shared by the
+/// serial and threaded pack paths. Buffer index `b` maps to the plane cell
+/// it denotes in [`pack_plane_raw`]'s layout.
+fn pack_range(
+    data: &[f64],
+    dims: [usize; 3],
+    dim: usize,
+    plane: usize,
+    out: &mut [f64],
+    b0: usize,
+) {
+    let [_, ny, nz] = dims;
     match dim {
         0 => {
-            debug_assert_eq!(buf.len(), ny * nz);
-            let start = plane * ny * nz;
-            buf.copy_from_slice(&data[start..start + ny * nz]);
+            // buf index b -> data[plane*ny*nz + b]: one contiguous window
+            let start = plane * ny * nz + b0;
+            out.copy_from_slice(&data[start..start + out.len()]);
         }
         1 => {
-            debug_assert_eq!(buf.len(), nx * nz);
-            for ix in 0..nx {
-                let src = (ix * ny + plane) * nz;
-                buf[ix * nz..(ix + 1) * nz].copy_from_slice(&data[src..src + nz]);
+            // buf index b = ix*nz + k -> data[(ix*ny + plane)*nz + k]:
+            // whole z-rows inside the window, partial rows at its edges
+            let (mut b, end, mut o) = (b0, b0 + out.len(), 0usize);
+            while b < end {
+                let (ix, k) = (b / nz, b % nz);
+                let take = (nz - k).min(end - b);
+                let src = (ix * ny + plane) * nz + k;
+                out[o..o + take].copy_from_slice(&data[src..src + take]);
+                b += take;
+                o += take;
             }
         }
         2 => {
-            debug_assert_eq!(buf.len(), nx * ny);
-            for ix in 0..nx {
-                let row_base = ix * ny * nz + plane;
-                let out_base = ix * ny;
-                for iy in 0..ny {
-                    buf[out_base + iy] = data[row_base + iy * nz];
+            // buf index b = ix*ny + iy -> data[ix*ny*nz + iy*nz + plane]:
+            // the strided gather, subdivided along y within each x-row
+            let (mut b, end, mut o) = (b0, b0 + out.len(), 0usize);
+            while b < end {
+                let (ix, iy0) = (b / ny, b % ny);
+                let take = (ny - iy0).min(end - b);
+                let row = ix * ny * nz + plane;
+                for j in 0..take {
+                    out[o + j] = data[row + (iy0 + j) * nz];
                 }
+                b += take;
+                o += take;
             }
         }
         _ => unreachable!("dim must be 0..3"),
     }
 }
 
-/// Unpack `buf` into plane `plane` of dimension `dim` of `data`.
-pub fn unpack_plane_raw(data: &mut [f64], dims: [usize; 3], dim: usize, plane: usize, buf: &[f64]) {
-    let [nx, ny, nz] = dims;
-    debug_assert!(plane < dims[dim]);
+/// Unpack `src` (the buffer window starting at buffer index `b0`) into
+/// plane `plane` of dimension `dim` — the scatter mirror of [`pack_range`].
+///
+/// Takes the destination as a raw pointer because concurrent workers
+/// scatter into *interleaved* (per-cell disjoint, but not contiguous)
+/// index sets of one allocation, which cannot be expressed as disjoint
+/// sub-slices.
+///
+/// SAFETY: `dst` must point to a live `[f64]` of the full field size for
+/// `dims`, no other thread may touch the plane cells this window denotes,
+/// and `plane < dims[dim]`, `b0 + src.len() <= plane_len(dims, dim)`.
+unsafe fn unpack_range(
+    dst: *mut f64,
+    dims: [usize; 3],
+    dim: usize,
+    plane: usize,
+    src: &[f64],
+    b0: usize,
+) {
+    let [_, ny, nz] = dims;
     match dim {
         0 => {
-            debug_assert_eq!(buf.len(), ny * nz);
-            let start = plane * ny * nz;
-            data[start..start + ny * nz].copy_from_slice(buf);
+            std::ptr::copy_nonoverlapping(src.as_ptr(), dst.add(plane * ny * nz + b0), src.len());
         }
         1 => {
-            debug_assert_eq!(buf.len(), nx * nz);
-            for ix in 0..nx {
-                let dst = (ix * ny + plane) * nz;
-                data[dst..dst + nz].copy_from_slice(&buf[ix * nz..(ix + 1) * nz]);
+            let (mut b, end, mut o) = (b0, b0 + src.len(), 0usize);
+            while b < end {
+                let (ix, k) = (b / nz, b % nz);
+                let take = (nz - k).min(end - b);
+                let d = (ix * ny + plane) * nz + k;
+                std::ptr::copy_nonoverlapping(src[o..].as_ptr(), dst.add(d), take);
+                b += take;
+                o += take;
             }
         }
         2 => {
-            debug_assert_eq!(buf.len(), nx * ny);
-            for ix in 0..nx {
-                let row_base = ix * ny * nz + plane;
-                let in_base = ix * ny;
-                for iy in 0..ny {
-                    data[row_base + iy * nz] = buf[in_base + iy];
+            let (mut b, end, mut o) = (b0, b0 + src.len(), 0usize);
+            while b < end {
+                let (ix, iy0) = (b / ny, b % ny);
+                let take = (ny - iy0).min(end - b);
+                let row = ix * ny * nz + plane;
+                for j in 0..take {
+                    *dst.add(row + (iy0 + j) * nz) = src[o + j];
                 }
+                b += take;
+                o += take;
             }
         }
         _ => unreachable!("dim must be 0..3"),
     }
+}
+
+/// Pack plane `plane` of dimension `dim` from `data` (dims `dims`) into `buf`.
+pub fn pack_plane_raw(data: &[f64], dims: [usize; 3], dim: usize, plane: usize, buf: &mut [f64]) {
+    debug_assert!(plane < dims[dim]);
+    debug_assert_eq!(buf.len(), plane_len(dims, dim));
+    debug_assert_eq!(data.len(), dims[0] * dims[1] * dims[2]);
+    pack_range(data, dims, dim, plane, buf, 0);
+}
+
+/// Unpack `buf` into plane `plane` of dimension `dim` of `data`.
+pub fn unpack_plane_raw(data: &mut [f64], dims: [usize; 3], dim: usize, plane: usize, buf: &[f64]) {
+    debug_assert!(plane < dims[dim]);
+    debug_assert_eq!(buf.len(), plane_len(dims, dim));
+    debug_assert_eq!(data.len(), dims[0] * dims[1] * dims[2]);
+    // SAFETY: the exclusive `&mut data` borrow covers every written index,
+    // and the asserts above pin the window to in-bounds plane cells.
+    unsafe { unpack_range(data.as_mut_ptr(), dims, dim, plane, buf, 0) }
+}
+
+/// [`pack_plane_raw`] across `threads` scoped workers (scalar below
+/// [`PACK_PAR_MIN_CELLS`]); bitwise identical to the serial path.
+pub fn pack_plane_threaded(
+    data: &[f64],
+    dims: [usize; 3],
+    dim: usize,
+    plane: usize,
+    buf: &mut [f64],
+    threads: usize,
+) {
+    pack_plane_chunked(data, dims, dim, plane, buf, effective_pack_threads(threads, buf.len()));
+}
+
+/// [`unpack_plane_raw`] across `threads` scoped workers (scalar below
+/// [`PACK_PAR_MIN_CELLS`]); bitwise identical to the serial path.
+pub fn unpack_plane_threaded(
+    data: &mut [f64],
+    dims: [usize; 3],
+    dim: usize,
+    plane: usize,
+    buf: &[f64],
+    threads: usize,
+) {
+    unpack_plane_chunked(data, dims, dim, plane, buf, effective_pack_threads(threads, buf.len()));
+}
+
+/// Pack across exactly `chunks` buffer windows with no size gate — the
+/// mechanism under [`pack_plane_threaded`], public so the property tests
+/// can drive the chunked machinery on planes of every size (degenerate
+/// 1-wide planes, non-divisible chunk counts) without crossing the
+/// threshold.
+pub fn pack_plane_chunked(
+    data: &[f64],
+    dims: [usize; 3],
+    dim: usize,
+    plane: usize,
+    buf: &mut [f64],
+    chunks: usize,
+) {
+    debug_assert!(plane < dims[dim]);
+    debug_assert_eq!(buf.len(), plane_len(dims, dim));
+    debug_assert_eq!(data.len(), dims[0] * dims[1] * dims[2]);
+    let cells = buf.len();
+    let chunks = chunks.clamp(1, cells.max(1));
+    if chunks == 1 {
+        pack_range(data, dims, dim, plane, buf, 0);
+        return;
+    }
+    let out = SharedSlice::of(buf);
+    scoped_chunks(chunks, |i| {
+        let (lo, hi) = chunk_range(cells, chunks, i);
+        // SAFETY: chunk_range tiles 0..cells disjointly, so every worker
+        // owns its buffer window exclusively; the workers are joined
+        // before `buf`'s borrow ends.
+        let win = unsafe { out.window(lo, hi) };
+        pack_range(data, dims, dim, plane, win, lo);
+    });
+}
+
+/// Unpack across exactly `chunks` buffer windows with no size gate — the
+/// mechanism under [`unpack_plane_threaded`] (see [`pack_plane_chunked`]).
+pub fn unpack_plane_chunked(
+    data: &mut [f64],
+    dims: [usize; 3],
+    dim: usize,
+    plane: usize,
+    buf: &[f64],
+    chunks: usize,
+) {
+    debug_assert!(plane < dims[dim]);
+    debug_assert_eq!(buf.len(), plane_len(dims, dim));
+    debug_assert_eq!(data.len(), dims[0] * dims[1] * dims[2]);
+    let cells = buf.len();
+    let chunks = chunks.clamp(1, cells.max(1));
+    if chunks == 1 {
+        unpack_plane_raw(data, dims, dim, plane, buf);
+        return;
+    }
+    let dst = SharedSlice::of(data);
+    scoped_chunks(chunks, |i| {
+        let (lo, hi) = chunk_range(cells, chunks, i);
+        // SAFETY: disjoint buffer windows denote disjoint plane cells (the
+        // buffer-index -> flat-index map is injective), so concurrent
+        // workers never write the same element; the workers are joined
+        // before `data`'s borrow ends.
+        unsafe { unpack_range(dst.ptr, dims, dim, plane, &buf[lo..hi], lo) }
+    });
 }
 
 /// [`pack_plane_raw`] over a [`Field3D`].
@@ -156,5 +367,70 @@ mod tests {
         assert_eq!(plane_len([4, 5, 6], 0), 30);
         assert_eq!(plane_len([4, 5, 6], 1), 24);
         assert_eq!(plane_len([4, 5, 6], 2), 20);
+    }
+
+    /// Chunked pack/unpack is bitwise identical to the serial path for
+    /// every dim and awkward chunk counts (the full sweep, including the
+    /// gated public entry points, lives in `tests/pack_threading.rs`).
+    #[test]
+    fn chunked_matches_serial_all_dims() {
+        let f = field();
+        for dim in 0..3 {
+            let cells = plane_len(f.dims(), dim);
+            let plane = f.dims()[dim] / 2;
+            let mut want = vec![0.0; cells];
+            pack_plane(&f, dim, plane, &mut want);
+            for chunks in [1usize, 2, 3, 7, 64] {
+                let mut got = vec![0.0; cells];
+                pack_plane_chunked(f.as_slice(), f.dims(), dim, plane, &mut got, chunks);
+                assert_eq!(got, want, "pack dim={dim} chunks={chunks}");
+
+                let mut serial = Field3D::zeros(f.dims());
+                unpack_plane(&mut serial, dim, plane, &want);
+                let mut chunked = Field3D::zeros(f.dims());
+                unpack_plane_chunked(
+                    chunked.as_mut_slice(),
+                    f.dims(),
+                    dim,
+                    plane,
+                    &want,
+                    chunks,
+                );
+                assert_eq!(
+                    chunked.max_abs_diff(&serial),
+                    0.0,
+                    "unpack dim={dim} chunks={chunks}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn effective_threads_gates_small_planes() {
+        assert_eq!(effective_pack_threads(4, PACK_PAR_MIN_CELLS - 1), 1);
+        assert_eq!(effective_pack_threads(4, PACK_PAR_MIN_CELLS), 4);
+        assert_eq!(effective_pack_threads(1, 1 << 20), 1);
+        assert_eq!(effective_pack_threads(0, 1 << 20), 1);
+    }
+
+    /// The gated entry points engage the workers above the threshold and
+    /// stay bitwise identical there too.
+    #[test]
+    fn threaded_large_plane_matches_serial() {
+        let dims = [96, 96, 4];
+        let f = Field3D::from_fn(dims, |x, y, z| (x * 1000 + y * 10 + z) as f64);
+        let cells = plane_len(dims, 2);
+        assert!(cells >= PACK_PAR_MIN_CELLS, "test must cross the threshold");
+        let mut want = vec![0.0; cells];
+        pack_plane(&f, 2, 1, &mut want);
+        let mut got = vec![0.0; cells];
+        pack_plane_threaded(f.as_slice(), dims, 2, 1, &mut got, 4);
+        assert_eq!(got, want);
+
+        let mut serial = Field3D::zeros(dims);
+        unpack_plane(&mut serial, 2, 1, &want);
+        let mut threaded = Field3D::zeros(dims);
+        unpack_plane_threaded(threaded.as_mut_slice(), dims, 2, 1, &want, 4);
+        assert_eq!(threaded.max_abs_diff(&serial), 0.0);
     }
 }

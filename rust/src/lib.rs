@@ -83,6 +83,14 @@
 //! (memoized per run) through the halo engine's pooled transfers
 //! (`tests/steady_state_alloc.rs`).
 //!
+//! Two thread knobs scale one rank onto many cores, independently and
+//! composably: `compute_threads` x-chunks stencil regions across a scoped
+//! worker pool (the "xPU" analog), and `comm_threads` does the same for
+//! the halo engine's plane pack/unpack on the comm side (the z-plane
+//! strided gather/scatter is the case that pays). Both are bitwise
+//! identical to their serial paths at any thread count
+//! (`--compute-threads` / `--comm-threads`, `IGG_COMM_THREADS`).
+//!
 //! The crate is organized exactly as the system inventory in `DESIGN.md`:
 //!
 //! * [`mpisim`] — message-passing substrate (MPI.jl stand-in): in-process
@@ -104,9 +112,13 @@
 //! * [`halo`] — the `update_halo!` engine: memoized plans (rebuilt only
 //!   when the call signature changes), pack/unpack, RDMA-like direct and
 //!   chunk-pipelined host-staged transfer paths. Within each dimension all
-//!   sends are posted before the first wait and drained afterwards; the
-//!   steady state performs zero heap allocations on either path
-//!   (`HaloEngine::allocations`).
+//!   sends are posted before the first wait and drained afterwards, fields
+//!   are pipelined against each other (per-field progress cursors: each
+//!   field unpacks as soon as its own receives complete), and the plane
+//!   pack/unpack itself threads across `comm_threads` scoped workers —
+//!   the comm-side sibling of `compute_threads`, aimed at the z-plane
+//!   strided gather/scatter. The steady state performs zero heap
+//!   allocations on either path (`HaloEngine::allocations`).
 //! * [`overlap`] — `@hide_communication`: inner/boundary region
 //!   decomposition and the overlap scheduler.
 //! * [`physics`] — native Rust field type and stencil steps (the paper's

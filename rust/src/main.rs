@@ -26,6 +26,7 @@ fn run_flags(cmd: Command) -> Command {
         .value("path", Some("rdma"), "halo transfer path: rdma|staged")
         .value("chunks", Some("4"), "pipeline chunks for the staged path")
         .value("compute-threads", Some("1"), "worker threads per rank (native backend)")
+        .value("comm-threads", Some("1"), "halo pack/unpack worker threads per rank")
         .value(
             "net",
             Some("ideal"),

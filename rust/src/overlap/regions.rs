@@ -78,7 +78,8 @@ pub fn split_regions(n: [usize; 3], widths: HideWidths) -> anyhow::Result<Region
         boundaries.push(("zlo", Region::new([ix0, iy0, 1], [ix1 - ix0, iy1 - iy0, iz0 - 1])));
     }
     if iz1 < nz - 1 {
-        boundaries.push(("zhi", Region::new([ix0, iy0, iz1], [ix1 - ix0, iy1 - iy0, nz - 1 - iz1])));
+        boundaries
+            .push(("zhi", Region::new([ix0, iy0, iz1], [ix1 - ix0, iy1 - iy0, nz - 1 - iz1])));
     }
     Ok(RegionSet { inner, boundaries })
 }

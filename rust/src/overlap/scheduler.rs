@@ -28,7 +28,12 @@
 //! over `physics::parallel`'s worker pool, so the inner compute saturates
 //! the "xPU" while the communication stream exchanges — the workers stay
 //! strictly inside the boundary width, preserving the disjointness contract
-//! with the in-flight exchange.
+//! with the in-flight exchange. The comm stream has its own knob:
+//! `comm_threads > 1` threads the engine's plane pack/unpack (and the
+//! engine pipelines fields against each other within a dimension), which
+//! shrinks the exchange the hide window must cover — the two pools are
+//! independent, so comm-side workers touch only boundary planes and the
+//! disjointness contract is unchanged.
 //!
 //! The hide window (phase 3's inner compute) absorbs whatever instants the
 //! network model produces. Under the contended model

@@ -41,7 +41,13 @@ pub fn step(t: &Field3D, ci: &Field3D, p: &DiffusionParams, t2: &mut Field3D) {
 }
 
 /// Update only `region` (strictly interior) of `t2` from `t`.
-pub fn step_region(t: &Field3D, ci: &Field3D, p: &DiffusionParams, region: Region, t2: &mut Field3D) {
+pub fn step_region(
+    t: &Field3D,
+    ci: &Field3D,
+    p: &DiffusionParams,
+    region: Region,
+    t2: &mut Field3D,
+) {
     let n = t.dims();
     assert_eq!(t2.dims(), n, "T2 dims mismatch");
     step_region_into(t, ci, p, region, t2.as_mut_slice());

@@ -202,7 +202,8 @@ mod tests {
         for ix in 0..5 {
             for iy in 0..6 {
                 for iz in 0..7 {
-                    let inside = (1..4).contains(&ix) && (2..4).contains(&iy) && (3..5).contains(&iz);
+                    let inside =
+                        (1..4).contains(&ix) && (2..4).contains(&iy) && (3..5).contains(&iz);
                     let want = if inside { f.get(ix, iy, iz) } else { 0.0 };
                     assert_eq!(g.get(ix, iy, iz), want);
                 }

@@ -17,11 +17,44 @@
 //! communication stream exchanges halos. Tiny boundary slabs stay serial:
 //! spawning costs more than they do.
 
-use super::{diffusion3d, twophase, wave, DiffusionParams, Field3D, Region, TwophaseParams, WaveParams};
+use super::{
+    diffusion3d, twophase, wave, DiffusionParams, Field3D, Region, TwophaseParams, WaveParams,
+};
 
 /// Regions below this many cells run serially — thread spawn/join overhead
 /// (~10 us) outweighs the compute of smaller boxes.
 pub const PAR_MIN_CELLS: usize = 16 * 1024;
+
+/// The `i`-th of `n` nearly equal contiguous chunk ranges of `len`
+/// (allocation-free form of splitting `0..len` into `n` pieces). The
+/// ranges tile `0..len` exactly: chunk 0 starts at 0, chunk `n-1` ends at
+/// `len`, and consecutive chunks are adjacent. Shared by the halo engine's
+/// staged pipeline and the threaded plane pack/unpack.
+pub fn chunk_range(len: usize, n: usize, i: usize) -> (usize, usize) {
+    let base = len / n;
+    let rem = len % n;
+    let lo = i * base + i.min(rem);
+    let hi = lo + base + usize::from(i < rem);
+    (lo, hi)
+}
+
+/// Run `work(i)` for every chunk index `0..n`: chunk 0 on the calling
+/// thread, the rest on scoped workers (joined before returning). `n <= 1`
+/// degenerates to a plain call with no spawn — the scalar fallback of the
+/// threaded pack/unpack and compute paths.
+pub fn scoped_chunks(n: usize, work: impl Fn(usize) + Sync) {
+    if n <= 1 {
+        work(0);
+        return;
+    }
+    std::thread::scope(|s| {
+        let work = &work;
+        for i in 1..n {
+            s.spawn(move || work(i));
+        }
+        work(0);
+    });
+}
 
 /// Split `region` into at most `n` x-slabs covering it exactly, in
 /// ascending x order. Every slab is non-empty; fewer than `n` come back
@@ -213,6 +246,39 @@ mod tests {
     }
 
     #[test]
+    fn chunk_range_covers() {
+        let ranges = |len: usize, n: usize| -> Vec<(usize, usize)> {
+            (0..n).map(|i| chunk_range(len, n, i)).collect()
+        };
+        assert_eq!(ranges(10, 3), vec![(0, 4), (4, 7), (7, 10)]);
+        assert_eq!(ranges(4, 4), vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+        assert_eq!(ranges(5, 1), vec![(0, 5)]);
+        // contiguity and coverage for awkward splits
+        for (len, n) in [(17, 5), (64, 7), (3, 3)] {
+            let rs = ranges(len, n);
+            assert_eq!(rs[0].0, 0);
+            assert_eq!(rs[n - 1].1, len);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn scoped_chunks_runs_every_index_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for n in [1usize, 2, 7] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            scoped_chunks(n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i} of {n}");
+            }
+        }
+    }
+
+    #[test]
     fn split_x_partitions_exactly() {
         let r = Region::new([2, 1, 3], [10, 7, 5]);
         for n in 1..=12 {
@@ -302,7 +368,9 @@ mod tests {
         let region = Region::interior(dims);
         let (mut p_s, mut vx_s, mut vy_s, mut vz_s) =
             (p.clone(), vx.clone(), vy.clone(), vz.clone());
-        wave::step_region(&p, &vx, &vy, &vz, &prm, region, &mut p_s, &mut vx_s, &mut vy_s, &mut vz_s);
+        wave::step_region(
+            &p, &vx, &vy, &vz, &prm, region, &mut p_s, &mut vx_s, &mut vy_s, &mut vz_s,
+        );
         for threads in [2, 5] {
             let (mut p_p, mut vx_p, mut vy_p, mut vz_p) =
                 (p.clone(), vx.clone(), vy.clone(), vz.clone());

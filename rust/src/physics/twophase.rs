@@ -285,7 +285,9 @@ mod tests {
                     let rpe = -divq - pe.get(i, j, l) / (p.eta * (1.0 - phi.get(i, j, l)));
                     let pe_new = pe.get(i, j, l) + p.dtau * rpe;
                     pe2.set(i, j, l, pe_new);
-                    phi2.set(i, j, l, phi.get(i, j, l) + p.dt * (1.0 - phi.get(i, j, l)) * pe_new / p.eta);
+                    let phi_new =
+                        phi.get(i, j, l) + p.dt * (1.0 - phi.get(i, j, l)) * pe_new / p.eta;
+                    phi2.set(i, j, l, phi_new);
                 }
             }
         }

@@ -52,8 +52,9 @@ impl ArtifactStore {
     pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display())
+        })?;
         let root = Json::from_str(&text)?;
         anyhow::ensure!(
             root.get("format").and_then(Json::as_usize) == Some(1),

@@ -79,18 +79,25 @@ impl Command {
         Command { name, about, specs: Vec::new() }
     }
 
-    pub fn value(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+    pub fn value(
+        mut self,
+        name: &'static str,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
         self.specs.push(ArgSpec { name, kind: ArgKind::Value, default, required: false, help });
         self
     }
 
     pub fn required(mut self, name: &'static str, help: &'static str) -> Self {
-        self.specs.push(ArgSpec { name, kind: ArgKind::Value, default: None, required: true, help });
+        self.specs
+            .push(ArgSpec { name, kind: ArgKind::Value, default: None, required: true, help });
         self
     }
 
     pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
-        self.specs.push(ArgSpec { name, kind: ArgKind::Switch, default: None, required: false, help });
+        self.specs
+            .push(ArgSpec { name, kind: ArgKind::Switch, default: None, required: false, help });
         self
     }
 

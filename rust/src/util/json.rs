@@ -383,7 +383,8 @@ mod tests {
 
     #[test]
     fn roundtrip() {
-        let src = r#"{"programs":[{"name":"x","shape":[8,8,8],"widths":null}],"overlap":2,"ok":true}"#;
+        let src =
+            r#"{"programs":[{"name":"x","shape":[8,8,8],"widths":null}],"overlap":2,"ok":true}"#;
         let v = Json::from_str(src).unwrap();
         let printed = v.to_string();
         let v2 = Json::from_str(&printed).unwrap();

@@ -75,6 +75,34 @@ fn diffusion_hidden_communication_12_ranks() {
     assert!(report.contains("PASS"), "{report}");
 }
 
+/// `comm_threads` with planes wide enough to actually engage the scoped
+/// pack workers (z-plane 96·96 cells is above the pack threshold): the
+/// threaded gather/scatter moves the same bytes as the scalar path, so the
+/// N-rank run stays bitwise equal to the 1-rank reference — on the rdma
+/// path, and on the staged path under hidden communication. (The
+/// randomized sweep below covers `comm_threads` too, but its small locals
+/// stay under the threshold; this case is the one that really threads.)
+#[test]
+fn comm_threads_threaded_z_planes_equivalence() {
+    let cfg = Config {
+        local: [96, 96, 6],
+        dims: [1, 1, 2],
+        comm_threads: 4,
+        ..base(AppKind::Diffusion, 2, 8, 3)
+    };
+    let report = validate_equivalence(&cfg).unwrap();
+    assert!(report.contains("PASS"), "rdma: {report}");
+
+    let hidden = Config {
+        hide: Some(HideWidths([2, 2, 2])),
+        path: TransferPath::Staged,
+        pipeline_chunks: 4,
+        ..cfg
+    };
+    let report = validate_equivalence(&hidden).unwrap();
+    assert!(report.contains("PASS"), "hidden+staged: {report}");
+}
+
 #[test]
 fn staged_path_equals_rdma_path() {
     let rdma = base(AppKind::Diffusion, 8, 10, 6);
@@ -185,11 +213,13 @@ fn periodic_diffusion_conserves_heat() {
 
 /// Randomized decomposition sweep: ~20 seeded combos over (rank count,
 /// explicit rank grid, anisotropic local dims, hide widths, compute
-/// threads, netmodel ∈ {ideal, contended aries}) — each combo asserting,
-/// for **all three apps**, that the distributed fields are bitwise
-/// identical to the 1-rank reference. The contended model only shifts
-/// modeled instants, never payloads, so equivalence must be exact there
-/// too; any seed failure reproduces from the printed case seed.
+/// threads, comm threads ∈ {1, 2, 4, 7}, netmodel ∈ {ideal, contended
+/// aries}) — each combo asserting, for **all three apps**, that the
+/// distributed fields are bitwise identical to the 1-rank reference. The
+/// contended model only shifts modeled instants, never payloads, and the
+/// threaded pack/unpack copies the same cells as the scalar path, so
+/// equivalence must be exact for every combo; any seed failure reproduces
+/// from the printed case seed.
 #[test]
 fn prop_randomized_decomposition_sweep_all_apps() {
     #[derive(Debug)]
@@ -200,6 +230,7 @@ fn prop_randomized_decomposition_sweep_all_apps() {
         nt: usize,
         hide: Option<HideWidths>,
         threads: usize,
+        comm_threads: usize,
         contended: bool,
     }
 
@@ -232,6 +263,7 @@ fn prop_randomized_decomposition_sweep_all_apps() {
                 nt: g.usize_in(2, 4),
                 hide,
                 threads: g.usize_in(1, 2),
+                comm_threads: *g.choose(&[1usize, 2, 4, 7]),
                 contended: g.bool(),
             }
         },
@@ -250,6 +282,7 @@ fn prop_randomized_decomposition_sweep_all_apps() {
                     nt: case.nt,
                     hide: case.hide,
                     compute_threads: case.threads,
+                    comm_threads: case.comm_threads,
                     net,
                     ..Default::default()
                 };

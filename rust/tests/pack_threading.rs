@@ -1,0 +1,108 @@
+//! Property sweep for the threaded plane pack/unpack (`comm_threads`):
+//! the chunked gather/scatter must be **bitwise identical** to the scalar
+//! path for every dimension, plane, and worker count — including
+//! non-divisible chunk counts, chunk counts exceeding the plane, and the
+//! degenerate 1-wide planes — and cells off the plane must never be
+//! touched. The sweep drives `pack_plane_chunked`/`unpack_plane_chunked`
+//! (the ungated mechanism under the `_threaded` entry points) so small
+//! planes exercise the chunk machinery too; the gated entry points are
+//! covered above and below the size threshold at the end.
+
+use igg::halo::slicing::{
+    effective_pack_threads, pack_plane_chunked, pack_plane_raw, pack_plane_threaded, plane_len,
+    unpack_plane_chunked, unpack_plane_raw, unpack_plane_threaded, PACK_PAR_MIN_CELLS,
+};
+use igg::util::prng::Rng;
+
+/// Deterministic pseudo-random field data for `dims`.
+fn rand_data(dims: [usize; 3], seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..dims[0] * dims[1] * dims[2]).map(|_| rng.range(-1.0, 1.0)).collect()
+}
+
+/// The planes worth sweeping along `dim`: both edges and an interior one.
+fn planes_of(dims: [usize; 3], dim: usize) -> Vec<usize> {
+    let m = dims[dim];
+    let mut ps = vec![0, m / 2, m - 1];
+    ps.dedup();
+    ps
+}
+
+#[test]
+fn chunked_pack_unpack_bitwise_identical_full_sweep() {
+    // comm_threads ∈ {1, 2, 4, 7} per the sweep contract, plus chunk
+    // counts that don't divide the plane and ones exceeding its cell
+    // count (clamped internally). Dims include 1-wide planes in every
+    // position and a tiny all-odd box.
+    let dims_set: [[usize; 3]; 6] =
+        [[5, 7, 9], [1, 13, 6], [13, 1, 6], [6, 5, 1], [2, 3, 4], [3, 16, 2]];
+    let chunk_counts = [1usize, 2, 4, 7, 3, 13, 1000];
+
+    for (di, &dims) in dims_set.iter().enumerate() {
+        let data = rand_data(dims, 0xC0FFEE + di as u64);
+        for dim in 0..3 {
+            let cells = plane_len(dims, dim);
+            for &plane in &planes_of(dims, dim) {
+                // serial reference pack
+                let mut want = vec![0.0; cells];
+                pack_plane_raw(&data, dims, dim, plane, &mut want);
+
+                for &chunks in &chunk_counts {
+                    let mut got = vec![f64::NAN; cells];
+                    pack_plane_chunked(&data, dims, dim, plane, &mut got, chunks);
+                    assert_eq!(
+                        got, want,
+                        "pack dims={dims:?} dim={dim} plane={plane} chunks={chunks}"
+                    );
+
+                    // unpack into noise-prefilled fields: the plane must
+                    // carry the buffer, everything else must be untouched
+                    let noise = rand_data(dims, 0xBAD5EED + di as u64);
+                    let mut serial = noise.clone();
+                    unpack_plane_raw(&mut serial, dims, dim, plane, &want);
+                    let mut chunked = noise.clone();
+                    unpack_plane_chunked(&mut chunked, dims, dim, plane, &want, chunks);
+                    assert_eq!(
+                        chunked, serial,
+                        "unpack dims={dims:?} dim={dim} plane={plane} chunks={chunks}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The gated `_threaded` entry points: above the size threshold the scoped
+/// workers engage (including on a 1-x-wide z-plane, which parallelizes
+/// along y) and stay bitwise identical; below it they fall back to the
+/// scalar path without spawning.
+#[test]
+fn threaded_entry_points_gate_and_match() {
+    // [1, 9000, 3]: z-plane = 1*9000 cells >= threshold with nx = 1 — the
+    // degenerate-wide case only buffer-index chunking parallelizes.
+    // [40, 220, 3]: generic wide z-plane (8800 cells, non-divisible by 7).
+    for (dims, dim) in [([1usize, 9000, 3], 2usize), ([40, 220, 3], 2), ([3, 120, 80], 0)] {
+        let cells = plane_len(dims, dim);
+        assert!(cells >= PACK_PAR_MIN_CELLS, "case must cross the threshold");
+        let data = rand_data(dims, 0xA11CE);
+        let plane = dims[dim] / 2;
+        let mut want = vec![0.0; cells];
+        pack_plane_raw(&data, dims, dim, plane, &mut want);
+        for threads in [2usize, 4, 7] {
+            assert_eq!(effective_pack_threads(threads, cells), threads);
+            let mut got = vec![f64::NAN; cells];
+            pack_plane_threaded(&data, dims, dim, plane, &mut got, threads);
+            assert_eq!(got, want, "threaded pack dims={dims:?} threads={threads}");
+
+            let noise = rand_data(dims, 0xD00D);
+            let mut serial = noise.clone();
+            unpack_plane_raw(&mut serial, dims, dim, plane, &want);
+            let mut threaded = noise.clone();
+            unpack_plane_threaded(&mut threaded, dims, dim, plane, &want, threads);
+            assert_eq!(threaded, serial, "threaded unpack dims={dims:?} threads={threads}");
+        }
+    }
+
+    // below the threshold the gate keeps it scalar
+    assert_eq!(effective_pack_threads(7, PACK_PAR_MIN_CELLS - 1), 1);
+}

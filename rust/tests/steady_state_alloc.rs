@@ -223,4 +223,38 @@ fn timeloop_steady_state_is_allocation_free() {
             ..Default::default()
         },
     );
+
+    // comm_threads > 1: on grids this size every plane is below the pack
+    // threshold, so the scalar fallback must keep the steady state free of
+    // thread spawns (a spawn allocates) — plain and hidden, ideal and
+    // contended. This is the contract that lets `comm_threads` default on
+    // everywhere (IGG_COMM_THREADS leg) without regressing small runs.
+    for (label, hide, net) in [
+        ("diffusion/plain/2 ranks/comm-threads-4", None, NetModel::ideal()),
+        ("diffusion/hide/2 ranks/comm-threads-4", Some(HideWidths([3, 2, 2])), NetModel::ideal()),
+        (
+            "diffusion/plain/2 ranks/comm-threads-4/serial-nic",
+            None,
+            NetModel::aries().with_serial_nic(),
+        ),
+        (
+            "diffusion/hide/2 ranks/comm-threads-4/serial-nic",
+            Some(HideWidths([3, 2, 2])),
+            NetModel::aries().with_serial_nic(),
+        ),
+    ] {
+        assert_steady_state_alloc_free::<Diffusion>(
+            label,
+            Config {
+                app: AppKind::Diffusion,
+                nranks: 2,
+                local: [12, 12, 12],
+                nt: 1,
+                hide,
+                comm_threads: 4,
+                net,
+                ..Default::default()
+            },
+        );
+    }
 }

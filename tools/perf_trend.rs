@@ -1,0 +1,310 @@
+//! `perf_trend` — compare a fresh bench JSON against a recorded baseline
+//! (ROADMAP "wire a CI perf-trend check against recorded baselines").
+//!
+//! Both files are walked recursively; numeric leaves are matched by a
+//! stable path (array elements are keyed by their identity fields — `n`,
+//! `dim`, `threads`, `net`, `nranks`, `contended` — so reordering rows or
+//! adding new ones never misattributes a metric). Each shared metric is
+//! classified by its key:
+//!
+//! * `*alloc*` — **exact**: allocation counts are machine-independent
+//!   (they pin the zero-allocation contract), so any increase is a
+//!   regression regardless of tolerance. CI runs `--allocs-only` as a
+//!   blocking step.
+//! * `*_s` — lower is better (timings): regression when the relative
+//!   delta exceeds `--tol`. Advisory on shared runners (machine noise).
+//! * `*gbs` / `*speedup*` / `*gain*` / `*efficiency*` — higher is better,
+//!   same tolerance.
+//! * anything else — informational only.
+//!
+//! Prints a markdown delta table (CI appends it to `$GITHUB_STEP_SUMMARY`)
+//! and exits 2 on an allocation regression, 1 on a tolerance regression,
+//! 0 otherwise. `--out` writes the full comparison as JSON for the
+//! artifact upload.
+//!
+//!     cargo run --release --bin perf_trend -- \
+//!         --baseline bench/baselines/BENCH_halo.json --current BENCH_halo.json
+
+use std::collections::BTreeMap;
+
+use igg::util::cli::Command;
+use igg::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Class {
+    /// Allocation counts: exact, machine-independent, blocking.
+    Exact,
+    /// Timings (`*_s`): lower is better, tolerance applies.
+    LowerBetter,
+    /// Bandwidths/ratios: higher is better, tolerance applies.
+    HigherBetter,
+    /// Everything else: reported, never a regression.
+    Info,
+}
+
+fn classify(path: &str) -> Class {
+    // the metric key is the last `.`-separated segment
+    let key = path.rsplit('.').next().unwrap_or(path);
+    if key.contains("alloc") {
+        Class::Exact
+    } else if key.ends_with("_s") {
+        Class::LowerBetter
+    } else if key.ends_with("gbs")
+        || key.contains("speedup")
+        || key.contains("gain")
+        || key.contains("efficiency")
+    {
+        Class::HigherBetter
+    } else {
+        Class::Info
+    }
+}
+
+/// Identity fields used to key array elements, in label priority order.
+const ID_KEYS: [&str; 6] = ["n", "dim", "threads", "net", "nranks", "contended"];
+
+fn element_label(v: &Json, index: usize) -> String {
+    if let Some(obj) = v.as_obj() {
+        let parts: Vec<String> = ID_KEYS
+            .iter()
+            .filter_map(|k| obj.get(*k).map(|val| format!("{k}={}", plain(val))))
+            .collect();
+        if !parts.is_empty() {
+            return parts.join(",");
+        }
+    }
+    index.to_string()
+}
+
+/// A scalar rendered without quotes for labels.
+fn plain(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.to_string(),
+    }
+}
+
+fn flatten(v: &Json, prefix: &str, out: &mut BTreeMap<String, f64>) {
+    match v {
+        Json::Num(x) => {
+            out.insert(prefix.to_string(), *x);
+        }
+        Json::Obj(obj) => {
+            for (k, child) in obj {
+                let p = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                flatten(child, &p, out);
+            }
+        }
+        Json::Arr(arr) => {
+            for (i, child) in arr.iter().enumerate() {
+                flatten(child, &format!("{prefix}[{}]", element_label(child, i)), out);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn load(path: &str) -> anyhow::Result<BTreeMap<String, f64>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let json = Json::from_str(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+    let mut out = BTreeMap::new();
+    flatten(&json, "", &mut out);
+    Ok(out)
+}
+
+struct Row {
+    path: String,
+    class: Class,
+    baseline: f64,
+    current: f64,
+    /// Signed relative delta, positive = worse for the metric's direction
+    /// (0 for Info/Exact).
+    badness: f64,
+    status: &'static str,
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(3);
+        }
+    }
+}
+
+fn run(argv: &[String]) -> anyhow::Result<i32> {
+    let cmd = Command::new("perf_trend", "compare a bench JSON against a recorded baseline")
+        .required("baseline", "baseline JSON (bench/baselines/...)")
+        .required("current", "fresh bench JSON to check")
+        .value("tol", Some("0.5"), "relative tolerance for timing/bandwidth metrics")
+        .value("out", None, "write the comparison JSON here")
+        .switch("allocs-only", "check only allocation-count metrics (blocking CI step)");
+    let args = cmd.parse(argv)?;
+    let tol = args.get_f64("tol")?.expect("tol has a default");
+    anyhow::ensure!(tol >= 0.0, "--tol must be >= 0");
+    let allocs_only = args.get_flag("allocs-only");
+    let base_path = args.get("baseline").expect("required").to_string();
+    let cur_path = args.get("current").expect("required").to_string();
+    let baseline = load(&base_path)?;
+    let current = load(&cur_path)?;
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut alloc_regressions = 0usize;
+    let mut tol_regressions = 0usize;
+    let mut missing_allocs = 0usize;
+
+    for (path, &base) in &baseline {
+        let class = classify(path);
+        if allocs_only && class != Class::Exact {
+            continue;
+        }
+        let Some(&cur) = current.get(path) else {
+            if class == Class::Exact {
+                // an allocation column vanishing would silently drop the
+                // zero-allocation gate — treat as a blocking failure
+                missing_allocs += 1;
+                rows.push(Row {
+                    path: path.clone(),
+                    class,
+                    baseline: base,
+                    current: f64::NAN,
+                    badness: f64::INFINITY,
+                    status: "MISSING",
+                });
+            }
+            continue;
+        };
+        let denom = base.abs().max(1e-12);
+        let (badness, status) = match class {
+            Class::Exact => {
+                if cur > base {
+                    alloc_regressions += 1;
+                    (f64::INFINITY, "ALLOC REGRESSION")
+                } else {
+                    (0.0, "ok (exact)")
+                }
+            }
+            Class::LowerBetter => {
+                let rel = (cur - base) / denom;
+                if rel > tol {
+                    tol_regressions += 1;
+                    (rel, "REGRESSION")
+                } else if rel < -tol {
+                    (rel, "improved")
+                } else {
+                    (rel, "ok")
+                }
+            }
+            Class::HigherBetter => {
+                let rel = (base - cur) / denom;
+                if rel > tol {
+                    tol_regressions += 1;
+                    (rel, "REGRESSION")
+                } else if rel < -tol {
+                    (rel, "improved")
+                } else {
+                    (rel, "ok")
+                }
+            }
+            Class::Info => (0.0, "info"),
+        };
+        rows.push(Row { path: path.clone(), class, baseline: base, current: cur, badness, status });
+    }
+
+    // worst offenders first, then by path for stable output
+    rows.sort_by(|a, b| {
+        b.badness
+            .partial_cmp(&a.badness)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.path.cmp(&b.path))
+    });
+
+    println!(
+        "### perf trend — {} vs baseline {} (tol {:.0}%{})\n",
+        cur_path,
+        base_path,
+        tol * 100.0,
+        if allocs_only { ", allocation columns only" } else { "" }
+    );
+    println!("| metric | baseline | current | Δ (worse +) | status |");
+    println!("|:---|---:|---:|---:|:---|");
+    for r in &rows {
+        let delta = match r.class {
+            Class::Exact => format!("{:+}", r.current - r.baseline),
+            _ => format!("{:+.1}%", r.badness * 100.0),
+        };
+        println!(
+            "| `{}` | {} | {} | {} | {} |",
+            r.path,
+            fmt_val(r.baseline),
+            fmt_val(r.current),
+            delta,
+            r.status
+        );
+    }
+    let compared = rows.len();
+    println!(
+        "\n{compared} metrics compared: {tol_regressions} beyond tolerance, \
+         {alloc_regressions} allocation regressions, {missing_allocs} allocation \
+         columns missing."
+    );
+
+    if let Some(out) = args.get("out") {
+        let body = Json::obj(vec![
+            ("baseline", Json::Str(base_path.clone())),
+            ("current", Json::Str(cur_path.clone())),
+            ("tol", Json::Num(tol)),
+            ("allocs_only", Json::Bool(allocs_only)),
+            ("tol_regressions", Json::Num(tol_regressions as f64)),
+            ("alloc_regressions", Json::Num((alloc_regressions + missing_allocs) as f64)),
+            (
+                "metrics",
+                Json::Arr(
+                    rows.iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("path", Json::Str(r.path.clone())),
+                                ("baseline", Json::Num(r.baseline)),
+                                (
+                                    "current",
+                                    if r.current.is_finite() {
+                                        Json::Num(r.current)
+                                    } else {
+                                        Json::Null
+                                    },
+                                ),
+                                ("status", Json::Str(r.status.to_string())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        if let Some(dir) = std::path::Path::new(out).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(out, body.to_string())?;
+        eprintln!("wrote {out}");
+    }
+
+    Ok(if alloc_regressions + missing_allocs > 0 {
+        2
+    } else if tol_regressions > 0 {
+        1
+    } else {
+        0
+    })
+}
+
+fn fmt_val(x: f64) -> String {
+    if !x.is_finite() {
+        "—".to_string()
+    } else if x == 0.0 || (x.abs() >= 0.01 && x.abs() < 1e5) {
+        format!("{x:.4}")
+    } else {
+        format!("{x:.3e}")
+    }
+}
