@@ -87,6 +87,23 @@ def z_exchange_row(n):
     }
 
 
+def fault_idle_row(n):
+    # enabled-but-idle fault layer: the epoch fold, receive deadlines and
+    # the injector's decide() are atomic reads/arithmetic on the hot path,
+    # so the first-order timing model is the clean x-exchange unchanged.
+    # The gate columns are exact by contract: zero steady-state
+    # allocations, zero injections, zero refusals.
+    x = x_exchange_row(n)
+    return {
+        "n": n,
+        "rdma_s": x["rdma_s"],
+        "staged4_s": x["staged4_s"],
+        "steady_state_allocs": 0,
+        "fault_injected": 0,
+        "fault_refused": 0,
+    }
+
+
 def pack_unpack_rows():
     rows = []
     for n in (64, 128):
@@ -107,6 +124,7 @@ def halo_baseline():
     return {
         "exchange": [x_exchange_row(n) for n in (32, 96, 256, 384)],
         "z_exchange": [z_exchange_row(n) for n in (96, 256, 384)],
+        "fault_idle": [fault_idle_row(n) for n in (96, 256)],
         "pack_unpack": pack_unpack_rows(),
         "pack_threads": 4,
         "pipelined": True,

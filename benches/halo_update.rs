@@ -30,7 +30,7 @@ use igg::bench::measure::{bench_samples, fmt_time};
 use igg::bench::report;
 use igg::halo::{HaloEngine, TransferPath};
 use igg::memory::CopyModel;
-use igg::mpisim::{CartComm, NetModel, Network};
+use igg::mpisim::{CartComm, FaultSpec, FaultStats, NetModel, Network};
 use igg::physics::Field3D;
 use igg::util::json::Json;
 use igg::util::stats::{median, summarize};
@@ -39,7 +39,8 @@ use igg::util::stats::{median, summarize};
 /// along `cart_dims`, with the given engine config; returns (per-update
 /// median over `samples` trials for the worst rank, steady-state
 /// allocations across all measured updates — 0 when the zero-allocation
-/// contract holds).
+/// contract holds — and the network-side fault counters summed over the
+/// samples, all zero unless `faults` is set *and* fires).
 #[allow(clippy::too_many_arguments)]
 fn time_exchange(
     field: [usize; 3],
@@ -52,11 +53,17 @@ fn time_exchange(
     net: NetModel,
     samples: usize,
     iters: usize,
-) -> (f64, usize) {
+    faults: Option<&FaultSpec>,
+) -> (f64, usize, FaultStats) {
     let mut per_trial = Vec::with_capacity(samples);
     let mut steady_allocs = 0usize;
+    let mut fstats = FaultStats::default();
+    let retry = faults.map(|f| f.policy);
     for _ in 0..samples {
-        let network = Network::with_model(2, net);
+        let network = match faults {
+            Some(f) => Network::with_faults(2, net, f.plan.clone()),
+            None => Network::with_model(2, net),
+        };
         let barrier = Arc::new(std::sync::Barrier::new(2));
         let handles: Vec<_> = (0..2)
             .map(|r| {
@@ -65,7 +72,7 @@ fn time_exchange(
                 std::thread::spawn(move || {
                     let cart = CartComm::create(comm, cart_dims, [false; 3]).unwrap();
                     let mut engine =
-                        HaloEngine::with_config(&cart, path, chunks, copy, comm_threads);
+                        HaloEngine::with_config(&cart, path, chunks, copy, comm_threads, retry);
                     let mut fields: Vec<Field3D> = (0..nfields)
                         .map(|i| Field3D::filled(field, (cart.rank() * 10 + i) as f64))
                         .collect();
@@ -89,8 +96,9 @@ fn time_exchange(
         let results: Vec<(f64, usize)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         per_trial.push(results.iter().fold(0.0f64, |m, &(t, _)| m.max(t)));
         steady_allocs += results.iter().map(|&(_, a)| a).sum::<usize>();
+        fstats.add(&network.fault_stats());
     }
-    (median(&per_trial), steady_allocs)
+    (median(&per_trial), steady_allocs, fstats)
 }
 
 /// Pack threads used by the threaded bench columns (and recorded in the
@@ -114,7 +122,9 @@ fn main() -> anyhow::Result<()> {
 
     let serial = net.with_serial_nic();
     let x1 = |n: usize, path, chunks, net| {
-        time_exchange([n, n, n], [2, 1, 1], 1, path, chunks, 1, pcie, net, samples, iters)
+        let (t, a, _) =
+            time_exchange([n, n, n], [2, 1, 1], 1, path, chunks, 1, pcie, net, samples, iters, None);
+        (t, a)
     };
     let mut out = Vec::new();
     let mut total_steady_allocs = 0usize;
@@ -176,7 +186,9 @@ fn main() -> anyhow::Result<()> {
     );
     println!("|---:|---:|---:|---:|---:|---:|---:|");
     let z = |n: usize, path, chunks, ct| {
-        time_exchange([n, n, 8], [1, 1, 2], 2, path, chunks, ct, pcie, net, samples, iters)
+        let (t, a, _) =
+            time_exchange([n, n, 8], [1, 1, 2], 2, path, chunks, ct, pcie, net, samples, iters, None);
+        (t, a)
     };
     let mut z_out = Vec::new();
     for n in [96usize, 256, 384] {
@@ -213,6 +225,48 @@ fn main() -> anyhow::Result<()> {
          gain ~min(threads, cores)x. allocs must be 0: the scoped pack workers\n\
          live on the stack side of the contract."
     );
+    // ---- fault layer enabled but idle ---------------------------------
+    // Same x-exchange with a never-firing fault plan armed: epoch-folded
+    // tags, per-receive deadlines and the injector's decide() are all on
+    // the hot path, but nothing fires. The rows must keep the
+    // zero-allocation contract and zero injections; the timing pair
+    // against the clean table quantifies the enabled-but-idle overhead.
+    println!("\n## fault layer enabled but idle (never-firing plan)\n");
+    println!("| n | rdma | staged c=4 | allocs | injected |");
+    println!("|---:|---:|---:|---:|---:|");
+    let idle = FaultSpec::parse("drop@0->1#n=999999999").unwrap();
+    let fi = |n: usize, path, chunks| {
+        time_exchange(
+            [n, n, n],
+            [2, 1, 1],
+            1,
+            path,
+            chunks,
+            1,
+            pcie,
+            net,
+            samples,
+            iters,
+            Some(&idle),
+        )
+    };
+    let mut fi_out = Vec::new();
+    for n in [96usize, 256] {
+        let (rdma, a0, f0) = fi(n, TransferPath::Rdma, 1);
+        let (s4, a4, f4) = fi(n, TransferPath::Staged, 4);
+        let allocs = a0 + a4;
+        let injected = f0.injected() + f4.injected();
+        total_steady_allocs += allocs;
+        println!("| {n} | {} | {} | {allocs} | {injected} |", fmt_time(rdma), fmt_time(s4));
+        fi_out.push(Json::obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("rdma_s", Json::Num(rdma)),
+            ("staged4_s", Json::Num(s4)),
+            ("steady_state_allocs", Json::Num(allocs as f64)),
+            ("fault_injected", Json::Num(injected as f64)),
+            ("fault_refused", Json::Num((f0.refused + f4.refused) as f64)),
+        ]));
+    }
     if total_steady_allocs != 0 {
         eprintln!("WARNING: zero-allocation contract violated: {total_steady_allocs} allocations");
     }
@@ -265,6 +319,7 @@ fn main() -> anyhow::Result<()> {
         Json::obj(vec![
             ("exchange", Json::Arr(out)),
             ("z_exchange", Json::Arr(z_out)),
+            ("fault_idle", Json::Arr(fi_out)),
             ("pack_unpack", Json::Arr(pack_rows)),
             ("pack_threads", Json::Num(PACK_THREADS as f64)),
             ("pipelined", Json::Bool(true)),

@@ -3,7 +3,7 @@
 
 use crate::grid::GridOptions;
 use crate::halo::TransferPath;
-use crate::mpisim::NetModel;
+use crate::mpisim::{FaultSpec, NetModel};
 use crate::overlap::HideWidths;
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -71,6 +71,9 @@ pub struct Config {
     /// gather/scatter above all.
     pub comm_threads: usize,
     pub net: NetModel,
+    /// `Some(spec)` arms the network's deterministic fault injector and the
+    /// halo engine's recovery layer (`--faults` / `IGG_FAULTS`).
+    pub faults: Option<FaultSpec>,
     pub seed: u64,
     /// Physical domain edge length (cubic domain, as in the paper).
     pub lx: f64,
@@ -98,9 +101,25 @@ impl Default for Config {
             // preset (the CI contended matrix leg runs the whole suite
             // with IGG_NET=aries,serial-nic)
             net: NetModel::default_preset(),
+            // none unless the IGG_FAULTS environment variable supplies a
+            // spec (lets the CI chaos leg arm faults suite-wide)
+            faults: default_faults(),
             seed: 42,
             lx: 1.0,
         }
+    }
+}
+
+/// `IGG_FAULTS` environment default for [`Config::faults`]: arms fault
+/// injection without touching every invocation, mirroring `IGG_NET`. An
+/// unparsable value panics — the variable is an explicit opt-in, and
+/// silently running fault-free would defeat its purpose.
+fn default_faults() -> Option<FaultSpec> {
+    match std::env::var("IGG_FAULTS") {
+        Ok(s) if !s.is_empty() => Some(
+            FaultSpec::parse(&s).unwrap_or_else(|e| panic!("invalid IGG_FAULTS value '{s}': {e:#}")),
+        ),
+        _ => None,
     }
 }
 
@@ -162,6 +181,12 @@ impl Config {
         if let Some(n) = args.get("net") {
             cfg.net = NetModel::parse(n)?;
         }
+        if let Some(f) = args.get("faults") {
+            cfg.faults = Some(
+                FaultSpec::parse(f)
+                    .map_err(|e| e.context(format!("invalid --faults value '{f}'")))?,
+            );
+        }
         if let Some(s) = args.get_usize("seed")? {
             cfg.seed = s as u64;
         }
@@ -173,6 +198,26 @@ impl Config {
         anyhow::ensure!(self.nranks >= 1, "need at least one rank");
         anyhow::ensure!(self.nt >= 1, "need at least one step");
         anyhow::ensure!(self.pipeline_chunks >= 1, "need at least one pipeline chunk");
+        anyhow::ensure!(
+            self.pipeline_chunks <= crate::halo::MAX_CHUNKS,
+            "--chunks {} exceeds the tag-space limit of {} chunks per message",
+            self.pipeline_chunks,
+            crate::halo::MAX_CHUNKS
+        );
+        if let Some(f) = &self.faults {
+            for (i, rule) in f.plan.rules.iter().enumerate() {
+                for rank in [rule.src, rule.dst].into_iter().flatten() {
+                    anyhow::ensure!(
+                        rank < self.nranks,
+                        "fault rule {} targets rank {rank}, but the run has only {} ranks \
+                         (valid: 0..={})",
+                        i + 1,
+                        self.nranks,
+                        self.nranks - 1
+                    );
+                }
+            }
+        }
         anyhow::ensure!(self.compute_threads >= 1, "need at least one compute thread");
         anyhow::ensure!(self.comm_threads >= 1, "need at least one comm thread");
         for (d, &n) in self.local.iter().enumerate() {
@@ -188,6 +233,7 @@ impl Config {
             path: self.path,
             pipeline_chunks: self.pipeline_chunks,
             comm_threads: self.comm_threads,
+            fault_retry: self.faults.as_ref().map(|f| f.policy),
         }
     }
 
@@ -238,6 +284,13 @@ impl Config {
                 },
             ),
             ("net_contended", Json::Bool(self.net.is_contended())),
+            (
+                "faults",
+                match &self.faults {
+                    Some(f) => Json::Str(f.raw.clone()),
+                    None => Json::Null,
+                },
+            ),
             ("seed", Json::Num(self.seed as f64)),
         ])
     }
@@ -264,6 +317,7 @@ mod tests {
             .value("compute-threads", None, "")
             .value("comm-threads", None, "")
             .value("net", None, "")
+            .value("faults", None, "")
             .value("seed", None, "")
     }
 
@@ -326,6 +380,28 @@ mod tests {
         assert!(parse(&["--nx", "2"]).is_err());
         assert!(parse(&["--backend", "julia"]).is_err());
         assert!(parse(&["--dims", "1,2"]).is_err());
+        // pipeline chunks beyond the tag-space partition
+        assert!(parse(&["--chunks", "65"]).is_err());
+        assert!(parse(&["--chunks", "64"]).is_ok());
+    }
+
+    #[test]
+    fn faults_flag_parses_reports_and_validates() {
+        let c = parse(&["--faults", "drop@0->1#n=3", "--ranks", "2"]).unwrap();
+        let f = c.faults.as_ref().unwrap();
+        assert_eq!(f.plan.rules.len(), 1);
+        assert!(c.grid_options().fault_retry.is_some());
+        assert_eq!(c.to_json().get("faults").unwrap().as_str().unwrap(), "drop@0->1#n=3");
+        assert!(parse(&[]).unwrap().grid_options().fault_retry.is_none());
+
+        // malformed specs surface an actionable error naming the flag
+        let err = format!("{:#}", parse(&["--faults", "zap@0->1"]).unwrap_err());
+        assert!(err.contains("--faults") && err.contains("unknown fault kind"), "{err}");
+
+        // rules must target ranks that exist in this run
+        let err =
+            format!("{:#}", parse(&["--faults", "drop@0->5#n=1", "--ranks", "2"]).unwrap_err());
+        assert!(err.contains("rank 5") && err.contains("only 2 ranks"), "{err}");
     }
 
     #[test]

@@ -21,14 +21,31 @@ pub struct RankCtx {
 }
 
 /// Run `f` on `cfg.nranks` ranks; returns the per-rank results in rank
-/// order, or the first error (by rank order).
+/// order, or the first error (by rank order). When `cfg.faults` is set the
+/// network is built with the deterministic fault injector armed.
 pub fn run_ranks<R, F>(cfg: &Config, f: F) -> anyhow::Result<Vec<R>>
 where
     R: Send + 'static,
     F: Fn(RankCtx) -> anyhow::Result<R> + Send + Sync + 'static,
 {
     cfg.validate()?;
-    let net = Network::with_model(cfg.nranks, cfg.net);
+    let net = match &cfg.faults {
+        Some(f) => Network::with_faults(cfg.nranks, cfg.net, f.plan.clone()),
+        None => Network::with_model(cfg.nranks, cfg.net),
+    };
+    run_ranks_on(&net, cfg, f)
+}
+
+/// [`run_ranks`] on a caller-supplied network. The chaos tests use this to
+/// keep a handle on the network and assert per-rank mailbox quiescence
+/// after the run — faulty *or* clean — has completed.
+pub fn run_ranks_on<R, F>(net: &Arc<Network>, cfg: &Config, f: F) -> anyhow::Result<Vec<R>>
+where
+    R: Send + 'static,
+    F: Fn(RankCtx) -> anyhow::Result<R> + Send + Sync + 'static,
+{
+    cfg.validate()?;
+    assert_eq!(net.size(), cfg.nranks, "network size must match cfg.nranks");
     let f = Arc::new(f);
     let mut handles = Vec::with_capacity(cfg.nranks);
     for r in 0..cfg.nranks {

@@ -9,6 +9,7 @@
 //! throughput lower bound.
 
 use crate::halo::HaloStats;
+use crate::mpisim::FaultStats;
 use crate::util::json::Json;
 
 /// Timing/traffic of one rank's time loop.
@@ -25,6 +26,8 @@ pub struct StepMetrics {
     pub d_u: usize,
     pub d_k: usize,
     pub halo: HaloStats,
+    /// fault-injection and recovery counters (all zero on a clean network)
+    pub fault: FaultStats,
     /// solution diagnostic (max |field|) for sanity/regression checks
     pub final_norm: f64,
 }
@@ -54,6 +57,14 @@ impl StepMetrics {
             ("t_eff_gbs", Json::Num(self.t_eff_gbs())),
             ("halo_bytes_sent", Json::Num(self.halo.bytes_sent as f64)),
             ("halo_planes_sent", Json::Num(self.halo.planes_sent as f64)),
+            ("fault_injected", Json::Num(self.fault.injected() as f64)),
+            ("fault_refused", Json::Num(self.fault.refused as f64)),
+            ("fault_recv_timeouts", Json::Num(self.fault.recv_timeouts as f64)),
+            ("fault_nacks_sent", Json::Num(self.fault.nacks_sent as f64)),
+            ("fault_retx_served", Json::Num(self.fault.retx_served as f64)),
+            ("fault_retx_recovered", Json::Num(self.fault.retx_recovered as f64)),
+            ("fault_send_timeouts", Json::Num(self.fault.send_timeouts as f64)),
+            ("fault_exhausted", Json::Num(self.fault.exhausted as f64)),
             ("final_norm", Json::Num(self.final_norm)),
         ])
     }
@@ -114,6 +125,7 @@ mod tests {
             d_u: 1,
             d_k: 1,
             halo: HaloStats::default(),
+            fault: FaultStats::default(),
             final_norm: 1.0,
         }
     }

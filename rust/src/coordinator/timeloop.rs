@@ -205,10 +205,18 @@ impl TimeLoop {
                 measured_wall = 0.0;
             }
             let t0 = Instant::now();
-            step(&ctx.grid, &schedule, &mut app)?;
+            // On failure the engine has already run its abort protocol
+            // (announce + purge), so early return here cannot strand peers;
+            // a retry-exhausted run carries a structured `FaultReport`
+            // (downcastable through this context) instead of a bare string.
+            step(&ctx.grid, &schedule, &mut app)
+                .map_err(|e| e.context(format!("app '{}' step {it}", A::NAME)))?;
             measured_wall += t0.elapsed().as_secs_f64();
             app.diagnose(ctx, it);
         }
+        // Wind down the fault-recovery layer collectively (no-op on a clean
+        // network): peers may still need retransmits of our last planes.
+        ctx.grid.fault_quiesce();
 
         let metrics = StepMetrics {
             rank: ctx.grid.rank(),
@@ -219,6 +227,7 @@ impl TimeLoop {
             d_u: A::D_U,
             d_k: A::D_K,
             halo: ctx.grid.halo_stats(),
+            fault: ctx.grid.halo_fault_stats(),
             final_norm: app.final_norm(),
         };
         Ok(AppResult { metrics, fields: app.into_fields() })

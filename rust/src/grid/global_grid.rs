@@ -3,7 +3,7 @@
 use std::sync::Mutex;
 
 use crate::halo::{self, HaloEngine, TransferPath};
-use crate::mpisim::{CartComm, Comm};
+use crate::mpisim::{CartComm, Comm, FaultStats, RetryPolicy};
 use crate::physics::Field3D;
 use crate::OVERLAP;
 
@@ -24,6 +24,10 @@ pub struct GridOptions {
     /// Comm-side pack/unpack worker threads (1 = scalar; planes below the
     /// size threshold stay scalar regardless).
     pub comm_threads: usize,
+    /// Retry policy for the fault-recovery layer (None = defaults). Only
+    /// consulted when the network was built with a fault plan; on a clean
+    /// network the recovery layer stays out of the hot path entirely.
+    pub fault_retry: Option<RetryPolicy>,
 }
 
 impl Default for GridOptions {
@@ -34,6 +38,7 @@ impl Default for GridOptions {
             path: TransferPath::Rdma,
             pipeline_chunks: 4,
             comm_threads: 1,
+            fault_retry: None,
         }
     }
 }
@@ -77,6 +82,7 @@ impl GlobalGrid {
             opts.pipeline_chunks,
             crate::memory::CopyModel::ideal(),
             opts.comm_threads,
+            opts.fault_retry,
         )
     }
 
@@ -204,6 +210,22 @@ impl GlobalGrid {
     /// zero-allocation contract tests assert on this.
     pub fn halo_allocations(&self) -> usize {
         self.engine.lock().unwrap().allocations()
+    }
+
+    /// Fault-layer counters: injections observed by this rank's network side
+    /// plus the engine's recovery actions (timeouts, NACKs, retransmits).
+    /// All zeros when the network has no fault plan.
+    pub fn halo_fault_stats(&self) -> FaultStats {
+        self.engine.lock().unwrap().fault_stats()
+    }
+
+    /// Collective wind-down of the fault-recovery layer: keep serving
+    /// retransmit requests until every rank has stopped needing them, then
+    /// sweep leftover fault traffic (dups, stale retransmits) out of this
+    /// rank's mailbox. No-op on a clean network. Call after the last halo
+    /// update and before inspecting mailboxes or tearing the grid down.
+    pub fn fault_quiesce(&self) {
+        self.engine.lock().unwrap().fault_quiesce();
     }
 
     /// `finalize_global_grid()`. Consumes the grid; synchronizes ranks so

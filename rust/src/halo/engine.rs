@@ -55,10 +55,13 @@
 //! which joins the stream so the pointers can never outlive the borrow in
 //! safe usage through `overlap::scheduler`.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::memory::{BufKey, BufRole, BufferPool, CopyModel, SimDevice, Stream, StreamPriority};
+use crate::mpisim::fault::{self, FaultReport, FaultStats, RetryPolicy};
 use crate::mpisim::{CartComm, Comm, RecvRequest, SendRequest};
 use crate::physics::parallel::chunk_range;
 use crate::physics::Field3D;
@@ -77,6 +80,120 @@ pub struct HaloStats {
     pub bytes_sent: u64,
     /// periodic self-wrap plane copies
     pub wrap_copies: u64,
+}
+
+/// How often the fault-aware completion pump and the quiesce loop wake up
+/// to serve peer retransmit requests while otherwise blocked.
+const SERVICE_QUANTUM: Duration = Duration::from_millis(1);
+
+/// Recovery state of the fault-tolerant exchange, shared between the
+/// synchronous path and the stream job behind one `Arc`. Present exactly
+/// when the engine's network has a fault plan layered on it
+/// ([`crate::mpisim::Network::faults_enabled`]).
+struct FaultCtx {
+    policy: RetryPolicy,
+    /// Exchange epoch, folded into every data tag (`mpisim::fault`):
+    /// advances once per exchange, so a duplicated or replayed chunk of an
+    /// earlier exchange can never match a current receive (idempotent
+    /// unpack) — it is swept by `purge_stale` at the next exchange entry.
+    epoch: AtomicU64,
+    /// Last-sent payload per `(base_tag << 1) | (epoch & 1)`, kept for two
+    /// epochs (a neighbour lags at most one exchange behind, because its
+    /// own receives gate its progress) so NACKed chunks retransmit
+    /// bitwise-identically. The key set stabilizes after two epochs and
+    /// payload capacities are reused, so the enabled-but-idle steady state
+    /// allocates nothing.
+    backups: Mutex<HashMap<u64, (u64, Vec<f64>)>>,
+    /// Latched on the abort path; makes the quiesce announcements
+    /// idempotent per rank and turns `fault_quiesce` into a no-op on an
+    /// already-dead engine.
+    aborted: AtomicBool,
+    // recovery counters (this rank)
+    recv_timeouts: AtomicU64,
+    nacks_sent: AtomicU64,
+    retx_served: AtomicU64,
+    retx_recovered: AtomicU64,
+    send_timeouts: AtomicU64,
+    exhausted: AtomicU64,
+}
+
+impl FaultCtx {
+    fn new(policy: RetryPolicy) -> Self {
+        FaultCtx {
+            policy,
+            epoch: AtomicU64::new(0),
+            backups: Mutex::new(HashMap::new()),
+            aborted: AtomicBool::new(false),
+            recv_timeouts: AtomicU64::new(0),
+            nacks_sent: AtomicU64::new(0),
+            retx_served: AtomicU64::new(0),
+            retx_recovered: AtomicU64::new(0),
+            send_timeouts: AtomicU64::new(0),
+            exhausted: AtomicU64::new(0),
+        }
+    }
+
+    fn backup_key(base_tag: u64, epoch: u64) -> u64 {
+        (base_tag << 1) | (epoch & 1)
+    }
+
+    /// Record a just-sent chunk payload for possible retransmission.
+    fn record(&self, base_tag: u64, epoch: u64, payload: &[f64]) {
+        let mut b = self.backups.lock().unwrap();
+        let slot = b.entry(Self::backup_key(base_tag, epoch)).or_insert_with(|| (0, Vec::new()));
+        slot.0 = epoch % fault::EPOCH_MOD;
+        slot.1.clear();
+        slot.1.extend_from_slice(payload);
+    }
+
+    /// Serve one retransmit request: look up the backup for `full_tag` (an
+    /// epoch-folded data tag) and re-send it on the retransmit tag.
+    /// Unservable requests (epoch no longer backed up — the peer is more
+    /// than one exchange behind, or NACKed before we ever sent) are
+    /// dropped; the peer re-NACKs with backoff and eventually gives up.
+    fn serve_nack(&self, comm: &Comm, peer: usize, full_tag: u64, pool: &mut BufferPool) {
+        let b = self.backups.lock().unwrap();
+        let key = Self::backup_key(fault::tag_base(full_tag), fault::tag_epoch(full_tag));
+        if let Some((ep, data)) = b.get(&key) {
+            if *ep == fault::tag_epoch(full_tag) {
+                let mut payload = pool.checkout_payload(data.len());
+                payload.copy_from_slice(data);
+                // internal tag: completes immediately, exempt from injection
+                comm.isend(peer, fault::retx_tag(full_tag), payload).wait();
+                self.retx_served.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Drain and serve every pending retransmit request from every peer.
+    /// Called at exchange entry, from the completion pump's bounded waits,
+    /// and from the end-of-run quiesce loop.
+    fn service_nacks(&self, comm: &Comm, pool: &mut BufferPool) {
+        let me = comm.rank();
+        for src in 0..comm.size() {
+            if src == me {
+                continue;
+            }
+            while let Some((req, _)) = comm.irecv(src, fault::CTRL_NACK).try_take() {
+                let full_tag = req[0].to_bits();
+                pool.restore_payload(req);
+                self.serve_nack(comm, src, full_tag, pool);
+            }
+        }
+    }
+
+    /// This rank's recovery-side counters.
+    fn stats(&self) -> FaultStats {
+        FaultStats {
+            recv_timeouts: self.recv_timeouts.load(Ordering::Relaxed),
+            nacks_sent: self.nacks_sent.load(Ordering::Relaxed),
+            retx_served: self.retx_served.load(Ordering::Relaxed),
+            retx_recovered: self.retx_recovered.load(Ordering::Relaxed),
+            send_timeouts: self.send_timeouts.load(Ordering::Relaxed),
+            exhausted: self.exhausted.load(Ordering::Relaxed),
+            ..FaultStats::default()
+        }
+    }
 }
 
 /// A field as seen from the communication stream.
@@ -150,6 +267,14 @@ struct RecvState {
     /// First size-mismatch error of this op; the op still drains its
     /// remaining chunks before the error surfaces.
     err: Option<anyhow::Error>,
+    /// Fault mode: receive deadline of the front (next-expected) chunk.
+    deadline: Option<Instant>,
+    /// Fault mode: timed-out attempts on the front chunk (0 = original
+    /// receive still within its first deadline).
+    attempts: u32,
+    /// Fault mode: the front chunk has been NACKed, so the pump polls the
+    /// retransmit tag alongside the data tag.
+    nacked: bool,
 }
 
 /// Per-field progress cursor of the completion pump: the front
@@ -215,6 +340,9 @@ struct StreamJob {
     /// wipe or misattribute the live handle's error) — they take the
     /// per-call capture path instead.
     in_use: AtomicBool,
+    /// Shared recovery state (same `Arc` as the engine's); `None` on a
+    /// clean network.
+    fault: Option<Arc<FaultCtx>>,
 }
 
 impl StreamJob {
@@ -238,6 +366,7 @@ impl StreamJob {
                 &self.pool,
                 &self.stats,
                 &mut scratch,
+                self.fault.as_deref(),
             )
         };
         if let Err(e) = res {
@@ -268,6 +397,8 @@ pub struct HaloEngine {
     stream_job: Arc<StreamJob>,
     /// The job closure enqueued (by `Arc` clone) on every overlapped start.
     stream_job_fn: Arc<dyn Fn() + Send + Sync>,
+    /// Recovery state, present iff the network has a fault plan.
+    fault: Option<Arc<FaultCtx>>,
 }
 
 impl HaloEngine {
@@ -281,24 +412,33 @@ impl HaloEngine {
         pipeline_chunks: usize,
         copy_model: CopyModel,
     ) -> Self {
-        Self::with_config(cart, path, pipeline_chunks, copy_model, 1)
+        Self::with_config(cart, path, pipeline_chunks, copy_model, 1, None)
     }
 
     /// Full constructor: transfer path, staged pipeline chunks, copy model,
-    /// and the comm-side pack/unpack worker count (`comm_threads`; planes
-    /// below [`super::slicing::PACK_PAR_MIN_CELLS`] stay scalar).
+    /// the comm-side pack/unpack worker count (`comm_threads`; planes
+    /// below [`super::slicing::PACK_PAR_MIN_CELLS`] stay scalar), and the
+    /// fault-recovery policy override (`retry`; the default policy applies
+    /// when `None`). The recovery layer itself is armed by the *network*:
+    /// it exists iff the communicator's network carries a fault plan.
     pub fn with_config(
         cart: &CartComm,
         path: TransferPath,
         pipeline_chunks: usize,
         copy_model: CopyModel,
         comm_threads: usize,
+        retry: Option<RetryPolicy>,
     ) -> Self {
         assert!(pipeline_chunks >= 1 && pipeline_chunks <= MAX_CHUNKS);
         assert!(comm_threads >= 1, "need at least one comm thread");
         let device = Arc::new(SimDevice::new(copy_model));
         let pool = Arc::new(Mutex::new(BufferPool::new()));
         let stats = Arc::new(Mutex::new(HaloStats::default()));
+        let fault = if cart.comm().network().faults_enabled() {
+            Some(Arc::new(FaultCtx::new(retry.unwrap_or_default())))
+        } else {
+            None
+        };
         let stream_job = Arc::new(StreamJob {
             comm: cart.comm().clone(),
             path,
@@ -311,6 +451,7 @@ impl HaloEngine {
             input: Mutex::new(StreamInput::default()),
             error: Arc::new(Mutex::new(None)),
             in_use: AtomicBool::new(false),
+            fault: fault.clone(),
         });
         let job = Arc::clone(&stream_job);
         let stream_job_fn: Arc<dyn Fn() + Send + Sync> = Arc::new(move || job.run());
@@ -329,6 +470,7 @@ impl HaloEngine {
             sync_scratch: ExchangeScratch::default(),
             stream_job,
             stream_job_fn,
+            fault,
         }
     }
 
@@ -355,6 +497,44 @@ impl HaloEngine {
     /// across steady-state updates — asserted by `buffer_pool_steady_state`.
     pub fn allocations(&self) -> usize {
         self.pool.lock().unwrap().allocations() + self.plan_builds
+    }
+
+    /// Fault counters: the network's injection-side totals (network-global)
+    /// plus this rank's recovery-side counters. All zero on a clean wire.
+    pub fn fault_stats(&self) -> FaultStats {
+        let mut s = self.comm.network().fault_stats();
+        if let Some(fx) = &self.fault {
+            s.add(&fx.stats());
+        }
+        s
+    }
+
+    /// Fault-mode end-of-run handshake (no-op on a clean network, or after
+    /// this rank aborted): keep serving peer retransmit requests until
+    /// every rank's final exchange has completed, then announce that no
+    /// further fault-layer traffic will be emitted and — once every rank
+    /// has done the same — sweep what is left of it from the mailbox. Not
+    /// a collective: aborted ranks announce both phases from the abort
+    /// path, so this never blocks on a dead peer.
+    pub fn fault_quiesce(&self) {
+        let Some(fx) = &self.fault else { return };
+        if fx.aborted.load(Ordering::Acquire) {
+            return;
+        }
+        let net = Arc::clone(self.comm.network());
+        net.quiesce_announce_done();
+        while !net.quiesce_all_done() {
+            fx.service_nacks(&self.comm, &mut self.pool.lock().unwrap());
+            crate::util::timing::precise_sleep(SERVICE_QUANTUM);
+        }
+        // final pass for requests that raced the last check: every rank is
+        // done exchanging, so after this nobody needs anything from us
+        fx.service_nacks(&self.comm, &mut self.pool.lock().unwrap());
+        net.quiesce_announce_stopped();
+        while !net.quiesce_all_stopped() {
+            crate::util::timing::precise_sleep(SERVICE_QUANTUM);
+        }
+        net.purge_fault_traffic(self.comm.rank());
     }
 
     /// The memoized plan for this call signature, rebuilt only when the
@@ -405,6 +585,7 @@ impl HaloEngine {
                 &self.pool,
                 &self.stats,
                 &mut self.sync_scratch,
+                self.fault.as_deref(),
             )
         }
     }
@@ -472,6 +653,7 @@ impl HaloEngine {
                     &job.pool,
                     &job.stats,
                     &mut scratch,
+                    job.fault.as_deref(),
                 )
             };
             if let Err(e) = res {
@@ -558,6 +740,16 @@ impl Drop for PendingHalo {
 /// blocks waiting for ours — recovering there additionally needs an
 /// application-level agreement to abandon the update on every rank.
 ///
+/// In fault mode (`fault` is `Some`) the exchange additionally: advances
+/// the engine's exchange epoch and folds it into every data tag, sweeps
+/// epoch-stale traffic at entry, keeps a two-epoch backup of every sent
+/// chunk, and runs a deadline-driven completion pump that requests
+/// retransmits (bounded, with exponential backoff) and serves the peers'
+/// retransmit requests while it waits. Exhausting the retry budget takes
+/// the graceful-degradation path: pooled buffers are returned, the rank's
+/// mailbox is refused-and-purged, the send drain is time-bounded, and a
+/// structured [`FaultReport`] is surfaced.
+///
 /// SAFETY (caller): no other thread may access the boundary planes of the
 /// fields behind `raws` during the call; the field allocations must outlive
 /// it.
@@ -573,10 +765,23 @@ unsafe fn exchange(
     pool: &Mutex<BufferPool>,
     stats: &Mutex<HaloStats>,
     scratch: &mut ExchangeScratch,
+    fault: Option<&FaultCtx>,
 ) -> anyhow::Result<()> {
     // Stats are accumulated here and flushed once at the end of the update.
     let mut local = HaloStats { updates: 1, ..HaloStats::default() };
     let mut first_err: Option<anyhow::Error> = None;
+    // Fault mode entry: advance the epoch, sweep traffic stale exchanges
+    // left behind (dups, late retransmits — the idempotence sweep), and
+    // serve any retransmit request a lagging neighbour already queued.
+    let epoch = match fault {
+        Some(fx) => {
+            let e = fx.epoch.fetch_add(1, Ordering::Relaxed);
+            comm.network().purge_stale(comm.rank(), e);
+            fx.service_nacks(comm, &mut pool.lock().unwrap());
+            e
+        }
+        None => 0,
+    };
     for (d, ops) in plan.per_dim.iter().enumerate() {
         if ops.is_empty() {
             continue;
@@ -601,7 +806,11 @@ unsafe fn exchange(
                     let n_chunks = effective_chunks(path, chunks, op.plane_cells);
                     let req_base = recv_reqs.len();
                     for c in 0..n_chunks {
-                        recv_reqs.push(Some(comm.irecv(src, op.tag(c))));
+                        let tag = match fault {
+                            Some(_) => fault::epoch_tag(op.tag(c), epoch),
+                            None => op.tag(c),
+                        };
+                        recv_reqs.push(Some(comm.irecv(src, tag)));
                     }
                     recv_states.push(RecvState {
                         op: i,
@@ -610,6 +819,9 @@ unsafe fn exchange(
                         done: 0,
                         dev_buf: None,
                         err: None,
+                        deadline: fault.map(|fx| Instant::now() + fx.policy.timeout),
+                        attempts: 0,
+                        nacked: false,
                     });
                 }
             }
@@ -629,6 +841,8 @@ unsafe fn exchange(
                         &mut pool_g,
                         &mut local,
                         sends,
+                        fault,
+                        epoch,
                     );
                 }
             }
@@ -644,80 +858,71 @@ unsafe fn exchange(
         // every live peer posts all its sends of a dimension before its
         // first wait, so these waits are bounded. (A peer that dies
         // mid-update hangs any later receive or collective in this
-        // substrate anyway; rank death is fatal to the run.)
-        let mut pending = recv_states.len();
-        while pending > 0 {
-            let mut progressed = false;
-            for cur in cursors.iter_mut() {
-                while cur.next < cur.hi {
-                    let st = &mut recv_states[cur.next];
-                    // absorb every chunk of the front op that has arrived
-                    while st.done < st.n_chunks {
-                        let slot = &recv_reqs[st.req_base + st.done];
-                        if !slot.as_ref().is_some_and(|r| r.test()) {
-                            break;
-                        }
-                        let req = recv_reqs[st.req_base + st.done].take().expect("tested");
-                        absorb_chunk(
-                            &ops[st.op],
-                            st,
-                            req.wait(),
-                            raws,
-                            path,
-                            comm_threads,
-                            device,
-                            &mut pool_g,
-                        );
-                        progressed = true;
-                    }
-                    if st.done < st.n_chunks {
-                        break; // front op incomplete: give other fields a turn
-                    }
-                    finalize_op(
-                        &ops[st.op],
-                        st,
-                        raws,
-                        path,
-                        comm_threads,
-                        &mut pool_g,
-                        &mut first_err,
-                    );
-                    cur.next += 1;
-                    pending -= 1;
-                    progressed = true;
+        // substrate anyway — unless the fault layer is armed, in which
+        // case the deadline-driven pump below bounds every wait and rank
+        // death degrades into a structured abort.)
+        let abort = if let Some(fx) = fault {
+            pump_faulty(
+                comm,
+                ops,
+                raws,
+                path,
+                comm_threads,
+                device,
+                &mut pool_g,
+                recv_reqs,
+                recv_states,
+                cursors,
+                fx,
+                epoch,
+                &mut first_err,
+            )
+        } else {
+            pump_clean(
+                ops,
+                raws,
+                path,
+                comm_threads,
+                device,
+                &mut pool_g,
+                recv_reqs,
+                recv_states,
+                cursors,
+                &mut first_err,
+            );
+            None
+        };
+
+        if let Some(report) = abort {
+            // Retry budget exhausted: graceful degradation. Return pooled
+            // staging buffers (pool recycling holds across an abort),
+            // refuse-and-purge the mailbox, announce both quiesce phases
+            // so surviving ranks never block on this rank, and time-bound
+            // the send drain before surfacing the structured report.
+            let fx = fault.expect("abort only happens in fault mode");
+            for st in recv_states.iter_mut() {
+                if let Some(dev_buf) = st.dev_buf.take() {
+                    let op = &ops[st.op];
+                    let side = usize::from(op.dir < 0);
+                    let key =
+                        BufKey { field: op.field, dim: op.dim, side, role: BufRole::Recv };
+                    pool_g.restore(key, dev_buf);
                 }
             }
-            if pending > 0 && !progressed {
-                // Nothing testable anywhere: block on the earliest pending
-                // chunk in op order rather than spinning on probes.
-                let cur = cursors.iter_mut().find(|c| c.next < c.hi).expect("pending ops exist");
-                let st = &mut recv_states[cur.next];
-                let req =
-                    recv_reqs[st.req_base + st.done].take().expect("pending chunk posted");
-                absorb_chunk(
-                    &ops[st.op],
-                    st,
-                    req.wait(),
-                    raws,
-                    path,
-                    comm_threads,
-                    device,
-                    &mut pool_g,
-                );
-                if st.done == st.n_chunks {
-                    finalize_op(
-                        &ops[st.op],
-                        st,
-                        raws,
-                        path,
-                        comm_threads,
-                        &mut pool_g,
-                        &mut first_err,
-                    );
-                    cur.next += 1;
-                    pending -= 1;
+            recv_reqs.clear();
+            abort_announce(comm, fx);
+            // A send whose modeled completion lies beyond the policy
+            // timeout is abandoned (send-completion timeout): the payload
+            // already belongs to the network, nothing leaks.
+            let give_up = Instant::now() + fx.policy.timeout;
+            for req in sends.drain(..) {
+                if req.completion_instant() > give_up {
+                    fx.send_timeouts.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    req.wait();
                 }
             }
+            return Err(anyhow::Error::new(report));
         }
 
         // Stage 3: drain the posted sends (completes their modeled
@@ -733,6 +938,12 @@ unsafe fn exchange(
         }
     }
     if let Some(e) = first_err {
+        // In fault mode a failed exchange is terminal for the rank (its
+        // peers' next-epoch traffic would stall on it anyway): announce
+        // the abort so the surviving ranks' quiesce never waits on us.
+        if let Some(fx) = fault {
+            abort_announce(comm, fx);
+        }
         return Err(e);
     }
     let mut st = stats.lock().unwrap();
@@ -750,6 +961,258 @@ fn effective_chunks(path: TransferPath, chunks: usize, cells: usize) -> usize {
     }
 }
 
+/// The clean-wire completion pump (stage 2 of `exchange`; see the stage
+/// comment there). Absorbs whatever has arrived per field cursor and
+/// blocks on the earliest pending chunk when nothing is testable.
+///
+/// SAFETY: as `exchange` — exclusive access to the boundary planes.
+#[allow(clippy::too_many_arguments)]
+unsafe fn pump_clean(
+    ops: &[ExchangeOp],
+    raws: &[RawField],
+    path: TransferPath,
+    comm_threads: usize,
+    device: &SimDevice,
+    pool: &mut BufferPool,
+    recv_reqs: &mut [Option<RecvRequest>],
+    recv_states: &mut [RecvState],
+    cursors: &mut [FieldCursor],
+    first_err: &mut Option<anyhow::Error>,
+) {
+    let mut pending = recv_states.len();
+    while pending > 0 {
+        let mut progressed = false;
+        for cur in cursors.iter_mut() {
+            while cur.next < cur.hi {
+                let st = &mut recv_states[cur.next];
+                // absorb every chunk of the front op that has arrived
+                while st.done < st.n_chunks {
+                    let slot = &recv_reqs[st.req_base + st.done];
+                    if !slot.as_ref().is_some_and(|r| r.test()) {
+                        break;
+                    }
+                    let req = recv_reqs[st.req_base + st.done].take().expect("tested");
+                    absorb_chunk(
+                        &ops[st.op],
+                        st,
+                        req.wait(),
+                        raws,
+                        path,
+                        comm_threads,
+                        device,
+                        pool,
+                    );
+                    progressed = true;
+                }
+                if st.done < st.n_chunks {
+                    break; // front op incomplete: give other fields a turn
+                }
+                finalize_op(&ops[st.op], st, raws, path, comm_threads, pool, first_err);
+                cur.next += 1;
+                pending -= 1;
+                progressed = true;
+            }
+        }
+        if pending > 0 && !progressed {
+            // Nothing testable anywhere: block on the earliest pending
+            // chunk in op order rather than spinning on probes.
+            let cur = cursors.iter_mut().find(|c| c.next < c.hi).expect("pending ops exist");
+            let st = &mut recv_states[cur.next];
+            let req = recv_reqs[st.req_base + st.done].take().expect("pending chunk posted");
+            absorb_chunk(&ops[st.op], st, req.wait(), raws, path, comm_threads, device, pool);
+            if st.done == st.n_chunks {
+                finalize_op(&ops[st.op], st, raws, path, comm_threads, pool, first_err);
+                cur.next += 1;
+                pending -= 1;
+            }
+        }
+    }
+}
+
+/// The fault-aware completion pump: same per-field progress cursors as
+/// [`pump_clean`], but every front chunk carries a deadline in modeled
+/// time. A chunk that times out (or arrives corrupt) is NACKed back to its
+/// sender — up to `RetryPolicy::max_retries` times, each wait extended by
+/// the exponential backoff — after which the pump stops and returns the
+/// structured [`FaultReport`] for `exchange`'s abort path. While blocked,
+/// the pump wakes every [`SERVICE_QUANTUM`] to serve the peers' own
+/// retransmit requests, so two ranks recovering from each other's losses
+/// cannot deadlock.
+///
+/// SAFETY: as `exchange` — exclusive access to the boundary planes.
+#[allow(clippy::too_many_arguments)]
+unsafe fn pump_faulty(
+    comm: &Comm,
+    ops: &[ExchangeOp],
+    raws: &[RawField],
+    path: TransferPath,
+    comm_threads: usize,
+    device: &SimDevice,
+    pool: &mut BufferPool,
+    recv_reqs: &mut [Option<RecvRequest>],
+    recv_states: &mut [RecvState],
+    cursors: &mut [FieldCursor],
+    fx: &FaultCtx,
+    epoch: u64,
+    first_err: &mut Option<anyhow::Error>,
+) -> Option<FaultReport> {
+    let mut pending = recv_states.len();
+    while pending > 0 {
+        let mut progressed = false;
+        for cur in cursors.iter_mut() {
+            while cur.next < cur.hi {
+                let st = &mut recv_states[cur.next];
+                let op = &ops[st.op];
+                while st.done < st.n_chunks {
+                    match take_front_chunk(comm, fx, op, st, epoch, pool) {
+                        ChunkPoll::Got(payload) => {
+                            absorb_chunk(op, st, payload, raws, path, comm_threads, device, pool);
+                            // fresh budget and deadline for the next chunk
+                            st.attempts = 0;
+                            st.nacked = false;
+                            st.deadline = Some(Instant::now() + fx.policy.timeout);
+                            progressed = true;
+                        }
+                        ChunkPoll::Waiting => break,
+                        ChunkPoll::Exhausted(report) => return Some(report),
+                    }
+                }
+                if st.done < st.n_chunks {
+                    break; // front op incomplete: give other fields a turn
+                }
+                finalize_op(op, st, raws, path, comm_threads, pool, first_err);
+                cur.next += 1;
+                pending -= 1;
+                progressed = true;
+            }
+        }
+        if pending > 0 && !progressed {
+            // Nothing arrived anywhere: serve peer retransmit requests,
+            // then block (bounded) on the earliest pending chunk — never
+            // past its deadline, never longer than one service quantum.
+            fx.service_nacks(comm, pool);
+            let cur = cursors.iter().find(|c| c.next < c.hi).expect("pending ops exist");
+            let st = &recv_states[cur.next];
+            let deadline = st.deadline.expect("fault pump maintains deadlines");
+            let req = recv_reqs[st.req_base + st.done].as_ref().expect("pending chunk posted");
+            req.wait_arrival(deadline.min(Instant::now() + SERVICE_QUANTUM));
+        }
+    }
+    None
+}
+
+/// Outcome of polling one front chunk in the fault-aware pump.
+enum ChunkPoll {
+    /// An uncorrupted payload (original or retransmit) was taken.
+    Got(Vec<f64>),
+    /// Nothing usable yet and the deadline has not expired (or a NACK was
+    /// just sent and the extended deadline is now pending).
+    Waiting,
+    /// Retry budget exhausted — abort with this report.
+    Exhausted(FaultReport),
+}
+
+/// Poll the front chunk of `st`: the epoch-folded data tag first, then —
+/// once a retransmit has been requested — the retransmit tag. Corrupt
+/// deliveries are recycled and treated like losses (immediate NACK);
+/// deadline expiry counts a timeout and NACKs. Both consume one attempt of
+/// the chunk's retry budget.
+fn take_front_chunk(
+    comm: &Comm,
+    fx: &FaultCtx,
+    op: &ExchangeOp,
+    st: &mut RecvState,
+    epoch: u64,
+    pool: &mut BufferPool,
+) -> ChunkPoll {
+    let src = op.recv_from.expect("receiving op");
+    let full_tag = fault::epoch_tag(op.tag(st.done), epoch);
+    loop {
+        let mut from_retx = false;
+        let mut got = comm.irecv(src, full_tag).try_take();
+        if got.is_none() && st.nacked {
+            got = comm.irecv(src, fault::retx_tag(full_tag)).try_take();
+            from_retx = got.is_some();
+        }
+        match got {
+            Some((payload, corrupt)) => {
+                if corrupt {
+                    // CRC-detected wire error: the payload is lost; request
+                    // a retransmit right away (retransmits travel on
+                    // internal tags, so they can never arrive corrupt).
+                    pool.restore_payload(payload);
+                    match nack_or_exhaust(comm, fx, st, src, full_tag) {
+                        Some(report) => return ChunkPoll::Exhausted(report),
+                        None => continue, // a dup of the chunk may be queued
+                    }
+                }
+                if from_retx {
+                    fx.retx_recovered.fetch_add(1, Ordering::Relaxed);
+                }
+                return ChunkPoll::Got(payload);
+            }
+            None => {
+                let deadline = st.deadline.expect("fault pump maintains deadlines");
+                if Instant::now() < deadline {
+                    return ChunkPoll::Waiting;
+                }
+                fx.recv_timeouts.fetch_add(1, Ordering::Relaxed);
+                return match nack_or_exhaust(comm, fx, st, src, full_tag) {
+                    Some(report) => ChunkPoll::Exhausted(report),
+                    None => ChunkPoll::Waiting,
+                };
+            }
+        }
+    }
+}
+
+/// Consume one attempt of the front chunk's retry budget: either NACK the
+/// sender (requesting a retransmit of `full_tag`) and extend the deadline
+/// with exponential backoff, or — budget exhausted — build the structured
+/// per-rank report. The NACK payload carries the full data tag in the bits
+/// of one f64; this path only runs when a fault actually fired, so its one
+/// small allocation is outside the steady-state contract.
+fn nack_or_exhaust(
+    comm: &Comm,
+    fx: &FaultCtx,
+    st: &mut RecvState,
+    src: usize,
+    full_tag: u64,
+) -> Option<FaultReport> {
+    st.attempts += 1;
+    if st.attempts > fx.policy.max_retries {
+        fx.exhausted.fetch_add(1, Ordering::Relaxed);
+        let mut stats = comm.network().fault_stats();
+        stats.add(&fx.stats());
+        return Some(FaultReport {
+            rank: comm.rank(),
+            peer: src,
+            tag: full_tag,
+            attempts: st.attempts,
+            stats,
+        });
+    }
+    comm.isend(src, fault::CTRL_NACK, vec![f64::from_bits(full_tag)]).wait();
+    fx.nacks_sent.fetch_add(1, Ordering::Relaxed);
+    st.nacked = true;
+    st.deadline = Some(Instant::now() + fx.policy.deadline_after(st.attempts));
+    None
+}
+
+/// Terminal abort bookkeeping (fault mode): refuse further deposits, sweep
+/// the mailbox, and announce both quiesce phases so surviving ranks never
+/// block on this rank. Idempotent per engine.
+fn abort_announce(comm: &Comm, fx: &FaultCtx) {
+    if fx.aborted.swap(true, Ordering::AcqRel) {
+        return;
+    }
+    let net = comm.network();
+    net.mark_aborted(comm.rank());
+    net.purge_fault_traffic(comm.rank());
+    net.quiesce_announce_done();
+    net.quiesce_announce_stopped();
+}
+
 #[allow(clippy::too_many_arguments)]
 unsafe fn send_plane(
     comm: &Comm,
@@ -763,6 +1226,8 @@ unsafe fn send_plane(
     pool: &mut BufferPool,
     stats: &mut HaloStats,
     sends: &mut Vec<SendRequest>,
+    fault: Option<&FaultCtx>,
+    epoch: u64,
 ) {
     let rf = raws[op.field];
     let data = rf.slice_mut();
@@ -773,7 +1238,8 @@ unsafe fn send_plane(
             // replaces it in the pool, so the steady state allocates nothing.
             let mut payload = pool.checkout_payload(op.plane_cells);
             pack_plane_threaded(data, rf.dims, op.dim, op.send_plane, &mut payload, comm_threads);
-            sends.push(comm.isend(dst, op.tag(0), payload));
+            let tag = wire_tag(fault, epoch, op.tag(0), &payload);
+            sends.push(comm.isend(dst, tag, payload));
             stats.planes_sent += 1;
             stats.bytes_sent += (op.plane_cells * 8) as u64;
         }
@@ -790,12 +1256,27 @@ unsafe fn send_plane(
                 let (lo, hi) = chunk_range(op.plane_cells, n_chunks, c);
                 let mut payload = pool.checkout_payload(hi - lo);
                 device.d2h(&dev_buf[lo..hi], &mut payload);
-                sends.push(comm.isend(dst, op.tag(c), payload));
+                let tag = wire_tag(fault, epoch, op.tag(c), &payload);
+                sends.push(comm.isend(dst, tag, payload));
             }
             pool.restore(key, dev_buf);
             stats.planes_sent += n_chunks as u64;
             stats.bytes_sent += (op.plane_cells * 8) as u64;
         }
+    }
+}
+
+/// The tag a chunk travels under, given the fault mode: clean wires use
+/// the plan's base tag; in fault mode the tag is epoch-folded and the
+/// payload is backed up (two-epoch window) before it enters the wire, so a
+/// NACK can be served with a bitwise-identical retransmit.
+fn wire_tag(fault: Option<&FaultCtx>, epoch: u64, base: u64, payload: &[f64]) -> u64 {
+    match fault {
+        Some(fx) => {
+            fx.record(base, epoch, payload);
+            fault::epoch_tag(base, epoch)
+        }
+        None => base,
     }
 }
 
@@ -1265,12 +1746,8 @@ mod tests {
                         assert_eq!(absorbed.len(), 36, "rank 0 posted its send before erroring");
                     }
                     g.comm().barrier();
-                    assert_eq!(
-                        net.mailbox_depth(g.rank()),
-                        0,
-                        "rank {}'s mailbox must be clean after the failed exchange",
-                        g.rank()
-                    );
+                    // clean mailbox *and* idle NIC after the failed exchange
+                    net.assert_quiescent(g.rank());
 
                     // Round C: a normal update must recover — nothing stale
                     // may FIFO-match, so the marker is restored bitwise.
@@ -1283,7 +1760,7 @@ mod tests {
                     }
                     g.update_halo(&mut [&mut f]).unwrap();
                     assert_eq!(f.max_abs_diff(&want), 0.0, "post-error update must be clean");
-                    assert_eq!(net.mailbox_depth(g.rank()), 0, "mailbox clean after recovery");
+                    net.assert_quiescent(g.rank());
                 })
             })
             .collect();
@@ -1336,12 +1813,8 @@ mod tests {
                         }
                     }
                     g.comm().barrier();
-                    assert_eq!(
-                        net.mailbox_depth(g.rank()),
-                        0,
-                        "rank {}'s mailbox must be clean after the failed staged exchange",
-                        g.rank()
-                    );
+                    // clean mailbox *and* idle NIC after the failed staged exchange
+                    net.assert_quiescent(g.rank());
 
                     // Recovery: bitwise-correct update afterwards.
                     let mut f = want.clone();

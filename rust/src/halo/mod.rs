@@ -38,7 +38,7 @@ mod plan;
 pub mod slicing;
 
 pub use engine::{HaloEngine, HaloStats, PendingHalo};
-pub use plan::{ExchangeOp, FieldOps, HaloPlan};
+pub use plan::{ExchangeOp, FieldOps, HaloPlan, MAX_CHUNKS};
 pub use slicing::{
     pack_plane, pack_plane_threaded, unpack_plane, unpack_plane_threaded, PACK_PAR_MIN_CELLS,
 };

@@ -32,6 +32,12 @@ fn run_flags(cmd: Command) -> Command {
             Some("ideal"),
             "network model: ideal|aries|aries:<scale>[,serial-nic]",
         )
+        .value(
+            "faults",
+            None,
+            "fault injection spec, e.g. 'drop@0->1#n=3' or \
+             'chaos:drop=0.02;policy:timeout=50ms,retries=8;seed:7'",
+        )
         .value("seed", None, "base RNG seed")
 }
 

@@ -1,0 +1,780 @@
+//! Seeded, deterministic fault injection for the simulated network.
+//!
+//! The paper's scaling story assumes the interconnect behaves; at scale it
+//! does not. This module lets a run *choose* how it misbehaves: a
+//! [`FaultSpec`] (from `--faults` / `IGG_FAULTS`) carries a [`FaultPlan`]
+//! of per-link rules — message **drop**, **duplication**, **delay spike**,
+//! **payload corruption**, transient **NIC stall**, permanent rank
+//! **kill** — plus the [`RetryPolicy`] the halo engine uses to recover.
+//!
+//! Determinism is the design center. Fault decisions never consult wall
+//! clocks or thread interleavings: each link (src, dst) keeps a message
+//! counter, deterministic rules fire on exact counter values (`#n=3`), and
+//! probabilistic `chaos:` rules hash (seed, src, dst, counter) through
+//! SplitMix64. Two runs with the same config and spec therefore inject
+//! byte-identical fault schedules, and a recovered run is bit-identical to
+//! the fault-free run. Retransmissions and control messages travel on
+//! reserved internal tags that are exempt from injection (they model a
+//! software reliability layer riding a separate virtual channel), so
+//! recovery traffic cannot perturb the injected schedule.
+//!
+//! ## Spec grammar (items separated by `;`)
+//!
+//! ```text
+//! rule    := kind '@' rank '->' rank ['#' kv (',' kv)*]
+//! kind    := drop | dup | delay | corrupt | stall | kill
+//! rank    := <usize> | '*'
+//! kv      := n=<nth msg, 1-based> | count=<msgs> | spike=<dur>
+//! chaos   := 'chaos:' (drop|dup|corrupt|delay)=<prob> [',' ...] [,spike=<dur>]
+//! policy  := 'policy:' [timeout=<dur>] [,retries=<n>] [,backoff=<f>]
+//! seed    := 'seed:' <u64>
+//! dur     := <float> ('us'|'ms'|'s')
+//! ```
+//!
+//! Examples: `drop@0->1#n=3`, `kill@1#n=5`,
+//! `chaos:drop=0.02,corrupt=0.01,spike=500us;policy:timeout=50ms,retries=8`.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::prng::SplitMix64;
+
+use super::INTERNAL_TAG_BASE;
+
+// ---------------------------------------------------------------------------
+// Tag layout for fault-aware halo traffic.
+//
+// Data tags stay below `INTERNAL_TAG_BASE`. With the fault layer enabled the
+// halo engine folds an 8-bit exchange epoch into bits 32..40 of every data
+// tag, which is what makes unpack idempotent: a duplicated or replayed chunk
+// from an earlier exchange can never match the current exchange's receive,
+// and is purged as stale. Control traffic reuses the internal-tag space:
+// NACKs on one well-known tag (payload carries the requested data tag) and
+// retransmissions on `RETX_FLAG | data_tag`.
+// ---------------------------------------------------------------------------
+
+/// Bit position of the epoch field inside a fault-mode data tag.
+pub const EPOCH_SHIFT: u32 = 32;
+/// Epochs are tracked modulo this (8 bits); peers stay within a couple of
+/// epochs of each other, so mod-256 lag comparison is unambiguous.
+pub const EPOCH_MOD: u64 = 256;
+/// Retransmission flag bit inside the internal-tag space.
+const RETX_FLAG: u64 = 1 << 54;
+/// The well-known control tag NACKs travel on (payload = requested tag).
+pub const CTRL_NACK: u64 = INTERNAL_TAG_BASE | (1 << 55);
+
+/// Fold an exchange epoch into a base data tag.
+pub fn epoch_tag(base: u64, epoch: u64) -> u64 {
+    debug_assert!(base < 1 << EPOCH_SHIFT);
+    base | ((epoch % EPOCH_MOD) << EPOCH_SHIFT)
+}
+
+/// The epoch folded into a fault-mode data tag.
+pub fn tag_epoch(tag: u64) -> u64 {
+    (tag >> EPOCH_SHIFT) & (EPOCH_MOD - 1)
+}
+
+/// The base (epoch-free) part of a fault-mode data tag.
+pub fn tag_base(tag: u64) -> u64 {
+    tag & ((1u64 << EPOCH_SHIFT) - 1)
+}
+
+/// The internal tag a retransmission of `data_tag` travels on.
+pub fn retx_tag(data_tag: u64) -> u64 {
+    debug_assert!(data_tag < INTERNAL_TAG_BASE);
+    INTERNAL_TAG_BASE | RETX_FLAG | data_tag
+}
+
+/// Is this internal tag fault-layer control traffic (NACK or retransmit)?
+pub fn is_fault_ctrl(tag: u64) -> bool {
+    tag >= INTERNAL_TAG_BASE && (tag == CTRL_NACK || tag & RETX_FLAG != 0)
+}
+
+/// The data tag a retransmission carries, if `tag` is one.
+pub fn retx_data_tag(tag: u64) -> Option<u64> {
+    (tag >= INTERNAL_TAG_BASE && tag & RETX_FLAG != 0 && tag != CTRL_NACK)
+        .then(|| tag & !(INTERNAL_TAG_BASE | RETX_FLAG))
+}
+
+/// Is `tag_ep` strictly older than `cur_ep` (mod [`EPOCH_MOD`], window of
+/// half the ring)? Future epochs — a peer already one exchange ahead — are
+/// *not* stale.
+pub fn epoch_is_stale(tag_ep: u64, cur_ep: u64) -> bool {
+    let lag = (cur_ep % EPOCH_MOD + EPOCH_MOD - tag_ep % EPOCH_MOD) % EPOCH_MOD;
+    (1..EPOCH_MOD / 2).contains(&lag)
+}
+
+// ---------------------------------------------------------------------------
+// Spec types
+// ---------------------------------------------------------------------------
+
+/// What a fault rule does to a matched message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Message silently vanishes; the sender's completion is unaffected.
+    Drop,
+    /// Message is delivered twice.
+    Dup,
+    /// Arrival is pushed out by the rule's spike (transit-side delay).
+    Delay,
+    /// Message arrives flagged corrupt (payload scrubbed to NaN), modeling
+    /// a CRC-detected wire error.
+    Corrupt,
+    /// Transient NIC stall: both injection completion and arrival slip by
+    /// the spike.
+    Stall,
+    /// Permanent rank death: from the matched message on, *all* traffic to
+    /// or from the rule's source rank is dropped.
+    Kill,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "drop" => FaultKind::Drop,
+            "dup" => FaultKind::Dup,
+            "delay" => FaultKind::Delay,
+            "corrupt" => FaultKind::Corrupt,
+            "stall" => FaultKind::Stall,
+            "kill" => FaultKind::Kill,
+            other => anyhow::bail!(
+                "unknown fault kind '{other}' (want drop|dup|delay|corrupt|stall|kill)"
+            ),
+        })
+    }
+}
+
+/// One deterministic per-link rule: fires on link messages `n ..= n+count-1`
+/// (1-based counter of non-internal messages on that (src, dst) link).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRule {
+    pub kind: FaultKind,
+    /// Source rank; `None` = any.
+    pub src: Option<usize>,
+    /// Destination rank; `None` = any.
+    pub dst: Option<usize>,
+    /// First matching link-message index (1-based).
+    pub nth: u64,
+    /// How many consecutive messages the rule fires on.
+    pub count: u64,
+    /// Extra modeled time for `delay` / `stall`.
+    pub spike: Duration,
+}
+
+impl FaultRule {
+    fn matches(&self, src: usize, dst: usize, idx: u64) -> bool {
+        self.src.is_none_or(|s| s == src)
+            && self.dst.is_none_or(|d| d == dst)
+            && idx >= self.nth
+            && idx < self.nth + self.count
+    }
+}
+
+/// Probabilistic background faults: each data message draws one uniform
+/// deviate from hash(seed, src, dst, link counter) and lands in at most one
+/// of the probability bands.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Chaos {
+    pub drop: f64,
+    pub dup: f64,
+    pub corrupt: f64,
+    pub delay: f64,
+    /// Modeled delay for the `delay` band.
+    pub spike: Duration,
+}
+
+/// The full injection schedule: deterministic rules + optional chaos band,
+/// all keyed off one seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+    pub chaos: Option<Chaos>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan { seed: 0x1667_5D0F, rules: Vec::new(), chaos: None }
+    }
+}
+
+/// How the halo engine recovers: per-receive deadline, bounded retransmit
+/// requests with exponential backoff.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Deadline for the first receive attempt of each chunk.
+    pub timeout: Duration,
+    /// Retransmit requests per chunk before declaring the peer lost.
+    pub max_retries: u32,
+    /// Deadline multiplier per retry (exponential backoff).
+    pub backoff: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { timeout: Duration::from_millis(200), max_retries: 6, backoff: 2.0 }
+    }
+}
+
+impl RetryPolicy {
+    /// Deadline extent for attempt `attempts` (0-based), with backoff.
+    pub fn deadline_after(&self, attempts: u32) -> Duration {
+        let factor = self.backoff.powi(attempts.min(16) as i32).max(1.0);
+        self.timeout.mul_f64(factor)
+    }
+}
+
+/// Parsed `--faults` / `IGG_FAULTS` value: the injection plan plus the
+/// recovery policy, with the raw spec kept for report echoing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    pub plan: FaultPlan,
+    pub policy: RetryPolicy,
+    /// The original spec string, echoed into JSON reports.
+    pub raw: String,
+}
+
+/// Parse `"200us"` / `"5ms"` / `"1.5s"` into a [`Duration`].
+pub fn parse_duration(s: &str) -> anyhow::Result<Duration> {
+    let (num, scale) = if let Some(v) = s.strip_suffix("us") {
+        (v, 1e-6)
+    } else if let Some(v) = s.strip_suffix("ms") {
+        (v, 1e-3)
+    } else if let Some(v) = s.strip_suffix('s') {
+        (v, 1.0)
+    } else {
+        anyhow::bail!("duration '{s}' needs a unit suffix (us|ms|s)");
+    };
+    let x: f64 =
+        num.parse().map_err(|_| anyhow::anyhow!("duration '{s}': '{num}' is not a number"))?;
+    anyhow::ensure!(x.is_finite() && x >= 0.0, "duration '{s}' must be >= 0");
+    Ok(Duration::from_secs_f64(x * scale))
+}
+
+fn parse_rank(s: &str) -> anyhow::Result<Option<usize>> {
+    if s == "*" {
+        return Ok(None);
+    }
+    s.parse::<usize>()
+        .map(Some)
+        .map_err(|_| anyhow::anyhow!("rank '{s}' is not an integer or '*'"))
+}
+
+fn parse_prob(key: &str, v: &str) -> anyhow::Result<f64> {
+    let p: f64 = v.parse().map_err(|_| anyhow::anyhow!("{key}='{v}' is not a number"))?;
+    anyhow::ensure!((0.0..=1.0).contains(&p), "{key}={v} must be a probability in [0, 1]");
+    Ok(p)
+}
+
+impl FaultSpec {
+    /// Parse a full spec string. Errors name the offending item and what was
+    /// expected — these surface directly to `--faults` users.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let mut plan = FaultPlan::default();
+        let mut policy = RetryPolicy::default();
+        for item in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            if let Some(body) = item.strip_prefix("policy:") {
+                Self::parse_policy(body, &mut policy)
+                    .map_err(|e| anyhow::anyhow!("in fault spec item '{item}': {e}"))?;
+            } else if let Some(body) = item.strip_prefix("chaos:") {
+                let chaos = Self::parse_chaos(body, &mut plan.seed)
+                    .map_err(|e| anyhow::anyhow!("in fault spec item '{item}': {e}"))?;
+                plan.chaos = Some(chaos);
+            } else if let Some(body) = item.strip_prefix("seed:") {
+                plan.seed = body
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("seed '{body}' is not an integer"))?;
+            } else {
+                let rule = Self::parse_rule(item)
+                    .map_err(|e| anyhow::anyhow!("in fault spec item '{item}': {e}"))?;
+                plan.rules.push(rule);
+            }
+        }
+        anyhow::ensure!(
+            !plan.rules.is_empty() || plan.chaos.is_some(),
+            "fault spec '{spec}' configures no faults (want rules, chaos:, or both)"
+        );
+        Ok(FaultSpec { plan, policy, raw: spec.to_string() })
+    }
+
+    fn parse_policy(body: &str, policy: &mut RetryPolicy) -> anyhow::Result<()> {
+        for kv in body.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = kv.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("'{kv}' is not key=value (want timeout=|retries=|backoff=)")
+            })?;
+            match k {
+                "timeout" => policy.timeout = parse_duration(v)?,
+                "retries" => {
+                    policy.max_retries =
+                        v.parse().map_err(|_| anyhow::anyhow!("retries='{v}' not an integer"))?
+                }
+                "backoff" => {
+                    let b: f64 =
+                        v.parse().map_err(|_| anyhow::anyhow!("backoff='{v}' not a number"))?;
+                    anyhow::ensure!(b >= 1.0, "backoff={v} must be >= 1");
+                    policy.backoff = b;
+                }
+                other => anyhow::bail!("unknown policy key '{other}'"),
+            }
+        }
+        anyhow::ensure!(!policy.timeout.is_zero(), "policy timeout must be > 0");
+        Ok(())
+    }
+
+    fn parse_chaos(body: &str, seed: &mut u64) -> anyhow::Result<Chaos> {
+        let mut c = Chaos {
+            drop: 0.0,
+            dup: 0.0,
+            corrupt: 0.0,
+            delay: 0.0,
+            spike: Duration::from_micros(500),
+        };
+        for kv in body.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("'{kv}' is not key=value"))?;
+            match k {
+                "drop" => c.drop = parse_prob(k, v)?,
+                "dup" => c.dup = parse_prob(k, v)?,
+                "corrupt" => c.corrupt = parse_prob(k, v)?,
+                "delay" => c.delay = parse_prob(k, v)?,
+                "spike" => c.spike = parse_duration(v)?,
+                "seed" => {
+                    *seed =
+                        v.parse().map_err(|_| anyhow::anyhow!("seed='{v}' not an integer"))?
+                }
+                other => anyhow::bail!(
+                    "unknown chaos key '{other}' (want drop|dup|corrupt|delay|spike|seed)"
+                ),
+            }
+        }
+        let total = c.drop + c.dup + c.corrupt + c.delay;
+        anyhow::ensure!(total <= 1.0, "chaos probabilities sum to {total} > 1");
+        anyhow::ensure!(total > 0.0, "chaos: item sets no probability bands");
+        Ok(c)
+    }
+
+    fn parse_rule(item: &str) -> anyhow::Result<FaultRule> {
+        let (head, kvs) = match item.split_once('#') {
+            Some((h, k)) => (h, Some(k)),
+            None => (item, None),
+        };
+        let (kind_s, link) = head
+            .split_once('@')
+            .ok_or_else(|| anyhow::anyhow!("want kind@src->dst (e.g. drop@0->1#n=3)"))?;
+        let kind = FaultKind::parse(kind_s.trim())?;
+        let (src, dst) = match link.split_once("->") {
+            Some((s, d)) => (parse_rank(s.trim())?, parse_rank(d.trim())?),
+            // `kill@1` — a rank, not a link
+            None if kind == FaultKind::Kill => (parse_rank(link.trim())?, None),
+            None => anyhow::bail!("want src->dst after '@' (or kill@<rank>)"),
+        };
+        if kind == FaultKind::Kill {
+            anyhow::ensure!(src.is_some(), "kill needs a concrete rank (kill@<rank>), not '*'");
+        }
+        let mut rule = FaultRule {
+            kind,
+            src,
+            dst,
+            nth: 1,
+            count: 1,
+            spike: Duration::from_millis(1),
+        };
+        if let Some(kvs) = kvs {
+            for kv in kvs.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("'{kv}' is not key=value"))?;
+                match k {
+                    "n" => {
+                        rule.nth =
+                            v.parse().map_err(|_| anyhow::anyhow!("n='{v}' not an integer"))?;
+                        anyhow::ensure!(rule.nth >= 1, "n= is 1-based; n=0 never fires");
+                    }
+                    "count" => {
+                        rule.count = v
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("count='{v}' not an integer"))?;
+                        anyhow::ensure!(rule.count >= 1, "count= must be >= 1");
+                    }
+                    "spike" => rule.spike = parse_duration(v)?,
+                    other => anyhow::bail!("unknown rule key '{other}' (want n|count|spike)"),
+                }
+            }
+        }
+        Ok(rule)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Counters and reports
+// ---------------------------------------------------------------------------
+
+/// Snapshot of fault activity: what the injector did to the wire plus what
+/// the halo engine's recovery layer did about it. Flushed into
+/// `StepMetrics` / `BENCH_halo.json` so retry overhead is visible.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct FaultStats {
+    // injector side (network-global)
+    pub drops: u64,
+    pub dups: u64,
+    pub delays: u64,
+    pub corrupts: u64,
+    pub stalls: u64,
+    pub kills: u64,
+    /// Deposits refused because an endpoint was killed or had aborted.
+    pub refused: u64,
+    // recovery side (per rank)
+    pub recv_timeouts: u64,
+    pub nacks_sent: u64,
+    pub retx_served: u64,
+    pub retx_recovered: u64,
+    pub send_timeouts: u64,
+    pub exhausted: u64,
+}
+
+impl FaultStats {
+    pub fn injected(&self) -> u64 {
+        self.drops + self.dups + self.delays + self.corrupts + self.stalls + self.kills
+    }
+
+    pub fn add(&mut self, o: &FaultStats) {
+        self.drops += o.drops;
+        self.dups += o.dups;
+        self.delays += o.delays;
+        self.corrupts += o.corrupts;
+        self.stalls += o.stalls;
+        self.kills += o.kills;
+        self.refused += o.refused;
+        self.recv_timeouts += o.recv_timeouts;
+        self.nacks_sent += o.nacks_sent;
+        self.retx_served += o.retx_served;
+        self.retx_recovered += o.retx_recovered;
+        self.send_timeouts += o.send_timeouts;
+        self.exhausted += o.exhausted;
+    }
+}
+
+/// Structured per-rank fault report: what a rank was waiting for when it
+/// exhausted its retry budget. Surfaces through `anyhow` with its type
+/// intact, so drivers can `downcast_ref::<FaultReport>()` instead of
+/// string-matching.
+#[derive(Debug, Clone)]
+pub struct FaultReport {
+    /// The aborting rank.
+    pub rank: usize,
+    /// The peer whose data never arrived.
+    pub peer: usize,
+    /// The full (epoch-folded) data tag of the missing chunk.
+    pub tag: u64,
+    /// Receive attempts made (1 original + retransmit requests).
+    pub attempts: u32,
+    /// Recovery counters at abort time.
+    pub stats: FaultStats,
+}
+
+impl fmt::Display for FaultReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "rank {} gave up waiting for halo chunk tag {:#x} (epoch {}) from rank {} \
+             after {} attempts ({} timeouts, {} NACKs sent, {} retransmits recovered)",
+            self.rank,
+            tag_base(self.tag),
+            tag_epoch(self.tag),
+            self.peer,
+            self.attempts,
+            self.stats.recv_timeouts,
+            self.stats.nacks_sent,
+            self.stats.retx_recovered,
+        )
+    }
+}
+
+impl std::error::Error for FaultReport {}
+
+// ---------------------------------------------------------------------------
+// The injector — lives on `Network`, consulted from `deposit`
+// ---------------------------------------------------------------------------
+
+/// What `deposit` should do to one matched message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) enum Action {
+    Drop,
+    Dup,
+    Delay(Duration),
+    Corrupt,
+    Stall(Duration),
+}
+
+#[derive(Default)]
+struct InjectCounters {
+    drops: AtomicU64,
+    dups: AtomicU64,
+    delays: AtomicU64,
+    corrupts: AtomicU64,
+    stalls: AtomicU64,
+    kills: AtomicU64,
+    refused: AtomicU64,
+}
+
+/// Deterministic per-network fault state: the plan, per-link message
+/// counters, kill/abort flags, and injection counters. All state is
+/// preallocated at network construction, so an enabled-but-idle fault layer
+/// adds only atomic reads to the hot path.
+pub(super) struct Injector {
+    n: usize,
+    plan: FaultPlan,
+    /// Per-link (src*n + dst) counters of non-internal messages, 1-based
+    /// after the increment. These are the replay clock: decisions key on
+    /// them, never on wall time.
+    links: Vec<AtomicU64>,
+    killed: Vec<AtomicBool>,
+    aborted: Vec<AtomicBool>,
+    counters: InjectCounters,
+}
+
+impl Injector {
+    pub(super) fn new(n: usize, plan: FaultPlan) -> Self {
+        Injector {
+            n,
+            plan,
+            links: (0..n * n).map(|_| AtomicU64::new(0)).collect(),
+            killed: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            aborted: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            counters: InjectCounters::default(),
+        }
+    }
+
+    pub(super) fn is_killed(&self, rank: usize) -> bool {
+        self.killed[rank].load(Ordering::Acquire)
+    }
+
+    pub(super) fn is_aborted(&self, rank: usize) -> bool {
+        self.aborted[rank].load(Ordering::Acquire)
+    }
+
+    pub(super) fn mark_aborted(&self, rank: usize) {
+        self.aborted[rank].store(true, Ordering::Release);
+    }
+
+    pub(super) fn count_refused(&self) {
+        self.counters.refused.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Decide the fate of one *data* (non-internal) message on (src, dst).
+    /// Advances the link's replay clock; at most one fault applies per
+    /// message (first matching rule wins, chaos only if no rule fired).
+    pub(super) fn decide(&self, src: usize, dst: usize) -> Option<Action> {
+        let idx = self.links[src * self.n + dst].fetch_add(1, Ordering::Relaxed) + 1;
+        for rule in &self.plan.rules {
+            if rule.matches(src, dst, idx) {
+                return Some(self.apply(rule.kind, rule.spike, src));
+            }
+        }
+        let chaos = self.plan.chaos.as_ref()?;
+        // One uniform deviate per message, from a stateless hash of the
+        // (seed, link, counter) triple — replays exactly.
+        let mut h = SplitMix64(
+            self.plan
+                .seed
+                .wrapping_add((src as u64) << 40)
+                .wrapping_add((dst as u64) << 20)
+                .wrapping_add(idx),
+        );
+        let u = (h.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let mut edge = chaos.drop;
+        if u < edge {
+            return Some(self.apply(FaultKind::Drop, chaos.spike, src));
+        }
+        edge += chaos.dup;
+        if u < edge {
+            return Some(self.apply(FaultKind::Dup, chaos.spike, src));
+        }
+        edge += chaos.corrupt;
+        if u < edge {
+            return Some(self.apply(FaultKind::Corrupt, chaos.spike, src));
+        }
+        edge += chaos.delay;
+        if u < edge {
+            return Some(self.apply(FaultKind::Delay, chaos.spike, src));
+        }
+        None
+    }
+
+    fn apply(&self, kind: FaultKind, spike: Duration, src: usize) -> Action {
+        let c = &self.counters;
+        match kind {
+            FaultKind::Drop => {
+                c.drops.fetch_add(1, Ordering::Relaxed);
+                Action::Drop
+            }
+            FaultKind::Dup => {
+                c.dups.fetch_add(1, Ordering::Relaxed);
+                Action::Dup
+            }
+            FaultKind::Delay => {
+                c.delays.fetch_add(1, Ordering::Relaxed);
+                Action::Delay(spike)
+            }
+            FaultKind::Corrupt => {
+                c.corrupts.fetch_add(1, Ordering::Relaxed);
+                Action::Corrupt
+            }
+            FaultKind::Stall => {
+                c.stalls.fetch_add(1, Ordering::Relaxed);
+                Action::Stall(spike)
+            }
+            FaultKind::Kill => {
+                c.kills.fetch_add(1, Ordering::Relaxed);
+                self.killed[src].store(true, Ordering::Release);
+                Action::Drop
+            }
+        }
+    }
+
+    pub(super) fn stats(&self) -> FaultStats {
+        let c = &self.counters;
+        FaultStats {
+            drops: c.drops.load(Ordering::Relaxed),
+            dups: c.dups.load(Ordering::Relaxed),
+            delays: c.delays.load(Ordering::Relaxed),
+            corrupts: c.corrupts.load(Ordering::Relaxed),
+            stalls: c.stalls.load(Ordering::Relaxed),
+            kills: c.kills.load(Ordering::Relaxed),
+            refused: c.refused.load(Ordering::Relaxed),
+            ..FaultStats::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn durations_parse_with_units() {
+        assert_eq!(parse_duration("200us").unwrap(), Duration::from_micros(200));
+        assert_eq!(parse_duration("5ms").unwrap(), Duration::from_millis(5));
+        assert_eq!(parse_duration("1.5s").unwrap(), Duration::from_secs_f64(1.5));
+        assert!(parse_duration("10").is_err(), "unit suffix required");
+        assert!(parse_duration("xs").is_err());
+    }
+
+    #[test]
+    fn rule_grammar_round_trips() {
+        let spec = FaultSpec::parse("drop@0->1#n=3;delay@*->2#n=1,count=5,spike=2ms").unwrap();
+        assert_eq!(spec.plan.rules.len(), 2);
+        let d = &spec.plan.rules[0];
+        assert_eq!((d.kind, d.src, d.dst, d.nth, d.count), (FaultKind::Drop, Some(0), Some(1), 3, 1));
+        let w = &spec.plan.rules[1];
+        assert_eq!((w.kind, w.src, w.dst), (FaultKind::Delay, None, Some(2)));
+        assert_eq!(w.spike, Duration::from_millis(2));
+    }
+
+    #[test]
+    fn kill_takes_a_bare_rank() {
+        let spec = FaultSpec::parse("kill@1#n=5").unwrap();
+        let r = &spec.plan.rules[0];
+        assert_eq!((r.kind, r.src, r.dst, r.nth), (FaultKind::Kill, Some(1), None, 5));
+        assert!(FaultSpec::parse("kill@*#n=5").is_err(), "kill needs a concrete rank");
+    }
+
+    #[test]
+    fn chaos_policy_and_seed_parse() {
+        let spec = FaultSpec::parse(
+            "chaos:drop=0.02,corrupt=0.01,spike=500us,seed=7;policy:timeout=50ms,retries=8,backoff=1.5",
+        )
+        .unwrap();
+        let c = spec.plan.chaos.as_ref().unwrap();
+        assert_eq!((c.drop, c.corrupt), (0.02, 0.01));
+        assert_eq!(c.spike, Duration::from_micros(500));
+        assert_eq!(spec.plan.seed, 7);
+        assert_eq!(spec.policy.timeout, Duration::from_millis(50));
+        assert_eq!((spec.policy.max_retries, spec.policy.backoff), (8, 1.5));
+    }
+
+    #[test]
+    fn malformed_specs_get_actionable_errors() {
+        for (bad, needle) in [
+            ("drop@0", "src->dst"),
+            ("zap@0->1", "unknown fault kind"),
+            ("drop@0->1#n=x", "not an integer"),
+            ("chaos:drop=1.5", "probability"),
+            ("chaos:bogus=1", "unknown chaos key"),
+            ("policy:timeout=5", "unit suffix"),
+            ("policy:backoff=0.5", ">= 1"),
+            ("", "configures no faults"),
+            ("policy:timeout=1ms", "configures no faults"),
+        ] {
+            let err = format!("{:#}", FaultSpec::parse(bad).unwrap_err());
+            assert!(err.contains(needle), "spec '{bad}': error '{err}' missing '{needle}'");
+        }
+    }
+
+    #[test]
+    fn injector_is_deterministic() {
+        let plan = FaultSpec::parse("chaos:drop=0.2,dup=0.1,corrupt=0.1,delay=0.1;seed:42")
+            .unwrap()
+            .plan;
+        let a = Injector::new(4, plan.clone());
+        let b = Injector::new(4, plan);
+        let seq = |inj: &Injector| -> Vec<Option<Action>> {
+            (0..200).map(|i| inj.decide(i % 4, (i + 1) % 4)).collect()
+        };
+        let sa = seq(&a);
+        assert_eq!(sa, seq(&b), "same plan, same link traffic => same schedule");
+        assert!(sa.iter().any(Option::is_some), "p=0.5 over 200 msgs should fire");
+        assert!(sa.iter().any(Option::is_none));
+    }
+
+    #[test]
+    fn deterministic_rule_fires_on_exact_counter() {
+        let plan = FaultSpec::parse("drop@0->1#n=3,count=2").unwrap().plan;
+        let inj = Injector::new(2, plan);
+        let hits: Vec<bool> = (0..6).map(|_| inj.decide(0, 1).is_some()).collect();
+        assert_eq!(hits, [false, false, true, true, false, false]);
+        assert_eq!(inj.stats().drops, 2);
+    }
+
+    #[test]
+    fn kill_latches_the_rank() {
+        let plan = FaultSpec::parse("kill@0#n=2").unwrap().plan;
+        let inj = Injector::new(2, plan);
+        assert_eq!(inj.decide(0, 1), None);
+        assert!(!inj.is_killed(0));
+        assert_eq!(inj.decide(0, 1), Some(Action::Drop));
+        assert!(inj.is_killed(0), "kill latches from the matched message on");
+        assert_eq!(inj.stats().kills, 1);
+    }
+
+    #[test]
+    fn epoch_tags_fold_and_compare() {
+        let base = 0x1234;
+        let t = epoch_tag(base, 300); // 300 % 256 = 44
+        assert_eq!(tag_base(t), base);
+        assert_eq!(tag_epoch(t), 44);
+        assert!(t < INTERNAL_TAG_BASE);
+        assert!(epoch_is_stale(3, 5));
+        assert!(!epoch_is_stale(5, 5));
+        assert!(!epoch_is_stale(6, 5), "a peer one epoch ahead is not stale");
+        assert!(epoch_is_stale(255, 1), "stale across the mod-256 wrap");
+    }
+
+    #[test]
+    fn control_tags_stay_internal_and_recover_data_tag() {
+        let data = epoch_tag(777, 9);
+        let rt = retx_tag(data);
+        assert!(rt >= INTERNAL_TAG_BASE);
+        assert!(is_fault_ctrl(rt));
+        assert!(is_fault_ctrl(CTRL_NACK));
+        assert_eq!(retx_data_tag(rt), Some(data));
+        assert_eq!(retx_data_tag(CTRL_NACK), None);
+        assert!(!is_fault_ctrl(data));
+        // distinct from the collective tags
+        assert_ne!(rt, INTERNAL_TAG_BASE + 1);
+        assert_ne!(CTRL_NACK, INTERNAL_TAG_BASE + 2);
+    }
+}

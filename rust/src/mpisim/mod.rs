@@ -28,12 +28,14 @@
 mod cart;
 mod collective;
 mod comm;
+pub mod fault;
 mod netmodel;
 mod network;
 mod request;
 
 pub use cart::{dims_create, CartComm};
 pub use comm::Comm;
+pub use fault::{FaultPlan, FaultReport, FaultSpec, FaultStats, RetryPolicy};
 pub use netmodel::{NetModel, NicMode};
 pub use network::{Network, TrafficStats};
 pub use request::{wait_all, RecvRequest, SendRequest};

@@ -1,10 +1,11 @@
 //! The shared transport: per-rank mailboxes with (source, tag) matching.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
+use super::fault::{self, FaultPlan, FaultStats, Injector};
 use super::{Comm, NetModel};
 
 pub(super) struct Envelope {
@@ -15,6 +16,9 @@ pub(super) struct Envelope {
     /// injection start is queued behind the sender's NIC under the
     /// contended model).
     pub arrival: Instant,
+    /// Injected payload corruption (models a CRC-detected wire error): the
+    /// data is scrubbed and the receiver must treat the message as lost.
+    pub corrupt: bool,
 }
 
 #[derive(Default)]
@@ -59,6 +63,16 @@ pub struct Network {
     nics: Vec<Mutex<NicState>>,
     msg_count: AtomicU64,
     byte_count: AtomicU64,
+    /// Deterministic fault injection (`--faults`); `None` = clean wire.
+    fault: Option<Injector>,
+    /// End-of-run quiesce handshake, phase 1: ranks whose final exchange
+    /// has completed (or that aborted). Not a barrier — aborted ranks
+    /// announce from the abort path, so survivors never block on them.
+    quiesce_done: AtomicUsize,
+    /// Phase 2: ranks that have stopped emitting fault-layer traffic
+    /// (retransmissions). A rank purges its mailbox only after every other
+    /// rank has stopped, so no retransmit can land post-purge.
+    quiesce_stopped: AtomicUsize,
 }
 
 impl Network {
@@ -68,6 +82,15 @@ impl Network {
     }
 
     pub fn with_model(n: usize, model: NetModel) -> Arc<Self> {
+        Self::build(n, model, None)
+    }
+
+    /// Transport with a deterministic fault-injection plan layered on top.
+    pub fn with_faults(n: usize, model: NetModel, plan: FaultPlan) -> Arc<Self> {
+        Self::build(n, model, Some(plan))
+    }
+
+    fn build(n: usize, model: NetModel, plan: Option<FaultPlan>) -> Arc<Self> {
         assert!(n > 0, "network needs at least one rank");
         Arc::new(Network {
             mailboxes: (0..n).map(|_| Mailbox::default()).collect(),
@@ -77,6 +100,9 @@ impl Network {
             nics: (0..n).map(|_| Mutex::new(NicState::default())).collect(),
             msg_count: AtomicU64::new(0),
             byte_count: AtomicU64::new(0),
+            fault: plan.map(|p| Injector::new(n, p)),
+            quiesce_done: AtomicUsize::new(0),
+            quiesce_stopped: AtomicUsize::new(0),
         })
     }
 
@@ -114,14 +140,29 @@ impl Network {
     /// through its NIC, shifting both the sender-side completion and the
     /// receiver's arrival instant by the queueing delay, while distinct
     /// sender NICs progress independently.
-    pub(super) fn deposit(&self, src: usize, dst: usize, tag: u64, data: Vec<f64>) -> Instant {
+    pub(super) fn deposit(&self, src: usize, dst: usize, tag: u64, mut data: Vec<f64>) -> Instant {
         let bytes = data.len() * std::mem::size_of::<f64>();
         // Internal (collective) traffic is not charged to the model or the
         // stats: MPI collectives on a real machine use tuned algorithms; what
         // we account is the halo traffic the paper's system generates.
         let internal = tag >= super::INTERNAL_TAG_BASE;
         let now = Instant::now();
-        let (arrival, complete) = if internal {
+        if let Some(inj) = &self.fault {
+            // A killed rank's NIC is dead in both directions, control
+            // traffic included — the message never enters the wire.
+            if inj.is_killed(src) || inj.is_killed(dst) {
+                inj.count_refused();
+                return now;
+            }
+        }
+        // Fault decisions apply to data traffic only and advance the link's
+        // deterministic replay clock; recovery traffic (internal tags) is
+        // exempt, so retransmits never perturb the injected schedule.
+        let action = match &self.fault {
+            Some(inj) if !internal => inj.decide(src, dst),
+            _ => None,
+        };
+        let (mut arrival, mut complete) = if internal {
             (now, now)
         } else {
             self.msg_count.fetch_add(1, Ordering::Relaxed);
@@ -139,9 +180,40 @@ impl Network {
             };
             (start + self.model.transit(bytes), start + self.model.injection(bytes))
         };
+        let mut corrupt = false;
+        let mut dup = false;
+        match action {
+            // Dropped on the wire; the sender's completion is unaffected
+            // (a NIC cannot know the fabric lost the packet).
+            Some(fault::Action::Drop) => return complete,
+            Some(fault::Action::Dup) => dup = true,
+            Some(fault::Action::Delay(d)) => arrival += d,
+            Some(fault::Action::Stall(d)) => {
+                arrival += d;
+                complete += d;
+            }
+            Some(fault::Action::Corrupt) => {
+                for v in data.iter_mut() {
+                    *v = f64::NAN;
+                }
+                corrupt = true;
+            }
+            None => {}
+        }
         let mb = &self.mailboxes[dst];
         let mut q = mb.queue.lock().unwrap();
-        q.push_back(Envelope { src, tag, data, arrival });
+        if let Some(inj) = &self.fault {
+            // Checked under the mailbox lock so an aborting rank's purge
+            // (also under this lock) linearizes with concurrent deposits.
+            if inj.is_aborted(dst) {
+                inj.count_refused();
+                return complete;
+            }
+        }
+        if dup {
+            q.push_back(Envelope { src, tag, data: data.clone(), arrival, corrupt });
+        }
+        q.push_back(Envelope { src, tag, data, arrival, corrupt });
         mb.cv.notify_all();
         complete
     }
@@ -175,12 +247,166 @@ impl Network {
         q.iter().any(|e| e.src == src && e.tag == tag && e.arrival <= Instant::now())
     }
 
+    /// Non-blocking matched take: remove and return the first (src, tag)
+    /// message whose modeled arrival has passed, with its corruption flag.
+    pub(super) fn try_collect(&self, me: usize, src: usize, tag: u64) -> Option<(Vec<f64>, bool)> {
+        let mut q = self.mailboxes[me].queue.lock().unwrap();
+        let now = Instant::now();
+        let pos = q.iter().position(|e| e.src == src && e.tag == tag && e.arrival <= now)?;
+        let e = q.remove(pos).expect("position valid");
+        Some((e.data, e.corrupt))
+    }
+
+    /// Block until a (src, tag) message has (model-)arrived or `deadline`
+    /// passes, whichever is first. Does **not** consume the message — the
+    /// fault-aware completion pump uses this as its bounded wait and then
+    /// re-polls, so it keeps servicing peer retransmit requests while a
+    /// receive is slow. Returns whether a matching message is available.
+    pub(super) fn wait_arrival(&self, me: usize, src: usize, tag: u64, deadline: Instant) -> bool {
+        let mb = &self.mailboxes[me];
+        let mut q = mb.queue.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            if q.iter().any(|e| e.src == src && e.tag == tag && e.arrival <= now) {
+                return true;
+            }
+            if now >= deadline {
+                return false;
+            }
+            let in_transit =
+                q.iter().filter(|e| e.src == src && e.tag == tag).map(|e| e.arrival).min();
+            match in_transit {
+                Some(arrival) => {
+                    // Matching message still in modeled transit: sleep to
+                    // the earlier of its arrival and the deadline, re-scan.
+                    let wake = arrival.min(deadline);
+                    drop(q);
+                    crate::util::timing::precise_sleep(wake - now);
+                    q = mb.queue.lock().unwrap();
+                }
+                None => {
+                    let (qq, _) = mb.cv.wait_timeout(q, deadline - now).unwrap();
+                    q = qq;
+                }
+            }
+        }
+    }
+
     /// Number of messages (arrived or still in modeled transit) queued in
     /// `rank`'s mailbox. Diagnostic for error-hygiene tests: after a failed
     /// halo exchange has drained its posted receives, no stale payload may
     /// remain here to FIFO-match a same-tag receive of a later update.
     pub fn mailbox_depth(&self, rank: usize) -> usize {
         self.mailboxes[rank].queue.lock().unwrap().len()
+    }
+
+    /// Assert that `rank`'s endpoint is fully quiescent: mailbox empty (no
+    /// arrived *or* in-transit messages) and NIC idle (no injection still
+    /// draining). Error-hygiene tests call this instead of hand-checking
+    /// `mailbox_depth`, so they also cover the contended model's busy-until
+    /// state.
+    #[track_caller]
+    pub fn assert_quiescent(&self, rank: usize) {
+        {
+            let q = self.mailboxes[rank].queue.lock().unwrap();
+            if let Some(e) = q.front() {
+                panic!(
+                    "rank {rank} mailbox not quiescent: {} message(s) queued \
+                     (first: tag {:#x} from rank {})",
+                    q.len(),
+                    e.tag,
+                    e.src
+                );
+            }
+        }
+        let nic = self.nics[rank].lock().unwrap();
+        if let Some(busy) = nic.busy_until {
+            let now = Instant::now();
+            assert!(
+                busy <= now,
+                "rank {rank} NIC not quiescent: injection draining for another {:?}",
+                busy - now
+            );
+        }
+    }
+
+    /// Fault mode only: drop every epoch-stale halo message (data tags and
+    /// retransmissions from strictly earlier exchange epochs) from `rank`'s
+    /// mailbox. The halo engine calls this at the top of each exchange, which
+    /// is what makes duplicated or replayed chunks no-ops: they can never
+    /// match a current receive (epoch mismatch) and are swept here. Returns
+    /// how many messages were purged.
+    pub fn purge_stale(&self, rank: usize, epoch: u64) -> usize {
+        if self.fault.is_none() {
+            return 0;
+        }
+        let mut q = self.mailboxes[rank].queue.lock().unwrap();
+        let before = q.len();
+        q.retain(|e| {
+            let ep = if e.tag < super::INTERNAL_TAG_BASE {
+                Some(fault::tag_epoch(e.tag))
+            } else {
+                fault::retx_data_tag(e.tag).map(fault::tag_epoch)
+            };
+            ep.is_none_or(|ep| !fault::epoch_is_stale(ep, epoch))
+        });
+        before - q.len()
+    }
+
+    /// Mark `rank` as aborted: every subsequent deposit to it is refused.
+    /// Taken together with [`Self::purge_fault_traffic`] (both linearize on
+    /// the mailbox lock with concurrent deposits), this leaves an aborting
+    /// rank's mailbox verifiably empty.
+    pub fn mark_aborted(&self, rank: usize) {
+        if let Some(inj) = &self.fault {
+            let _q = self.mailboxes[rank].queue.lock().unwrap();
+            inj.mark_aborted(rank);
+        }
+    }
+
+    /// Drop all halo data and fault-layer control traffic (NACKs,
+    /// retransmissions) from `rank`'s mailbox; collective traffic is kept.
+    /// Part of the abort path's drain-everything discipline.
+    pub fn purge_fault_traffic(&self, rank: usize) -> usize {
+        let mut q = self.mailboxes[rank].queue.lock().unwrap();
+        let before = q.len();
+        q.retain(|e| e.tag >= super::INTERNAL_TAG_BASE && !fault::is_fault_ctrl(e.tag));
+        before - q.len()
+    }
+
+    /// Quiesce handshake, phase 1: this rank's final halo exchange has
+    /// completed (or it aborted). The caller keeps servicing peer
+    /// retransmit requests until [`Self::quiesce_all_done`] — once every
+    /// rank is done (or dead), nobody is waiting for data anymore.
+    pub fn quiesce_announce_done(&self) {
+        self.quiesce_done.fetch_add(1, Ordering::AcqRel);
+    }
+
+    pub fn quiesce_all_done(&self) -> bool {
+        self.quiesce_done.load(Ordering::Acquire) >= self.size()
+    }
+
+    /// Quiesce handshake, phase 2: this rank will emit no further
+    /// fault-layer traffic (every deposit it makes happens-before this
+    /// announcement). A rank may purge its own mailbox once
+    /// [`Self::quiesce_all_stopped`] holds — any straggler retransmit was
+    /// deposited before its sender stopped, hence before the purge.
+    pub fn quiesce_announce_stopped(&self) {
+        self.quiesce_stopped.fetch_add(1, Ordering::AcqRel);
+    }
+
+    pub fn quiesce_all_stopped(&self) -> bool {
+        self.quiesce_stopped.load(Ordering::Acquire) >= self.size()
+    }
+
+    /// Is a fault-injection plan layered on this network?
+    pub fn faults_enabled(&self) -> bool {
+        self.fault.is_some()
+    }
+
+    /// Injection-side fault counters (all zero on a clean network).
+    pub fn fault_stats(&self) -> FaultStats {
+        self.fault.as_ref().map(Injector::stats).unwrap_or_default()
     }
 }
 
@@ -266,6 +492,122 @@ mod tests {
             c_other <= Instant::now() + Duration::from_millis(51),
             "distinct NICs must not contend"
         );
+    }
+
+    #[test]
+    fn quiescent_when_empty_and_idle() {
+        let net = Network::new(2);
+        net.assert_quiescent(0);
+        net.deposit(1, 0, 3, vec![1.0]);
+        let _ = net.collect(0, 1, 3);
+        net.assert_quiescent(0);
+        net.assert_quiescent(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "mailbox not quiescent")]
+    fn queued_message_fails_quiescence() {
+        let net = Network::new(2);
+        net.deposit(1, 0, 3, vec![1.0]);
+        net.assert_quiescent(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "NIC not quiescent")]
+    fn draining_nic_fails_quiescence() {
+        // 8 KB at ~4 KB/s: the injection drains for ~2 s after the deposit.
+        let model = NetModel::new(0.0, 4096.0).with_serial_nic();
+        let net = Network::with_model(2, model);
+        net.deposit(0, 1, 1, vec![0.0; 1024]);
+        net.assert_quiescent(0);
+    }
+
+    fn faulty(n: usize, spec: &str) -> Arc<Network> {
+        let plan = super::super::FaultSpec::parse(spec).unwrap().plan;
+        Network::with_faults(n, NetModel::ideal(), plan)
+    }
+
+    #[test]
+    fn injected_drop_never_arrives() {
+        let net = faulty(2, "drop@0->1#n=2");
+        net.deposit(0, 1, 7, vec![1.0]);
+        net.deposit(0, 1, 7, vec![2.0]); // dropped
+        net.deposit(0, 1, 7, vec![3.0]);
+        assert_eq!(net.mailbox_depth(1), 2);
+        assert_eq!(net.collect(1, 0, 7), vec![1.0]);
+        assert_eq!(net.collect(1, 0, 7), vec![3.0]);
+        assert_eq!(net.fault_stats().drops, 1);
+    }
+
+    #[test]
+    fn injected_dup_delivers_twice_and_corrupt_flags_scrubbed_payload() {
+        let net = faulty(2, "dup@0->1#n=1;corrupt@0->1#n=2");
+        net.deposit(0, 1, 7, vec![1.0]);
+        net.deposit(0, 1, 7, vec![2.0]);
+        assert_eq!(net.mailbox_depth(1), 3);
+        let (a, ca) = net.try_collect(1, 0, 7).unwrap();
+        let (b, cb) = net.try_collect(1, 0, 7).unwrap();
+        assert_eq!((a, ca, cb), (vec![1.0], false, false));
+        assert_eq!(b, vec![1.0], "duplicate carries the same payload");
+        let (c, cc) = net.try_collect(1, 0, 7).unwrap();
+        assert!(cc, "third message carries the corruption flag");
+        assert!(c[0].is_nan(), "corrupt payload is scrubbed");
+        let s = net.fault_stats();
+        assert_eq!((s.dups, s.corrupts), (1, 1));
+    }
+
+    #[test]
+    fn kill_latches_both_directions_internal_included() {
+        let net = faulty(3, "kill@1#n=2");
+        net.deposit(1, 0, 7, vec![1.0]);
+        net.deposit(1, 0, 7, vec![2.0]); // triggers the kill, dropped
+        net.deposit(1, 2, 7, vec![3.0]); // dead NIC
+        net.deposit(0, 1, 7, vec![4.0]); // toward the dead rank
+        net.deposit(0, 1, super::super::INTERNAL_TAG_BASE + 1, vec![5.0]);
+        assert_eq!(net.mailbox_depth(0), 1);
+        assert_eq!(net.mailbox_depth(1), 0);
+        assert_eq!(net.mailbox_depth(2), 0);
+        let s = net.fault_stats();
+        assert_eq!((s.kills, s.refused), (1, 3));
+    }
+
+    #[test]
+    fn aborted_rank_refuses_deposits_and_purge_empties_mailbox() {
+        let net = faulty(2, "drop@0->1#n=99");
+        net.deposit(0, 1, fault::epoch_tag(7, 3), vec![1.0]);
+        net.deposit(0, 1, super::super::INTERNAL_TAG_BASE + 1, vec![2.0]);
+        net.mark_aborted(1);
+        net.deposit(0, 1, fault::epoch_tag(7, 3), vec![3.0]); // refused
+        assert_eq!(net.mailbox_depth(1), 2);
+        assert_eq!(net.purge_fault_traffic(1), 1, "halo data purged, collective kept");
+        assert_eq!(net.collect(1, 0, super::super::INTERNAL_TAG_BASE + 1), vec![2.0]);
+        net.assert_quiescent(1);
+        assert_eq!(net.fault_stats().refused, 1);
+    }
+
+    #[test]
+    fn purge_stale_sweeps_only_older_epochs() {
+        let net = faulty(2, "drop@0->1#n=99");
+        net.deposit(0, 1, fault::epoch_tag(7, 4), vec![1.0]); // stale at epoch 6
+        net.deposit(0, 1, fault::epoch_tag(7, 6), vec![2.0]); // current
+        net.deposit(0, 1, fault::epoch_tag(7, 7), vec![3.0]); // peer ahead: kept
+        net.deposit(0, 1, fault::retx_tag(fault::epoch_tag(9, 4)), vec![4.0]); // stale retx
+        net.deposit(0, 1, super::super::INTERNAL_TAG_BASE + 1, vec![5.0]); // collective
+        assert_eq!(net.purge_stale(1, 6), 2);
+        assert_eq!(net.mailbox_depth(1), 3);
+    }
+
+    #[test]
+    fn wait_arrival_bounds_the_wait_and_leaves_the_message() {
+        use std::time::Duration;
+        let net = Network::new(2);
+        let t0 = Instant::now();
+        assert!(!net.wait_arrival(0, 1, 7, Instant::now() + Duration::from_millis(20)));
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        net.deposit(1, 0, 7, vec![1.0]);
+        assert!(net.wait_arrival(0, 1, 7, Instant::now() + Duration::from_millis(20)));
+        assert_eq!(net.mailbox_depth(0), 1, "wait_arrival must not consume");
+        assert_eq!(net.try_collect(0, 1, 7).unwrap().0, vec![1.0]);
     }
 
     /// The independent (seed) model is unchanged by the NIC table: every

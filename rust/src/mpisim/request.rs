@@ -74,6 +74,20 @@ impl RecvRequest {
         self.net.probe(self.me, self.src, self.tag)
     }
 
+    /// Non-blocking matched take: the payload and its corruption flag if a
+    /// matching message has (model-)arrived. The fault-aware receive path
+    /// uses this instead of `wait()` so injected corruption is observable.
+    pub fn try_take(&self) -> Option<(Vec<f64>, bool)> {
+        self.net.try_collect(self.me, self.src, self.tag)
+    }
+
+    /// Block until a matching message is available or `deadline` passes,
+    /// without consuming it; returns whether one is available. The bounded
+    /// wait behind the engine's per-receive deadlines.
+    pub fn wait_arrival(&self, deadline: Instant) -> bool {
+        self.net.wait_arrival(self.me, self.src, self.tag, deadline)
+    }
+
     /// Source rank this receive is matched against.
     pub fn source(&self) -> usize {
         self.src

@@ -1,0 +1,216 @@
+//! Chaos soak: seeded random fault schedules against every application.
+//!
+//! The fault layer's contract has two halves, and this file exercises both
+//! end to end through the real driver (`TimeLoop` over `run_ranks_on`):
+//!
+//! * **Recoverable faults are invisible.** A run under a chaos schedule of
+//!   drops, duplications, CRC-corruptions and delay spikes must produce
+//!   final fields **bitwise identical** to the fault-free run — the
+//!   NACK/retransmit layer repairs the wire, the epoch fold makes unpack
+//!   idempotent, and the physics never sees any of it. Afterwards every
+//!   rank's mailbox and NIC must be quiescent (nothing stale, nothing
+//!   leaked).
+//!
+//! * **Unrecoverable faults abort cleanly.** A killed rank exhausts its
+//!   peers' retry budgets; the abort must carry a structured
+//!   [`FaultReport`] (downcastable through the `anyhow` context chain),
+//!   recycle every pooled buffer it had checked out, and leave all
+//!   mailboxes verifiably empty — no strand, no leak, no hang.
+//!
+//! Fault schedules are deterministic (seeded counter hashing, modeled
+//! time), so these are pinned regression tests, not flaky coin flips: the
+//! CI chaos-soak job runs them with the exact seeds below.
+
+use std::sync::Arc;
+
+use igg::coordinator::apps::{diffusion::Diffusion, twophase::Twophase, wave::Wave};
+use igg::coordinator::config::{AppKind, Config};
+use igg::coordinator::launcher::run_ranks_on;
+use igg::coordinator::timeloop::{self, Schedule, StencilApp, TimeLoop};
+use igg::mpisim::{FaultReport, FaultSpec, FaultStats, Network};
+use igg::overlap::HideWidths;
+use igg::physics::Field3D;
+
+type RankFields = Vec<(&'static str, Field3D)>;
+
+/// Run app `A` on `net` through the unified driver, returning each rank's
+/// final persistent fields plus its fault/recovery counters.
+fn run_app<A>(cfg: &Config, net: &Arc<Network>) -> anyhow::Result<Vec<(RankFields, FaultStats)>>
+where
+    A: StencilApp + Send + 'static,
+{
+    run_ranks_on(net, cfg, |ctx| {
+        let r = TimeLoop::new(0).run::<A>(&ctx)?;
+        Ok((r.fields, r.metrics.fault))
+    })
+}
+
+/// A recoverable chaos schedule: probabilistic drop/dup/corrupt/delay
+/// bands on every link, plus a deterministic all-link drop burst
+/// (`drop@*->*#n=5,count=2`) so the schedule provably injects on every
+/// topology regardless of seed. The retry policy is generous enough that
+/// recovery always succeeds; the point is that it must succeed *exactly*.
+fn chaos_spec(seed: u64) -> String {
+    format!(
+        "drop@*->*#n=5,count=2;\
+         chaos:drop=0.02,dup=0.02,corrupt=0.02,delay=0.03,spike=200us,seed={seed};\
+         policy:timeout=25ms,retries=10,backoff=1.5"
+    )
+}
+
+/// One soak scenario: fault-free reference run, then the chaos run on an
+/// identically-configured grid; the chaos run must inject, recover,
+/// reproduce the reference bitwise, and leave the network quiescent.
+fn soak<A>(label: &str, app: AppKind, hide: Option<HideWidths>, seed: u64)
+where
+    A: StencilApp + Send + 'static,
+{
+    let clean_cfg =
+        Config { app, nranks: 4, local: [10, 10, 10], nt: 6, hide, ..Default::default() };
+    let clean_net = Network::with_model(clean_cfg.nranks, clean_cfg.net);
+    let want = run_app::<A>(&clean_cfg, &clean_net)
+        .unwrap_or_else(|e| panic!("{label}: fault-free reference run failed: {e:#}"));
+    for r in 0..clean_cfg.nranks {
+        clean_net.assert_quiescent(r);
+    }
+
+    let faults = FaultSpec::parse(&chaos_spec(seed)).unwrap();
+    let chaos_cfg = Config { faults: Some(faults.clone()), ..clean_cfg.clone() };
+    let chaos_net = Network::with_faults(chaos_cfg.nranks, chaos_cfg.net, faults.plan.clone());
+    let got = run_app::<A>(&chaos_cfg, &chaos_net)
+        .unwrap_or_else(|e| panic!("{label}: chaos run must recover, got: {e:#}"));
+
+    let stats = chaos_net.fault_stats();
+    assert!(stats.injected() > 0, "{label}: the schedule must actually inject faults");
+    assert_eq!(stats.exhausted, 0, "{label}: a recoverable schedule must never exhaust");
+    for r in 0..chaos_cfg.nranks {
+        chaos_net.assert_quiescent(r);
+    }
+    for (r, ((fields_got, _), (fields_want, _))) in got.iter().zip(&want).enumerate() {
+        for ((name, fa), (_, fb)) in fields_got.iter().zip(fields_want) {
+            assert_eq!(
+                fa.max_abs_diff(fb),
+                0.0,
+                "{label}: rank {r} field '{name}' must be bitwise equal to the fault-free run"
+            );
+        }
+    }
+}
+
+#[test]
+fn chaos_soak_plain_schedule_all_apps() {
+    soak::<Diffusion>("diffusion/plain", AppKind::Diffusion, None, 11);
+    soak::<Twophase>("twophase/plain", AppKind::Twophase, None, 22);
+    soak::<Wave>("wave/plain", AppKind::Wave, None, 33);
+}
+
+#[test]
+fn chaos_soak_hidden_schedule_all_apps() {
+    let hide = Some(HideWidths([2, 2, 2]));
+    soak::<Diffusion>("diffusion/hide", AppKind::Diffusion, hide, 44);
+    soak::<Twophase>("twophase/hide", AppKind::Twophase, hide, 55);
+    soak::<Wave>("wave/hide", AppKind::Wave, hide, 66);
+}
+
+/// A single deterministic drop on a known link: the recovery must be
+/// exact *and* the counters must tell the story — the receiver timed out,
+/// NACKed, and recovered the retransmission the sender served.
+#[test]
+fn deterministic_drop_recovers_with_counters() {
+    let spec = "drop@1->0#n=3;policy:timeout=20ms,retries=6";
+    let clean_cfg =
+        Config { app: AppKind::Diffusion, nranks: 2, local: [10, 10, 10], nt: 6, ..Default::default() };
+    let clean_net = Network::with_model(clean_cfg.nranks, clean_cfg.net);
+    let want = run_app::<Diffusion>(&clean_cfg, &clean_net).unwrap();
+
+    let faults = FaultSpec::parse(spec).unwrap();
+    let cfg = Config { faults: Some(faults.clone()), ..clean_cfg.clone() };
+    let net = Network::with_faults(cfg.nranks, cfg.net, faults.plan.clone());
+    let got = run_app::<Diffusion>(&cfg, &net)
+        .unwrap_or_else(|e| panic!("single dropped plane must recover, got: {e:#}"));
+
+    assert_eq!(net.fault_stats().drops, 1, "the rule fires exactly once");
+    for r in 0..cfg.nranks {
+        net.assert_quiescent(r);
+    }
+    let (_, rank0) = (&got[0].0, &got[0].1);
+    assert!(rank0.recv_timeouts >= 1, "rank 0 must have timed out on the dropped plane");
+    assert!(rank0.nacks_sent >= 1, "rank 0 must have requested a retransmission");
+    assert!(rank0.retx_recovered >= 1, "rank 0 must have recovered the retransmission");
+    let (_, rank1) = (&got[1].0, &got[1].1);
+    assert!(rank1.retx_served >= 1, "rank 1 must have served the retransmission");
+    for (r, ((fa, _), (fb, _))) in got.iter().zip(&want).enumerate() {
+        for ((name, a), (_, b)) in fa.iter().zip(fb) {
+            assert_eq!(a.max_abs_diff(b), 0.0, "rank {r} field '{name}' bitwise after recovery");
+        }
+    }
+}
+
+/// Permanent rank death mid-run: the survivors exhaust their retry budget
+/// and abort with a structured report; the abort recycles every pooled
+/// buffer and leaves all mailboxes empty — graceful degradation, not a
+/// hang or a leak.
+#[test]
+fn unrecoverable_kill_aborts_with_structured_report_and_clean_state() {
+    let faults = FaultSpec::parse("kill@1#n=6;policy:timeout=20ms,retries=3").unwrap();
+    let cfg = Config {
+        app: AppKind::Diffusion,
+        nranks: 2,
+        local: [10, 10, 10],
+        nt: 30,
+        faults: Some(faults.clone()),
+        ..Default::default()
+    };
+    let net = Network::with_faults(cfg.nranks, cfg.net, faults.plan.clone());
+    let err = run_ranks_on(&net, &cfg, |ctx| -> anyhow::Result<()> {
+        let schedule = Schedule::plan(&ctx.cfg, &ctx.grid)?;
+        let mut app = Diffusion::init(&ctx)?;
+        let mut warm = 0usize;
+        for it in 0..ctx.cfg.nt {
+            match timeloop::step(&ctx.grid, &schedule, &mut app) {
+                Ok(()) => {
+                    if it == 0 {
+                        warm = ctx.grid.halo_allocations();
+                    }
+                }
+                Err(e) => {
+                    assert!(it > 0, "kill@1#n=6 must not fire before the warm-up step");
+                    // pool recycling on abort: the failed exchange restored
+                    // every buffer it had checked out, so the engine's
+                    // allocation counter sits exactly where the warm steady
+                    // state left it
+                    assert_eq!(
+                        ctx.grid.halo_allocations(),
+                        warm,
+                        "rank {}: abort must recycle pooled buffers, not allocate",
+                        ctx.grid.rank()
+                    );
+                    return Err(e);
+                }
+            }
+        }
+        panic!("rank {}: the killed peer never aborted the run", ctx.grid.rank());
+    })
+    .expect_err("a killed rank must abort the run");
+
+    let report = err
+        .downcast_ref::<FaultReport>()
+        .unwrap_or_else(|| panic!("error must carry a FaultReport, got: {err:#}"));
+    assert_eq!(
+        (report.rank, report.peer),
+        (0, 1),
+        "rank 0 is the first (by rank order) to give up on the killed rank 1"
+    );
+    assert!(report.attempts >= 1 + 3, "1 original receive + the policy's 3 retries");
+    assert!(report.stats.recv_timeouts >= 1);
+
+    let stats = net.fault_stats();
+    assert!(stats.kills >= 1, "the kill must have latched");
+    assert!(stats.refused >= 1, "traffic to/from the dead rank is refused");
+    // drain-everything discipline: after both survivors aborted, every
+    // mailbox is empty and every NIC idle — nothing stale for a hypothetical
+    // next run, nothing leaked
+    for r in 0..cfg.nranks {
+        net.assert_quiescent(r);
+    }
+}

@@ -66,7 +66,11 @@ where
     A: StencilApp + Send + 'static,
 {
     let nranks = cfg.nranks;
-    let net = Network::with_model(nranks, cfg.net);
+    // mirror the launcher: a fault spec arms the network's injector
+    let net = match &cfg.faults {
+        Some(f) => Network::with_faults(nranks, cfg.net, f.plan.clone()),
+        None => Network::with_model(nranks, cfg.net),
+    };
     let before = Arc::new(AtomicUsize::new(0));
     let after = Arc::new(AtomicUsize::new(0));
     let handles: Vec<_> = (0..nranks)
@@ -253,6 +257,41 @@ fn timeloop_steady_state_is_allocation_free() {
                 hide,
                 comm_threads: 4,
                 net,
+                ..Default::default()
+            },
+        );
+    }
+
+    // Fault layer enabled but idle: a never-firing plan arms the injector,
+    // the epoch-folded tags, per-receive deadlines, NACK polling and the
+    // retransmit backup store — all of which must reach steady state by the
+    // end of warmup (the backup store's keys stabilize after two epochs)
+    // and then stay off the heap. Plain and hidden, ideal and contended.
+    let idle = igg::mpisim::FaultSpec::parse("drop@0->1#n=999999999").unwrap();
+    for (label, hide, net) in [
+        ("diffusion/plain/2 ranks/faults-idle", None, NetModel::ideal()),
+        ("diffusion/hide/2 ranks/faults-idle", Some(HideWidths([3, 2, 2])), NetModel::ideal()),
+        (
+            "diffusion/plain/2 ranks/faults-idle/serial-nic",
+            None,
+            NetModel::aries().with_serial_nic(),
+        ),
+        (
+            "diffusion/hide/2 ranks/faults-idle/serial-nic",
+            Some(HideWidths([3, 2, 2])),
+            NetModel::aries().with_serial_nic(),
+        ),
+    ] {
+        assert_steady_state_alloc_free::<Diffusion>(
+            label,
+            Config {
+                app: AppKind::Diffusion,
+                nranks: 2,
+                local: [12, 12, 12],
+                nt: 1,
+                hide,
+                net,
+                faults: Some(idle.clone()),
                 ..Default::default()
             },
         );

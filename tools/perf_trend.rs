@@ -7,10 +7,11 @@
 //! adding new ones never misattributes a metric). Each shared metric is
 //! classified by its key:
 //!
-//! * `*alloc*` — **exact**: allocation counts are machine-independent
-//!   (they pin the zero-allocation contract), so any increase is a
+//! * `*alloc*` and `fault_*` counts — **exact**: allocation counts and
+//!   fault/injection counters are machine-independent (they pin the
+//!   zero-allocation and fault-idle contracts), so any increase is a
 //!   regression regardless of tolerance. CI runs `--allocs-only` as a
-//!   blocking step.
+//!   blocking step covering both.
 //! * `*_s` — lower is better (timings): regression when the relative
 //!   delta exceeds `--tol`. Advisory on shared runners (machine noise).
 //! * `*gbs` / `*speedup*` / `*gain*` / `*efficiency*` — higher is better,
@@ -32,7 +33,7 @@ use igg::util::json::Json;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Class {
-    /// Allocation counts: exact, machine-independent, blocking.
+    /// Allocation and fault counters: exact, machine-independent, blocking.
     Exact,
     /// Timings (`*_s`): lower is better, tolerance applies.
     LowerBetter,
@@ -45,7 +46,7 @@ enum Class {
 fn classify(path: &str) -> Class {
     // the metric key is the last `.`-separated segment
     let key = path.rsplit('.').next().unwrap_or(path);
-    if key.contains("alloc") {
+    if key.contains("alloc") || key.starts_with("fault_") {
         Class::Exact
     } else if key.ends_with("_s") {
         Class::LowerBetter
