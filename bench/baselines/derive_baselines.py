@@ -104,17 +104,24 @@ def fault_idle_row(n):
     }
 
 
+# pool dispatch is ~10x cheaper than the scoped spawns the 8192-cell gate
+# was set against (EXPERIMENTS.md §Scheduler), so the crossover moved to 2048
+PACK_GATE_CELLS = 2048
+
+
 def pack_unpack_rows():
     rows = []
-    for n in (64, 128):
+    for n in (32, 64, 128):
         for dim in (0, 1, 2):
-            cells = {0: n * n, 1: n * n, 2: n * n}[dim]
+            cells = n * n
             base = STRIDED_BW if dim == 2 else MEMCPY_BW
             for threads in (1, 4):
                 gbs = base / 1e9
-                # the pack threshold (8192 cells) keeps every n=64 plane
-                # scalar; above it, threading pays most on the strided dim
-                if threads == 4 and cells >= 8192:
+                # below the 2048-cell pool gate (every n=32 plane) packs
+                # stay scalar; above it, threading pays most on the
+                # strided dim. n=64 (4096 cells) clears the pool gate but
+                # not the old spawn gate — the moved crossover, in rows.
+                if threads == 4 and cells >= PACK_GATE_CELLS:
                     gbs *= THREAD_SPEEDUP if dim == 2 else 1.3
                 rows.append({"n": n, "dim": dim, "threads": threads, "gbs": sig3(gbs)})
     return rows
@@ -126,6 +133,7 @@ def halo_baseline():
         "z_exchange": [z_exchange_row(n) for n in (96, 256, 384)],
         "fault_idle": [fault_idle_row(n) for n in (96, 256)],
         "pack_unpack": pack_unpack_rows(),
+        "pack_gate_cells": PACK_GATE_CELLS,
         "pack_threads": 4,
         "pipelined": True,
         "steady_state_allocs": 0,

@@ -32,6 +32,7 @@ use igg::halo::{HaloEngine, TransferPath};
 use igg::memory::CopyModel;
 use igg::mpisim::{CartComm, FaultSpec, FaultStats, NetModel, Network};
 use igg::physics::Field3D;
+use igg::sched::Pool;
 use igg::util::json::Json;
 use igg::util::stats::{median, summarize};
 
@@ -71,8 +72,16 @@ fn time_exchange(
                 let barrier = Arc::clone(&barrier);
                 std::thread::spawn(move || {
                     let cart = CartComm::create(comm, cart_dims, [false; 3]).unwrap();
-                    let mut engine =
-                        HaloEngine::with_config(&cart, path, chunks, copy, comm_threads, retry);
+                    let sched = Arc::new(Pool::new(comm_threads.saturating_sub(1)));
+                    let mut engine = HaloEngine::with_config(
+                        &cart,
+                        path,
+                        chunks,
+                        copy,
+                        comm_threads,
+                        retry,
+                        sched,
+                    );
                     let mut fields: Vec<Field3D> = (0..nfields)
                         .map(|i| Field3D::filled(field, (cart.rank() * 10 + i) as f64))
                         .collect();
@@ -222,8 +231,8 @@ fn main() -> anyhow::Result<()> {
          plane sizes, so the threaded win shows as the pack/unpack share of the\n\
          staged rows (which copy every plane host-side twice); the pack_unpack\n\
          table below isolates the kernel itself, where the strided dim-2 rows\n\
-         gain ~min(threads, cores)x. allocs must be 0: the scoped pack workers\n\
-         live on the stack side of the contract."
+         gain ~min(threads, cores)x. allocs must be 0: the pool's job slots are\n\
+         preallocated and its workers persistent."
     );
     // ---- fault layer enabled but idle ---------------------------------
     // Same x-exchange with a never-firing fault plan armed: epoch-folded
@@ -272,14 +281,19 @@ fn main() -> anyhow::Result<()> {
     }
 
     // pack/unpack microbench (the L3 hot path the perf pass optimizes),
-    // serial vs comm_threads=4. n=64's z-plane (4096 cells) sits below the
-    // pack threshold, so its threads=4 row must match threads=1 — the
-    // scalar-fallback gate made visible.
+    // serial vs comm_threads=4, on the persistent pool. The row set
+    // brackets PACK_PAR_MIN_CELLS (= 2048 cells with the pool's ~1 us
+    // dispatch, down from 8192 in the scoped-spawn era): n=32's z-plane
+    // (1024 cells) sits below the gate, so its threads=4 row must match
+    // threads=1 — the scalar-fallback gate made visible — while n=64
+    // (4096 cells, below the *old* gate) now engages the pool; the n=64
+    // vs n=32 pair is the measured crossover record.
     println!("\n## plane pack/unpack bandwidth\n");
     println!("| dims | dim | threads | GB/s |");
     println!("|:---:|---:|---:|---:|");
+    let pack_pool = Pool::new(PACK_THREADS - 1);
     let mut pack_rows = Vec::new();
-    for n in [64usize, 128] {
+    for n in [32usize, 64, 128] {
         let f = Field3D::filled([n, n, n], 1.0);
         for d in 0..3 {
             let cells = igg::halo::slicing::plane_len([n, n, n], d);
@@ -291,6 +305,7 @@ fn main() -> anyhow::Result<()> {
                     let t0 = std::time::Instant::now();
                     for _ in 0..reps {
                         igg::halo::pack_plane_threaded(
+                            &pack_pool,
                             f.as_slice(),
                             f.dims(),
                             d,
@@ -322,6 +337,7 @@ fn main() -> anyhow::Result<()> {
             ("fault_idle", Json::Arr(fi_out)),
             ("pack_unpack", Json::Arr(pack_rows)),
             ("pack_threads", Json::Num(PACK_THREADS as f64)),
+            ("pack_gate_cells", Json::Num(igg::halo::slicing::PACK_PAR_MIN_CELLS as f64)),
             ("pipelined", Json::Bool(true)),
             ("steady_state_allocs", Json::Num(total_steady_allocs as f64)),
         ]),

@@ -10,6 +10,12 @@
 //! the artifacts are unavailable the PJRT columns are null and the native
 //! trajectory is still recorded.
 //!
+//! Also measures the scheduler-pool dispatch overhead (fork-join of empty
+//! chunk jobs on the persistent pool vs a scoped spawn-join, the old
+//! mechanism) — the number that sets `PACK_PAR_MIN_CELLS` and
+//! `PAR_MIN_CELLS`: a gate is sound when `gate_cells * ns_per_cell >>
+//! dispatch_ns`.
+//!
 //! Emits `BENCH_perf.json` so the perf trajectory is machine-trackable
 //! across PRs.
 //!
@@ -21,6 +27,7 @@ use igg::physics::{
     WaveParams,
 };
 use igg::runtime::{DiffusionExecutor, TwophaseExecutor};
+use igg::sched::{Pool, TaskClass};
 use igg::util::json::Json;
 use igg::util::prng::Rng;
 
@@ -40,6 +47,9 @@ fn main() -> anyhow::Result<()> {
     let samples = bench_samples(10);
     let store = igg::runtime::pjrt_store();
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // one persistent pool for every threaded row, exactly like a run: the
+    // workers are created once and park between jobs
+    let pool = Pool::new(threads.saturating_sub(1));
     let mut rows: Vec<(String, f64, f64, Option<f64>)> = Vec::new(); // (name, native, native_t, pjrt)
 
     println!("# Perf-reference — PJRT (\"Julia\") vs native (\"CUDA C\")");
@@ -59,7 +69,7 @@ fn main() -> anyhow::Result<()> {
         let native = measure(samples, 3, || diffusion3d::step(&t, &ci, &p, &mut t2));
         let mut t2t = t.clone();
         let native_t = measure(samples, 3, || {
-            parallel::diffusion_step_region(threads, &t, &ci, &p, interior, &mut t2t)
+            parallel::diffusion_step_region(&pool, threads, &t, &ci, &p, interior, &mut t2t)
         });
 
         let pjrt = match &store {
@@ -90,7 +100,9 @@ fn main() -> anyhow::Result<()> {
         let native = measure(samples, 3, || twophase::step(&pe, &phi, &p, &mut pe2, &mut phi2));
         let (mut pe2t, mut phi2t) = (pe.clone(), phi.clone());
         let native_t = measure(samples, 3, || {
-            parallel::twophase_step_region(threads, &pe, &phi, &p, interior, &mut pe2t, &mut phi2t)
+            parallel::twophase_step_region(
+                &pool, threads, &pe, &phi, &p, interior, &mut pe2t, &mut phi2t,
+            )
         });
 
         let pjrt = match &store {
@@ -131,8 +143,8 @@ fn main() -> anyhow::Result<()> {
             (p.clone(), vx.clone(), vy.clone(), vz.clone());
         let native_t = measure(samples, 3, || {
             parallel::wave_step_region(
-                threads, &p, &vx, &vy, &vz, &prm, interior, &mut p2t, &mut vx2t, &mut vy2t,
-                &mut vz2t,
+                &pool, threads, &p, &vx, &vy, &vz, &prm, interior, &mut p2t, &mut vx2t,
+                &mut vy2t, &mut vz2t,
             )
         });
 
@@ -140,10 +152,38 @@ fn main() -> anyhow::Result<()> {
         rows.push((format!("wave_{}", shape[0]), native.median, native_t.median, None));
     }
 
+    // ---- scheduler dispatch overhead ----------------------------------
+    // Fork-join of `threads` empty chunks: on the persistent pool (the
+    // cost every gated parallel path now pays) vs a scoped spawn-join
+    // (the cost the old `scoped_chunks` paid). The pool/scoped ratio is
+    // what justified lowering PACK_PAR_MIN_CELLS from 8192 to 2048 cells:
+    // a pack gate must amortize the *dispatch*, and the pool's is roughly
+    // an order of magnitude cheaper than a spawn.
+    let n_chunks = threads.max(2);
+    let pool_dispatch = measure(samples, 3, || {
+        pool.run_chunks(TaskClass::Comm, n_chunks, &|i| std::hint::black_box(i));
+    });
+    let scoped_dispatch = measure(samples, 3, || {
+        std::thread::scope(|s| {
+            for i in 1..n_chunks {
+                s.spawn(move || std::hint::black_box(i));
+            }
+            std::hint::black_box(0usize);
+        });
+    });
+    println!(
+        "\nsched dispatch ({n_chunks} chunks): pool {}  scoped spawn {}  ({:.1}x)",
+        fmt_time(pool_dispatch.median),
+        fmt_time(scoped_dispatch.median),
+        scoped_dispatch.median / pool_dispatch.median.max(1e-12),
+    );
+
     igg::bench::report::write_json_report(
         "BENCH_perf.json",
         Json::obj(vec![
             ("threads", Json::Num(threads as f64)),
+            ("sched_dispatch_pool_s", Json::Num(pool_dispatch.median)),
+            ("sched_dispatch_scoped_s", Json::Num(scoped_dispatch.median)),
             (
                 "rows",
                 Json::Arr(

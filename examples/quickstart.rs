@@ -19,8 +19,11 @@
 //!
 //! To scale one rank onto many cores set `compute_threads` (x-chunks the
 //! stencil regions) and `comm_threads` (threads the halo plane
-//! pack/unpack — pays on wide z-planes); both stay bitwise identical to
-//! the serial paths (`--compute-threads` / `--comm-threads`).
+//! pack/unpack — pays on wide z-planes). Both are task classes on ONE
+//! persistent scheduler pool per rank (`sched::Pool`, created with the
+//! grid, workers parked between jobs; comm-class jobs claimed first); both
+//! stay bitwise identical to the serial paths (`--compute-threads` /
+//! `--comm-threads`).
 
 use igg::prelude::*;
 

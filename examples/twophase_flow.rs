@@ -5,11 +5,14 @@
 //!
 //! Prints the wave diagnostics every few iterations: the maximum effective
 //! pressure and the height (global z fraction) of the porosity maximum —
-//! the wave should rise over time.
+//! the wave should rise over time. Both come from
+//! [`igg::coordinator::insitu`], the in-situ reduction API — collective
+//! calls every rank makes, so no hand-rolled allreduce loops here.
 
-use igg::coordinator::config::{AppKind, Config};
-use igg::coordinator::launcher::{run_ranks, RankCtx};
 use igg::coordinator::apps::twophase::{initial_porosity, params_for};
+use igg::coordinator::config::{AppKind, Config};
+use igg::coordinator::insitu;
+use igg::coordinator::launcher::run_ranks;
 use igg::overlap::scheduler::plain_step;
 use igg::physics::{twophase as tp, Field3D, Region};
 
@@ -19,28 +22,6 @@ struct State {
     pe2: Field3D,
     phi2: Field3D,
     p: igg::physics::TwophaseParams,
-}
-
-fn wave_height(ctx: &RankCtx, phi: &Field3D) -> f64 {
-    // global z fraction of this rank's porosity maximum, reduced to the
-    // global argmax by value
-    let [nx, ny, nz] = phi.dims();
-    let mut best = (f64::NEG_INFINITY, 0.0);
-    for x in 0..nx {
-        for y in 0..ny {
-            for z in 0..nz {
-                let v = phi.get(x, y, z);
-                if v > best.0 {
-                    best = (v, ctx.grid.global_frac(x, y, z)[2]);
-                }
-            }
-        }
-    }
-    // allreduce-max on value, then broadcast the height of the winner by
-    // encoding (value, height) into a single ordered f64 pair via two passes
-    let vmax = ctx.grid.comm().allreduce_max(best.0);
-    let mine = if best.0 == vmax { best.1 } else { f64::NEG_INFINITY };
-    ctx.grid.comm().allreduce_max(mine)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -80,8 +61,8 @@ fn main() -> anyhow::Result<()> {
             std::mem::swap(&mut s.pe, &mut s.pe2);
             std::mem::swap(&mut s.phi, &mut s.phi2);
             if it % report_every == 0 || it + 1 == ctx.cfg.nt {
-                let pe_max = ctx.grid.comm().allreduce_max(s.pe.abs_max());
-                let h = wave_height(&ctx, &s.phi);
+                let pe_max = insitu::global_abs_max(&ctx.grid, &s.pe);
+                let h = insitu::porosity_wave_height(&ctx.grid, &s.phi);
                 if ctx.grid.rank() == 0 {
                     println!("  it {it:>4}: max|Pe| = {pe_max:.4e}  wave height z = {h:.3}");
                 }

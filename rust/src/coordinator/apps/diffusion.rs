@@ -48,7 +48,12 @@ pub fn params_for(cfg: &Config, dims_g: [usize; 3]) -> DiffusionParams {
 
 fn make_executor(ctx: &RankCtx) -> anyhow::Result<DiffusionExecutor> {
     match ctx.cfg.backend {
-        ExecBackend::Native => Ok(DiffusionExecutor::native_threads(ctx.cfg.compute_threads)),
+        // share the grid's scheduler pool: compute slabs and halo
+        // pack/unpack run on one set of workers (comm claimed first)
+        ExecBackend::Native => Ok(DiffusionExecutor::native_pooled(
+            std::sync::Arc::clone(ctx.grid.sched_pool()),
+            ctx.cfg.compute_threads,
+        )),
         ExecBackend::Pjrt => {
             let store = ArtifactStore::load(artifact_dir())?;
             let widths = ctx.cfg.effective_hide().map(|h| h.0);
@@ -86,6 +91,18 @@ impl StencilApp for Diffusion {
 
     fn swap(&mut self) {
         std::mem::swap(&mut self.t, &mut self.t2);
+    }
+
+    fn diagnose(&mut self, ctx: &RankCtx, step: usize) {
+        let every = ctx.cfg.diag_every;
+        if every == 0 || step % every != 0 {
+            return;
+        }
+        // collective on every rank; only rank 0 prints
+        let tmax = crate::coordinator::insitu::global_abs_max(&ctx.grid, &self.t);
+        if ctx.grid.rank() == 0 {
+            println!("  [diffusion] step {step:>5}: max|T| = {tmax:.6}");
+        }
     }
 
     fn final_norm(&self) -> f64 {

@@ -42,7 +42,10 @@ pub fn params_for(cfg: &Config, dims_g: [usize; 3]) -> TwophaseParams {
 
 fn make_executor(ctx: &RankCtx) -> anyhow::Result<TwophaseExecutor> {
     match ctx.cfg.backend {
-        ExecBackend::Native => Ok(TwophaseExecutor::native_threads(ctx.cfg.compute_threads)),
+        ExecBackend::Native => Ok(TwophaseExecutor::native_pooled(
+            std::sync::Arc::clone(ctx.grid.sched_pool()),
+            ctx.cfg.compute_threads,
+        )),
         ExecBackend::Pjrt => {
             let store = ArtifactStore::load(artifact_dir())?;
             let widths = ctx.cfg.effective_hide().map(|h| h.0);
@@ -83,6 +86,21 @@ impl StencilApp for Twophase {
     fn swap(&mut self) {
         std::mem::swap(&mut self.pe, &mut self.pe2);
         std::mem::swap(&mut self.phi, &mut self.phi2);
+    }
+
+    fn diagnose(&mut self, ctx: &RankCtx, step: usize) {
+        let every = ctx.cfg.diag_every;
+        if every == 0 || step % every != 0 {
+            return;
+        }
+        // collectives on every rank; only rank 0 prints
+        let pe_max = crate::coordinator::insitu::global_abs_max(&ctx.grid, &self.pe);
+        let h = crate::coordinator::insitu::porosity_wave_height(&ctx.grid, &self.phi);
+        if ctx.grid.rank() == 0 {
+            println!(
+                "  [twophase] step {step:>5}: max|Pe| = {pe_max:.4e}  wave height z = {h:.3}"
+            );
+        }
     }
 
     fn final_norm(&self) -> f64 {

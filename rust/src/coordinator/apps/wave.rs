@@ -52,7 +52,10 @@ pub fn params_for(cfg: &Config, dims_g: [usize; 3]) -> WaveParams {
 
 fn make_executor(ctx: &RankCtx) -> anyhow::Result<WaveExecutor> {
     match ctx.cfg.backend {
-        ExecBackend::Native => Ok(WaveExecutor::native_threads(ctx.cfg.compute_threads)),
+        ExecBackend::Native => Ok(WaveExecutor::native_pooled(
+            std::sync::Arc::clone(ctx.grid.sched_pool()),
+            ctx.cfg.compute_threads,
+        )),
         ExecBackend::Pjrt => {
             let store = ArtifactStore::load(artifact_dir())?;
             let widths = ctx.cfg.effective_hide().map(|h| h.0);
@@ -110,6 +113,20 @@ impl StencilApp for Wave {
         std::mem::swap(&mut self.vx, &mut self.vx2);
         std::mem::swap(&mut self.vy, &mut self.vy2);
         std::mem::swap(&mut self.vz, &mut self.vz2);
+    }
+
+    fn diagnose(&mut self, ctx: &RankCtx, step: usize) {
+        let every = ctx.cfg.diag_every;
+        if every == 0 || step % every != 0 {
+            return;
+        }
+        // collective on every rank; only rank 0 prints
+        let e = crate::coordinator::insitu::wave_energy(
+            &ctx.grid, &self.p, &self.vx, &self.vy, &self.vz,
+        );
+        if ctx.grid.rank() == 0 {
+            println!("  [wave] step {step:>5}: field energy = {e:.6e}");
+        }
     }
 
     fn final_norm(&self) -> f64 {

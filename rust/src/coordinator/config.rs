@@ -61,15 +61,20 @@ pub struct Config {
     pub backend: Backend,
     pub path: TransferPath,
     pub pipeline_chunks: usize,
-    /// Worker threads per rank for the native stencil backend (1 = serial).
-    /// Large regions — in particular the inner region under
-    /// `hide_communication` — are x-chunked across this many threads.
+    /// Compute-class participants per rank on the scheduler pool for the
+    /// native stencil backend (1 = serial). Large regions — in particular
+    /// the inner region under `hide_communication` — are x-chunked across
+    /// this many participants.
     pub compute_threads: usize,
-    /// Worker threads per rank for the halo engine's plane pack/unpack
-    /// (1 = scalar). Planes below the pack threshold stay scalar either
-    /// way; threading pays on wide planes — the z-plane strided
-    /// gather/scatter above all.
+    /// Comm-class participants per rank for the halo engine's plane
+    /// pack/unpack (1 = scalar). Planes below the pack threshold stay
+    /// scalar either way; threading pays on wide planes — the z-plane
+    /// strided gather/scatter above all. Both knobs size the *one*
+    /// persistent pool per rank (`max(compute, comm) - 1` workers).
     pub comm_threads: usize,
+    /// Print an in-situ diagnostic (app-specific global reduction) every
+    /// `diag_every` steps from rank 0; 0 disables (`--diag-every`).
+    pub diag_every: usize,
     pub net: NetModel,
     /// `Some(spec)` arms the network's deterministic fault injector and the
     /// halo engine's recovery layer (`--faults` / `IGG_FAULTS`).
@@ -92,11 +97,13 @@ impl Default for Config {
             backend: Backend::Native,
             path: TransferPath::Rdma,
             pipeline_chunks: 4,
-            compute_threads: 1,
-            // 1 unless the IGG_COMM_THREADS environment variable raises it
-            // (the CI comm-threads matrix leg runs the whole suite with
-            // IGG_COMM_THREADS=4), mirroring the IGG_NET preset below
-            comm_threads: default_comm_threads(),
+            // 1 unless the IGG_COMPUTE_THREADS / IGG_COMM_THREADS
+            // environment variables raise them (the CI oversubscribed-pool
+            // matrix leg runs the whole suite with both at 4), mirroring
+            // the IGG_NET preset below
+            compute_threads: default_env_threads("IGG_COMPUTE_THREADS"),
+            comm_threads: default_env_threads("IGG_COMM_THREADS"),
+            diag_every: 0,
             // ideal unless the IGG_NET environment variable selects a
             // preset (the CI contended matrix leg runs the whole suite
             // with IGG_NET=aries,serial-nic)
@@ -123,11 +130,12 @@ fn default_faults() -> Option<FaultSpec> {
     }
 }
 
-/// `IGG_COMM_THREADS` environment default for [`Config::comm_threads`]:
-/// lets the CI matrix (and ad-hoc runs) thread the halo pack path without
+/// `IGG_COMPUTE_THREADS` / `IGG_COMM_THREADS` environment defaults for
+/// [`Config::compute_threads`] / [`Config::comm_threads`]: lets the CI
+/// matrix (and ad-hoc runs) engage the scheduler pool suite-wide without
 /// touching every invocation. Unset, empty, or invalid values mean 1.
-fn default_comm_threads() -> usize {
-    std::env::var("IGG_COMM_THREADS")
+fn default_env_threads(var: &str) -> usize {
+    std::env::var(var)
         .ok()
         .and_then(|s| s.trim().parse::<usize>().ok())
         .filter(|&n| n >= 1)
@@ -177,6 +185,9 @@ impl Config {
         }
         if let Some(t) = args.get_usize("comm-threads")? {
             cfg.comm_threads = t;
+        }
+        if let Some(d) = args.get_usize("diag-every")? {
+            cfg.diag_every = d;
         }
         if let Some(n) = args.get("net") {
             cfg.net = NetModel::parse(n)?;
@@ -233,6 +244,7 @@ impl Config {
             path: self.path,
             pipeline_chunks: self.pipeline_chunks,
             comm_threads: self.comm_threads,
+            compute_threads: self.compute_threads,
             fault_retry: self.faults.as_ref().map(|f| f.policy),
         }
     }
@@ -274,6 +286,7 @@ impl Config {
             ("pipeline_chunks", Json::Num(self.pipeline_chunks as f64)),
             ("compute_threads", Json::Num(self.compute_threads as f64)),
             ("comm_threads", Json::Num(self.comm_threads as f64)),
+            ("diag_every", Json::Num(self.diag_every as f64)),
             ("net_latency_s", Json::Num(self.net.latency_s)),
             (
                 "net_bw_bytes_per_s",
@@ -316,6 +329,7 @@ mod tests {
             .value("chunks", None, "")
             .value("compute-threads", None, "")
             .value("comm-threads", None, "")
+            .value("diag-every", None, "")
             .value("net", None, "")
             .value("faults", None, "")
             .value("seed", None, "")
@@ -352,10 +366,26 @@ mod tests {
 
     #[test]
     fn compute_threads_flag() {
-        assert_eq!(parse(&[]).unwrap().compute_threads, 1);
+        // default 1 unless IGG_COMPUTE_THREADS is exported (the CI
+        // oversubscribed-pool matrix leg)
+        let want = std::env::var("IGG_COMPUTE_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(1);
+        assert_eq!(parse(&[]).unwrap().compute_threads, want);
         let c = parse(&["--compute-threads", "4"]).unwrap();
         assert_eq!(c.compute_threads, 4);
+        assert_eq!(c.grid_options().compute_threads, 4);
         assert!(parse(&["--compute-threads", "0"]).is_err());
+    }
+
+    #[test]
+    fn diag_every_flag() {
+        assert_eq!(parse(&[]).unwrap().diag_every, 0);
+        let c = parse(&["--diag-every", "10"]).unwrap();
+        assert_eq!(c.diag_every, 10);
+        assert_eq!(c.to_json().get("diag_every").unwrap().as_usize(), Some(10));
     }
 
     #[test]

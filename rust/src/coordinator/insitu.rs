@@ -1,0 +1,226 @@
+//! In-situ global reductions for per-step diagnostics.
+//!
+//! Distributed diagnostics keep being re-invented at call sites: every
+//! example that wanted "the global maximum" or "where is the wave" hand-
+//! rolled a local scan plus one or two `allreduce` passes — and a *sum*
+//! diagnostic is subtly wrong unless the overlap planes shared between
+//! neighbouring ranks are counted exactly once. This module centralizes
+//! those patterns so an application's [`StencilApp::diagnose`] hook (or an
+//! example's reporting loop) is one call:
+//!
+//! * [`owned_region`] — the sub-box of the local grid this rank uniquely
+//!   owns: of the [`OVERLAP`] (= 2) planes shared per boundary, the lower
+//!   rank keeps the first and the higher rank the second, partitioning the
+//!   global grid exactly.
+//! * [`global_sum`] / [`global_abs_max`] — linear and max reductions over
+//!   the global grid.
+//! * [`global_argmax`] — value and normalized global position of the
+//!   field's maximum (deterministic tie-breaking).
+//! * [`wave_energy`] — the acoustic wave diagnostic: total field energy
+//!   `½ Σ (p² + vx² + vy² + vz²)` over owned cells.
+//! * [`porosity_wave_height`] — the two-phase diagnostic: global z
+//!   fraction of the porosity maximum (the rising-wave headline number).
+//!
+//! Every function is a collective: all ranks of the grid's communicator
+//! must call it (the `diagnose` hook runs on every rank, so gating on
+//! `cfg.diag_every` — identical across ranks — is safe).
+//!
+//! [`StencilApp::diagnose`]: crate::coordinator::StencilApp::diagnose
+
+use crate::grid::GlobalGrid;
+use crate::physics::{Field3D, Region};
+use crate::OVERLAP;
+
+/// The sub-box of the rank's base-grid local array it uniquely owns.
+///
+/// Neighbouring ranks share `OVERLAP` = 2 planes per boundary; summing
+/// whole local arrays would count those twice. The partition rule gives
+/// one shared plane to each side: a rank with a lower neighbour along a
+/// dimension skips its first plane, one with a higher neighbour skips its
+/// last. The owned boxes tile the global grid exactly — no gap, no
+/// double count (pinned by the `global_sum` test below).
+pub fn owned_region(grid: &GlobalGrid) -> Region {
+    let local = grid.local_dims();
+    let coords = grid.coords();
+    let dims = grid.dims();
+    let mut offset = [0usize; 3];
+    let mut size = [0usize; 3];
+    for d in 0..3 {
+        let lo = if coords[d] > 0 { OVERLAP / 2 } else { 0 };
+        let hi = if coords[d] + 1 < dims[d] {
+            local[d] - (OVERLAP - OVERLAP / 2)
+        } else {
+            local[d]
+        };
+        offset[d] = lo;
+        size[d] = hi - lo;
+    }
+    Region::new(offset, size)
+}
+
+/// Fold `f` over the rank's owned cells of a base-grid field.
+fn fold_owned<T>(
+    grid: &GlobalGrid,
+    field: &Field3D,
+    mut acc: T,
+    mut f: impl FnMut(T, usize, usize, usize) -> T,
+) -> T {
+    assert_eq!(field.dims(), grid.local_dims(), "in-situ reductions take base-grid fields");
+    let r = owned_region(grid);
+    for x in r.offset[0]..r.offset[0] + r.size[0] {
+        for y in r.offset[1]..r.offset[1] + r.size[1] {
+            for z in r.offset[2]..r.offset[2] + r.size[2] {
+                acc = f(acc, x, y, z);
+            }
+        }
+    }
+    acc
+}
+
+/// Sum of the field over the *global* grid (each global cell once).
+pub fn global_sum(grid: &GlobalGrid, field: &Field3D) -> f64 {
+    let local = fold_owned(grid, field, 0.0, |s, x, y, z| s + field.get(x, y, z));
+    grid.comm().allreduce_sum(local)
+}
+
+/// Maximum of |field| over the global grid.
+pub fn global_abs_max(grid: &GlobalGrid, field: &Field3D) -> f64 {
+    grid.comm().allreduce_max(field.abs_max())
+}
+
+/// Value and normalized global position (`global_frac`) of the field's
+/// global maximum. Ties — the same maximum at several cells — resolve to
+/// the component-wise largest fraction among the winners, which is
+/// deterministic regardless of topology.
+pub fn global_argmax(grid: &GlobalGrid, field: &Field3D) -> (f64, [f64; 3]) {
+    let (vmax_local, frac) = fold_owned(
+        grid,
+        field,
+        (f64::NEG_INFINITY, [f64::NEG_INFINITY; 3]),
+        |(best, at), x, y, z| {
+            let v = field.get(x, y, z);
+            if v > best {
+                (v, grid.global_frac(x, y, z))
+            } else {
+                (best, at)
+            }
+        },
+    );
+    let vmax = grid.comm().allreduce_max(vmax_local);
+    let mine = if vmax_local == vmax { frac } else { [f64::NEG_INFINITY; 3] };
+    let at = [
+        grid.comm().allreduce_max(mine[0]),
+        grid.comm().allreduce_max(mine[1]),
+        grid.comm().allreduce_max(mine[2]),
+    ];
+    (vmax, at)
+}
+
+/// Total acoustic field energy `½ Σ (p² + vx² + vy² + vz²)` over the
+/// global grid (unit impedance; the conserved-to-discretization quantity
+/// the wave app reports).
+pub fn wave_energy(
+    grid: &GlobalGrid,
+    p: &Field3D,
+    vx: &Field3D,
+    vy: &Field3D,
+    vz: &Field3D,
+) -> f64 {
+    let local = fold_owned(grid, p, 0.0, |s, x, y, z| {
+        let (pv, a, b, c) = (p.get(x, y, z), vx.get(x, y, z), vy.get(x, y, z), vz.get(x, y, z));
+        s + 0.5 * (pv * pv + a * a + b * b + c * c)
+    });
+    grid.comm().allreduce_sum(local)
+}
+
+/// Global z fraction of the porosity maximum — the height of the rising
+/// porosity wave in the two-phase workload.
+pub fn porosity_wave_height(grid: &GlobalGrid, phi: &Field3D) -> f64 {
+    global_argmax(grid, phi).1[2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::{AppKind, Config};
+    use crate::coordinator::launcher::run_ranks;
+
+    fn cfg(app: AppKind, nranks: usize, local: usize) -> Config {
+        Config { app, local: [local; 3], nranks, nt: 1, ..Default::default() }
+    }
+
+    /// The ownership partition is exact: an 8-rank global sum of a
+    /// position-dependent field equals the 1-rank sum of the same global
+    /// field bitwise-composable up to f64 associativity.
+    #[test]
+    fn global_sum_counts_each_cell_once() {
+        let field_of = |ctx: &crate::coordinator::launcher::RankCtx| {
+            Field3D::from_fn(ctx.grid.local_dims(), |x, y, z| {
+                let [fx, fy, fz] = ctx.grid.global_frac(x, y, z);
+                1.0 + fx + 2.0 * fy + 4.0 * fz
+            })
+        };
+        let multi = run_ranks(&cfg(AppKind::Diffusion, 8, 10), |ctx| {
+            let f = field_of(&ctx);
+            // also pin the cell count: Σ 1 over owned cells = global cells
+            let ones = Field3D::filled(ctx.grid.local_dims(), 1.0);
+            Ok((global_sum(&ctx.grid, &f), global_sum(&ctx.grid, &ones)))
+        })
+        .unwrap();
+        let single = run_ranks(&cfg(AppKind::Diffusion, 1, 18), |ctx| {
+            let f = field_of(&ctx);
+            Ok(global_sum(&ctx.grid, &f))
+        })
+        .unwrap();
+        let global_cells = 18.0f64.powi(3);
+        for (s, n) in &multi {
+            assert_eq!(*n, global_cells, "owned regions must tile the global grid");
+            assert!((s - single[0]).abs() < 1e-9 * single[0].abs(), "{s} vs {}", single[0]);
+        }
+    }
+
+    #[test]
+    fn argmax_finds_the_planted_peak() {
+        let results = run_ranks(&cfg(AppKind::Diffusion, 8, 10), |ctx| {
+            let f = Field3D::from_fn(ctx.grid.local_dims(), |x, y, z| {
+                let [fx, fy, fz] = ctx.grid.global_frac(x, y, z);
+                (-((fx - 0.25).powi(2) + (fy - 0.5).powi(2) + (fz - 0.75).powi(2)) / 0.01).exp()
+            });
+            Ok((global_argmax(&ctx.grid, &f), global_abs_max(&ctx.grid, &f)))
+        })
+        .unwrap();
+        let ((v0, at0), m0) = results[0];
+        for ((v, at), m) in &results {
+            assert_eq!((*v, *at, *m), (v0, at0, m0), "every rank sees the same reduction");
+        }
+        assert_eq!(v0, m0);
+        assert!((at0[0] - 0.25).abs() < 0.06 && (at0[1] - 0.5).abs() < 0.06, "{at0:?}");
+        assert!((at0[2] - 0.75).abs() < 0.06, "{at0:?}");
+    }
+
+    /// Wave energy is topology-independent: the 8-rank reduction over a
+    /// globally-defined pulse matches the 1-rank value.
+    #[test]
+    fn wave_energy_matches_single_rank() {
+        let energy = |ctx: &crate::coordinator::launcher::RankCtx| {
+            let p = crate::coordinator::apps::wave::initial_pressure(ctx);
+            let v = Field3D::zeros(ctx.grid.local_dims());
+            wave_energy(&ctx.grid, &p, &v, &v, &v)
+        };
+        let multi = run_ranks(&cfg(AppKind::Wave, 8, 10), |ctx| Ok(energy(&ctx))).unwrap();
+        let single = run_ranks(&cfg(AppKind::Wave, 1, 18), |ctx| Ok(energy(&ctx))).unwrap();
+        assert!(multi[0] > 0.0);
+        assert!((multi[0] - single[0]).abs() < 1e-9 * single[0], "{} vs {}", multi[0], single[0]);
+    }
+
+    #[test]
+    fn porosity_height_tracks_the_blob() {
+        let h = run_ranks(&cfg(AppKind::Twophase, 8, 10), |ctx| {
+            let phi = crate::coordinator::apps::twophase::initial_porosity(&ctx);
+            Ok(porosity_wave_height(&ctx.grid, &phi))
+        })
+        .unwrap();
+        // the initial blob sits low in the domain (z fraction ~0.3)
+        assert!((h[0] - 0.3).abs() < 0.1, "initial blob height {h:?}");
+    }
+}

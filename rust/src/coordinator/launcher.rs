@@ -2,10 +2,11 @@
 //! global grid, run the application closure, collect results in rank order.
 //!
 //! This is the `mpirun`/`srun` analog of the in-process testbed. Each rank
-//! thread is named `igg-rank-<r>` and owns its grid (and, for the pjrt
-//! backend, its own PJRT context — one device per rank, as on the paper's
-//! machine). A panic or error on any rank aborts the run with that rank's
-//! error.
+//! thread is named `igg-rank-<r>` and owns its grid — which in turn owns
+//! the rank's persistent [`crate::sched::Pool`], shared by the halo engine
+//! and the compute executor — (and, for the pjrt backend, its own PJRT
+//! context — one device per rank, as on the paper's machine). A panic or
+//! error on any rank aborts the run with that rank's error.
 
 use std::sync::Arc;
 

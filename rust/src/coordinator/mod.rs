@@ -11,6 +11,7 @@
 
 pub mod apps;
 pub mod config;
+pub mod insitu;
 pub mod launcher;
 pub mod metrics;
 pub mod timeloop;

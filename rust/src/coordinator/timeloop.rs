@@ -18,9 +18,11 @@
 //! `&mut [&mut Field3D]` instead of a per-step `Vec`
 //! (`tests/steady_state_alloc.rs` asserts this with a counting global
 //! allocator). The contract holds for both thread knobs: `compute_threads`
-//! (stencil regions) and `comm_threads` (halo pack/unpack) engage scoped
-//! workers only above their size thresholds, so small-grid steady steps
-//! never spawn.
+//! (stencil regions) and `comm_threads` (halo pack/unpack) submit
+//! fork-join chunk jobs to the grid's persistent scheduler pool
+//! ([`crate::sched::Pool`]) — workers are created once per grid lifetime
+//! and park when idle, and submission itself is allocation-free, so steady
+//! steps neither spawn threads nor allocate at any thread count.
 
 use std::time::Instant;
 

@@ -1,10 +1,11 @@
 //! `GlobalGrid`: init / query / halo-update / finalize.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::halo::{self, HaloEngine, TransferPath};
 use crate::mpisim::{CartComm, Comm, FaultStats, RetryPolicy};
 use crate::physics::Field3D;
+use crate::sched::Pool;
 use crate::OVERLAP;
 
 use super::topology::select_dims;
@@ -21,9 +22,14 @@ pub struct GridOptions {
     pub path: TransferPath,
     /// Chunks per message for the staged path's software pipeline.
     pub pipeline_chunks: usize,
-    /// Comm-side pack/unpack worker threads (1 = scalar; planes below the
-    /// size threshold stay scalar regardless).
+    /// Comm-side pack/unpack participants on the scheduler pool (1 =
+    /// scalar; planes below the size threshold stay scalar regardless).
     pub comm_threads: usize,
+    /// Compute-side participants on the same pool (the executors'
+    /// `compute_threads`). The grid sizes its one persistent pool as
+    /// `max(compute_threads, comm_threads) - 1` workers — the submitting
+    /// thread always participates too.
+    pub compute_threads: usize,
     /// Retry policy for the fault-recovery layer (None = defaults). Only
     /// consulted when the network was built with a fault plan; on a clean
     /// network the recovery layer stays out of the hot path entirely.
@@ -38,6 +44,7 @@ impl Default for GridOptions {
             path: TransferPath::Rdma,
             pipeline_chunks: 4,
             comm_threads: 1,
+            compute_threads: 1,
             fault_retry: None,
         }
     }
@@ -49,6 +56,9 @@ pub struct GlobalGrid {
     cart: CartComm,
     local: [usize; 3],
     engine: Mutex<HaloEngine>,
+    /// The rank's persistent scheduler pool, shared by the halo engine's
+    /// comm-class pack/unpack jobs and the executors' compute-class slabs.
+    sched: Arc<Pool>,
 }
 
 impl GlobalGrid {
@@ -64,18 +74,29 @@ impl GlobalGrid {
         }
         let dims = select_dims(comm.size(), local, opts.dims)?;
         let cart = CartComm::create(comm, dims, opts.periods)?;
-        let engine = Self::engine_for(&cart, &opts);
-        Ok(GlobalGrid { cart, local, engine: Mutex::new(engine) })
+        let sched = Self::pool_for(&opts);
+        let engine = Self::engine_for(&cart, &opts, Arc::clone(&sched));
+        Ok(GlobalGrid { cart, local, engine: Mutex::new(engine), sched })
     }
 
     /// Use an existing Cartesian communicator (the paper: "alternatively, an
     /// MPI communicator can be passed to ImplicitGlobalGrid for usage").
     pub fn init_cart(cart: CartComm, local: [usize; 3], opts: GridOptions) -> anyhow::Result<Self> {
-        let engine = Self::engine_for(&cart, &opts);
-        Ok(GlobalGrid { cart, local, engine: Mutex::new(engine) })
+        let sched = Self::pool_for(&opts);
+        let engine = Self::engine_for(&cart, &opts, Arc::clone(&sched));
+        Ok(GlobalGrid { cart, local, engine: Mutex::new(engine), sched })
     }
 
-    fn engine_for(cart: &CartComm, opts: &GridOptions) -> HaloEngine {
+    /// The rank's one persistent worker pool: sized for the larger of the
+    /// two task classes, minus the submitting thread (which always
+    /// participates in its own jobs). Both knobs at 1 yields a worker-less
+    /// pool — fully inline, no threads ever created.
+    fn pool_for(opts: &GridOptions) -> Arc<Pool> {
+        let participants = opts.compute_threads.max(opts.comm_threads).max(1);
+        Arc::new(Pool::new(participants - 1))
+    }
+
+    fn engine_for(cart: &CartComm, opts: &GridOptions, sched: Arc<Pool>) -> HaloEngine {
         HaloEngine::with_config(
             cart,
             opts.path,
@@ -83,6 +104,7 @@ impl GlobalGrid {
             crate::memory::CopyModel::ideal(),
             opts.comm_threads,
             opts.fault_retry,
+            sched,
         )
     }
 
@@ -199,10 +221,17 @@ impl GlobalGrid {
         self.engine.lock().unwrap().chunks()
     }
 
-    /// Comm-side pack/unpack worker count the halo engine was configured
-    /// with (`comm_threads`).
+    /// Comm-side pack/unpack participant count the halo engine was
+    /// configured with (`comm_threads`).
     pub fn halo_comm_threads(&self) -> usize {
         self.engine.lock().unwrap().comm_threads()
+    }
+
+    /// The rank's persistent scheduler pool — executors submit their
+    /// compute-class slab jobs here so compute and comm share one set of
+    /// workers (comm-class jobs claimed first).
+    pub fn sched_pool(&self) -> &Arc<Pool> {
+        &self.sched
     }
 
     /// Cumulative engine-attributed heap allocations (pooled buffers,

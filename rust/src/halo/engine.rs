@@ -27,10 +27,12 @@
 //!   field unpacks each field as soon as its own receives complete.
 //!   Dimensions still run strictly sequentially (corner propagation).
 //! * **Threaded pack/unpack** — with `comm_threads > 1` the plane
-//!   gather/scatter runs across scoped workers
-//!   ([`super::slicing::pack_plane_threaded`]), bitwise identical to the
-//!   scalar path; planes below the size threshold stay scalar, so small
-//!   grids never pay a spawn (and stay allocation-free).
+//!   gather/scatter fans out as comm-class chunks on the rank's persistent
+//!   scheduler pool ([`super::slicing::pack_plane_threaded`]), bitwise
+//!   identical to the scalar path. Comm-class jobs preempt pending compute
+//!   tiles on the shared pool, so a hide_communication exchange is never
+//!   stuck behind the inner region; planes below the size threshold stay
+//!   scalar, and pool submission itself is allocation-free.
 //! * **Payload recycling** — the vectors that travel through the network
 //!   come from the pool's size-keyed payload free list and every received
 //!   payload is recycled back into it ([`BufRole::Payload`]); halo traffic
@@ -65,6 +67,7 @@ use crate::mpisim::fault::{self, FaultReport, FaultStats, RetryPolicy};
 use crate::mpisim::{CartComm, Comm, RecvRequest, SendRequest};
 use crate::physics::parallel::chunk_range;
 use crate::physics::Field3D;
+use crate::sched::Pool;
 
 use super::plan::{ExchangeOp, HaloPlan, MAX_CHUNKS};
 use super::slicing::{pack_plane_threaded, unpack_plane_threaded};
@@ -321,6 +324,8 @@ struct StreamJob {
     path: TransferPath,
     chunks: usize,
     comm_threads: usize,
+    /// The rank's shared scheduler pool (comm-class pack/unpack jobs).
+    sched: Arc<Pool>,
     device: Arc<SimDevice>,
     pool: Arc<Mutex<BufferPool>>,
     stats: Arc<Mutex<HaloStats>>,
@@ -362,6 +367,7 @@ impl StreamJob {
                 self.path,
                 self.chunks,
                 self.comm_threads,
+                &self.sched,
                 &self.device,
                 &self.pool,
                 &self.stats,
@@ -380,8 +386,10 @@ pub struct HaloEngine {
     comm: Comm,
     path: TransferPath,
     chunks: usize,
-    /// Scoped workers for plane pack/unpack on the comm side (1 = scalar).
+    /// Pool participants for plane pack/unpack on the comm side (1 = scalar).
     comm_threads: usize,
+    /// The rank's shared scheduler pool.
+    sched: Arc<Pool>,
     device: Arc<SimDevice>,
     pool: Arc<Mutex<BufferPool>>,
     stream: Arc<Stream>,
@@ -412,15 +420,17 @@ impl HaloEngine {
         pipeline_chunks: usize,
         copy_model: CopyModel,
     ) -> Self {
-        Self::with_config(cart, path, pipeline_chunks, copy_model, 1, None)
+        Self::with_config(cart, path, pipeline_chunks, copy_model, 1, None, Arc::new(Pool::new(0)))
     }
 
     /// Full constructor: transfer path, staged pipeline chunks, copy model,
-    /// the comm-side pack/unpack worker count (`comm_threads`; planes
-    /// below [`super::slicing::PACK_PAR_MIN_CELLS`] stay scalar), and the
+    /// the comm-side pack/unpack participant count (`comm_threads`; planes
+    /// below [`super::slicing::PACK_PAR_MIN_CELLS`] stay scalar), the
     /// fault-recovery policy override (`retry`; the default policy applies
-    /// when `None`). The recovery layer itself is armed by the *network*:
-    /// it exists iff the communicator's network carries a fault plan.
+    /// when `None`), and the rank's shared scheduler pool (`sched`) that
+    /// pack/unpack jobs are submitted to as comm-class work. The recovery
+    /// layer itself is armed by the *network*: it exists iff the
+    /// communicator's network carries a fault plan.
     pub fn with_config(
         cart: &CartComm,
         path: TransferPath,
@@ -428,6 +438,7 @@ impl HaloEngine {
         copy_model: CopyModel,
         comm_threads: usize,
         retry: Option<RetryPolicy>,
+        sched: Arc<Pool>,
     ) -> Self {
         assert!(pipeline_chunks >= 1 && pipeline_chunks <= MAX_CHUNKS);
         assert!(comm_threads >= 1, "need at least one comm thread");
@@ -444,6 +455,7 @@ impl HaloEngine {
             path,
             chunks: pipeline_chunks,
             comm_threads,
+            sched: Arc::clone(&sched),
             device: Arc::clone(&device),
             pool: Arc::clone(&pool),
             stats: Arc::clone(&stats),
@@ -460,6 +472,7 @@ impl HaloEngine {
             path,
             chunks: pipeline_chunks,
             comm_threads,
+            sched,
             device,
             pool,
             stream: Arc::new(Stream::new(StreamPriority::High)),
@@ -487,9 +500,14 @@ impl HaloEngine {
         self.chunks
     }
 
-    /// Configured comm-side pack/unpack worker count.
+    /// Configured comm-side pack/unpack participant count.
     pub fn comm_threads(&self) -> usize {
         self.comm_threads
+    }
+
+    /// The shared scheduler pool this engine submits comm-class work to.
+    pub fn sched_pool(&self) -> &Arc<Pool> {
+        &self.sched
     }
 
     /// Cumulative engine-attributed heap allocations: pooled buffer
@@ -581,6 +599,7 @@ impl HaloEngine {
                 self.path,
                 self.chunks,
                 self.comm_threads,
+                &self.sched,
                 &self.device,
                 &self.pool,
                 &self.stats,
@@ -649,6 +668,7 @@ impl HaloEngine {
                     job.path,
                     job.chunks,
                     job.comm_threads,
+                    &job.sched,
                     &job.device,
                     &job.pool,
                     &job.stats,
@@ -761,6 +781,7 @@ unsafe fn exchange(
     path: TransferPath,
     chunks: usize,
     comm_threads: usize,
+    sched: &Pool,
     device: &SimDevice,
     pool: &Mutex<BufferPool>,
     stats: &Mutex<HaloStats>,
@@ -827,7 +848,7 @@ unsafe fn exchange(
             }
             for op in &ops[seg.start..seg.end] {
                 if op.self_wrap {
-                    wrap_copy(op, raws, comm_threads, &mut pool_g, &mut local);
+                    wrap_copy(op, raws, comm_threads, sched, &mut pool_g, &mut local);
                 } else if let Some(dst) = op.send_to {
                     send_plane(
                         comm,
@@ -837,6 +858,7 @@ unsafe fn exchange(
                         path,
                         chunks,
                         comm_threads,
+                        sched,
                         device,
                         &mut pool_g,
                         &mut local,
@@ -868,6 +890,7 @@ unsafe fn exchange(
                 raws,
                 path,
                 comm_threads,
+                sched,
                 device,
                 &mut pool_g,
                 recv_reqs,
@@ -883,6 +906,7 @@ unsafe fn exchange(
                 raws,
                 path,
                 comm_threads,
+                sched,
                 device,
                 &mut pool_g,
                 recv_reqs,
@@ -972,6 +996,7 @@ unsafe fn pump_clean(
     raws: &[RawField],
     path: TransferPath,
     comm_threads: usize,
+    sched: &Pool,
     device: &SimDevice,
     pool: &mut BufferPool,
     recv_reqs: &mut [Option<RecvRequest>],
@@ -999,6 +1024,7 @@ unsafe fn pump_clean(
                         raws,
                         path,
                         comm_threads,
+                        sched,
                         device,
                         pool,
                     );
@@ -1007,7 +1033,7 @@ unsafe fn pump_clean(
                 if st.done < st.n_chunks {
                     break; // front op incomplete: give other fields a turn
                 }
-                finalize_op(&ops[st.op], st, raws, path, comm_threads, pool, first_err);
+                finalize_op(&ops[st.op], st, raws, path, comm_threads, sched, pool, first_err);
                 cur.next += 1;
                 pending -= 1;
                 progressed = true;
@@ -1019,9 +1045,11 @@ unsafe fn pump_clean(
             let cur = cursors.iter_mut().find(|c| c.next < c.hi).expect("pending ops exist");
             let st = &mut recv_states[cur.next];
             let req = recv_reqs[st.req_base + st.done].take().expect("pending chunk posted");
-            absorb_chunk(&ops[st.op], st, req.wait(), raws, path, comm_threads, device, pool);
+            absorb_chunk(
+                &ops[st.op], st, req.wait(), raws, path, comm_threads, sched, device, pool,
+            );
             if st.done == st.n_chunks {
-                finalize_op(&ops[st.op], st, raws, path, comm_threads, pool, first_err);
+                finalize_op(&ops[st.op], st, raws, path, comm_threads, sched, pool, first_err);
                 cur.next += 1;
                 pending -= 1;
             }
@@ -1047,6 +1075,7 @@ unsafe fn pump_faulty(
     raws: &[RawField],
     path: TransferPath,
     comm_threads: usize,
+    sched: &Pool,
     device: &SimDevice,
     pool: &mut BufferPool,
     recv_reqs: &mut [Option<RecvRequest>],
@@ -1066,7 +1095,9 @@ unsafe fn pump_faulty(
                 while st.done < st.n_chunks {
                     match take_front_chunk(comm, fx, op, st, epoch, pool) {
                         ChunkPoll::Got(payload) => {
-                            absorb_chunk(op, st, payload, raws, path, comm_threads, device, pool);
+                            absorb_chunk(
+                                op, st, payload, raws, path, comm_threads, sched, device, pool,
+                            );
                             // fresh budget and deadline for the next chunk
                             st.attempts = 0;
                             st.nacked = false;
@@ -1080,7 +1111,7 @@ unsafe fn pump_faulty(
                 if st.done < st.n_chunks {
                     break; // front op incomplete: give other fields a turn
                 }
-                finalize_op(op, st, raws, path, comm_threads, pool, first_err);
+                finalize_op(op, st, raws, path, comm_threads, sched, pool, first_err);
                 cur.next += 1;
                 pending -= 1;
                 progressed = true;
@@ -1222,6 +1253,7 @@ unsafe fn send_plane(
     path: TransferPath,
     chunks: usize,
     comm_threads: usize,
+    sched: &Pool,
     device: &SimDevice,
     pool: &mut BufferPool,
     stats: &mut HaloStats,
@@ -1237,7 +1269,9 @@ unsafe fn send_plane(
             // migrates to the receiver, and a payload received this step
             // replaces it in the pool, so the steady state allocates nothing.
             let mut payload = pool.checkout_payload(op.plane_cells);
-            pack_plane_threaded(data, rf.dims, op.dim, op.send_plane, &mut payload, comm_threads);
+            pack_plane_threaded(
+                sched, data, rf.dims, op.dim, op.send_plane, &mut payload, comm_threads,
+            );
             let tag = wire_tag(fault, epoch, op.tag(0), &payload);
             sends.push(comm.isend(dst, tag, payload));
             stats.planes_sent += 1;
@@ -1250,7 +1284,9 @@ unsafe fn send_plane(
             let side = usize::from(op.dir > 0);
             let key = BufKey { field: op.field, dim: op.dim, side, role: BufRole::Send };
             let mut dev_buf = pool.checkout(key, op.plane_cells);
-            pack_plane_threaded(data, rf.dims, op.dim, op.send_plane, &mut dev_buf, comm_threads);
+            pack_plane_threaded(
+                sched, data, rf.dims, op.dim, op.send_plane, &mut dev_buf, comm_threads,
+            );
             let n_chunks = effective_chunks(path, chunks, op.plane_cells);
             for c in 0..n_chunks {
                 let (lo, hi) = chunk_range(op.plane_cells, n_chunks, c);
@@ -1294,6 +1330,7 @@ unsafe fn absorb_chunk(
     raws: &[RawField],
     path: TransferPath,
     comm_threads: usize,
+    sched: &Pool,
     device: &SimDevice,
     pool: &mut BufferPool,
 ) {
@@ -1303,6 +1340,7 @@ unsafe fn absorb_chunk(
             let rf = raws[op.field];
             if payload.len() == op.plane_cells {
                 unpack_plane_threaded(
+                    sched,
                     rf.slice_mut(),
                     rf.dims,
                     op.dim,
@@ -1357,6 +1395,7 @@ unsafe fn finalize_op(
     raws: &[RawField],
     path: TransferPath,
     comm_threads: usize,
+    sched: &Pool,
     pool: &mut BufferPool,
     first_err: &mut Option<anyhow::Error>,
 ) {
@@ -1366,6 +1405,7 @@ unsafe fn finalize_op(
             if st.err.is_none() {
                 let rf = raws[op.field];
                 unpack_plane_threaded(
+                    sched,
                     rf.slice_mut(),
                     rf.dims,
                     op.dim,
@@ -1390,6 +1430,7 @@ unsafe fn wrap_copy(
     op: &ExchangeOp,
     raws: &[RawField],
     comm_threads: usize,
+    sched: &Pool,
     pool: &mut BufferPool,
     stats: &mut HaloStats,
 ) {
@@ -1398,8 +1439,8 @@ unsafe fn wrap_copy(
     let side = usize::from(op.dir > 0);
     let key = BufKey { field: op.field, dim: op.dim, side, role: BufRole::Wrap };
     let mut buf = pool.checkout(key, op.plane_cells);
-    pack_plane_threaded(data, rf.dims, op.dim, op.send_plane, &mut buf, comm_threads);
-    unpack_plane_threaded(data, rf.dims, op.dim, op.recv_plane, &buf, comm_threads);
+    pack_plane_threaded(sched, data, rf.dims, op.dim, op.send_plane, &mut buf, comm_threads);
+    unpack_plane_threaded(sched, data, rf.dims, op.dim, op.recv_plane, &buf, comm_threads);
     pool.restore(key, buf);
     stats.wrap_copies += 1;
 }
@@ -1849,7 +1890,7 @@ mod tests {
                 ..Default::default()
             };
             // z-plane cells = 96*96 = 9216 >= PACK_PAR_MIN_CELLS: the
-            // scoped pack workers really engage.
+            // pooled pack chunks really engage.
             on_grid(2, [96, 96, 6], opts, move |g| {
                 assert_eq!(g.halo_comm_threads(), 4, "engine comm threads");
                 check_halo_coherent(g, path, chunks);

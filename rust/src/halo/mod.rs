@@ -27,8 +27,9 @@
 //! nothing; within each dimension all sends are posted before the first
 //! wait and drained after the receives, so injections and transits overlap.
 //! Fields are pipelined against each other within a dimension (per-field
-//! progress cursors — see `engine.rs`), and the plane pack/unpack threads
-//! across `comm_threads` scoped workers for wide planes (`slicing.rs`).
+//! progress cursors — see `engine.rs`), and the plane pack/unpack of wide
+//! planes fans out as comm-class jobs on the rank's persistent
+//! [`crate::sched::Pool`], `comm_threads` wide (`slicing.rs`).
 //! The overlapped path runs on a dedicated high-priority
 //! [`crate::memory::Stream`], allocated once — the paper's explicit
 //! stream/buffer-reuse design.

@@ -17,27 +17,33 @@
 //! ## Threaded pack/unpack (`comm_threads`)
 //!
 //! The `_threaded` variants split the *buffer* index range `0..plane_cells`
-//! into near-equal contiguous chunks ([`chunk_range`]) and run one chunk per
-//! worker on a scoped pool ([`scoped_chunks`]). Chunking by buffer index —
-//! rather than by a field axis — means every chunk is a contiguous buffer
-//! window, non-divisible cell counts just make the last chunks one cell
-//! shorter, and the dim-2 strided gather/scatter subdivides along y *within*
-//! each x-row, so even a 1-x-wide z-plane parallelizes. Every plane cell is
-//! copied by exactly one worker with the same arithmetic as the serial path,
-//! so the threaded result is bitwise identical to [`pack_plane_raw`] /
+//! into near-equal contiguous chunks ([`chunk_range`]) and submit one chunk
+//! per participant to the persistent scheduler pool as a
+//! [`TaskClass::Comm`] job — which pool workers claim *before* any pending
+//! compute tiles, so a hide_communication exchange is never stuck behind
+//! the inner region. Chunking by buffer index — rather than by a field
+//! axis — means every chunk is a contiguous buffer window, non-divisible
+//! cell counts just make the last chunks one cell shorter, and the dim-2
+//! strided gather/scatter subdivides along y *within* each x-row, so even
+//! a 1-x-wide z-plane parallelizes. Every plane cell is copied by exactly
+//! one participant with the same arithmetic as the serial path, so the
+//! threaded result is bitwise identical to [`pack_plane_raw`] /
 //! [`unpack_plane_raw`] (`tests/pack_threading.rs` sweeps this). Planes
-//! below [`PACK_PAR_MIN_CELLS`] take the scalar path — spawn/join overhead
-//! outweighs the copy, and the steady-state zero-allocation contract on
-//! small grids stays intact because no thread is ever spawned for them.
+//! below [`PACK_PAR_MIN_CELLS`] take the scalar path — with the persistent
+//! pool the dispatch overhead is ~1 us rather than the ~10 us of a scoped
+//! spawn/join, so the gate sits 4x lower than it used to
+//! (EXPERIMENTS.md §Scheduler records the re-measurement).
 
-use crate::physics::parallel::{chunk_range, scoped_chunks};
+use crate::physics::parallel::chunk_range;
 use crate::physics::Field3D;
+use crate::sched::{Pool, SharedSlice, TaskClass};
 
 /// Planes below this many cells pack/unpack serially even when
-/// `comm_threads > 1`: scoped spawn/join costs ~10 us, which outweighs
-/// copying smaller planes (and keeps small-grid steady-state steps free of
-/// thread spawns, preserving the zero-allocation contract there).
-pub const PACK_PAR_MIN_CELLS: usize = 8 * 1024;
+/// `comm_threads > 1`. Re-measured for the persistent pool (PR 7): waking
+/// parked workers and crossing the job board costs ~1 us against ~1 ns per
+/// packed cell, so the crossover sits near 1-2k cells — down from the
+/// 8192 the scoped spawn/join forced (EXPERIMENTS.md §Scheduler).
+pub const PACK_PAR_MIN_CELLS: usize = 2 * 1024;
 
 /// Worker count actually used for a plane of `cells` cells: 1 below the
 /// size threshold (scalar fallback), otherwise `threads` capped so every
@@ -47,35 +53,6 @@ pub fn effective_pack_threads(threads: usize, cells: usize) -> usize {
         1
     } else {
         threads.min(cells)
-    }
-}
-
-/// A plane buffer (or field allocation) shared across pack workers as a raw
-/// pointer: the workers' index sets are disjoint by construction, which the
-/// borrow checker cannot see through one slice.
-///
-/// SAFETY: constructed from a live `&mut [f64]`; the scoped workers are
-/// joined before that borrow ends, and each index is touched by at most one
-/// worker.
-#[derive(Clone, Copy)]
-struct SharedSlice {
-    ptr: *mut f64,
-    len: usize,
-}
-
-unsafe impl Send for SharedSlice {}
-unsafe impl Sync for SharedSlice {}
-
-impl SharedSlice {
-    fn of(s: &mut [f64]) -> Self {
-        SharedSlice { ptr: s.as_mut_ptr(), len: s.len() }
-    }
-
-    /// SAFETY: callers must pass disjoint `[lo, hi)` windows across
-    /// concurrently live borrows.
-    unsafe fn window<'a>(&self, lo: usize, hi: usize) -> &'a mut [f64] {
-        debug_assert!(lo <= hi && hi <= self.len);
-        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
     }
 }
 
@@ -200,9 +177,10 @@ pub fn unpack_plane_raw(data: &mut [f64], dims: [usize; 3], dim: usize, plane: u
     unsafe { unpack_range(data.as_mut_ptr(), dims, dim, plane, buf, 0) }
 }
 
-/// [`pack_plane_raw`] across `threads` scoped workers (scalar below
-/// [`PACK_PAR_MIN_CELLS`]); bitwise identical to the serial path.
+/// [`pack_plane_raw`] across up to `threads` pool participants (scalar
+/// below [`PACK_PAR_MIN_CELLS`]); bitwise identical to the serial path.
 pub fn pack_plane_threaded(
+    pool: &Pool,
     data: &[f64],
     dims: [usize; 3],
     dim: usize,
@@ -210,12 +188,14 @@ pub fn pack_plane_threaded(
     buf: &mut [f64],
     threads: usize,
 ) {
-    pack_plane_chunked(data, dims, dim, plane, buf, effective_pack_threads(threads, buf.len()));
+    let n = effective_pack_threads(threads, buf.len());
+    pack_plane_chunked(pool, data, dims, dim, plane, buf, n);
 }
 
-/// [`unpack_plane_raw`] across `threads` scoped workers (scalar below
-/// [`PACK_PAR_MIN_CELLS`]); bitwise identical to the serial path.
+/// [`unpack_plane_raw`] across up to `threads` pool participants (scalar
+/// below [`PACK_PAR_MIN_CELLS`]); bitwise identical to the serial path.
 pub fn unpack_plane_threaded(
+    pool: &Pool,
     data: &mut [f64],
     dims: [usize; 3],
     dim: usize,
@@ -223,7 +203,8 @@ pub fn unpack_plane_threaded(
     buf: &[f64],
     threads: usize,
 ) {
-    unpack_plane_chunked(data, dims, dim, plane, buf, effective_pack_threads(threads, buf.len()));
+    let n = effective_pack_threads(threads, buf.len());
+    unpack_plane_chunked(pool, data, dims, dim, plane, buf, n);
 }
 
 /// Pack across exactly `chunks` buffer windows with no size gate — the
@@ -232,6 +213,7 @@ pub fn unpack_plane_threaded(
 /// 1-wide planes, non-divisible chunk counts) without crossing the
 /// threshold.
 pub fn pack_plane_chunked(
+    pool: &Pool,
     data: &[f64],
     dims: [usize; 3],
     dim: usize,
@@ -249,11 +231,11 @@ pub fn pack_plane_chunked(
         return;
     }
     let out = SharedSlice::of(buf);
-    scoped_chunks(chunks, |i| {
+    pool.run_chunks(TaskClass::Comm, chunks, &|i| {
         let (lo, hi) = chunk_range(cells, chunks, i);
-        // SAFETY: chunk_range tiles 0..cells disjointly, so every worker
-        // owns its buffer window exclusively; the workers are joined
-        // before `buf`'s borrow ends.
+        // SAFETY: chunk_range tiles 0..cells disjointly, so every
+        // participant owns its buffer window exclusively; run_chunks
+        // returns before `buf`'s borrow ends.
         let win = unsafe { out.window(lo, hi) };
         pack_range(data, dims, dim, plane, win, lo);
     });
@@ -262,6 +244,7 @@ pub fn pack_plane_chunked(
 /// Unpack across exactly `chunks` buffer windows with no size gate — the
 /// mechanism under [`unpack_plane_threaded`] (see [`pack_plane_chunked`]).
 pub fn unpack_plane_chunked(
+    pool: &Pool,
     data: &mut [f64],
     dims: [usize; 3],
     dim: usize,
@@ -279,13 +262,13 @@ pub fn unpack_plane_chunked(
         return;
     }
     let dst = SharedSlice::of(data);
-    scoped_chunks(chunks, |i| {
+    pool.run_chunks(TaskClass::Comm, chunks, &|i| {
         let (lo, hi) = chunk_range(cells, chunks, i);
         // SAFETY: disjoint buffer windows denote disjoint plane cells (the
         // buffer-index -> flat-index map is injective), so concurrent
-        // workers never write the same element; the workers are joined
+        // participants never write the same element; run_chunks returns
         // before `data`'s borrow ends.
-        unsafe { unpack_range(dst.ptr, dims, dim, plane, &buf[lo..hi], lo) }
+        unsafe { unpack_range(dst.as_ptr(), dims, dim, plane, &buf[lo..hi], lo) }
     });
 }
 
@@ -375,6 +358,7 @@ mod tests {
     #[test]
     fn chunked_matches_serial_all_dims() {
         let f = field();
+        let pool = Pool::new(3);
         for dim in 0..3 {
             let cells = plane_len(f.dims(), dim);
             let plane = f.dims()[dim] / 2;
@@ -382,13 +366,14 @@ mod tests {
             pack_plane(&f, dim, plane, &mut want);
             for chunks in [1usize, 2, 3, 7, 64] {
                 let mut got = vec![0.0; cells];
-                pack_plane_chunked(f.as_slice(), f.dims(), dim, plane, &mut got, chunks);
+                pack_plane_chunked(&pool, f.as_slice(), f.dims(), dim, plane, &mut got, chunks);
                 assert_eq!(got, want, "pack dim={dim} chunks={chunks}");
 
                 let mut serial = Field3D::zeros(f.dims());
                 unpack_plane(&mut serial, dim, plane, &want);
                 let mut chunked = Field3D::zeros(f.dims());
                 unpack_plane_chunked(
+                    &pool,
                     chunked.as_mut_slice(),
                     f.dims(),
                     dim,
@@ -419,18 +404,19 @@ mod tests {
     fn threaded_large_plane_matches_serial() {
         let dims = [96, 96, 4];
         let f = Field3D::from_fn(dims, |x, y, z| (x * 1000 + y * 10 + z) as f64);
+        let pool = Pool::new(3);
         let cells = plane_len(dims, 2);
         assert!(cells >= PACK_PAR_MIN_CELLS, "test must cross the threshold");
         let mut want = vec![0.0; cells];
         pack_plane(&f, 2, 1, &mut want);
         let mut got = vec![0.0; cells];
-        pack_plane_threaded(f.as_slice(), dims, 2, 1, &mut got, 4);
+        pack_plane_threaded(&pool, f.as_slice(), dims, 2, 1, &mut got, 4);
         assert_eq!(got, want);
 
         let mut serial = Field3D::zeros(dims);
         unpack_plane(&mut serial, 2, 1, &want);
         let mut threaded = Field3D::zeros(dims);
-        unpack_plane_threaded(threaded.as_mut_slice(), dims, 2, 1, &want, 4);
+        unpack_plane_threaded(&pool, threaded.as_mut_slice(), dims, 2, 1, &want, 4);
         assert_eq!(threaded.max_abs_diff(&serial), 0.0);
     }
 }

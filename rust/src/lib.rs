@@ -83,13 +83,18 @@
 //! (memoized per run) through the halo engine's pooled transfers
 //! (`tests/steady_state_alloc.rs`).
 //!
-//! Two thread knobs scale one rank onto many cores, independently and
-//! composably: `compute_threads` x-chunks stencil regions across a scoped
-//! worker pool (the "xPU" analog), and `comm_threads` does the same for
-//! the halo engine's plane pack/unpack on the comm side (the z-plane
-//! strided gather/scatter is the case that pays). Both are bitwise
-//! identical to their serial paths at any thread count
-//! (`--compute-threads` / `--comm-threads`, `IGG_COMM_THREADS`).
+//! One **persistent scheduler pool** ([`sched::Pool`]) scales a rank onto
+//! many cores: `compute_threads` and `comm_threads` are no longer two
+//! independent thread sets but two *task classes* on a single pool of
+//! parked workers created once per grid lifetime. Stencil region steps
+//! submit x-chunk slabs as [`sched::TaskClass::Compute`]; the halo
+//! engine's plane pack/unpack submits buffer chunks as
+//! [`sched::TaskClass::Comm`], which workers always claim first — so
+//! inside `hide_communication` the exchange never starves behind compute
+//! tiles, and the two knobs no longer oversubscribe each other. Both paths
+//! stay bitwise identical to serial at any thread count, and submission is
+//! allocation-free (`--compute-threads` / `--comm-threads`,
+//! `IGG_COMPUTE_THREADS` / `IGG_COMM_THREADS`).
 //!
 //! The crate is organized exactly as the system inventory in `DESIGN.md`:
 //!
@@ -115,16 +120,20 @@
 //!   sends are posted before the first wait and drained afterwards, fields
 //!   are pipelined against each other (per-field progress cursors: each
 //!   field unpacks as soon as its own receives complete), and the plane
-//!   pack/unpack itself threads across `comm_threads` scoped workers —
-//!   the comm-side sibling of `compute_threads`, aimed at the z-plane
-//!   strided gather/scatter. The steady state performs zero heap
+//!   pack/unpack itself fans out as comm-class chunks on the shared
+//!   scheduler pool (up to `comm_threads` participants) — aimed at the
+//!   z-plane strided gather/scatter. The steady state performs zero heap
 //!   allocations on either path (`HaloEngine::allocations`).
+//! * [`sched`] — the persistent task-scheduler runtime: one parked worker
+//!   pool per rank shared by compute and comm work, with comm-class
+//!   priority and a small dependency-aware task graph (compute tile /
+//!   pack / post / pump / unpack).
 //! * [`overlap`] — `@hide_communication`: inner/boundary region
 //!   decomposition and the overlap scheduler.
 //! * [`physics`] — native Rust field type and stencil steps (the paper's
 //!   "CUDA C" reference solver and the cross-check oracle for the AOT
-//!   path), plus the `compute_threads` worker pool that x-chunks any
-//!   region step across threads bitwise-identically.
+//!   path), plus the `compute_threads` slab decomposition that x-chunks
+//!   any region step onto the scheduler pool bitwise-identically.
 //! * [`runtime`] — PJRT executor: loads the AOT-lowered JAX/Pallas HLO
 //!   artifacts and runs them from the Rust hot path (Python is build-time
 //!   only).
@@ -147,6 +156,7 @@ pub mod mpisim;
 pub mod overlap;
 pub mod physics;
 pub mod runtime;
+pub mod sched;
 pub mod util;
 
 /// The most common imports, for examples and applications.
@@ -160,6 +170,7 @@ pub mod prelude {
     pub use crate::mpisim::{CartComm, Comm, Network, NetModel, NicMode};
     pub use crate::overlap::HideWidths;
     pub use crate::physics::{Field3D, Region};
+    pub use crate::sched::{Pool, TaskClass};
 }
 
 /// Width of the overlap (in grid cells) between neighbouring local grids for

@@ -25,8 +25,17 @@ fn run_flags(cmd: Command) -> Command {
         .value("backend", Some("native"), "stencil backend: native|pjrt")
         .value("path", Some("rdma"), "halo transfer path: rdma|staged")
         .value("chunks", Some("4"), "pipeline chunks for the staged path")
-        .value("compute-threads", Some("1"), "worker threads per rank (native backend)")
-        .value("comm-threads", Some("1"), "halo pack/unpack worker threads per rank")
+        .value(
+            "compute-threads",
+            Some("1"),
+            "compute-class participants on the per-rank scheduler pool (native backend)",
+        )
+        .value(
+            "comm-threads",
+            Some("1"),
+            "comm-class (halo pack/unpack) participants on the same pool",
+        )
+        .value("diag-every", Some("0"), "print in-situ diagnostics every N steps (0 = off)")
         .value(
             "net",
             Some("ideal"),

@@ -25,15 +25,18 @@
 //! splits per call.
 //!
 //! With `compute_threads > 1` the executor x-chunks the inner-region call
-//! over `physics::parallel`'s worker pool, so the inner compute saturates
-//! the "xPU" while the communication stream exchanges — the workers stay
-//! strictly inside the boundary width, preserving the disjointness contract
-//! with the in-flight exchange. The comm stream has its own knob:
-//! `comm_threads > 1` threads the engine's plane pack/unpack (and the
-//! engine pipelines fields against each other within a dimension), which
-//! shrinks the exchange the hide window must cover — the two pools are
-//! independent, so comm-side workers touch only boundary planes and the
-//! disjointness contract is unchanged.
+//! as compute-class slab jobs on the grid's persistent scheduler pool
+//! ([`crate::sched::Pool`]), so the inner compute saturates the "xPU" while
+//! the communication stream exchanges — the slabs stay strictly inside the
+//! boundary width, preserving the disjointness contract with the in-flight
+//! exchange. With `comm_threads > 1` the engine's plane pack/unpack fans
+//! out as comm-class chunks on the **same** pool (and the engine pipelines
+//! fields against each other within a dimension), which shrinks the
+//! exchange the hide window must cover. One pool serves both: workers
+//! claim comm-class chunks before pending compute slabs, so the exchange
+//! never starves behind inner tiles and the two knobs no longer
+//! oversubscribe each other's cores; comm-side chunks touch only boundary
+//! planes, so the disjointness contract is unchanged.
 //!
 //! The hide window (phase 3's inner compute) absorbs whatever instants the
 //! network model produces. Under the contended model

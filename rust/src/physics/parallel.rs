@@ -1,28 +1,32 @@
-//! Multi-threaded xPU compute backend: x-chunked region steps on a
-//! [`std::thread::scope`] worker pool.
+//! Multi-threaded xPU compute backend: x-chunked region steps submitted to
+//! the persistent [`sched::Pool`](crate::sched::Pool) as
+//! [`TaskClass::Compute`] jobs.
 //!
 //! The paper's xPU saturates its device with thousands of threads; this
 //! testbed's "device" is the host CPU, so the analog is running the stencil
-//! region across worker threads. A region is split into at most
-//! `threads` x-slabs — exactly the decomposition the
-//! `region_updates_compose_to_full` contract proves bitwise-identical to a
-//! single full-region step. In C-order layout (x slowest) each slab's
-//! output rows form one *contiguous* range, so the output arrays are
-//! partitioned with `split_at_mut` and every worker owns its window
-//! exclusively — the whole dispatch is safe code, no aliasing.
+//! region across pool workers. A region is split into at most `threads`
+//! x-slabs — exactly the decomposition the `region_updates_compose_to_full`
+//! contract proves bitwise-identical to a single full-region step. In
+//! C-order layout (x slowest) each slab's output rows form one *contiguous*
+//! range, so each chunk takes a disjoint [`SharedSlice`] window of the
+//! output arrays and every participant owns its window exclusively.
 //!
-//! Used by the executors for every region at or above
-//! [`PAR_MIN_CELLS`] — in particular the *inner* region of
-//! `hide_communication`, which therefore computes in parallel while the
-//! communication stream exchanges halos. Tiny boundary slabs stay serial:
-//! spawning costs more than they do.
+//! Used by the executors for every region at or above [`PAR_MIN_CELLS`] —
+//! in particular the *inner* region of `hide_communication`, which
+//! therefore computes on the shared pool while the communication stream's
+//! comm-class pack/unpack jobs preempt it chunk-by-chunk. Tiny boundary
+//! slabs stay serial: even pool dispatch costs more than they do.
 
 use super::{
     diffusion3d, twophase, wave, DiffusionParams, Field3D, Region, TwophaseParams, WaveParams,
 };
+use crate::sched::{Pool, SharedSlice, TaskClass};
 
-/// Regions below this many cells run serially — thread spawn/join overhead
-/// (~10 us) outweighs the compute of smaller boxes.
+/// Regions below this many cells run serially — even with the persistent
+/// pool (no spawn/join), waking workers and crossing the job board costs
+/// on the order of a microsecond, which outweighs the compute of smaller
+/// boxes. (The pack-side gate, `PACK_PAR_MIN_CELLS`, is far lower: a
+/// packed cell is a copy, a stencil cell is ~20 flops.)
 pub const PAR_MIN_CELLS: usize = 16 * 1024;
 
 /// The `i`-th of `n` nearly equal contiguous chunk ranges of `len`
@@ -38,76 +42,41 @@ pub fn chunk_range(len: usize, n: usize, i: usize) -> (usize, usize) {
     (lo, hi)
 }
 
-/// Run `work(i)` for every chunk index `0..n`: chunk 0 on the calling
-/// thread, the rest on scoped workers (joined before returning). `n <= 1`
-/// degenerates to a plain call with no spawn — the scalar fallback of the
-/// threaded pack/unpack and compute paths.
-pub fn scoped_chunks(n: usize, work: impl Fn(usize) + Sync) {
-    if n <= 1 {
-        work(0);
-        return;
-    }
-    std::thread::scope(|s| {
-        let work = &work;
-        for i in 1..n {
-            s.spawn(move || work(i));
-        }
-        work(0);
-    });
-}
-
-/// Split `region` into at most `n` x-slabs covering it exactly, in
-/// ascending x order. Every slab is non-empty; fewer than `n` come back
-/// when the region has fewer than `n` x-planes.
-pub fn split_x(region: Region, n: usize) -> Vec<Region> {
+/// The `i`-th of `n` x-slabs of `region` (callers clamp `n` to
+/// `region.size[0]` first, so every slab is non-empty). Slab `i` covers
+/// x-planes `[i*sx/n, (i+1)*sx/n)` of the region — pure index arithmetic,
+/// identical for every thread count that yields the same `n`, which is
+/// what keeps the pooled step bitwise equal to the serial one.
+pub fn slab_x(region: Region, n: usize, i: usize) -> Region {
     let sx = region.size[0];
-    let n = n.clamp(1, sx.max(1));
-    (0..n)
-        .map(|i| {
-            let lo = i * sx / n;
-            let hi = (i + 1) * sx / n;
-            Region::new(
-                [region.offset[0] + lo, region.offset[1], region.offset[2]],
-                [hi - lo, region.size[1], region.size[2]],
-            )
-        })
-        .collect()
+    let lo = i * sx / n;
+    let hi = (i + 1) * sx / n;
+    Region::new(
+        [region.offset[0] + lo, region.offset[1], region.offset[2]],
+        [hi - lo, region.size[1], region.size[2]],
+    )
 }
 
-/// Should `region` run on the worker pool?
-fn parallelize(threads: usize, region: Region) -> bool {
-    threads > 1 && region.size[0] >= 2 && region.cells() >= PAR_MIN_CELLS
+/// Should `region` run on the scheduler pool?
+fn parallelize(pool: &Pool, threads: usize, region: Region) -> bool {
+    pool.workers() > 0 && threads > 1 && region.size[0] >= 2 && region.cells() >= PAR_MIN_CELLS
 }
 
-/// Partition `out` into per-slab windows: slab `i` gets the contiguous
-/// sub-slice covering its x-planes, paired with the flat index that
-/// sub-slice starts at. Slabs must be contiguous in x (as from
-/// [`split_x`]); `row` is `ny * nz`.
-fn windows<'a>(
-    out: &'a mut [f64],
-    slabs: &[Region],
-    row: usize,
-) -> Vec<(&'a mut [f64], usize)> {
-    let x0 = slabs[0].offset[0];
-    let (_, mut rest) = out.split_at_mut(x0 * row);
-    let mut consumed = x0 * row;
-    let mut wins = Vec::with_capacity(slabs.len());
-    for slab in slabs {
-        debug_assert_eq!(slab.offset[0] * row, consumed, "slabs must tile contiguously");
-        let take = slab.size[0] * row;
-        let (win, tail) = std::mem::take(&mut rest).split_at_mut(take);
-        wins.push((win, consumed));
-        rest = tail;
-        consumed += take;
-    }
-    wins
+/// The contiguous output window of slab `i`: the flat range covering its
+/// x-planes in a field with `row = ny * nz` cells per x-plane.
+fn slab_window(out: &SharedSlice, slab: Region, row: usize) -> (&'static mut [f64], usize) {
+    let start = slab.offset[0] * row;
+    let win = unsafe { out.window(start, start + slab.size[0] * row) };
+    (win, start)
 }
 
-/// Diffusion step on `region`, x-chunked across `threads` workers.
-/// Bitwise-identical to [`diffusion3d::step_region`] (slab composition is
-/// exact; every cell is computed by exactly one worker with identical
-/// arithmetic).
+/// Diffusion step on `region`, x-chunked across up to `threads`
+/// participants of `pool`. Bitwise-identical to
+/// [`diffusion3d::step_region`] (slab composition is exact; every cell is
+/// computed by exactly one chunk with identical arithmetic, regardless of
+/// which thread runs it).
 pub fn diffusion_step_region(
+    pool: &Pool,
     threads: usize,
     t: &Field3D,
     ci: &Field3D,
@@ -116,28 +85,26 @@ pub fn diffusion_step_region(
     t2: &mut Field3D,
 ) {
     assert_eq!(t2.dims(), t.dims(), "T2 dims mismatch");
-    if !parallelize(threads, region) {
+    if !parallelize(pool, threads, region) {
         diffusion3d::step_region(t, ci, p, region, t2);
         return;
     }
     let [_, ny, nz] = t.dims();
-    let slabs = split_x(region, threads);
-    let wins = windows(t2.as_mut_slice(), &slabs, ny * nz);
-    std::thread::scope(|s| {
-        // First slab runs on the calling thread; the rest on workers.
-        let mut wins = wins.into_iter();
-        let (win0, start0) = wins.next().expect("at least one slab");
-        for (&slab, (win, start)) in slabs[1..].iter().zip(wins) {
-            s.spawn(move || diffusion3d::step_region_windowed(t, ci, p, slab, win, start));
-        }
-        diffusion3d::step_region_windowed(t, ci, p, slabs[0], win0, start0);
+    let row = ny * nz;
+    let n = threads.min(region.size[0]);
+    let out = SharedSlice::of(t2.as_mut_slice());
+    pool.run_chunks(TaskClass::Compute, n, &|i| {
+        let slab = slab_x(region, n, i);
+        let (win, start) = slab_window(&out, slab, row);
+        diffusion3d::step_region_windowed(t, ci, p, slab, win, start);
     });
 }
 
-/// Two-phase step on `region`, x-chunked across `threads` workers.
-/// Bitwise-identical to [`twophase::step_region`].
+/// Two-phase step on `region`, x-chunked across up to `threads`
+/// participants of `pool`. Bitwise-identical to [`twophase::step_region`].
 #[allow(clippy::too_many_arguments)]
 pub fn twophase_step_region(
+    pool: &Pool,
     threads: usize,
     pe: &Field3D,
     phi: &Field3D,
@@ -146,16 +113,23 @@ pub fn twophase_step_region(
     pe2: &mut Field3D,
     phi2: &mut Field3D,
 ) {
-    let mut scratch = Vec::new();
-    twophase_step_region_scratch(threads, pe, phi, p, region, pe2, phi2, &mut scratch);
+    let mut rings = Vec::new();
+    twophase_step_region_scratch(pool, threads, pe, phi, p, region, pe2, phi2, &mut rings);
 }
 
-/// As [`twophase_step_region`], with a caller-owned mobility scratch for
-/// the serial path (threaded slabs build worker-local rings — they spawn
-/// threads anyway). The executor holds one such buffer so the serial
-/// steady state is heap-allocation-free.
+/// Per-slab mobility-ring pointer crossing into pool chunks: chunk `i`
+/// exclusively owns ring `i`.
+struct RingsPtr(*mut Vec<f64>);
+unsafe impl Send for RingsPtr {}
+unsafe impl Sync for RingsPtr {}
+
+/// As [`twophase_step_region`], with caller-owned mobility scratch rings:
+/// ring `i` serves slab `i` (the serial path uses ring 0 only). The rings
+/// grow on first use and are reused afterwards, so the executor-held
+/// buffers make the steady state heap-allocation-free at any thread count.
 #[allow(clippy::too_many_arguments)]
 pub fn twophase_step_region_scratch(
+    pool: &Pool,
     threads: usize,
     pe: &Field3D,
     phi: &Field3D,
@@ -163,34 +137,43 @@ pub fn twophase_step_region_scratch(
     region: Region,
     pe2: &mut Field3D,
     phi2: &mut Field3D,
-    scratch: &mut Vec<f64>,
+    rings: &mut Vec<Vec<f64>>,
 ) {
     assert_eq!(pe2.dims(), pe.dims(), "pe2 dims mismatch");
     assert_eq!(phi2.dims(), pe.dims(), "phi2 dims mismatch");
-    if !parallelize(threads, region) {
-        twophase::step_region_scratch(pe, phi, p, region, pe2, phi2, scratch);
+    if !parallelize(pool, threads, region) {
+        if rings.is_empty() {
+            rings.push(Vec::new());
+        }
+        twophase::step_region_scratch(pe, phi, p, region, pe2, phi2, &mut rings[0]);
         return;
     }
     let [_, ny, nz] = pe.dims();
-    let slabs = split_x(region, threads);
-    let pe_wins = windows(pe2.as_mut_slice(), &slabs, ny * nz);
-    let phi_wins = windows(phi2.as_mut_slice(), &slabs, ny * nz);
-    std::thread::scope(|s| {
-        let mut wins = pe_wins.into_iter().zip(phi_wins);
-        let ((pe0, start0), (phi0, _)) = wins.next().expect("at least one slab");
-        for (&slab, ((pe_win, start), (phi_win, _))) in slabs[1..].iter().zip(wins) {
-            s.spawn(move || {
-                twophase::step_region_windowed(pe, phi, p, slab, pe_win, phi_win, start);
-            });
-        }
-        twophase::step_region_windowed(pe, phi, p, slabs[0], pe0, phi0, start0);
+    let row = ny * nz;
+    let n = threads.min(region.size[0]);
+    while rings.len() < n {
+        rings.push(Vec::new());
+    }
+    let pe_out = SharedSlice::of(pe2.as_mut_slice());
+    let phi_out = SharedSlice::of(phi2.as_mut_slice());
+    let rings_ptr = RingsPtr(rings.as_mut_ptr());
+    pool.run_chunks(TaskClass::Compute, n, &|i| {
+        let slab = slab_x(region, n, i);
+        let (pe_win, start) = slab_window(&pe_out, slab, row);
+        let (phi_win, _) = slab_window(&phi_out, slab, row);
+        // SAFETY: chunk i is the only accessor of ring i, and rings
+        // outlives the fork-join (run_chunks blocks until every chunk
+        // completed).
+        let ring = unsafe { &mut *rings_ptr.0.add(i) };
+        twophase::step_region_windowed_scratch(pe, phi, p, slab, pe_win, phi_win, start, ring);
     });
 }
 
-/// Acoustic wave step on `region`, x-chunked across `threads` workers.
-/// Bitwise-identical to [`wave::step_region`].
+/// Acoustic wave step on `region`, x-chunked across up to `threads`
+/// participants of `pool`. Bitwise-identical to [`wave::step_region`].
 #[allow(clippy::too_many_arguments)]
 pub fn wave_step_region(
+    pool: &Pool,
     threads: usize,
     p: &Field3D,
     vx: &Field3D,
@@ -207,31 +190,24 @@ pub fn wave_step_region(
     assert_eq!(vx2.dims(), p.dims(), "vx2 dims mismatch");
     assert_eq!(vy2.dims(), p.dims(), "vy2 dims mismatch");
     assert_eq!(vz2.dims(), p.dims(), "vz2 dims mismatch");
-    if !parallelize(threads, region) {
+    if !parallelize(pool, threads, region) {
         wave::step_region(p, vx, vy, vz, prm, region, p2, vx2, vy2, vz2);
         return;
     }
     let [_, ny, nz] = p.dims();
-    let slabs = split_x(region, threads);
-    let p_wins = windows(p2.as_mut_slice(), &slabs, ny * nz);
-    let vx_wins = windows(vx2.as_mut_slice(), &slabs, ny * nz);
-    let vy_wins = windows(vy2.as_mut_slice(), &slabs, ny * nz);
-    let vz_wins = windows(vz2.as_mut_slice(), &slabs, ny * nz);
-    std::thread::scope(|s| {
-        let mut wins = p_wins
-            .into_iter()
-            .zip(vx_wins)
-            .zip(vy_wins)
-            .zip(vz_wins)
-            .map(|(((pw, xw), yw), zw)| (pw, xw, yw, zw));
-        let ((p0, start0), (vx0, _), (vy0, _), (vz0, _)) =
-            wins.next().expect("at least one slab");
-        for (&slab, ((pw, start), (xw, _), (yw, _), (zw, _))) in slabs[1..].iter().zip(wins) {
-            s.spawn(move || {
-                wave::step_region_windowed(p, vx, vy, vz, prm, slab, pw, xw, yw, zw, start);
-            });
-        }
-        wave::step_region_windowed(p, vx, vy, vz, prm, slabs[0], p0, vx0, vy0, vz0, start0);
+    let row = ny * nz;
+    let n = threads.min(region.size[0]);
+    let p_out = SharedSlice::of(p2.as_mut_slice());
+    let vx_out = SharedSlice::of(vx2.as_mut_slice());
+    let vy_out = SharedSlice::of(vy2.as_mut_slice());
+    let vz_out = SharedSlice::of(vz2.as_mut_slice());
+    pool.run_chunks(TaskClass::Compute, n, &|i| {
+        let slab = slab_x(region, n, i);
+        let (pw, start) = slab_window(&p_out, slab, row);
+        let (xw, _) = slab_window(&vx_out, slab, row);
+        let (yw, _) = slab_window(&vy_out, slab, row);
+        let (zw, _) = slab_window(&vz_out, slab, row);
+        wave::step_region_windowed(p, vx, vy, vz, prm, slab, pw, xw, yw, zw, start);
     });
 }
 
@@ -243,6 +219,10 @@ mod tests {
     fn rand_field(dims: [usize; 3], seed: u64, lo: f64, hi: f64) -> Field3D {
         let mut rng = Rng::new(seed);
         Field3D::from_fn(dims, |_, _, _| rng.range(lo, hi))
+    }
+
+    fn pool_for(threads: usize) -> Pool {
+        Pool::new(threads.saturating_sub(1))
     }
 
     #[test]
@@ -265,25 +245,10 @@ mod tests {
     }
 
     #[test]
-    fn scoped_chunks_runs_every_index_once() {
-        use std::sync::atomic::{AtomicUsize, Ordering};
-        for n in [1usize, 2, 7] {
-            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
-            scoped_chunks(n, |i| {
-                hits[i].fetch_add(1, Ordering::Relaxed);
-            });
-            for (i, h) in hits.iter().enumerate() {
-                assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i} of {n}");
-            }
-        }
-    }
-
-    #[test]
-    fn split_x_partitions_exactly() {
+    fn slab_x_partitions_exactly() {
         let r = Region::new([2, 1, 3], [10, 7, 5]);
-        for n in 1..=12 {
-            let slabs = split_x(r, n);
-            assert!(slabs.len() <= n.min(10));
+        for n in 1..=10 {
+            let slabs: Vec<Region> = (0..n).map(|i| slab_x(r, n, i)).collect();
             assert_eq!(slabs[0].offset, r.offset);
             let mut x = r.offset[0];
             let mut cells = 0;
@@ -292,30 +257,13 @@ mod tests {
                 assert_eq!(s.offset[1], r.offset[1]);
                 assert_eq!(s.size[1], r.size[1]);
                 assert_eq!(s.size[2], r.size[2]);
-                assert!(s.size[0] >= 1, "no empty slabs");
+                assert!(s.size[0] >= 1, "no empty slabs for n <= size[0]");
                 x += s.size[0];
                 cells += s.cells();
             }
             assert_eq!(x, r.offset[0] + r.size[0]);
             assert_eq!(cells, r.cells());
         }
-    }
-
-    #[test]
-    fn windows_partition_is_exact() {
-        let r = Region::new([2, 1, 1], [6, 3, 3]);
-        let slabs = split_x(r, 3);
-        let row = 5 * 5; // ny * nz of a [10, 5, 5] field
-        let mut out = vec![0.0; 10 * 5 * 5];
-        let wins = windows(&mut out, &slabs, row);
-        assert_eq!(wins.len(), 3);
-        let mut expect_start = 2 * row;
-        for ((win, start), slab) in wins.iter().zip(&slabs) {
-            assert_eq!(*start, expect_start);
-            assert_eq!(win.len(), slab.size[0] * row);
-            expect_start += win.len();
-        }
-        assert_eq!(expect_start, 8 * row, "windows cover exactly the region's x-planes");
     }
 
     #[test]
@@ -330,8 +278,9 @@ mod tests {
         let mut serial = t.clone();
         diffusion3d::step_region(&t, &ci, &p, region, &mut serial);
         for threads in [2, 3, 8] {
+            let pool = pool_for(threads);
             let mut par = t.clone();
-            diffusion_step_region(threads, &t, &ci, &p, region, &mut par);
+            diffusion_step_region(&pool, threads, &t, &ci, &p, region, &mut par);
             assert_eq!(
                 serial.max_abs_diff(&par),
                 0.0,
@@ -350,11 +299,36 @@ mod tests {
         let (mut pe_s, mut phi_s) = (pe.clone(), phi.clone());
         twophase::step_region(&pe, &phi, &p, region, &mut pe_s, &mut phi_s);
         for threads in [2, 5] {
+            let pool = pool_for(threads);
             let (mut pe_p, mut phi_p) = (pe.clone(), phi.clone());
-            twophase_step_region(threads, &pe, &phi, &p, region, &mut pe_p, &mut phi_p);
+            twophase_step_region(&pool, threads, &pe, &phi, &p, region, &mut pe_p, &mut phi_p);
             assert_eq!(pe_s.max_abs_diff(&pe_p), 0.0, "threads={threads} Pe");
             assert_eq!(phi_s.max_abs_diff(&phi_p), 0.0, "threads={threads} phi");
         }
+    }
+
+    #[test]
+    fn twophase_rings_are_reused_not_regrown() {
+        let dims = [34, 30, 30];
+        let pe = rand_field(dims, 13, -0.1, 0.1);
+        let phi = rand_field(dims, 14, 0.01, 0.05);
+        let p = TwophaseParams::stable(0.1, 0.1, 0.1);
+        let region = Region::interior(dims);
+        let pool = pool_for(4);
+        let mut rings = Vec::new();
+        let (mut pe2, mut phi2) = (pe.clone(), phi.clone());
+        twophase_step_region_scratch(
+            &pool, 4, &pe, &phi, &p, region, &mut pe2, &mut phi2, &mut rings,
+        );
+        assert_eq!(rings.len(), 4, "one ring per slab");
+        let caps: Vec<usize> = rings.iter().map(|r| r.capacity()).collect();
+        for _ in 0..3 {
+            twophase_step_region_scratch(
+                &pool, 4, &pe, &phi, &p, region, &mut pe2, &mut phi2, &mut rings,
+            );
+        }
+        let caps2: Vec<usize> = rings.iter().map(|r| r.capacity()).collect();
+        assert_eq!(caps, caps2, "steady-state steps must not regrow the rings");
     }
 
     #[test]
@@ -372,11 +346,12 @@ mod tests {
             &p, &vx, &vy, &vz, &prm, region, &mut p_s, &mut vx_s, &mut vy_s, &mut vz_s,
         );
         for threads in [2, 5] {
+            let pool = pool_for(threads);
             let (mut p_p, mut vx_p, mut vy_p, mut vz_p) =
                 (p.clone(), vx.clone(), vy.clone(), vz.clone());
             wave_step_region(
-                threads, &p, &vx, &vy, &vz, &prm, region, &mut p_p, &mut vx_p, &mut vy_p,
-                &mut vz_p,
+                &pool, threads, &p, &vx, &vy, &vz, &prm, region, &mut p_p, &mut vx_p,
+                &mut vy_p, &mut vz_p,
             );
             assert_eq!(p_s.max_abs_diff(&p_p), 0.0, "threads={threads} p");
             assert_eq!(vx_s.max_abs_diff(&vx_p), 0.0, "threads={threads} vx");
@@ -394,9 +369,17 @@ mod tests {
         let region = Region::interior(dims);
         let mut serial = t.clone();
         diffusion3d::step_region(&t, &ci, &p, region, &mut serial);
+        let pool = pool_for(16);
+        let before = pool.stats();
         let mut par = t.clone();
-        diffusion_step_region(16, &t, &ci, &p, region, &mut par);
+        diffusion_step_region(&pool, 16, &t, &ci, &p, region, &mut par);
         assert_eq!(serial.max_abs_diff(&par), 0.0);
+        let after = pool.stats();
+        assert_eq!(
+            (after.executed_compute, after.executed_comm),
+            (before.executed_compute, before.executed_comm),
+            "below the gate the pool must not be engaged"
+        );
     }
 
     #[test]
@@ -406,7 +389,8 @@ mod tests {
         let ci = rand_field(dims, 8, 0.1, 1.0);
         let p = DiffusionParams { lam: 1.0, dt: 1e-4, dx: 0.1, dy: 0.1, dz: 0.1 };
         let mut t2 = Field3D::filled(dims, 9.0);
-        diffusion_step_region(4, &t, &ci, &p, Region::interior(dims), &mut t2);
+        let pool = pool_for(4);
+        diffusion_step_region(&pool, 4, &t, &ci, &p, Region::interior(dims), &mut t2);
         let [nx, ny, nz] = dims;
         for iy in 0..ny {
             for iz in 0..nz {

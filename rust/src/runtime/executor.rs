@@ -9,8 +9,10 @@
 //! are scattered into the destination fields.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::physics::{parallel, DiffusionParams, Field3D, Region, TwophaseParams, WaveParams};
+use crate::sched::Pool;
 
 use super::artifacts::{ArtifactStore, ProgramSpec};
 use super::pjrt::PjrtContext;
@@ -114,11 +116,20 @@ impl PjrtPrograms {
     }
 }
 
+/// The pool executors fall back to when none is shared with them:
+/// `threads`-way parallelism needs `threads - 1` workers (the submitting
+/// thread participates), and 1 thread means a worker-less inline pool.
+fn own_pool(threads: usize) -> Arc<Pool> {
+    Arc::new(Pool::new(threads.saturating_sub(1)))
+}
+
 /// Executor for the 3-D heat diffusion step.
 pub struct DiffusionExecutor {
     pjrt: Option<PjrtPrograms>,
-    /// Worker threads for the native backend (1 = serial). Large regions
-    /// are x-chunked over `physics::parallel`'s scoped pool.
+    /// Scheduler pool the native backend submits compute-class slab jobs
+    /// to — the grid's shared pool under the coordinator, or a private one.
+    pool: Arc<Pool>,
+    /// Compute-side participants for the native backend (1 = serial).
     threads: usize,
 }
 
@@ -127,10 +138,18 @@ impl DiffusionExecutor {
         Self::native_threads(1)
     }
 
-    /// Native backend computing big regions on `threads` workers
-    /// (bitwise-identical to serial; see `physics::parallel`).
+    /// Native backend computing big regions with `threads` participants on
+    /// a pool of its own (bitwise-identical to serial; see
+    /// `physics::parallel`).
     pub fn native_threads(threads: usize) -> Self {
-        DiffusionExecutor { pjrt: None, threads: threads.max(1) }
+        Self::native_pooled(own_pool(threads), threads)
+    }
+
+    /// Native backend submitting compute-class slab jobs to a shared
+    /// scheduler pool — the coordinator passes the grid's pool here so
+    /// compute and halo comm work share one set of workers.
+    pub fn native_pooled(pool: Arc<Pool>, threads: usize) -> Self {
+        DiffusionExecutor { pjrt: None, pool, threads: threads.max(1) }
     }
 
     pub fn pjrt(
@@ -140,6 +159,7 @@ impl DiffusionExecutor {
     ) -> anyhow::Result<Self> {
         Ok(DiffusionExecutor {
             pjrt: Some(PjrtPrograms::load("diffusion", shape, widths, store)?),
+            pool: Arc::new(Pool::new(0)),
             threads: 1,
         })
     }
@@ -163,7 +183,7 @@ impl DiffusionExecutor {
     ) -> anyhow::Result<()> {
         match &mut self.pjrt {
             None => {
-                parallel::diffusion_step_region(self.threads, t, ci, p, region, t2);
+                parallel::diffusion_step_region(&self.pool, self.threads, t, ci, p, region, t2);
                 Ok(())
             }
             Some(progs) => progs.run_region(
@@ -180,11 +200,14 @@ impl DiffusionExecutor {
 /// Executor for the two-phase flow iteration.
 pub struct TwophaseExecutor {
     pjrt: Option<PjrtPrograms>,
-    /// Worker threads for the native backend (1 = serial).
+    /// Scheduler pool for the native backend's compute-class slab jobs.
+    pool: Arc<Pool>,
+    /// Compute-side participants for the native backend (1 = serial).
     threads: usize,
-    /// Reusable mobility-ring scratch for the serial native path (keeps
-    /// the steady-state step heap-allocation-free).
-    scratch: Vec<f64>,
+    /// Reusable per-chunk mobility-ring scratch for the native path
+    /// (ring `i` belongs to chunk `i`; keeps the steady-state step
+    /// heap-allocation-free at any thread count).
+    rings: Vec<Vec<f64>>,
 }
 
 impl TwophaseExecutor {
@@ -192,9 +215,16 @@ impl TwophaseExecutor {
         Self::native_threads(1)
     }
 
-    /// Native backend computing big regions on `threads` workers.
+    /// Native backend computing big regions with `threads` participants on
+    /// a pool of its own.
     pub fn native_threads(threads: usize) -> Self {
-        TwophaseExecutor { pjrt: None, threads: threads.max(1), scratch: Vec::new() }
+        Self::native_pooled(own_pool(threads), threads)
+    }
+
+    /// Native backend submitting compute-class slab jobs to a shared
+    /// scheduler pool (see [`DiffusionExecutor::native_pooled`]).
+    pub fn native_pooled(pool: Arc<Pool>, threads: usize) -> Self {
+        TwophaseExecutor { pjrt: None, pool, threads: threads.max(1), rings: Vec::new() }
     }
 
     pub fn pjrt(
@@ -204,8 +234,9 @@ impl TwophaseExecutor {
     ) -> anyhow::Result<Self> {
         Ok(TwophaseExecutor {
             pjrt: Some(PjrtPrograms::load("twophase", shape, widths, store)?),
+            pool: Arc::new(Pool::new(0)),
             threads: 1,
-            scratch: Vec::new(),
+            rings: Vec::new(),
         })
     }
 
@@ -230,6 +261,7 @@ impl TwophaseExecutor {
         match &mut self.pjrt {
             None => {
                 parallel::twophase_step_region_scratch(
+                    &self.pool,
                     self.threads,
                     pe,
                     phi,
@@ -237,7 +269,7 @@ impl TwophaseExecutor {
                     region,
                     pe2,
                     phi2,
-                    &mut self.scratch,
+                    &mut self.rings,
                 );
                 Ok(())
             }
@@ -255,7 +287,9 @@ impl TwophaseExecutor {
 /// Executor for the 3-D acoustic wave step (velocity–pressure staggered).
 pub struct WaveExecutor {
     pjrt: Option<PjrtPrograms>,
-    /// Worker threads for the native backend (1 = serial).
+    /// Scheduler pool for the native backend's compute-class slab jobs.
+    pool: Arc<Pool>,
+    /// Compute-side participants for the native backend (1 = serial).
     threads: usize,
 }
 
@@ -264,9 +298,16 @@ impl WaveExecutor {
         Self::native_threads(1)
     }
 
-    /// Native backend computing big regions on `threads` workers.
+    /// Native backend computing big regions with `threads` participants on
+    /// a pool of its own.
     pub fn native_threads(threads: usize) -> Self {
-        WaveExecutor { pjrt: None, threads: threads.max(1) }
+        Self::native_pooled(own_pool(threads), threads)
+    }
+
+    /// Native backend submitting compute-class slab jobs to a shared
+    /// scheduler pool (see [`DiffusionExecutor::native_pooled`]).
+    pub fn native_pooled(pool: Arc<Pool>, threads: usize) -> Self {
+        WaveExecutor { pjrt: None, pool, threads: threads.max(1) }
     }
 
     /// PJRT backend. No wave artifacts ship in the default set yet, so this
@@ -279,6 +320,7 @@ impl WaveExecutor {
     ) -> anyhow::Result<Self> {
         Ok(WaveExecutor {
             pjrt: Some(PjrtPrograms::load("wave", shape, widths, store)?),
+            pool: Arc::new(Pool::new(0)),
             threads: 1,
         })
     }
@@ -308,6 +350,7 @@ impl WaveExecutor {
         match &mut self.pjrt {
             None => {
                 parallel::wave_step_region(
+                    &self.pool,
                     self.threads,
                     p,
                     vx,

@@ -1,0 +1,52 @@
+//! The persistent task-scheduler runtime: one parked worker pool per rank,
+//! shared by the compute and communication sides.
+//!
+//! Before this subsystem existed, every parallel code path re-spawned
+//! scoped OS threads at its call site: `physics::parallel` spawned a
+//! `std::thread::scope` per region step, and the halo engine's threaded
+//! plane pack/unpack did the same per plane. Spawn/join costs ~10 us, which
+//! forced coarse scalar gates (`PAR_MIN_CELLS`, `PACK_PAR_MIN_CELLS`) and —
+//! worse — meant `compute_threads` and `comm_threads` were two *independent*
+//! thread sets that oversubscribed each other inside `hide_communication`:
+//! the inner-region compute slabs and the comm stream's pack workers fought
+//! for the same cores.
+//!
+//! [`Pool`] replaces all of that with workers created **once per grid (or
+//! executor) lifetime** that park on a condvar when idle. Work is submitted
+//! as fork-join chunk jobs ([`Pool::run_chunks`]) tagged with a
+//! [`TaskClass`]:
+//!
+//! * [`TaskClass::Comm`] — halo pack/unpack chunks (and anything else on
+//!   the critical communication path). Workers always prefer these.
+//! * [`TaskClass::Compute`] — stencil tile chunks.
+//!
+//! The priority rule is what ends the core fight: when the hide path's
+//! inner region is computing on the pool and the comm stream submits a
+//! pack or unpack job, the next free worker takes the comm chunks first,
+//! so the exchange never starves behind compute tiles. Both knobs now size
+//! *one* pool (`max(compute_threads, comm_threads) - 1` workers — the
+//! submitting thread itself always executes, so `threads` participants
+//! need only `threads - 1` workers).
+//!
+//! Submission and completion are **allocation-free**: the job board is a
+//! fixed array of preallocated slots, the work closure crosses to workers
+//! as a raw fat pointer (valid because the submitter blocks until every
+//! chunk completed), and signaling is a pair of condvars. This preserves
+//! the steady-state zero-allocation contract end to end with the runtime
+//! engaged (`tests/steady_state_alloc.rs`).
+//!
+//! Execution stays **bitwise identical** to the serial and scoped paths:
+//! chunk decomposition is pure arithmetic on the chunk index, every cell is
+//! computed by exactly one chunk with identical arithmetic, and *which*
+//! thread runs a chunk cannot affect its result. The 20-case
+//! `distributed_equivalence` sweep pins this.
+//!
+//! [`graph`] layers a small dependency-aware task graph (compute tile,
+//! pack, post, pump, unpack as [`graph::TaskKind`]s) on top of the pool for
+//! step-shaped work where the dependencies are data, not control flow.
+
+mod graph;
+mod pool;
+
+pub use graph::{TaskGraph, TaskId, TaskKind};
+pub use pool::{Pool, PoolStats, SharedSlice, TaskClass};

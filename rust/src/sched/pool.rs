@@ -1,0 +1,505 @@
+//! The persistent, parked worker pool and its allocation-free job board.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// What a submitted job is for. Workers always claim [`TaskClass::Comm`]
+/// chunks before [`TaskClass::Compute`] chunks, so communication-side work
+/// (halo pack/unpack, pump) never starves behind stencil tiles when both
+/// share one pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskClass {
+    /// Stencil tile work (the `compute_threads` side).
+    Compute,
+    /// Halo pack/unpack and other communication-critical work (the
+    /// `comm_threads` side). Claimed with priority.
+    Comm,
+}
+
+impl TaskClass {
+    fn index(self) -> usize {
+        match self {
+            TaskClass::Compute => 0,
+            TaskClass::Comm => 1,
+        }
+    }
+}
+
+/// The work closure as the board stores it: a raw fat pointer with the
+/// caller's lifetime erased. Only dereferenced between publication and the
+/// submitter's completion wait — the submitter blocks in
+/// [`Pool::run_chunks`] until `done == n`, so the pointee outlives every
+/// dereference.
+type WorkPtr = *const (dyn Fn(usize) + Sync + 'static);
+
+/// One preallocated job slot on the board.
+struct Slot {
+    active: bool,
+    class: TaskClass,
+    work: Option<WorkPtr>,
+    /// Total chunks of this job.
+    n: usize,
+    /// Next unclaimed chunk index.
+    next: usize,
+    /// Completed chunks.
+    done: usize,
+}
+
+impl Slot {
+    const fn free() -> Self {
+        Slot { active: false, class: TaskClass::Compute, work: None, n: 0, next: 0, done: 0 }
+    }
+}
+
+/// Concurrent jobs the board can hold. Submitters beyond this wait for a
+/// slot (a job's submitter always drains its own chunks, so slots free up
+/// without external help). In practice at most a handful of threads submit
+/// concurrently (the rank's main thread, the comm stream, graph runners).
+const MAX_JOBS: usize = 16;
+
+/// Everything the mutex protects. Plain fields — chunk claiming, completion
+/// counting and parking bookkeeping all happen under the one lock, which
+/// makes the claim protocol trivially ABA-free (slots are recycled only by
+/// the submitter, under the same lock workers claim through).
+struct Board {
+    slots: [Slot; MAX_JOBS],
+    shutdown: bool,
+    parked_now: usize,
+    total_parks: u64,
+    /// Worker-executed chunks per class (indexed by `TaskClass::index`).
+    executed: [u64; 2],
+}
+
+// SAFETY: `Board` is `!Send` only because of the raw work pointers in its
+// slots. Those are published and consumed exclusively under the pool mutex,
+// and dereferenced only while the submitting thread blocks in `run_chunks`
+// (the pointee is a live `&dyn Fn` on that thread's stack until `done == n`).
+unsafe impl Send for Board {}
+
+fn find_chunk(board: &mut Board, class: TaskClass) -> Option<(usize, usize, WorkPtr)> {
+    for (si, s) in board.slots.iter_mut().enumerate() {
+        if s.active && s.class == class && s.next < s.n {
+            let i = s.next;
+            s.next += 1;
+            return Some((si, i, s.work.expect("active slot carries work")));
+        }
+    }
+    None
+}
+
+/// Claim the best available chunk: any [`TaskClass::Comm`] chunk first,
+/// then [`TaskClass::Compute`] — the priority policy in one place.
+fn claim_prioritized(board: &mut Board) -> Option<(usize, usize, WorkPtr)> {
+    find_chunk(board, TaskClass::Comm).or_else(|| find_chunk(board, TaskClass::Compute))
+}
+
+struct Inner {
+    board: Mutex<Board>,
+    /// Workers park here when the board has no claimable chunk.
+    work_cv: Condvar,
+    /// Submitters wait here for their job's completion (and for a free
+    /// slot when the board is full).
+    done_cv: Condvar,
+    nworkers: usize,
+}
+
+/// Counters for tests and diagnostics (see [`Pool::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Workers currently parked on the condvar.
+    pub parked_now: usize,
+    /// Cumulative park events since pool creation.
+    pub total_parks: u64,
+    /// Chunks executed by workers (not submitters) per class.
+    pub executed_compute: u64,
+    pub executed_comm: u64,
+}
+
+/// The persistent worker pool. Created once per [`crate::grid::GlobalGrid`]
+/// (or per executor, for standalone use) and shared by every parallel code
+/// path of that rank; see the [module docs](crate::sched) for the design.
+///
+/// `Pool::new(0)` is the fully inline pool: no threads are ever created and
+/// [`Pool::run_chunks`] degenerates to a serial loop on the caller — the
+/// `threads = 1` configuration costs exactly nothing.
+pub struct Pool {
+    inner: Arc<Inner>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn `workers` parked worker threads. A job submitted with
+    /// [`Pool::run_chunks`] executes on the submitting thread *plus* up to
+    /// `workers` pool threads, so a `threads`-way parallel caller wants
+    /// `threads - 1` workers.
+    pub fn new(workers: usize) -> Self {
+        let inner = Arc::new(Inner {
+            board: Mutex::new(Board {
+                slots: [const { Slot::free() }; MAX_JOBS],
+                shutdown: false,
+                parked_now: 0,
+                total_parks: 0,
+                executed: [0; 2],
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            nworkers: workers,
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("igg-pool-{i}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Pool { inner, workers: handles }
+    }
+
+    /// Number of worker threads (not counting submitters).
+    pub fn workers(&self) -> usize {
+        self.inner.nworkers
+    }
+
+    /// Snapshot the pool counters.
+    pub fn stats(&self) -> PoolStats {
+        let b = self.inner.board.lock().unwrap();
+        PoolStats {
+            parked_now: b.parked_now,
+            total_parks: b.total_parks,
+            executed_compute: b.executed[TaskClass::Compute.index()],
+            executed_comm: b.executed[TaskClass::Comm.index()],
+        }
+    }
+
+    /// Run `work(i)` for every chunk index `0..n`, fork-join. The calling
+    /// thread participates (it claims chunks of its own job until none
+    /// remain, then blocks until workers finish the rest), so the job
+    /// completes even with zero free workers — which is also why the board
+    /// can never deadlock on slot exhaustion. Performs **no heap
+    /// allocation**: the job occupies a preallocated slot and the closure
+    /// crosses to workers as a raw pointer.
+    ///
+    /// `n <= 1` or a worker-less pool short-circuits to plain calls on the
+    /// caller — the serial configuration never touches the board.
+    pub fn run_chunks(&self, class: TaskClass, n: usize, work: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        if n == 1 || self.inner.nworkers == 0 {
+            for i in 0..n {
+                work(i);
+            }
+            return;
+        }
+        // Erase the caller's lifetime; see `WorkPtr` for why this is sound.
+        let work_ptr: WorkPtr =
+            unsafe { std::mem::transmute(work as *const (dyn Fn(usize) + Sync)) };
+
+        let mut b = self.inner.board.lock().unwrap();
+        let si = loop {
+            if let Some(si) = b.slots.iter().position(|s| !s.active) {
+                break si;
+            }
+            b = self.inner.done_cv.wait(b).unwrap();
+        };
+        {
+            let s = &mut b.slots[si];
+            s.active = true;
+            s.class = class;
+            s.work = Some(work_ptr);
+            s.n = n;
+            s.next = 0;
+            s.done = 0;
+        }
+        self.inner.work_cv.notify_all();
+
+        // Participate: claim chunks of *this* job until none remain.
+        loop {
+            let s = &mut b.slots[si];
+            if s.next >= s.n {
+                break;
+            }
+            let i = s.next;
+            s.next += 1;
+            drop(b);
+            work(i);
+            b = self.inner.board.lock().unwrap();
+            b.slots[si].done += 1;
+        }
+        // Wait for workers to finish the chunks they claimed.
+        while b.slots[si].done < b.slots[si].n {
+            b = self.inner.done_cv.wait(b).unwrap();
+        }
+        b.slots[si].active = false;
+        b.slots[si].work = None;
+        drop(b);
+        // A submitter may be parked waiting for a free slot.
+        self.inner.done_cv.notify_all();
+    }
+
+    /// Unclaimed chunks across all active jobs (test introspection).
+    #[cfg(test)]
+    fn unclaimed_chunks(&self) -> usize {
+        let b = self.inner.board.lock().unwrap();
+        b.slots.iter().filter(|s| s.active).map(|s| s.n - s.next).sum()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut b = self.inner.board.lock().unwrap();
+            b.shutdown = true;
+        }
+        self.inner.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            h.join().expect("pool worker panicked");
+        }
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    let mut b = inner.board.lock().unwrap();
+    loop {
+        if b.shutdown {
+            return;
+        }
+        if let Some((si, i, work)) = claim_prioritized(&mut b) {
+            let class = b.slots[si].class;
+            drop(b);
+            // SAFETY: the submitter blocks until `done == n`, so the
+            // closure behind `work` is alive for this call.
+            unsafe { (*work)(i) };
+            b = inner.board.lock().unwrap();
+            b.executed[class.index()] += 1;
+            let s = &mut b.slots[si];
+            s.done += 1;
+            if s.done == s.n {
+                inner.done_cv.notify_all();
+            }
+        } else {
+            b.parked_now += 1;
+            b.total_parks += 1;
+            b = inner.work_cv.wait(b).unwrap();
+            b.parked_now -= 1;
+        }
+    }
+}
+
+/// A buffer (or field allocation) shared across pool workers as a raw
+/// pointer: the chunks' index sets are disjoint by construction, which the
+/// borrow checker cannot see through one slice. Shared by the pooled
+/// compute slabs and the pooled plane pack/unpack.
+///
+/// SAFETY: construct from a live `&mut [f64]`; every worker dereference
+/// happens before the submitting `run_chunks` returns (and therefore
+/// before the borrow ends), and each index is touched by at most one
+/// chunk.
+#[derive(Clone, Copy)]
+pub struct SharedSlice {
+    ptr: *mut f64,
+    len: usize,
+}
+
+unsafe impl Send for SharedSlice {}
+unsafe impl Sync for SharedSlice {}
+
+impl SharedSlice {
+    pub fn of(s: &mut [f64]) -> Self {
+        SharedSlice { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// The raw base pointer (for interleaved scatter writes whose index
+    /// sets are disjoint but not contiguous).
+    pub fn as_ptr(&self) -> *mut f64 {
+        self.ptr
+    }
+
+    /// A contiguous window `[lo, hi)` of the underlying slice.
+    ///
+    /// SAFETY: callers must pass disjoint windows across concurrently live
+    /// borrows, all within the slice this was constructed from.
+    pub unsafe fn window<'a>(&self, lo: usize, hi: usize) -> &'a mut [f64] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+    fn spin_until(cond: impl Fn() -> bool) {
+        let t0 = std::time::Instant::now();
+        while !cond() {
+            assert!(t0.elapsed().as_secs() < 10, "condition not reached in 10s");
+            std::thread::yield_now();
+        }
+    }
+
+    #[test]
+    fn inline_pool_runs_every_chunk_on_caller() {
+        let pool = Pool::new(0);
+        let hits: Vec<AtomicUsize> = (0..7).map(|_| AtomicUsize::new(0)).collect();
+        let caller = std::thread::current().id();
+        pool.run_chunks(TaskClass::Compute, 7, &|i| {
+            assert_eq!(std::thread::current().id(), caller, "no workers, no other threads");
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i}");
+        }
+        assert_eq!(pool.stats().total_parks, 0);
+    }
+
+    #[test]
+    fn every_chunk_runs_exactly_once_across_thread_counts() {
+        for workers in [1usize, 2, 3, 7] {
+            let pool = Pool::new(workers);
+            for n in [1usize, 2, 4, 13, 100] {
+                let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                pool.run_chunks(TaskClass::Comm, n, &|i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::Relaxed), 1, "workers={workers} chunk {i}/{n}");
+                }
+            }
+        }
+    }
+
+    /// Idle workers park on the condvar; submission wakes them; they park
+    /// again when the board drains.
+    #[test]
+    fn workers_park_when_idle_and_wake_for_work() {
+        let pool = Pool::new(2);
+        spin_until(|| pool.stats().parked_now == 2);
+        let parks0 = pool.stats().total_parks;
+
+        let ran = AtomicUsize::new(0);
+        pool.run_chunks(TaskClass::Compute, 16, &|_| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 16);
+
+        // the pool drains and both workers park again (new park events)
+        spin_until(|| pool.stats().parked_now == 2);
+        assert!(pool.stats().total_parks > parks0, "workers re-parked after the job");
+    }
+
+    /// Dropping the pool wakes and joins every worker — clean shutdown,
+    /// even right after work.
+    #[test]
+    fn drop_joins_workers_cleanly() {
+        let pool = Pool::new(4);
+        let ran = AtomicUsize::new(0);
+        pool.run_chunks(TaskClass::Comm, 32, &|_| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        drop(pool); // must not hang or panic
+        assert_eq!(ran.load(Ordering::Relaxed), 32);
+    }
+
+    /// The priority policy: with a Compute job and a Comm job both pending,
+    /// a freed worker claims the Comm chunks first even though the Compute
+    /// job was submitted earlier (FIFO would pick Compute).
+    #[test]
+    fn comm_class_claimed_before_pending_compute() {
+        let pool = Pool::new(1);
+        let gate = AtomicBool::new(false);
+        let order: Mutex<Vec<(&'static str, String)>> = Mutex::new(Vec::new());
+        let record = |what: &'static str| {
+            let name = std::thread::current().name().unwrap_or("?").to_string();
+            order.lock().unwrap().push((what, name));
+        };
+
+        std::thread::scope(|s| {
+            // Occupy the single worker (and the blocker's own thread):
+            // both chunks spin until the gate opens.
+            s.spawn(|| {
+                pool.run_chunks(TaskClass::Compute, 2, &|_| {
+                    while !gate.load(Ordering::Acquire) {
+                        std::thread::yield_now();
+                    }
+                });
+            });
+            spin_until(|| pool.unclaimed_chunks() == 0 && pool.stats().parked_now == 0);
+
+            // Queue a Compute job first ...
+            s.spawn(|| {
+                pool.run_chunks(TaskClass::Compute, 2, &|_| record("compute"));
+            });
+            spin_until(|| pool.unclaimed_chunks() == 1);
+            // ... then a Comm job.
+            s.spawn(|| {
+                pool.run_chunks(TaskClass::Comm, 2, &|_| record("comm"));
+            });
+            spin_until(|| pool.unclaimed_chunks() == 2);
+
+            gate.store(true, Ordering::Release);
+        });
+
+        // Each submitter ran one of its own chunks; the worker ran the
+        // other two — and must have taken the comm chunk first.
+        let order = order.lock().unwrap();
+        let by_worker: Vec<&str> = order
+            .iter()
+            .filter(|(_, name)| name.starts_with("igg-pool-"))
+            .map(|(what, _)| *what)
+            .collect();
+        assert_eq!(by_worker, ["comm", "compute"], "full order: {order:?}");
+        assert_eq!(pool.stats().executed_comm, 1);
+    }
+
+    /// Oversubscription (pool threads > cores) with concurrent submitters
+    /// of both classes — including a job submitted from *inside* a worker —
+    /// must make progress and never deadlock: every submitter drains its
+    /// own job, so completion never depends on a free worker.
+    #[test]
+    fn no_deadlock_under_oversubscription_and_nesting() {
+        let pool = Pool::new(8); // far more than the test runner's cores
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let (pool, total) = (&pool, &total);
+                s.spawn(move || {
+                    for it in 0..50 {
+                        let class = if (t + it) % 2 == 0 {
+                            TaskClass::Compute
+                        } else {
+                            TaskClass::Comm
+                        };
+                        pool.run_chunks(class, 8, &|_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+            // a compute job whose chunks themselves submit comm jobs — the
+            // hide_communication shape (inner tiles + pack jobs), nested
+            s.spawn(|| {
+                for _ in 0..20 {
+                    pool.run_chunks(TaskClass::Compute, 4, &|_| {
+                        pool.run_chunks(TaskClass::Comm, 4, &|_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    });
+                }
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 50 * 8 + 20 * 4 * 4);
+    }
+
+    #[test]
+    fn shared_slice_windows_partition() {
+        let mut v = vec![0.0f64; 100];
+        let s = SharedSlice::of(&mut v);
+        let (a, b) = unsafe { (s.window(0, 40), s.window(40, 100)) };
+        a.fill(1.0);
+        b.fill(2.0);
+        assert!(v[..40].iter().all(|&x| x == 1.0) && v[40..].iter().all(|&x| x == 2.0));
+    }
+}

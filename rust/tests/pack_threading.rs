@@ -12,6 +12,7 @@ use igg::halo::slicing::{
     effective_pack_threads, pack_plane_chunked, pack_plane_raw, pack_plane_threaded, plane_len,
     unpack_plane_chunked, unpack_plane_raw, unpack_plane_threaded, PACK_PAR_MIN_CELLS,
 };
+use igg::sched::Pool;
 use igg::util::prng::Rng;
 
 /// Deterministic pseudo-random field data for `dims`.
@@ -37,6 +38,7 @@ fn chunked_pack_unpack_bitwise_identical_full_sweep() {
     let dims_set: [[usize; 3]; 6] =
         [[5, 7, 9], [1, 13, 6], [13, 1, 6], [6, 5, 1], [2, 3, 4], [3, 16, 2]];
     let chunk_counts = [1usize, 2, 4, 7, 3, 13, 1000];
+    let pool = Pool::new(3);
 
     for (di, &dims) in dims_set.iter().enumerate() {
         let data = rand_data(dims, 0xC0FFEE + di as u64);
@@ -49,7 +51,7 @@ fn chunked_pack_unpack_bitwise_identical_full_sweep() {
 
                 for &chunks in &chunk_counts {
                     let mut got = vec![f64::NAN; cells];
-                    pack_plane_chunked(&data, dims, dim, plane, &mut got, chunks);
+                    pack_plane_chunked(&pool, &data, dims, dim, plane, &mut got, chunks);
                     assert_eq!(
                         got, want,
                         "pack dims={dims:?} dim={dim} plane={plane} chunks={chunks}"
@@ -61,7 +63,7 @@ fn chunked_pack_unpack_bitwise_identical_full_sweep() {
                     let mut serial = noise.clone();
                     unpack_plane_raw(&mut serial, dims, dim, plane, &want);
                     let mut chunked = noise.clone();
-                    unpack_plane_chunked(&mut chunked, dims, dim, plane, &want, chunks);
+                    unpack_plane_chunked(&pool, &mut chunked, dims, dim, plane, &want, chunks);
                     assert_eq!(
                         chunked, serial,
                         "unpack dims={dims:?} dim={dim} plane={plane} chunks={chunks}"
@@ -72,12 +74,13 @@ fn chunked_pack_unpack_bitwise_identical_full_sweep() {
     }
 }
 
-/// The gated `_threaded` entry points: above the size threshold the scoped
-/// workers engage (including on a 1-x-wide z-plane, which parallelizes
-/// along y) and stay bitwise identical; below it they fall back to the
-/// scalar path without spawning.
+/// The gated `_threaded` entry points: above the size threshold the
+/// comm-class pool chunks engage (including on a 1-x-wide z-plane, which
+/// parallelizes along y) and stay bitwise identical; below it they fall
+/// back to the scalar path without dispatching.
 #[test]
 fn threaded_entry_points_gate_and_match() {
+    let pool = Pool::new(3);
     // [1, 9000, 3]: z-plane = 1*9000 cells >= threshold with nx = 1 — the
     // degenerate-wide case only buffer-index chunking parallelizes.
     // [40, 220, 3]: generic wide z-plane (8800 cells, non-divisible by 7).
@@ -91,14 +94,14 @@ fn threaded_entry_points_gate_and_match() {
         for threads in [2usize, 4, 7] {
             assert_eq!(effective_pack_threads(threads, cells), threads);
             let mut got = vec![f64::NAN; cells];
-            pack_plane_threaded(&data, dims, dim, plane, &mut got, threads);
+            pack_plane_threaded(&pool, &data, dims, dim, plane, &mut got, threads);
             assert_eq!(got, want, "threaded pack dims={dims:?} threads={threads}");
 
             let noise = rand_data(dims, 0xD00D);
             let mut serial = noise.clone();
             unpack_plane_raw(&mut serial, dims, dim, plane, &want);
             let mut threaded = noise.clone();
-            unpack_plane_threaded(&mut threaded, dims, dim, plane, &want, threads);
+            unpack_plane_threaded(&pool, &mut threaded, dims, dim, plane, &want, threads);
             assert_eq!(threaded, serial, "threaded unpack dims={dims:?} threads={threads}");
         }
     }

@@ -12,7 +12,11 @@
 //! the heap between the warmup barrier and the final barrier fails the
 //! test — engine, transport, scheduler, driver alike. The scenarios cover
 //! the contended netmodel too (`serial-nic`): its per-rank NIC busy-until
-//! bookkeeping must live entirely in the network's preallocated tables.
+//! bookkeeping must live entirely in the network's preallocated tables —
+//! and the persistent scheduler pool (`sched::Pool`): grids big enough to
+//! engage the compute-slab and pack-chunk paths must submit, execute and
+//! join fork-join jobs without touching the heap (preallocated job slots,
+//! raw-pointer work handoff, condvar signaling).
 //! This file contains exactly one #[test] so no concurrent test in the
 //! same binary can pollute the counter.
 
@@ -267,6 +271,106 @@ fn timeloop_steady_state_is_allocation_free() {
     // retransmit backup store — all of which must reach steady state by the
     // end of warmup (the backup store's keys stabilize after two epochs)
     // and then stay off the heap. Plain and hidden, ideal and contended.
+    // Scheduler pool engaged on the compute side: 32^3 locals put the
+    // plain interior (30^3 = 27000 cells) and the hidden inner region
+    // (26x28x28 = 20384) above PAR_MIN_CELLS, so every step really
+    // submits compute-class slab jobs to the grid's persistent pool —
+    // which must stay allocation-free end to end (fixed job slots, no
+    // spawn). All three apps; two-phase additionally pins that the
+    // per-chunk mobility rings are reused, not regrown.
+    for (label, hide) in [
+        ("compute-pool/plain", None),
+        ("compute-pool/hide", Some(HideWidths([3, 2, 2]))),
+    ] {
+        assert_steady_state_alloc_free::<Diffusion>(
+            Box::leak(format!("diffusion/{label}/2 ranks/ct-4").into_boxed_str()),
+            Config {
+                app: AppKind::Diffusion,
+                nranks: 2,
+                local: [32, 32, 32],
+                nt: 1,
+                hide,
+                compute_threads: 4,
+                ..Default::default()
+            },
+        );
+        assert_steady_state_alloc_free::<Twophase>(
+            Box::leak(format!("twophase/{label}/2 ranks/ct-4").into_boxed_str()),
+            Config {
+                app: AppKind::Twophase,
+                nranks: 2,
+                local: [32, 32, 32],
+                nt: 1,
+                hide,
+                compute_threads: 4,
+                ..Default::default()
+            },
+        );
+        assert_steady_state_alloc_free::<Wave>(
+            Box::leak(format!("wave/{label}/2 ranks/ct-4").into_boxed_str()),
+            Config {
+                app: AppKind::Wave,
+                nranks: 2,
+                local: [32, 32, 32],
+                nt: 1,
+                hide,
+                compute_threads: 4,
+                ..Default::default()
+            },
+        );
+    }
+
+    // ... and under the contended netmodel, where pool-dispatched compute
+    // overlaps serialized NIC injections.
+    assert_steady_state_alloc_free::<Diffusion>(
+        "diffusion/compute-pool/hide/2 ranks/ct-4/serial-nic",
+        Config {
+            app: AppKind::Diffusion,
+            nranks: 2,
+            local: [32, 32, 32],
+            nt: 1,
+            hide: Some(HideWidths([3, 2, 2])),
+            compute_threads: 4,
+            net: NetModel::aries().with_serial_nic(),
+            ..Default::default()
+        },
+    );
+
+    // Scheduler pool engaged on the comm side: a 1x1x2 topology exchanges
+    // z-planes of 48*48 = 2304 cells >= PACK_PAR_MIN_CELLS, so pack and
+    // unpack really fan out as comm-class chunks on the pool every step.
+    assert_steady_state_alloc_free::<Diffusion>(
+        "diffusion/pack-pool/plain/2 ranks/cmt-4",
+        Config {
+            app: AppKind::Diffusion,
+            nranks: 2,
+            local: [48, 48, 8],
+            dims: [1, 1, 2],
+            nt: 1,
+            comm_threads: 4,
+            ..Default::default()
+        },
+    );
+
+    // Both classes at once on the one shared pool: hidden z-exchange with
+    // pool-packed planes while the inner region (48*48*24 cells) computes
+    // as compute-class slabs — the priority-claim machinery itself must
+    // not allocate.
+    assert_steady_state_alloc_free::<Diffusion>(
+        "diffusion/shared-pool/hide/2 ranks/ct-4/cmt-4",
+        Config {
+            app: AppKind::Diffusion,
+            nranks: 2,
+            local: [48, 48, 28],
+            dims: [1, 1, 2],
+            nt: 1,
+            hide: Some(HideWidths([2, 2, 2])),
+            compute_threads: 4,
+            comm_threads: 4,
+            ..Default::default()
+        },
+    );
+
     let idle = igg::mpisim::FaultSpec::parse("drop@0->1#n=999999999").unwrap();
     for (label, hide, net) in [
         ("diffusion/plain/2 ranks/faults-idle", None, NetModel::ideal()),
