@@ -17,6 +17,7 @@ Run from the repo root:  python3 bench/baselines/derive_baselines.py
 """
 
 import json
+import math
 import os
 
 # model constants (rust/src/mpisim/netmodel.rs, rust/src/memory/device.rs)
@@ -183,11 +184,73 @@ def ablation_baseline():
     return {"hide": rows, "compute_threads": threads_rows}
 
 
+# ---- weak scaling (fig2/fig3 sections of BENCH_perf.json) -------------
+#
+# The measured sweeps run on the bounded rank executor (carrier_sweep:
+# 1..1331 on any host, 2197 where the budget allows), so the baseline only
+# pins the machine-portable column: normalized parallel efficiency
+# (bench::scaling::normalized_efficiency strips ideal core time-sharing).
+# The formulas mirror bench::scaling::PerfModel: per-dim halo cost
+# f_serial*(transit + pack), hiding overlaps it with the inner region, and
+# a straggler term sigma*sqrt(2 ln P) keeps large-P efficiency below 1.
+
+F_SERIAL = 2.0
+SIGMA_FRAC = 0.02  # per-step jitter as a fraction of t1 (quiet-host figure)
+SWEEP = [1, 8, 64, 216, 512, 1331, 2197]
+
+
+def halo_time(nfields):
+    # 32^3 local => 32*32 planes; x/y contiguous pack, z strided
+    b = 8 * 32 * 32
+    t = 0.0
+    for pack_bw in (MEMCPY_BW, MEMCPY_BW, STRIDED_BW):
+        t += F_SERIAL * (transit(b) + 2 * b / pack_bw)
+    return nfields * t
+
+
+def model_efficiency(P, t_comp, nfields, hide):
+    if P <= 1:
+        return 1.0
+    # hide (4,2,2) on a 32^3 local: inner 22x26x26 of the 30^3 interior
+    frac_inner = (22 * 26 * 26) / (30 * 30 * 30)
+    t_inner, t_boundary = t_comp * frac_inner, t_comp * (1 - frac_inner)
+    th = halo_time(nfields)
+    t1 = t_comp
+    tp = t_boundary + max(t_inner, th) if hide else t_comp + th
+    straggler = SIGMA_FRAC * t1 * math.sqrt(2 * math.log(P))
+    return t1 / (tp + straggler)
+
+
+def eff_rows(points, t_comp, nfields, hide):
+    return [
+        {"nranks": p, "efficiency": sig3(model_efficiency(p, t_comp, nfields, hide))}
+        for p in points
+    ]
+
+
+def weak_scaling_baseline():
+    t_diff = 0.85e-3  # 32^3 diffusion step, single thread (see ablation)
+    t_two = 2.5e-3  # 32^3 two-phase step (2 fields, heavier stencil)
+    fig3_pts = [p for p in SWEEP if p <= 1331]  # fig3 sweep cap
+    return {
+        "fig2_weak_scaling": {
+            "rows": eff_rows(SWEEP, t_diff, 1, hide=True),
+            "modeled_efficiency_2197": sig3(model_efficiency(2197, t_diff, 1, True)),
+        },
+        "fig3_weak_scaling": {
+            "rows_hidden": eff_rows(fig3_pts, t_two, 2, hide=True),
+            "rows_plain": eff_rows(fig3_pts, t_two, 2, hide=False),
+            "modeled_efficiency_1024": sig3(model_efficiency(1024, t_two, 2, True)),
+        },
+    }
+
+
 def main():
     here = os.path.dirname(os.path.abspath(__file__))
     for name, body in (
         ("BENCH_halo.json", halo_baseline()),
         ("hide_communication_ablation.json", ablation_baseline()),
+        ("BENCH_weak_scaling.json", weak_scaling_baseline()),
     ):
         path = os.path.join(here, name)
         with open(path, "w") as f:

@@ -2,46 +2,57 @@
 //! diffusion solver (paper: 1 -> 2197 Nvidia P100s on Piz Daint, 93%
 //! parallel efficiency at 2197, medians of 20 samples with 95% CI).
 //!
-//! Here: real runs at 1..<=cores ranks (threads) under the Aries network
-//! model with hide_communication, then the calibrated analytic model
-//! extends the curve to 13^3 = 2197 ranks. Matching criterion (DESIGN.md
-//! §4): the *shape* — near-flat efficiency >= 90% with hiding — not P100
+//! The measured sweep is derived from the bounded rank executor's carrier
+//! budget (`launcher::carrier_budget` -> `scaling::carrier_sweep`): the
+//! executor multiplexes thousands of small-stack rank threads over a few
+//! carriers, so the paper's cubic topologies (up to 11^3 = 1331 on any
+//! host, 13^3 = 2197 where the budget allows) are *measured* under the
+//! Aries + serial-NIC model with hide_communication — no longer stopped at
+//! the core count. The calibrated analytic model still reports the
+//! dedicated-node extension alongside. Matching criterion (DESIGN.md §4):
+//! the *shape* — near-flat efficiency >= 90% with hiding — not P100
 //! absolute times.
 //!
 //!     cargo bench --bench fig2_weak_scaling_diffusion
 //!     IGG_BENCH_SAMPLES=20 cargo bench ...   # the paper's sample count
+//!     IGG_BENCH_MAX_RANKS=216 cargo bench ... # bound the sweep (quick CI)
 
 use igg::bench::measure::bench_samples;
 use igg::bench::{markdown_table, report, scaling};
 use igg::coordinator::config::{AppKind, Config};
+use igg::coordinator::launcher;
 use igg::mpisim::NetModel;
 use igg::overlap::HideWidths;
 use igg::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
-    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let samples = bench_samples(5);
     // local size: paper used 512^3/GPU; 32^3/rank keeps the thread-level
-    // testbed honest (fits cache hierarchies at 64 ranks)
+    // testbed honest (a 1331-rank run holds ~1.3 GiB of fields)
     let cfg = Config {
         app: AppKind::Diffusion,
         local: [32, 32, 32],
         nt: 20,
-        net: NetModel::aries(),
+        net: NetModel::aries().with_serial_nic(),
         hide: Some(HideWidths([4, 2, 2])),
         ..Default::default()
     };
-    // ranks beyond the core count time-share; efficiency is normalized
-    // (bench::scaling::normalized_efficiency), so the sweep stays meaningful
-    let ranks: Vec<usize> = vec![1, 2, 4, 8, 16, 27];
-    let _ = cores;
+    // Ranks beyond the carrier budget park on the gate and beyond the core
+    // count time-share; efficiency is normalized for the time-sharing
+    // (bench::scaling::normalized_efficiency), so the sweep stays
+    // meaningful through the paper-scale points.
+    let budget = launcher::carrier_budget(&cfg);
+    let ranks = scaling::carrier_sweep(budget);
 
     println!("# Fig. 2 — weak scaling, 3-D heat diffusion");
     println!("paper: 93% parallel efficiency at 2197 P100s (local 512^3)");
-    println!("here : local 32^3/rank, aries netmodel, hide (4,2,2), {samples} samples\n");
+    println!(
+        "here : local 32^3/rank, aries+serial-nic netmodel, hide (4,2,2), \
+         {samples} samples, carrier budget {budget}, sweep {ranks:?}\n"
+    );
 
     let rows = scaling::weak_scaling(&cfg, &ranks, samples, 2)?;
-    println!("{}", markdown_table("measured (ranks-as-threads)", &rows));
+    println!("{}", markdown_table("measured (executor-multiplexed ranks)", &rows));
 
     // Model extension to the paper's scale.
     let model = scaling::PerfModel::calibrate(&cfg, 3)?;
@@ -87,13 +98,17 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    let section = Json::obj(vec![
+        ("config", cfg.to_json()),
+        ("carrier_budget", Json::Num(budget as f64)),
+        ("rows", report::rows_to_json(&rows)),
+        ("modeled_efficiency_2197", Json::Num(e2197)),
+    ]);
     report::write_json_report(
         "target/bench_results/fig2_weak_scaling_diffusion.json",
-        Json::obj(vec![
-            ("config", cfg.to_json()),
-            ("rows", report::rows_to_json(&rows)),
-            ("modeled_eff_2197", Json::Num(e2197)),
-        ]),
+        section.clone(),
     )?;
+    // Shared perf-trajectory file: only this bench's section is replaced.
+    report::merge_json_report("BENCH_perf.json", vec![("fig2_weak_scaling", section)])?;
     Ok(())
 }

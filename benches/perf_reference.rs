@@ -178,9 +178,11 @@ fn main() -> anyhow::Result<()> {
         scoped_dispatch.median / pool_dispatch.median.max(1e-12),
     );
 
-    igg::bench::report::write_json_report(
+    // Merge, don't overwrite: the fig2/fig3 weak-scaling benches keep
+    // their own sections in the same perf-trajectory file.
+    igg::bench::report::merge_json_report(
         "BENCH_perf.json",
-        Json::obj(vec![
+        vec![
             ("threads", Json::Num(threads as f64)),
             ("sched_dispatch_pool_s", Json::Num(pool_dispatch.median)),
             ("sched_dispatch_scoped_s", Json::Num(scoped_dispatch.median)),
@@ -200,7 +202,7 @@ fn main() -> anyhow::Result<()> {
                         .collect(),
                 ),
             ),
-        ]),
+        ],
     )?;
     Ok(())
 }

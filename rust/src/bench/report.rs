@@ -63,6 +63,27 @@ pub fn write_json_report(path: impl AsRef<Path>, body: Json) -> anyhow::Result<(
     Ok(())
 }
 
+/// Merge `entries` into the top level of the JSON object at `path`:
+/// existing keys not named in `entries` are preserved, named keys are
+/// overwritten. This lets the fig2/fig3 benches and the perf-reference
+/// bench share one `BENCH_perf.json` without clobbering each other's
+/// sections. A missing or unparsable file starts from an empty object.
+pub fn merge_json_report(
+    path: impl AsRef<Path>,
+    entries: Vec<(&str, Json)>,
+) -> anyhow::Result<()> {
+    let path = path.as_ref();
+    let mut map = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::from_str(&s).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    for (k, v) in entries {
+        map.insert(k.to_string(), v);
+    }
+    write_json_report(path, Json::Obj(map))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,6 +115,20 @@ mod tests {
         let arr = parsed.as_arr().unwrap();
         assert_eq!(arr.len(), 2);
         assert_eq!(arr[1].get("nranks").unwrap().as_usize(), Some(27));
+    }
+
+    #[test]
+    fn merge_preserves_unrelated_top_level_keys() {
+        let dir = std::env::temp_dir().join("igg_test_merge");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("perf.json");
+        merge_json_report(&path, vec![("fig2", Json::Num(1.0))]).unwrap();
+        merge_json_report(&path, vec![("fig3", Json::Num(2.0))]).unwrap();
+        merge_json_report(&path, vec![("fig2", Json::Num(3.0))]).unwrap();
+        let j = Json::from_str(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("fig2").unwrap().as_f64(), Some(3.0), "named keys overwritten");
+        assert_eq!(j.get("fig3").unwrap().as_f64(), Some(2.0), "other keys preserved");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -75,6 +75,17 @@ pub struct Config {
     /// Print an in-situ diagnostic (app-specific global reduction) every
     /// `diag_every` steps from rank 0; 0 disables (`--diag-every`).
     pub diag_every: usize,
+    /// Carrier budget for the bounded rank executor: at most this many
+    /// rank bodies *run* concurrently (the rest park on the launcher's
+    /// carrier gate at their next transport wait). 0 = automatic
+    /// (`max(4, 2 × cores)`); gating engages only when the budget is below
+    /// `nranks` and no faults are armed (`--carriers` / `IGG_CARRIERS`).
+    pub carriers: usize,
+    /// Stack size per rank thread in KiB (`--rank-stack-kib` /
+    /// `IGG_RANK_STACK_KIB`). Thousands of ranks are only cheap because
+    /// rank stacks are small; the default (1 MiB) has ample headroom over
+    /// the deepest rank-body call chains.
+    pub rank_stack_kib: usize,
     pub net: NetModel,
     /// `Some(spec)` arms the network's deterministic fault injector and the
     /// halo engine's recovery layer (`--faults` / `IGG_FAULTS`).
@@ -104,6 +115,10 @@ impl Default for Config {
             compute_threads: default_env_threads("IGG_COMPUTE_THREADS"),
             comm_threads: default_env_threads("IGG_COMM_THREADS"),
             diag_every: 0,
+            // 0 = auto-size from the core count at launch; IGG_CARRIERS
+            // pins a budget suite-wide (mirrors the thread-count vars)
+            carriers: default_env_usize("IGG_CARRIERS", 0),
+            rank_stack_kib: default_env_usize("IGG_RANK_STACK_KIB", 1024),
             // ideal unless the IGG_NET environment variable selects a
             // preset (the CI contended matrix leg runs the whole suite
             // with IGG_NET=aries,serial-nic)
@@ -140,6 +155,12 @@ fn default_env_threads(var: &str) -> usize {
         .and_then(|s| s.trim().parse::<usize>().ok())
         .filter(|&n| n >= 1)
         .unwrap_or(1)
+}
+
+/// Generic environment default with an explicit fallback (used by the
+/// executor knobs, where 0 is a meaningful "auto" value).
+fn default_env_usize(var: &str, fallback: usize) -> usize {
+    std::env::var(var).ok().and_then(|s| s.trim().parse::<usize>().ok()).unwrap_or(fallback)
 }
 
 impl Config {
@@ -189,6 +210,12 @@ impl Config {
         if let Some(d) = args.get_usize("diag-every")? {
             cfg.diag_every = d;
         }
+        if let Some(c) = args.get_usize("carriers")? {
+            cfg.carriers = c;
+        }
+        if let Some(k) = args.get_usize("rank-stack-kib")? {
+            cfg.rank_stack_kib = k;
+        }
         if let Some(n) = args.get("net") {
             cfg.net = NetModel::parse(n)?;
         }
@@ -231,6 +258,11 @@ impl Config {
         }
         anyhow::ensure!(self.compute_threads >= 1, "need at least one compute thread");
         anyhow::ensure!(self.comm_threads >= 1, "need at least one comm thread");
+        anyhow::ensure!(
+            self.rank_stack_kib >= 64,
+            "--rank-stack-kib {} too small (need >= 64 KiB for a rank body)",
+            self.rank_stack_kib
+        );
         for (d, &n) in self.local.iter().enumerate() {
             anyhow::ensure!(n >= 3, "local dim {d} = {n} too small (need >= 3)");
         }
@@ -287,6 +319,8 @@ impl Config {
             ("compute_threads", Json::Num(self.compute_threads as f64)),
             ("comm_threads", Json::Num(self.comm_threads as f64)),
             ("diag_every", Json::Num(self.diag_every as f64)),
+            ("carriers", Json::Num(self.carriers as f64)),
+            ("rank_stack_kib", Json::Num(self.rank_stack_kib as f64)),
             ("net_latency_s", Json::Num(self.net.latency_s)),
             (
                 "net_bw_bytes_per_s",
@@ -330,6 +364,8 @@ mod tests {
             .value("compute-threads", None, "")
             .value("comm-threads", None, "")
             .value("diag-every", None, "")
+            .value("carriers", None, "")
+            .value("rank-stack-kib", None, "")
             .value("net", None, "")
             .value("faults", None, "")
             .value("seed", None, "")
@@ -402,6 +438,26 @@ mod tests {
         assert_eq!(c.grid_options().comm_threads, 4);
         assert_eq!(c.to_json().get("comm_threads").unwrap().as_usize(), Some(4));
         assert!(parse(&["--comm-threads", "0"]).is_err());
+    }
+
+    #[test]
+    fn executor_flags_parse_and_report() {
+        // defaults (unless the env vars pin them, mirroring the other knobs)
+        let env = |v: &str, d: usize| {
+            std::env::var(v).ok().and_then(|s| s.trim().parse::<usize>().ok()).unwrap_or(d)
+        };
+        let c = parse(&[]).unwrap();
+        assert_eq!(c.carriers, env("IGG_CARRIERS", 0));
+        assert_eq!(c.rank_stack_kib, env("IGG_RANK_STACK_KIB", 1024));
+
+        let c = parse(&["--carriers", "16", "--rank-stack-kib", "256"]).unwrap();
+        assert_eq!(c.carriers, 16);
+        assert_eq!(c.rank_stack_kib, 256);
+        assert_eq!(c.to_json().get("carriers").unwrap().as_usize(), Some(16));
+        assert_eq!(c.to_json().get("rank_stack_kib").unwrap().as_usize(), Some(256));
+
+        assert!(parse(&["--carriers", "0"]).is_ok(), "0 means auto-size");
+        assert!(parse(&["--rank-stack-kib", "32"]).is_err(), "below the 64 KiB floor");
     }
 
     #[test]

@@ -1,17 +1,31 @@
-//! The rank launcher: spawn N ranks (threads), build each rank's implicit
-//! global grid, run the application closure, collect results in rank order.
+//! The rank launcher: a bounded executor for N in-process ranks.
 //!
 //! This is the `mpirun`/`srun` analog of the in-process testbed. Each rank
-//! thread is named `igg-rank-<r>` and owns its grid — which in turn owns
-//! the rank's persistent [`crate::sched::Pool`], shared by the halo engine
-//! and the compute executor — (and, for the pjrt backend, its own PJRT
-//! context — one device per rank, as on the paper's machine). A panic or
-//! error on any rank aborts the run with that rank's error.
+//! still owns an OS thread (named `igg-rank-<r>`) — per-rank state stays
+//! flat and preallocated, mirroring the network's per-rank mailbox/NIC
+//! tables — but two mechanisms make thousands of ranks cheap where the old
+//! unbounded spawn was not:
+//!
+//! * **small stacks** — rank threads get `cfg.rank_stack_kib` (default
+//!   1 MiB) instead of the platform's 8 MiB default, so 2197 ranks cost
+//!   ~2 GiB of reservation, not ~17 GiB;
+//! * **the carrier gate** — at most [`carrier_budget`] rank bodies *run*
+//!   concurrently; the rest park on [`crate::util::gate::RunGate`] and the
+//!   transport hands permits over at every blocking receive (see
+//!   `mpisim::network::Network::collect`). The OS scheduler then juggles
+//!   `min(nranks, carriers)` runnable threads instead of nranks.
+//!
+//! Failure semantics: a panic or error on any rank aborts the run with
+//! that rank's error. The failing rank *poisons* the network first (clean
+//! networks only — the fault injector has its own recovery protocol), so
+//! peers blocked in `collect`/`barrier` unwind with
+//! [`crate::mpisim::PeerDied`] instead of deadlocking; those collateral
+//! unwinds are classified separately and never shadow the root cause.
 
 use std::sync::Arc;
 
 use crate::grid::GlobalGrid;
-use crate::mpisim::Network;
+use crate::mpisim::{quiet_peer_died_panics, Network, PeerDied};
 
 use super::config::Config;
 
@@ -19,6 +33,37 @@ use super::config::Config;
 pub struct RankCtx {
     pub grid: GlobalGrid,
     pub cfg: Config,
+}
+
+/// The executor's carrier budget for `cfg`: `cfg.carriers` when set,
+/// otherwise `max(4, 2 × cores)` — enough oversubscription to cover ranks
+/// sitting in modeled-transit sleeps, small enough that a 1331-rank run
+/// does not ask the scheduler to juggle 1331 runnable threads. Gating only
+/// engages when the budget is below `nranks`.
+pub fn carrier_budget(cfg: &Config) -> usize {
+    if cfg.carriers > 0 {
+        cfg.carriers
+    } else {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        (2 * cores).max(4)
+    }
+}
+
+/// How a rank body ended; produced on the rank's own thread so the join
+/// loop can tell root-cause failures from collateral [`PeerDied`] unwinds.
+enum RankOutcome<R> {
+    Ok(R),
+    Error(anyhow::Error),
+    Panicked(String),
+    PeerDied(PeerDied),
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "opaque panic".into())
 }
 
 /// Run `f` on `cfg.nranks` ranks; returns the per-rank results in rank
@@ -47,47 +92,88 @@ where
 {
     cfg.validate()?;
     assert_eq!(net.size(), cfg.nranks, "network size must match cfg.nranks");
+    quiet_peer_died_panics();
+    let carriers = carrier_budget(cfg);
+    if carriers < cfg.nranks && !net.faults_enabled() {
+        net.limit_carriers(carriers);
+    }
     let f = Arc::new(f);
     let mut handles = Vec::with_capacity(cfg.nranks);
     for r in 0..cfg.nranks {
         let comm = net.comm(r);
+        let net = Arc::clone(net);
         let cfg = cfg.clone();
         let f = Arc::clone(&f);
+        let stack = cfg.rank_stack_kib * 1024;
         let handle = std::thread::Builder::new()
             .name(format!("igg-rank-{r}"))
-            .spawn(move || -> anyhow::Result<R> {
-                let grid = GlobalGrid::init(comm, cfg.local, cfg.grid_options())?;
-                f(RankCtx { grid, cfg })
+            .stack_size(stack)
+            .spawn(move || -> RankOutcome<R> {
+                net.rank_enter();
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let grid = GlobalGrid::init(comm, cfg.local, cfg.grid_options())?;
+                    f(RankCtx { grid, cfg })
+                }));
+                net.rank_exit();
+                match result {
+                    Ok(Ok(v)) => RankOutcome::Ok(v),
+                    Ok(Err(e)) => {
+                        if !net.faults_enabled() {
+                            net.poison(r);
+                        }
+                        RankOutcome::Error(e)
+                    }
+                    Err(payload) => {
+                        if let Some(pd) = payload.downcast_ref::<PeerDied>() {
+                            // Collateral unwind: this rank was healthy and
+                            // blocked on a peer that died. The network is
+                            // already poisoned by the origin.
+                            RankOutcome::PeerDied(*pd)
+                        } else {
+                            if !net.faults_enabled() {
+                                net.poison(r);
+                            }
+                            RankOutcome::Panicked(panic_message(payload.as_ref()))
+                        }
+                    }
+                }
             })
             .expect("spawn rank thread");
         handles.push(handle);
     }
     let mut out = Vec::with_capacity(cfg.nranks);
     let mut first_err: Option<anyhow::Error> = None;
+    let mut collateral: Option<PeerDied> = None;
     for (r, h) in handles.into_iter().enumerate() {
-        match h.join() {
-            Ok(Ok(v)) => out.push(v),
-            Ok(Err(e)) => {
+        let outcome = h
+            .join()
+            .unwrap_or_else(|payload| RankOutcome::Panicked(panic_message(payload.as_ref())));
+        match outcome {
+            RankOutcome::Ok(v) => out.push(v),
+            RankOutcome::Error(e) => {
                 if first_err.is_none() {
                     first_err = Some(e.context(format!("rank {r}")));
                 }
             }
-            Err(panic) => {
+            RankOutcome::Panicked(msg) => {
                 if first_err.is_none() {
-                    let msg = panic
-                        .downcast_ref::<String>()
-                        .cloned()
-                        .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
-                        .unwrap_or_else(|| "opaque panic".into());
                     first_err = Some(anyhow::anyhow!("rank {r} panicked: {msg}"));
                 }
             }
+            RankOutcome::PeerDied(pd) => {
+                collateral.get_or_insert(pd);
+            }
         }
     }
-    match first_err {
-        Some(e) => Err(e),
-        None => Ok(out),
+    if let Some(e) = first_err {
+        return Err(e);
     }
+    if let Some(pd) = collateral {
+        // Only reachable if the origin's own outcome was somehow lost;
+        // still name the rank that actually died, not the collateral one.
+        return Err(anyhow::anyhow!("{pd}"));
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -112,13 +198,92 @@ mod tests {
             if ctx.grid.rank() == 2 {
                 anyhow::bail!("boom");
             }
-            // other ranks must not deadlock on collectives with the dead
-            // rank; they simply return
             Ok(())
         })
         .unwrap_err();
         let s = format!("{err:#}");
         assert!(s.contains("rank 2") && s.contains("boom"), "{s}");
+    }
+
+    /// The dead-rank regression (the old launcher deadlocked here): rank 2
+    /// fails while rank 3 is blocked in a matched receive on it and ranks
+    /// 0/1 sit inside `barrier()` waiting for its dissemination round. The
+    /// failure must poison the network, unwind the blocked peers with
+    /// `PeerDied`, and surface rank 2's own error — not a collateral one.
+    #[test]
+    fn dead_rank_unblocks_peers_in_barrier_and_recv() {
+        let cfg = Config { nranks: 4, local: [8, 8, 8], ..Default::default() };
+        let err = run_ranks(&cfg, |ctx| -> anyhow::Result<()> {
+            let comm = ctx.grid.comm();
+            match ctx.grid.rank() {
+                2 => {
+                    // let the peers reach their blocking waits first
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                    anyhow::bail!("boom");
+                }
+                3 => {
+                    let _ = comm.recv(2, 77); // rank 2 never sends this
+                    Ok(())
+                }
+                _ => {
+                    comm.barrier(); // never completes without rank 2
+                    Ok(())
+                }
+            }
+        })
+        .unwrap_err();
+        let s = format!("{err:#}");
+        assert!(s.contains("rank 2") && s.contains("boom"), "{s}");
+        assert!(!s.contains("peer rank"), "root cause must win over collateral unwinds: {s}");
+    }
+
+    /// A panicking rank (as opposed to an error return) poisons too, and
+    /// the panic message survives into the run error.
+    #[test]
+    fn dead_rank_panic_reports_panic_message() {
+        let cfg = Config { nranks: 3, local: [8, 8, 8], ..Default::default() };
+        let err = run_ranks(&cfg, |ctx| -> anyhow::Result<()> {
+            if ctx.grid.rank() == 1 {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                panic!("kaboom");
+            }
+            ctx.grid.comm().barrier();
+            Ok(())
+        })
+        .unwrap_err();
+        let s = format!("{err:#}");
+        assert!(s.contains("rank 1 panicked") && s.contains("kaboom"), "{s}");
+    }
+
+    /// The bounded executor end-to-end: many more ranks than carriers,
+    /// with heavy collective traffic multiplexed over 2 permits. Liveness
+    /// here is the whole point — every blocking receive must hand its
+    /// permit over, or this deadlocks.
+    #[test]
+    fn bounded_executor_multiplexes_ranks_over_few_carriers() {
+        let cfg = Config { nranks: 16, local: [8, 8, 8], carriers: 2, ..Default::default() };
+        let out = run_ranks(&cfg, |ctx| {
+            let comm = ctx.grid.comm();
+            for _ in 0..3 {
+                comm.barrier();
+            }
+            Ok(comm.allreduce_sum(ctx.grid.rank() as f64))
+        })
+        .unwrap();
+        assert_eq!(out.len(), 16);
+        assert!(out.iter().all(|&s| s == 120.0), "{out:?}");
+    }
+
+    #[test]
+    fn rank_stack_size_is_honoured_and_validated() {
+        // a run with the minimum stack still completes a collective
+        let cfg =
+            Config { nranks: 4, local: [8, 8, 8], rank_stack_kib: 256, ..Default::default() };
+        let out = run_ranks(&cfg, |ctx| Ok(ctx.grid.comm().allreduce_sum(1.0))).unwrap();
+        assert!(out.iter().all(|&s| s == 4.0));
+        // below the floor is rejected before any spawn
+        let cfg = Config { nranks: 2, rank_stack_kib: 16, ..Default::default() };
+        assert!(run_ranks(&cfg, |_| Ok(())).is_err());
     }
 
     #[test]

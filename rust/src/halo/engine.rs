@@ -698,10 +698,19 @@ impl PendingHalo {
     /// Wait for the exchange to complete; halo planes are then up to date.
     pub fn finish(mut self) -> anyhow::Result<()> {
         self.finished = true;
-        self.stream.synchronize();
+        // synchronize rethrows a panicking exchange job (PeerDied after
+        // network poisoning) on this rank's thread; release the shared job
+        // slot either way so the engine state stays consistent while the
+        // rank unwinds.
+        let sync = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.stream.synchronize()
+        }));
         let taken = self.error.lock().unwrap().take();
         if let Some(job) = &self.shared {
             job.in_use.store(false, Ordering::Release);
+        }
+        if let Err(payload) = sync {
+            std::panic::resume_unwind(payload);
         }
         match taken {
             Some(e) => Err(e),
@@ -715,8 +724,10 @@ impl Drop for PendingHalo {
         if !self.finished {
             // Join the stream so the raw field pointers cannot dangle; the
             // abandoned error (if any) stays in the slot and is cleared by
-            // the next fast-path start.
-            self.stream.synchronize();
+            // the next fast-path start. wait_idle, not synchronize: this
+            // drop may itself run during an unwind (e.g. PeerDied), and
+            // rethrowing a stream-job panic here would double-panic-abort.
+            self.stream.wait_idle();
             if let Some(job) = &self.shared {
                 job.in_use.store(false, Ordering::Release);
             }

@@ -37,6 +37,12 @@ fn run_flags(cmd: Command) -> Command {
         )
         .value("diag-every", Some("0"), "print in-situ diagnostics every N steps (0 = off)")
         .value(
+            "carriers",
+            Some("0"),
+            "carrier budget for the bounded rank executor (0 = auto: max(4, 2*cores))",
+        )
+        .value("rank-stack-kib", Some("1024"), "stack size per rank thread, KiB (min 64)")
+        .value(
             "net",
             Some("ideal"),
             "network model: ideal|aries|aries:<scale>[,serial-nic]",

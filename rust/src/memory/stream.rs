@@ -41,6 +41,12 @@ struct State {
     queue: VecDeque<Job>,
     pending: usize, // queued + running
     shutdown: bool,
+    /// First panic payload a job unwound with, held for the next
+    /// `synchronize`. Without this a panicking job (e.g. a halo exchange
+    /// unwinding with `PeerDied` after network poisoning) would kill the
+    /// worker thread silently and leave `synchronize` callers waiting on a
+    /// pending count nobody will ever decrement.
+    panic: Option<Box<dyn std::any::Any + Send + 'static>>,
 }
 
 /// An ordered asynchronous work queue with its own worker thread.
@@ -53,12 +59,21 @@ pub struct Stream {
 impl Stream {
     pub fn new(priority: StreamPriority) -> Self {
         let state = Arc::new((
-            Mutex::new(State { queue: VecDeque::new(), pending: 0, shutdown: false }),
+            Mutex::new(State {
+                queue: VecDeque::new(),
+                pending: 0,
+                shutdown: false,
+                panic: None,
+            }),
             Condvar::new(),
         ));
         let worker_state = Arc::clone(&state);
         let worker = std::thread::Builder::new()
             .name(format!("igg-stream-{priority:?}"))
+            // Stream workers run pack/unpack kernels, not deep call trees;
+            // a fixed modest stack keeps per-rank footprint flat at
+            // thousands of ranks (one worker per rank's comm stream).
+            .stack_size(1024 * 1024)
             .spawn(move || {
                 let (m, cv) = &*worker_state;
                 loop {
@@ -74,9 +89,16 @@ impl Stream {
                             st = cv.wait(st).unwrap();
                         }
                     };
-                    job.run();
+                    // Contain a panicking job: keep the worker alive,
+                    // stash the first payload for synchronize() to rethrow
+                    // on the owning rank's thread.
+                    let result =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job.run()));
                     let (m, cv) = &*worker_state;
                     let mut st = m.lock().unwrap();
+                    if let Err(payload) = result {
+                        st.panic.get_or_insert(payload);
+                    }
                     st.pending -= 1;
                     cv.notify_all();
                 }
@@ -117,13 +139,41 @@ impl Stream {
         self.state.0.lock().unwrap().pending == 0
     }
 
-    /// Block until every job enqueued so far has finished.
-    pub fn synchronize(&self) {
+    /// Wait (gate-aware) until the pending count drains, returning any
+    /// stashed job panic. A rank thread waiting on its comm stream pauses
+    /// its carrier permit first: the stream's jobs may need peer ranks to
+    /// make progress, and those peers may be queued on the carrier gate.
+    fn wait_pending(&self) -> Option<Box<dyn std::any::Any + Send + 'static>> {
         let (m, cv) = &*self.state;
         let mut st = m.lock().unwrap();
-        while st.pending > 0 {
-            st = cv.wait(st).unwrap();
+        if st.pending > 0 {
+            drop(st);
+            crate::util::gate::pause();
+            st = m.lock().unwrap();
+            while st.pending > 0 {
+                st = cv.wait(st).unwrap();
+            }
         }
+        let payload = st.panic.take();
+        drop(st);
+        crate::util::gate::resume();
+        payload
+    }
+
+    /// Block until every job enqueued so far has finished. If a job
+    /// panicked, rethrows its payload here — on the thread that owns the
+    /// stream — so failures surface where the work was requested.
+    pub fn synchronize(&self) {
+        if let Some(payload) = self.wait_pending() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Like [`Self::synchronize`] but swallows job panics (the payload is
+    /// dropped). For drop/cleanup paths, where rethrowing would turn an
+    /// unwind-in-progress into a double-panic abort.
+    pub fn wait_idle(&self) {
+        let _ = self.wait_pending();
     }
 }
 
@@ -196,6 +246,30 @@ mod tests {
         stream.synchronize();
         assert_eq!(count.load(Ordering::SeqCst), 106);
         assert!(stream.is_idle(), "synchronized stream reports idle");
+    }
+
+    #[test]
+    fn job_panic_surfaces_in_synchronize_and_worker_survives() {
+        let stream = Stream::new(StreamPriority::Normal);
+        stream.enqueue(|| panic!("job boom"));
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| stream.synchronize()))
+            .unwrap_err();
+        assert_eq!(err.downcast_ref::<&str>(), Some(&"job boom"));
+        // the worker contained the unwind: later jobs still run
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = Arc::clone(&done);
+        stream.enqueue(move || d.store(1, Ordering::SeqCst));
+        stream.synchronize();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn wait_idle_swallows_job_panics() {
+        let stream = Stream::new(StreamPriority::Normal);
+        stream.enqueue(|| panic!("payload dropped by wait_idle"));
+        stream.wait_idle();
+        assert!(stream.is_idle());
+        stream.synchronize(); // the panic was consumed above; nothing rethrows
     }
 
     #[test]

@@ -1,36 +1,83 @@
 //! Collectives over the point-to-point transport.
 //!
-//! Simple root-based algorithms (gather-to-0 + broadcast) on reserved
-//! internal tags: correctness and determinism matter here, not algorithmic
-//! sophistication — collective traffic is outside the paper's measured path
-//! (halo exchange) and is excluded from the traffic model (network.rs).
+//! All four collectives are message-based with an O(log n) critical path,
+//! sized for thousands of in-process ranks:
 //!
-//! The barrier is a shared-state sense barrier (all ranks are in-process),
-//! generation-counted so it is reusable.
+//! * **barrier** — a dissemination barrier: ⌈log₂ n⌉ rounds, round *r*
+//!   sends to `(me + 2^r) mod n` and receives from `(me − 2^r) mod n` on a
+//!   per-round tag. Each rank wakes exactly one peer per round instead of
+//!   the old centralized sense barrier's `notify_all` over all n ranks,
+//!   and the payloads are empty (no allocation). Per-(src, tag) FIFO makes
+//!   back-to-back reuse safe without generation counters: a rank can only
+//!   race one barrier ahead, and its next-barrier round-0 message queues
+//!   behind the current one.
+//! * **allreduce / gather / bcast** — binomial trees (vrank space, rooted
+//!   at the collective's root): `parent(v) = v & (v−1)`, children at
+//!   `v + 2^k`. Reduction gathers the *raw* per-rank values up the tree in
+//!   contiguous rank order and folds them sequentially at the root, so the
+//!   result is bitwise identical to the old root-based fold — determinism
+//!   is pinned by test against that reference at non-power-of-two counts.
+//!
+//! Collective traffic is outside the paper's measured path (halo exchange)
+//! and stays excluded from the traffic model (network.rs); the per-rank
+//! internal-send counters it *does* feed exist for the O(log n) tests.
 
 use super::{Comm, INTERNAL_TAG_BASE};
 
 const TAG_REDUCE: u64 = INTERNAL_TAG_BASE + 1;
 const TAG_BCAST: u64 = INTERNAL_TAG_BASE + 2;
 const TAG_GATHER: u64 = INTERNAL_TAG_BASE + 3;
+/// Barrier round `r` uses tag `TAG_BARRIER_BASE + r` (distinct from the
+/// tree tags above; one tag per dissemination round).
+const TAG_BARRIER_BASE: u64 = INTERNAL_TAG_BASE + 0x100;
+
+/// ⌈log₂ n⌉ for n ≥ 1 (0 for n = 1).
+fn ceil_log2(n: usize) -> u32 {
+    usize::BITS - (n - 1).leading_zeros()
+}
+
+fn lsb(v: usize) -> usize {
+    v & v.wrapping_neg()
+}
+
+/// Binomial-tree parent of vrank `v` (v > 0): clear the lowest set bit.
+fn parent(v: usize) -> usize {
+    v & (v - 1)
+}
+
+/// Size of the subtree rooted at vrank `v` in an n-rank binomial tree.
+fn subtree_size(v: usize, n: usize) -> usize {
+    if v == 0 {
+        n
+    } else {
+        lsb(v).min(n - v)
+    }
+}
+
+/// Children of vrank `v`, ascending: `v + 2^k` for `2^k < lsb(v)` (all
+/// powers below `n` when v is the root). Ascending order means the
+/// children's subtrees cover contiguous, increasing vrank spans — which is
+/// what lets the reduction concatenate raw values in rank order.
+fn children(v: usize, n: usize) -> impl Iterator<Item = usize> {
+    let limit = if v == 0 { n } else { lsb(v) };
+    (0..usize::BITS)
+        .map(move |k| 1usize << k)
+        .take_while(move |&step| step < limit)
+        .map(move |step| v + step)
+        .filter(move |&c| c < n)
+}
 
 pub(super) fn barrier(comm: &Comm) {
-    let net = comm.network();
     let n = comm.size();
     if n == 1 {
         return;
     }
-    let mut st = net.barrier.lock().unwrap();
-    let gen = st.generation;
-    st.count += 1;
-    if st.count == n {
-        st.count = 0;
-        st.generation = st.generation.wrapping_add(1);
-        net.barrier_cv.notify_all();
-    } else {
-        while st.generation == gen {
-            st = net.barrier_cv.wait(st).unwrap();
-        }
+    let me = comm.rank();
+    for r in 0..ceil_log2(n) {
+        let d = 1usize << r;
+        let tag = TAG_BARRIER_BASE + u64::from(r);
+        comm.send((me + d) % n, tag, &[]);
+        let _ = comm.recv((me + n - d) % n, tag);
     }
 }
 
@@ -39,33 +86,61 @@ pub(super) fn allreduce(comm: &Comm, x: f64, op: impl Fn(f64, f64) -> f64) -> f6
     if n == 1 {
         return x;
     }
-    if comm.rank() == 0 {
-        let mut acc = x;
-        for src in 1..n {
-            let v = comm.recv(src, TAG_REDUCE);
-            acc = op(acc, v[0]);
-        }
-        for dst in 1..n {
-            comm.send(dst, TAG_BCAST, &[acc]);
+    // Reductions root at rank 0, so vrank == rank. Gather the raw values up
+    // the tree in rank order; only the root folds — bitwise identical to
+    // the root-based reference regardless of tree shape.
+    let v = comm.rank();
+    let mut buf = Vec::with_capacity(subtree_size(v, n));
+    buf.push(x);
+    for c in children(v, n) {
+        let part = comm.recv(c, TAG_REDUCE);
+        debug_assert_eq!(part.len(), subtree_size(c, n));
+        buf.extend_from_slice(&part);
+    }
+    let acc = if v == 0 {
+        let mut acc = buf[0];
+        for &val in &buf[1..] {
+            acc = op(acc, val);
         }
         acc
     } else {
-        comm.send(0, TAG_REDUCE, &[x]);
-        comm.recv(0, TAG_BCAST)[0]
+        comm.send(parent(v), TAG_REDUCE, &buf);
+        comm.recv(parent(v), TAG_BCAST)[0]
+    };
+    for c in children(v, n) {
+        comm.send(c, TAG_BCAST, &[acc]);
     }
+    acc
 }
 
 pub(super) fn gather(comm: &Comm, root: usize, data: &[f64]) -> Option<Vec<Vec<f64>>> {
     let n = comm.size();
-    if comm.rank() == root {
+    if n == 1 {
+        return Some(vec![data.to_vec()]);
+    }
+    let me = comm.rank();
+    let v = (me + n - root) % n;
+    // Frame per vrank: [len, payload...]. A rank forwards its subtree's
+    // frames as one flat buffer; ascending children keep vrank order.
+    let mut buf = Vec::with_capacity(data.len() + 1);
+    buf.push(data.len() as f64);
+    buf.extend_from_slice(data);
+    for c in children(v, n) {
+        let part = comm.recv((c + root) % n, TAG_GATHER);
+        buf.extend_from_slice(&part);
+    }
+    if v == 0 {
         let mut out: Vec<Vec<f64>> = vec![Vec::new(); n];
-        out[root] = data.to_vec();
-        for src in (0..n).filter(|&r| r != root) {
-            out[src] = comm.recv(src, TAG_GATHER);
+        let mut i = 0;
+        for vr in 0..n {
+            let len = buf[i] as usize;
+            out[(vr + root) % n] = buf[i + 1..i + 1 + len].to_vec();
+            i += 1 + len;
         }
+        debug_assert_eq!(i, buf.len());
         Some(out)
     } else {
-        comm.send(root, TAG_GATHER, data);
+        comm.send((parent(v) + root) % n, TAG_GATHER, &buf);
         None
     }
 }
@@ -75,31 +150,128 @@ pub(super) fn bcast(comm: &Comm, root: usize, data: Vec<f64>) -> Vec<f64> {
     if n == 1 {
         return data;
     }
-    if comm.rank() == root {
-        for dst in (0..n).filter(|&r| r != root) {
-            comm.send(dst, TAG_BCAST, &data);
-        }
-        data
-    } else {
-        comm.recv(root, TAG_BCAST)
+    let me = comm.rank();
+    let v = (me + n - root) % n;
+    let data = if v == 0 { data } else { comm.recv((parent(v) + root) % n, TAG_BCAST) };
+    for c in children(v, n) {
+        comm.send((c + root) % n, TAG_BCAST, &data);
     }
+    data
 }
 
 #[cfg(test)]
 mod tests {
     use super::super::Network;
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
 
-    fn on_ranks(n: usize, f: impl Fn(super::Comm) + Send + Sync + Clone + 'static) {
+    /// Run `f` as every rank of a fresh network, then hand the network
+    /// back for post-mortem assertions. Rank threads get small stacks so
+    /// the 1000+-rank tests stay cheap.
+    fn on_net(n: usize, f: impl Fn(Comm) + Send + Sync + Clone + 'static) -> Arc<Network> {
         let net = Network::new(n);
         let handles: Vec<_> = (0..n)
             .map(|r| {
                 let c = net.comm(r);
                 let f = f.clone();
-                std::thread::spawn(move || f(c))
+                std::thread::Builder::new()
+                    .name(format!("coll-rank-{r}"))
+                    .stack_size(256 * 1024)
+                    .spawn(move || f(c))
+                    .expect("spawn rank")
             })
             .collect();
         for h in handles {
             h.join().unwrap();
+        }
+        net
+    }
+
+    fn on_ranks(n: usize, f: impl Fn(Comm) + Send + Sync + Clone + 'static) {
+        let _ = on_net(n, f);
+    }
+
+    /// Per-rank value with pseudo-random mantissa and wildly varying
+    /// magnitude: any change to the reduction's fold order flips low
+    /// mantissa bits of the sum, so the bitwise pins below are sharp.
+    fn jittered(r: usize) -> f64 {
+        let m = ((r as u64).wrapping_mul(2_654_435_761) % 1000) as f64 + 0.5;
+        m * 10f64.powi((r % 7) as i32 - 3)
+    }
+
+    #[test]
+    fn tree_structure_is_consistent() {
+        for n in [1usize, 2, 3, 7, 27, 100, 1000] {
+            let mut seen = vec![false; n];
+            seen[0] = true;
+            for v in 1..n {
+                assert!(parent(v) < v);
+                assert!(children(parent(v), n).any(|c| c == v));
+                seen[v] = true;
+            }
+            assert!(seen.into_iter().all(|s| s));
+            for v in 0..n {
+                let child_total: usize = children(v, n).map(|c| subtree_size(c, n)).sum();
+                assert_eq!(subtree_size(v, n), 1 + child_total, "v={v} n={n}");
+                // children cover contiguous ascending vrank spans
+                let mut next = v + 1;
+                for c in children(v, n) {
+                    assert_eq!(c, next, "v={v} n={n}");
+                    next = c + subtree_size(c, n);
+                }
+            }
+        }
+    }
+
+    /// The tree reduction must be bitwise identical to the old root-based
+    /// reference (rank 0 folds the values in rank order), at awkward
+    /// non-power-of-two counts included.
+    #[test]
+    fn tree_allreduce_bitwise_matches_rootbased_reference() {
+        for n in [3usize, 7, 27, 100, 1000] {
+            let sum = {
+                let mut acc = jittered(0);
+                for r in 1..n {
+                    acc += jittered(r);
+                }
+                acc
+            };
+            let max = (0..n).map(jittered).fold(f64::MIN, f64::max);
+            let min = (0..n).map(jittered).fold(f64::MAX, f64::min);
+            on_ranks(n, move |c| {
+                let x = jittered(c.rank());
+                assert_eq!(
+                    c.allreduce_sum(x).to_bits(),
+                    sum.to_bits(),
+                    "sum, n={n} rank={}",
+                    c.rank()
+                );
+                assert_eq!(c.allreduce_max(x), max, "max, n={n}");
+                assert_eq!(c.allreduce_min(x), min, "min, n={n}");
+            });
+        }
+    }
+
+    /// Gather and bcast with a non-zero root (exercising the vrank
+    /// rotation) against their trivially known results.
+    #[test]
+    fn tree_gather_bcast_match_reference_at_odd_counts() {
+        for (n, root) in [(3usize, 1usize), (7, 3), (27, 26), (100, 61)] {
+            on_ranks(n, move |c| {
+                let payload = vec![jittered(c.rank()); c.rank() % 3 + 1];
+                match c.gather(root, &payload) {
+                    Some(all) => {
+                        assert_eq!(c.rank(), root);
+                        for (r, v) in all.iter().enumerate() {
+                            assert_eq!(v, &vec![jittered(r); r % 3 + 1], "n={n} src={r}");
+                        }
+                    }
+                    None => assert_ne!(c.rank(), root),
+                }
+                let data = if c.rank() == root { vec![jittered(n), 42.0] } else { Vec::new() };
+                assert_eq!(c.bcast(root, data), vec![jittered(n), 42.0], "n={n}");
+            });
         }
     }
 
@@ -152,6 +324,61 @@ mod tests {
                 c.barrier();
             }
         });
+    }
+
+    /// Stress the dissemination barrier at scale: 1024 ranks, repeated
+    /// reuse, with a shared counter proving the synchronization (every
+    /// pre-barrier increment happens-before every post-barrier read, and
+    /// no rank leaks into the next round early). Then pin the cost: a
+    /// dissemination barrier is *exactly* ⌈log₂ 1024⌉ = 10 sends per rank
+    /// per barrier — the O(log n) acceptance assertion.
+    #[test]
+    fn barrier_stress_and_reuse_at_1024_ranks() {
+        let n = 1024usize;
+        let iters = 10usize;
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&counter);
+        let net = on_net(n, move |c| {
+            for i in 0..iters {
+                c2.fetch_add(1, Ordering::SeqCst);
+                c.barrier();
+                // between the two barriers the count is exact: everyone
+                // incremented round i, nobody has started round i+1
+                assert_eq!(c2.load(Ordering::SeqCst), (i + 1) * n);
+                c.barrier();
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), iters * n);
+        let per_barrier = u64::from(ceil_log2(n));
+        assert_eq!(per_barrier, 10);
+        for r in 0..n {
+            assert_eq!(
+                net.collective_sends(r),
+                2 * iters as u64 * per_barrier,
+                "rank {r}: dissemination barrier must cost exactly log2(n) sends"
+            );
+        }
+    }
+
+    /// The allreduce critical path is O(log n): no rank sends more than
+    /// ~2·⌈log₂ n⌉ messages, where the old root-based algorithm put n−1
+    /// sends (and n−1 sequential receives) on rank 0.
+    #[test]
+    fn tree_allreduce_is_log_n_messages_per_rank() {
+        let n = 1000usize;
+        let net = on_net(n, move |c| {
+            let _ = c.allreduce_sum(c.rank() as f64);
+        });
+        let rounds = u64::from(ceil_log2(n)); // 10
+        let max_sends = (0..n).map(|r| net.collective_sends(r)).max().unwrap();
+        let total: u64 = (0..n).map(|r| net.collective_sends(r)).sum();
+        assert!(
+            max_sends <= 2 * rounds + 1,
+            "worst rank sent {max_sends} messages; tree bound is {}",
+            2 * rounds + 1
+        );
+        assert!(max_sends < n as u64 / 8, "critical path must not scale with n");
+        assert_eq!(total, 2 * (n as u64 - 1), "one up + one down message per edge");
     }
 
     #[test]

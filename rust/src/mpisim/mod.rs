@@ -37,7 +37,7 @@ pub use cart::{dims_create, CartComm};
 pub use comm::Comm;
 pub use fault::{FaultPlan, FaultReport, FaultSpec, FaultStats, RetryPolicy};
 pub use netmodel::{NetModel, NicMode};
-pub use network::{Network, TrafficStats};
+pub use network::{quiet_peer_died_panics, Network, PeerDied, TrafficStats};
 pub use request::{wait_all, RecvRequest, SendRequest};
 
 /// Tags are u64; the top byte is reserved for internal (collective) traffic.

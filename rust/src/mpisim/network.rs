@@ -1,12 +1,49 @@
 //! The shared transport: per-rank mailboxes with (source, tag) matching.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use super::fault::{self, FaultPlan, FaultStats, Injector};
 use super::{Comm, NetModel};
+use crate::util::gate::{self, RunGate};
+
+/// The panic payload a rank unwinds with when it was blocked in the
+/// transport and the network was poisoned because a *different* rank died.
+/// The launcher downcasts to this to distinguish collateral unwinds from
+/// the original failure, so the user sees one root-cause error instead of
+/// n-1 "deadlocked peer" symptoms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeerDied {
+    /// The rank whose failure poisoned the network.
+    pub origin: usize,
+}
+
+impl std::fmt::Display for PeerDied {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "peer rank {} died mid-run; transport poisoned", self.origin)
+    }
+}
+
+impl std::error::Error for PeerDied {}
+
+/// Install (once, process-wide) a panic hook that silences the default
+/// "thread panicked" stderr spew for [`PeerDied`] unwinds. Collateral
+/// unwinds are expected bookkeeping — at 1000 ranks the default hook would
+/// print 999 backtraces for one real failure. All other panics still reach
+/// the previously installed hook.
+pub fn quiet_peer_died_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<PeerDied>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
 
 pub(super) struct Envelope {
     pub src: usize,
@@ -34,11 +71,6 @@ pub struct TrafficStats {
     pub bytes: u64,
 }
 
-pub(super) struct BarrierState {
-    pub count: usize,
-    pub generation: u64,
-}
-
 /// Per-rank NIC injection timeline for the contended model
 /// ([`super::NicMode::SerialNic`]): the instant this rank's NIC finishes
 /// draining its last accepted send. Allocated once per network, one slot
@@ -50,19 +82,30 @@ struct NicState {
     busy_until: Option<Instant>,
 }
 
-/// The in-process "interconnect": one mailbox per rank plus the model and
-/// the collective rendezvous state. Shared by all ranks via `Arc`.
+/// The in-process "interconnect": one mailbox per rank plus the model.
+/// Shared by all ranks via `Arc`. Collective rendezvous (barrier, reduce)
+/// is message-based — see `mpisim::collective` — so there is no
+/// centralized condvar any rank count piles onto.
 pub struct Network {
     pub(super) mailboxes: Vec<Mailbox>,
     pub(super) model: NetModel,
-    pub(super) barrier: Mutex<BarrierState>,
-    pub(super) barrier_cv: Condvar,
     /// One injection timeline per rank (only consulted by the contended
     /// model; a rank's main thread and its comm stream may deposit
     /// concurrently, hence the per-slot lock).
     nics: Vec<Mutex<NicState>>,
     msg_count: AtomicU64,
     byte_count: AtomicU64,
+    /// Per-rank count of internal-tag (collective) sends. Not traffic
+    /// stats — a white-box probe the O(log n) message-count tests read.
+    coll_sends: Vec<AtomicU64>,
+    /// The carrier gate bounding how many rank bodies run at once.
+    /// Inactive unless the launcher calls [`Self::limit_carriers`].
+    carrier_gate: Arc<RunGate>,
+    /// Latched on the first rank failure (clean networks only): every rank
+    /// blocked in — or subsequently entering — a transport wait unwinds
+    /// with [`PeerDied`] instead of hanging forever.
+    poisoned: AtomicBool,
+    poison_origin: Mutex<Option<usize>>,
     /// Deterministic fault injection (`--faults`); `None` = clean wire.
     fault: Option<Injector>,
     /// End-of-run quiesce handshake, phase 1: ranks whose final exchange
@@ -95,11 +138,13 @@ impl Network {
         Arc::new(Network {
             mailboxes: (0..n).map(|_| Mailbox::default()).collect(),
             model,
-            barrier: Mutex::new(BarrierState { count: 0, generation: 0 }),
-            barrier_cv: Condvar::new(),
             nics: (0..n).map(|_| Mutex::new(NicState::default())).collect(),
             msg_count: AtomicU64::new(0),
             byte_count: AtomicU64::new(0),
+            coll_sends: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            carrier_gate: RunGate::new(),
+            poisoned: AtomicBool::new(false),
+            poison_origin: Mutex::new(None),
             fault: plan.map(|p| Injector::new(n, p)),
             quiesce_done: AtomicUsize::new(0),
             quiesce_stopped: AtomicUsize::new(0),
@@ -125,6 +170,70 @@ impl Network {
             messages: self.msg_count.load(Ordering::Relaxed),
             bytes: self.byte_count.load(Ordering::Relaxed),
         }
+    }
+
+    /// How many internal-tag (collective) messages `rank` has sent. The
+    /// O(log n) tests assert on this: a dissemination barrier costs exactly
+    /// ⌈log₂ n⌉ sends per rank, a binomial tree at most ⌈log₂ n⌉, where the
+    /// old root-based algorithms cost O(n) at the root.
+    pub fn collective_sends(&self, rank: usize) -> u64 {
+        self.coll_sends[rank].load(Ordering::Relaxed)
+    }
+
+    /// Bound the number of concurrently *running* rank bodies to `permits`
+    /// carriers. Call once, before any rank enters. Not compatible with
+    /// fault injection (the recovery layer's bounded poll loops assume
+    /// peers make progress in wall-clock time), so the launcher only gates
+    /// clean networks.
+    pub fn limit_carriers(&self, permits: usize) {
+        assert!(
+            !self.faults_enabled(),
+            "carrier gating is incompatible with fault injection"
+        );
+        self.carrier_gate.activate(permits);
+    }
+
+    /// Enter the carrier gate on this thread (start of a rank body). No-op
+    /// unless [`Self::limit_carriers`] was called.
+    pub fn rank_enter(&self) {
+        gate::enter(&self.carrier_gate);
+    }
+
+    /// Leave the carrier gate (end of a rank body, success or unwind).
+    pub fn rank_exit(&self) {
+        gate::exit();
+    }
+
+    /// Latch the network poisoned because `origin`'s rank body failed.
+    /// First failure wins. Opens the carrier gate and wakes every mailbox
+    /// condvar, so ranks blocked in `collect` (directly or inside a
+    /// message-based collective) unwind with [`PeerDied`] instead of
+    /// waiting on a peer that will never send.
+    pub fn poison(&self, origin: usize) {
+        {
+            let mut slot = self.poison_origin.lock().unwrap();
+            if self.poisoned.swap(true, Ordering::AcqRel) {
+                return;
+            }
+            *slot = Some(origin);
+        }
+        self.carrier_gate.open();
+        for mb in &self.mailboxes {
+            // Lock-then-notify: a waiter re-checks the flag under the queue
+            // lock before each cv.wait, so this can never lose a wakeup.
+            let _q = mb.queue.lock().unwrap();
+            mb.cv.notify_all();
+        }
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Acquire)
+    }
+
+    /// Unwind the calling rank out of a transport wait after poisoning.
+    fn abort_peer_died(&self) -> ! {
+        let origin = self.poison_origin.lock().unwrap().unwrap_or(usize::MAX);
+        std::panic::panic_any(PeerDied { origin });
     }
 
     /// Deposit a message into `dst`'s mailbox. The payload is buffered (it
@@ -163,6 +272,7 @@ impl Network {
             _ => None,
         };
         let (mut arrival, mut complete) = if internal {
+            self.coll_sends[src].fetch_add(1, Ordering::Relaxed);
             (now, now)
         } else {
             self.msg_count.fetch_add(1, Ordering::Relaxed);
@@ -219,21 +329,45 @@ impl Network {
     }
 
     /// Blocking matched receive for (src, tag), honouring modeled arrival.
+    ///
+    /// Interacts with the carrier gate: before parking on the mailbox
+    /// condvar a permit-holding rank *pauses* (hands the permit to a
+    /// runnable peer — otherwise a full complement of blocked receivers
+    /// could hold every carrier while the senders they wait on starve),
+    /// and it *resumes* (re-takes a permit) before returning to user code.
+    /// Both transitions happen with the queue lock dropped; a rank that
+    /// never entered the gate pays one thread-local read for each.
+    ///
+    /// Unwinds with [`PeerDied`] if the network is poisoned, checked under
+    /// the queue lock before every wait so the poison broadcast can never
+    /// race a waiter into a lost wakeup.
     pub(super) fn collect(&self, me: usize, src: usize, tag: u64) -> Vec<f64> {
         let mb = &self.mailboxes[me];
         let mut q = mb.queue.lock().unwrap();
         loop {
+            if self.is_poisoned() {
+                drop(q);
+                self.abort_peer_died();
+            }
             if let Some(pos) = q.iter().position(|e| e.src == src && e.tag == tag) {
                 let arrival = q[pos].arrival;
                 let now = Instant::now();
                 if arrival <= now {
-                    return q.remove(pos).expect("position valid").data;
+                    let data = q.remove(pos).expect("position valid").data;
+                    drop(q);
+                    gate::resume();
+                    return data;
                 }
                 // Modeled transit not elapsed: sleep outside the lock, then
                 // re-match (the envelope may only be taken by this rank, but
-                // re-scan keeps the logic simple and correct).
+                // re-scan keeps the logic simple and correct). The sleep is
+                // bounded by the model, so the permit (if held) stays.
                 drop(q);
                 crate::util::timing::precise_sleep(arrival - now);
+                q = mb.queue.lock().unwrap();
+            } else if gate::holding() {
+                drop(q);
+                gate::pause();
                 q = mb.queue.lock().unwrap();
             } else {
                 q = mb.cv.wait(q).unwrap();
@@ -244,7 +378,8 @@ impl Network {
     /// Non-blocking probe: is a matching, arrived message available?
     pub(super) fn probe(&self, me: usize, src: usize, tag: u64) -> bool {
         let q = self.mailboxes[me].queue.lock().unwrap();
-        q.iter().any(|e| e.src == src && e.tag == tag && e.arrival <= Instant::now())
+        let now = Instant::now();
+        q.iter().any(|e| e.src == src && e.tag == tag && e.arrival <= now)
     }
 
     /// Non-blocking matched take: remove and return the first (src, tag)
@@ -266,6 +401,10 @@ impl Network {
         let mb = &self.mailboxes[me];
         let mut q = mb.queue.lock().unwrap();
         loop {
+            if self.is_poisoned() {
+                drop(q);
+                self.abort_peer_died();
+            }
             let now = Instant::now();
             if q.iter().any(|e| e.src == src && e.tag == tag && e.arrival <= now) {
                 return true;
@@ -623,5 +762,61 @@ mod tests {
         let posted = Instant::now();
         assert!(c1 <= posted + inj);
         assert!(c2 <= posted + inj, "independent injections must overlap, not queue");
+    }
+
+    #[test]
+    fn collective_sends_counts_internal_traffic_only() {
+        let net = Network::new(2);
+        net.deposit(0, 1, 7, vec![1.0]); // halo data: not counted here
+        net.deposit(0, 1, super::super::INTERNAL_TAG_BASE + 1, vec![2.0]);
+        net.deposit(0, 1, super::super::INTERNAL_TAG_BASE + 2, vec![3.0]);
+        assert_eq!(net.collective_sends(0), 2);
+        assert_eq!(net.collective_sends(1), 0);
+        assert_eq!(net.traffic().messages, 1, "internal sends stay out of traffic stats");
+    }
+
+    /// The dead-rank fix at the transport layer: a receiver parked on its
+    /// mailbox condvar with no sender coming unwinds with [`PeerDied`]
+    /// (naming the failed rank) once the network is poisoned, instead of
+    /// blocking forever.
+    #[test]
+    fn poison_wakes_blocked_collect_with_peer_died() {
+        quiet_peer_died_panics();
+        let net = Network::new(2);
+        let net2 = Arc::clone(&net);
+        let waiter = std::thread::spawn(move || {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                net2.collect(0, 1, 7) // rank 1 will never send
+            }));
+            *r.unwrap_err().downcast::<PeerDied>().expect("PeerDied payload")
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        net.poison(1);
+        assert_eq!(waiter.join().unwrap(), PeerDied { origin: 1 });
+        // first poison wins; a later one must not overwrite the origin
+        net.poison(0);
+        assert!(net.is_poisoned());
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            net.collect(0, 1, 8)
+        }))
+        .unwrap_err();
+        assert_eq!(*err.downcast::<PeerDied>().unwrap(), PeerDied { origin: 1 });
+    }
+
+    #[test]
+    fn poison_wakes_blocked_wait_arrival() {
+        use std::time::Duration;
+        quiet_peer_died_panics();
+        let net = Network::new(2);
+        let net2 = Arc::clone(&net);
+        let waiter = std::thread::spawn(move || {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                net2.wait_arrival(0, 1, 7, Instant::now() + Duration::from_secs(30))
+            }))
+            .is_err()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        net.poison(1);
+        assert!(waiter.join().unwrap(), "wait_arrival must unwind on poison");
     }
 }

@@ -1,0 +1,230 @@
+//! The carrier gate: bounds how many rank bodies *run* concurrently.
+//!
+//! The launcher spawns one OS thread per simulated rank (small stacks keep
+//! thousands of them cheap), but at O(10³) ranks letting them all contend
+//! for the scheduler turns every condvar broadcast into a thundering herd.
+//! The gate multiplexes the rank bodies over a bounded set of *carriers*:
+//! a rank thread may only execute user code while it holds one of the
+//! gate's permits. At every blocking point in the transport (a receive with
+//! no matching message, a stream join) the rank *pauses* — hands its permit
+//! to a runnable peer — and *resumes* once its wait is satisfied. The
+//! effect is `min(nranks, carriers)` runnable threads at any instant, with
+//! per-rank state (mailboxes, NIC slots, stacks) preallocated and flat.
+//!
+//! The permit bookkeeping is thread-local, so the hot paths (`pause` /
+//! `resume` on a thread that never entered a gate, e.g. a stream worker or
+//! an ungated small run) are a single TLS read — no lock, no allocation,
+//! preserving the steady-state zero-allocation contract.
+//!
+//! Deadlock discipline (audited in `mpisim::network`):
+//! * never block on the gate while holding a mailbox lock — pause/resume
+//!   are only called with all locks dropped;
+//! * every permit-holding wait is time-bounded (modeled-transit sleeps) or
+//!   preceded by a pause (condvar waits, stream joins);
+//! * [`RunGate::open`] (network poison) permanently disables the gate and
+//!   wakes every thread parked on it, so a dead peer can never strand a
+//!   rank waiting for a permit.
+
+use std::cell::{Cell, RefCell};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A counting permit gate. Inactive (no limit) until [`RunGate::activate`].
+pub struct RunGate {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+struct Inner {
+    permits: usize,
+    active: bool,
+}
+
+impl RunGate {
+    /// A new, inactive gate: `acquire` succeeds without taking a permit.
+    pub fn new() -> Arc<Self> {
+        Arc::new(RunGate {
+            inner: Mutex::new(Inner { permits: 0, active: false }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Activate with a permit budget. Call before any thread enters.
+    pub fn activate(&self, permits: usize) {
+        assert!(permits >= 1, "carrier gate needs at least one permit");
+        let mut g = self.inner.lock().unwrap();
+        g.permits = permits;
+        g.active = true;
+    }
+
+    /// Permanently disable the gate and wake everything parked on it
+    /// (the network-poison path: once a peer is dead, nobody may be left
+    /// waiting for a permit that will never be released).
+    pub fn open(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.active = false;
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.inner.lock().unwrap().active
+    }
+
+    /// Take a permit; blocks while none are free. Returns whether a permit
+    /// was actually taken (`false` on an inactive gate).
+    fn acquire(&self) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.active {
+                return false;
+            }
+            if g.permits > 0 {
+                g.permits -= 1;
+                return true;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn release(&self) {
+        let mut g = self.inner.lock().unwrap();
+        if g.active {
+            g.permits += 1;
+            drop(g);
+            self.cv.notify_one();
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum State {
+    /// This thread is not subject to any gate (never entered, or the gate
+    /// was inactive when it did).
+    NotGated,
+    /// Holds a carrier permit: running.
+    Holding,
+    /// Entered a gate and handed its permit back at a blocking point.
+    Paused,
+}
+
+thread_local! {
+    static STATE: Cell<State> = const { Cell::new(State::NotGated) };
+    static CURRENT: RefCell<Option<Arc<RunGate>>> = const { RefCell::new(None) };
+}
+
+/// Enter `gate` on this thread (rank-body start). Blocks for a permit if
+/// the gate is active.
+pub fn enter(gate: &Arc<RunGate>) {
+    let took = gate.acquire();
+    CURRENT.with(|c| *c.borrow_mut() = Some(Arc::clone(gate)));
+    STATE.with(|s| s.set(if took { State::Holding } else { State::NotGated }));
+}
+
+/// Leave the gate (rank-body end); releases a held permit.
+pub fn exit() {
+    if STATE.with(|s| s.replace(State::NotGated)) == State::Holding {
+        CURRENT.with(|c| {
+            if let Some(g) = c.borrow().as_ref() {
+                g.release();
+            }
+        });
+    }
+    CURRENT.with(|c| *c.borrow_mut() = None);
+}
+
+/// Does this thread currently hold a carrier permit?
+pub fn holding() -> bool {
+    STATE.with(|s| s.get()) == State::Holding
+}
+
+/// Hand the permit to a runnable peer before blocking. No-op unless this
+/// thread holds one. Must be called with no transport locks held.
+pub fn pause() {
+    if STATE.with(|s| s.get()) == State::Holding {
+        STATE.with(|s| s.set(State::Paused));
+        CURRENT.with(|c| {
+            if let Some(g) = c.borrow().as_ref() {
+                g.release();
+            }
+        });
+    }
+}
+
+/// Re-take a permit after a pause, before returning to user code. No-op
+/// unless this thread paused. Must be called with no transport locks held.
+pub fn resume() {
+    if STATE.with(|s| s.get()) == State::Paused {
+        let gate = CURRENT.with(|c| c.borrow().clone());
+        let took = gate.as_ref().map(|g| g.acquire()).unwrap_or(false);
+        STATE.with(|s| s.set(if took { State::Holding } else { State::NotGated }));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn inactive_gate_never_blocks_or_tracks() {
+        let g = RunGate::new();
+        enter(&g);
+        assert!(!holding());
+        pause();
+        resume();
+        exit();
+    }
+
+    #[test]
+    fn active_gate_bounds_concurrent_holders() {
+        let g = RunGate::new();
+        g.activate(2);
+        let running = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let g = Arc::clone(&g);
+                let running = Arc::clone(&running);
+                let peak = Arc::clone(&peak);
+                std::thread::spawn(move || {
+                    enter(&g);
+                    assert!(holding());
+                    let now = running.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    running.fetch_sub(1, Ordering::SeqCst);
+                    // pause hands the permit over; peers may run while we
+                    // "block"
+                    pause();
+                    assert!(!holding());
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    resume();
+                    assert!(holding());
+                    exit();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 2, "more holders than permits");
+    }
+
+    #[test]
+    fn open_unblocks_parked_threads() {
+        let g = RunGate::new();
+        g.activate(1);
+        enter(&g); // take the only permit on this thread
+        let g2 = Arc::clone(&g);
+        let t = std::thread::spawn(move || {
+            enter(&g2); // parks: no permit free
+            let held = holding();
+            exit();
+            held
+        });
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        g.open();
+        assert!(!t.join().unwrap(), "opened gate admits without a permit");
+        exit();
+    }
+}

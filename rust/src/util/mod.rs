@@ -6,6 +6,7 @@
 //! rest of the system needs (see DESIGN.md §2, offline-toolchain table).
 
 pub mod cli;
+pub mod gate;
 pub mod json;
 pub mod prng;
 pub mod quickcheck;

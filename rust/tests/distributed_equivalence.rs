@@ -65,6 +65,20 @@ fn wave_twelve_ranks_anisotropic() {
     assert!(report.contains("PASS"), "{report}");
 }
 
+/// Executor-scale equivalence: 512 ranks (8^3 topology) multiplexed over
+/// the bounded executor's carrier budget — hundreds of parked small-stack
+/// threads, permits handed over at every blocking receive — still
+/// reproduce the 1-rank global solution bitwise, with hiding on.
+#[test]
+fn diffusion_512_ranks_executor_scale() {
+    let cfg = Config {
+        hide: Some(HideWidths([2, 2, 2])),
+        ..base(AppKind::Diffusion, 512, 8, 2)
+    };
+    let report = validate_equivalence(&cfg).unwrap();
+    assert!(report.contains("PASS"), "{report}");
+}
+
 #[test]
 fn diffusion_hidden_communication_12_ranks() {
     let cfg = Config {

@@ -16,7 +16,10 @@
 //! and the persistent scheduler pool (`sched::Pool`): grids big enough to
 //! engage the compute-slab and pack-chunk paths must submit, execute and
 //! join fork-join jobs without touching the heap (preallocated job slots,
-//! raw-pointer work handoff, condvar signaling).
+//! raw-pointer work handoff, condvar signaling) — and the bounded rank
+//! executor's carrier gate: with more ranks than carriers, every blocking
+//! receive hands its permit over and re-acquires on wake through
+//! mutex/condvar state only.
 //! This file contains exactly one #[test] so no concurrent test in the
 //! same binary can pollute the counter.
 
@@ -75,17 +78,26 @@ where
         Some(f) => Network::with_faults(nranks, cfg.net, f.plan.clone()),
         None => Network::with_model(nranks, cfg.net),
     };
+    // mirror the launcher: engage the carrier gate when the budget is
+    // below the rank count, so gated scenarios measure the executor's
+    // pause/resume hot path inside the allocation-counting window
+    let carriers = igg::coordinator::launcher::carrier_budget(&cfg);
+    if carriers < nranks && cfg.faults.is_none() {
+        net.limit_carriers(carriers);
+    }
     let before = Arc::new(AtomicUsize::new(0));
     let after = Arc::new(AtomicUsize::new(0));
     let handles: Vec<_> = (0..nranks)
         .map(|r| {
             let comm = net.comm(r);
+            let net = Arc::clone(&net);
             let cfg = cfg.clone();
             let before = Arc::clone(&before);
             let after = Arc::clone(&after);
             std::thread::Builder::new()
                 .name(format!("alloc-rank-{r}"))
                 .spawn(move || {
+                    net.rank_enter();
                     let grid = GlobalGrid::init(comm, cfg.local, cfg.grid_options()).unwrap();
                     let ctx = RankCtx { grid, cfg };
                     let schedule = Schedule::plan(&ctx.cfg, &ctx.grid).unwrap();
@@ -114,7 +126,9 @@ where
                     // happen on the main thread after join (a panic here
                     // would strand the other ranks in the barrier)
                     ctx.grid.comm().barrier();
-                    (engine_warm, ctx.grid.halo_allocations())
+                    let counts = (engine_warm, ctx.grid.halo_allocations());
+                    net.rank_exit();
+                    counts
                 })
                 .expect("spawn rank thread")
         })
@@ -174,6 +188,30 @@ fn timeloop_steady_state_is_allocation_free() {
             ..Default::default()
         },
     );
+
+    // Executor-multiplexed: 4 ranks over a 2-carrier budget (cfg.carriers
+    // = 2 engages the gate in the harness exactly as the launcher would).
+    // Every blocking receive hands its permit over via gate::pause/resume
+    // and re-acquires on wake; that hot path must stay off the heap —
+    // plain, and with hiding so the comm stream's gate-aware synchronize
+    // is inside the counting window too.
+    for (label, hide) in [
+        ("diffusion/plain/4 ranks/carriers-2", None),
+        ("diffusion/hide/4 ranks/carriers-2", Some(HideWidths([3, 2, 2]))),
+    ] {
+        assert_steady_state_alloc_free::<Diffusion>(
+            label,
+            Config {
+                app: AppKind::Diffusion,
+                nranks: 4,
+                local: [12, 12, 12],
+                nt: 1,
+                hide,
+                carriers: 2,
+                ..Default::default()
+            },
+        );
+    }
 
     // Two-phase: the mobility-ring scratch must come from the executor's
     // reusable buffer, not a per-region Vec.
