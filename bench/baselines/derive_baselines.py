@@ -245,12 +245,35 @@ def weak_scaling_baseline():
     }
 
 
+def tenancy_baseline():
+    """Co-tenancy QoS baseline (benches/tenancy_qos.rs).
+
+    Only machine-portable columns: qos_efficiency already divides out core
+    time-sharing, so on an ideally isolating fabric it is 1.0 for every job
+    regardless of the runner's core count, and two equal-demand jobs are
+    perfectly fair. Step times depend on the runner and stay out of the
+    baseline (perf_trend only diffs shared paths). The fault counters are
+    exact by contract: a clean co-tenancy run must not inject anything.
+    """
+    return {
+        "jobs": [
+            {"app": "diffusion", "nranks": 2, "qos_efficiency": 1.0},
+            {"app": "wave", "nranks": 2, "qos_efficiency": 1.0},
+        ],
+        "fairness": 1.0,
+        "total_ranks": 4,
+        "fault_injected": 0,
+        "fault_exhausted": 0,
+    }
+
+
 def main():
     here = os.path.dirname(os.path.abspath(__file__))
     for name, body in (
         ("BENCH_halo.json", halo_baseline()),
         ("hide_communication_ablation.json", ablation_baseline()),
         ("BENCH_weak_scaling.json", weak_scaling_baseline()),
+        ("BENCH_tenancy.json", tenancy_baseline()),
     ):
         path = os.path.join(here, name)
         with open(path, "w") as f:

@@ -1,0 +1,86 @@
+//! **Co-tenancy QoS bench** — the multi-tenant rung of the network-realism
+//! ladder: two jobs (diffusion + wave) share one network under the full
+//! contention model (`aries,serial-nic,eject,links`) and the bench reports
+//! what sharing costs each of them.
+//!
+//! Columns per job: isolated and co-tenant step time, their ratio
+//! (`slowdown`), and `qos_efficiency` — the expected core-time-sharing
+//! slowdown divided by the measured one, so ~1.0 means the fabric isolates
+//! tenants as well as an infinitely-provisioned network would and the
+//! number stays portable across runner core counts. The headline fairness
+//! ratio is max/min co-tenant job wall time.
+//!
+//! Emits `BENCH_tenancy.json` (compared against
+//! `bench/baselines/BENCH_tenancy.json` by `tools/perf_trend.rs` as an
+//! advisory CI step — ratios with tolerance, fault counters exactly) and
+//! merges a `tenancy` section into the shared `BENCH_perf.json`.
+//!
+//!     cargo bench --bench tenancy_qos
+
+use igg::bench::measure::{bench_samples, fmt_time};
+use igg::bench::report;
+use igg::coordinator::tenancy::{self, TenancyOutcome};
+use igg::mpisim::NetModel;
+use igg::util::json::Json;
+use igg::util::stats::median;
+
+const JOBS: &str = "diffusion:ranks=2,nx=16,nt=8;wave:ranks=2,nx=16,nt=8";
+const NET: &str = "aries,serial-nic,eject,links";
+
+fn main() -> anyhow::Result<()> {
+    let samples = bench_samples(3);
+    let net = NetModel::parse(NET)?;
+
+    println!("# Co-tenancy QoS — {JOBS}");
+    println!("net: {NET}, {samples} samples (median per column)\n");
+
+    let runs: Vec<TenancyOutcome> = (0..samples)
+        .map(|_| tenancy::run_jobs_spec(JOBS, net, 2, None))
+        .collect::<anyhow::Result<_>>()?;
+
+    // Median each column across samples; the job list is identical in
+    // every run (same spec), so index j is the same job throughout.
+    let col = |f: &dyn Fn(&TenancyOutcome) -> f64| median(&runs.iter().map(f).collect::<Vec<_>>());
+    let mut rows = Vec::new();
+    println!("| job | app | ranks | iso t/step | co t/step | slowdown | qos eff |");
+    println!("|---:|---|---:|---:|---:|---:|---:|");
+    for (j, job) in runs[0].jobs.iter().enumerate() {
+        let iso = col(&|o: &TenancyOutcome| o.jobs[j].iso_step_s);
+        let co = col(&|o: &TenancyOutcome| o.jobs[j].co_step_s);
+        let slowdown = col(&|o: &TenancyOutcome| o.jobs[j].slowdown);
+        let qos = col(&|o: &TenancyOutcome| o.jobs[j].qos_efficiency);
+        println!(
+            "| {j} | {} | {} | {} | {} | {slowdown:.2}x | {qos:.2} |",
+            job.app,
+            job.nranks,
+            fmt_time(iso),
+            fmt_time(co),
+        );
+        rows.push(Json::obj(vec![
+            ("app", Json::Str(job.app.into())),
+            ("nranks", Json::Num(job.nranks as f64)),
+            ("iso_step_s", Json::Num(iso)),
+            ("co_step_s", Json::Num(co)),
+            ("slowdown", Json::Num(slowdown)),
+            ("qos_efficiency", Json::Num(qos)),
+        ]));
+    }
+    let fairness = col(&|o: &TenancyOutcome| o.fairness);
+    let injected: u64 = runs.iter().map(|o| o.fault_injected).sum();
+    let exhausted: u64 = runs.iter().map(|o| o.fault_exhausted).sum();
+    println!("\nfairness (max/min job time): {fairness:.2}");
+
+    let section = Json::obj(vec![
+        ("jobs", Json::Arr(rows)),
+        ("fairness", Json::Num(fairness)),
+        ("total_ranks", Json::Num(runs[0].total_ranks as f64)),
+        ("net", Json::Str(NET.into())),
+        // clean co-tenancy must stay fault-free: compared exactly by
+        // perf_trend, so any accidental injection turns the trend red
+        ("fault_injected", Json::Num(injected as f64)),
+        ("fault_exhausted", Json::Num(exhausted as f64)),
+    ]);
+    report::write_json_report("BENCH_tenancy.json", section.clone())?;
+    report::merge_json_report("BENCH_perf.json", vec![("tenancy", section)])?;
+    Ok(())
+}

@@ -15,7 +15,13 @@
 //! comm/compute ratio on this testbed, and `.with_serial_nic()` (CLI
 //! `--net aries:64,serial-nic`) additionally serializes each rank's send
 //! injections through its NIC — the honest setting for quoting
-//! hide-communication speedups. See EXPERIMENTS.md §Netmodel.
+//! hide-communication speedups. Two further rungs complete the realism
+//! ladder: `.with_eject()` (CLI `,eject`) serializes arrivals through the
+//! receiver's NIC and `.with_links(f)` (CLI `,links[:<f>]`) makes each
+//! directed wire a queueing resource. And jobs need not be alone:
+//! `igg tenancy --jobs 'diffusion:ranks=2;wave:ranks=2'` runs co-tenant
+//! jobs on one shared network and reports what sharing costs each of them
+//! (slowdown, fairness, QoS efficiency). See EXPERIMENTS.md §Netmodel.
 //!
 //! To scale one rank onto many cores set `compute_threads` (x-chunks the
 //! stencil regions) and `comm_threads` (threads the halo plane

@@ -331,6 +331,14 @@ impl Config {
                 },
             ),
             ("net_contended", Json::Bool(self.net.is_contended())),
+            ("net_eject", Json::Bool(self.net.has_eject())),
+            (
+                "net_links",
+                match self.net.links {
+                    Some(scale) => Json::Num(scale),
+                    None => Json::Null,
+                },
+            ),
             (
                 "faults",
                 match &self.faults {
@@ -508,5 +516,18 @@ mod tests {
         assert_eq!(c.net.latency_s, 1.5e-6 * 8.0);
         assert_eq!(c.to_json().get("net_contended").unwrap().as_bool(), Some(true));
         assert!(parse(&["--net", "aries,bogus-nic"]).is_err());
+    }
+
+    #[test]
+    fn eject_links_net_flags_parse_and_report() {
+        let c = parse(&["--net", "aries,serial-nic,eject,links:0.5"]).unwrap();
+        assert!(c.net.is_contended() && c.net.has_eject());
+        assert_eq!(c.net.links, Some(0.5));
+        let j = c.to_json();
+        assert_eq!(j.get("net_eject").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("net_links").unwrap().as_f64(), Some(0.5));
+        let plain = parse(&["--net", "aries"]).unwrap().to_json();
+        assert_eq!(plain.get("net_eject").unwrap().as_bool(), Some(false));
+        assert!(matches!(plain.get("net_links"), Some(Json::Null)));
     }
 }

@@ -92,21 +92,53 @@ where
 {
     cfg.validate()?;
     assert_eq!(net.size(), cfg.nranks, "network size must match cfg.nranks");
-    quiet_peer_died_panics();
     let carriers = carrier_budget(cfg);
     if carriers < cfg.nranks && !net.faults_enabled() {
         net.limit_carriers(carriers);
     }
+    run_tenant(net, cfg, 0, None, f)
+}
+
+/// Spawn and join one job's `cfg.nranks` rank threads on the tenant slice
+/// starting at global rank `base` of a (possibly shared) network. This is
+/// the spawn/join core [`run_ranks_on`] and the multi-tenant driver
+/// (`coordinator::tenancy`) both sit on: ranks get tenant-local
+/// communicators, failures poison the tenant via the failing rank's
+/// *global* index, and the first error (by rank order) wins. Carrier
+/// gating and network construction are the caller's business — under
+/// tenancy the gate must span the whole network, not one job.
+pub fn run_tenant<R, F>(
+    net: &Arc<Network>,
+    cfg: &Config,
+    base: usize,
+    job: Option<usize>,
+    f: F,
+) -> anyhow::Result<Vec<R>>
+where
+    R: Send + 'static,
+    F: Fn(RankCtx) -> anyhow::Result<R> + Send + Sync + 'static,
+{
+    assert!(base + cfg.nranks <= net.size(), "tenant slice must fit the network");
+    quiet_peer_died_panics();
     let f = Arc::new(f);
+    // A *clean* job poisons its own tenant on failure so its peers unwind;
+    // a faulted job leaves poisoning to the fault layer's recovery
+    // protocol. Keyed on the job's own fault config, not the network's:
+    // on a shared network only the faulted tenant runs recovery.
+    let poison_on_failure = cfg.faults.is_none();
+    let job_label = match job {
+        Some(j) => format!("igg-j{j}-rank"),
+        None => "igg-rank".to_string(),
+    };
     let mut handles = Vec::with_capacity(cfg.nranks);
     for r in 0..cfg.nranks {
-        let comm = net.comm(r);
+        let comm = net.tenant_comm(base, cfg.nranks, r);
         let net = Arc::clone(net);
         let cfg = cfg.clone();
         let f = Arc::clone(&f);
         let stack = cfg.rank_stack_kib * 1024;
         let handle = std::thread::Builder::new()
-            .name(format!("igg-rank-{r}"))
+            .name(format!("{job_label}-{r}"))
             .stack_size(stack)
             .spawn(move || -> RankOutcome<R> {
                 net.rank_enter();
@@ -118,20 +150,20 @@ where
                 match result {
                     Ok(Ok(v)) => RankOutcome::Ok(v),
                     Ok(Err(e)) => {
-                        if !net.faults_enabled() {
-                            net.poison(r);
+                        if poison_on_failure {
+                            net.poison(base + r);
                         }
                         RankOutcome::Error(e)
                     }
                     Err(payload) => {
                         if let Some(pd) = payload.downcast_ref::<PeerDied>() {
                             // Collateral unwind: this rank was healthy and
-                            // blocked on a peer that died. The network is
+                            // blocked on a peer that died. The tenant is
                             // already poisoned by the origin.
                             RankOutcome::PeerDied(*pd)
                         } else {
-                            if !net.faults_enabled() {
-                                net.poison(r);
+                            if poison_on_failure {
+                                net.poison(base + r);
                             }
                             RankOutcome::Panicked(panic_message(payload.as_ref()))
                         }
@@ -141,6 +173,10 @@ where
             .expect("spawn rank thread");
         handles.push(handle);
     }
+    let rank_label = |r: usize| match job {
+        Some(j) => format!("job {j} rank {r}"),
+        None => format!("rank {r}"),
+    };
     let mut out = Vec::with_capacity(cfg.nranks);
     let mut first_err: Option<anyhow::Error> = None;
     let mut collateral: Option<PeerDied> = None;
@@ -152,12 +188,12 @@ where
             RankOutcome::Ok(v) => out.push(v),
             RankOutcome::Error(e) => {
                 if first_err.is_none() {
-                    first_err = Some(e.context(format!("rank {r}")));
+                    first_err = Some(e.context(rank_label(r)));
                 }
             }
             RankOutcome::Panicked(msg) => {
                 if first_err.is_none() {
-                    first_err = Some(anyhow::anyhow!("rank {r} panicked: {msg}"));
+                    first_err = Some(anyhow::anyhow!("{} panicked: {msg}", rank_label(r)));
                 }
             }
             RankOutcome::PeerDied(pd) => {

@@ -14,6 +14,7 @@ pub mod config;
 pub mod insitu;
 pub mod launcher;
 pub mod metrics;
+pub mod tenancy;
 pub mod timeloop;
 
 pub use timeloop::{AppResult, Schedule, StencilApp, TimeLoop};

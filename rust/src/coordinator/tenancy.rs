@@ -1,0 +1,384 @@
+//! Multi-tenant driver: N independent [`TimeLoop`] jobs sharing one
+//! [`Network`].
+//!
+//! The paper's scaling story is single-tenant — one job owns the fabric.
+//! Production fabrics are not: co-scheduled jobs share links and NICs, and
+//! the honest question is how much a job *slows down* when it stops being
+//! alone. This driver partitions one network's rank space into contiguous
+//! tenant slices (one per job, mixed [`AppKind`]s welcome), runs every job
+//! concurrently through the unmodified launcher/engine stack — tenant
+//! translation lives entirely inside [`crate::mpisim::Comm`] — and reports
+//! per-job slowdown versus an isolated baseline plus a fairness ratio
+//! (max/min co-tenant job time).
+//!
+//! ## `--jobs` spec grammar
+//!
+//! ```text
+//! jobs := job (';' job)*          (or '+' as the separator)
+//! job  := app [':' kv (',' kv)*]
+//! app  := diffusion | twophase | wave
+//! kv   := ranks=<n> | nx=<n> | ny=<n> | nz=<n> | nt=<n> | seed=<n>
+//!       | hide=<wx>/<wy>/<wz> | dims=<dx>/<dy>/<dz>
+//! ```
+//!
+//! Example: `--jobs 'diffusion:ranks=2,nx=16,nt=8,hide=2/2/2;wave:ranks=2,nx=16,nt=8'`.
+//! Slashes keep multi-value keys out of the comma-separated kv list.
+//! `nx=<n>` sets a cubic `n³` local grid; `ny`/`nz` then override their
+//! axis, so write `nx` first.
+//!
+//! Fault injection composes: `--faults <spec> --faults-job <j>` scopes the
+//! spec (written in job-local ranks) to job `j`'s tenant slice. Only that
+//! job arms the recovery layer; co-tenants stay on the clean fast path,
+//! and a kill in the faulted job poisons only its own tenant.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::apps;
+use crate::coordinator::config::{AppKind, Config};
+use crate::coordinator::launcher::{carrier_budget, run_tenant};
+use crate::coordinator::metrics::RunMetrics;
+use crate::mpisim::{FaultSpec, Network};
+use crate::overlap::HideWidths;
+use crate::util::json::Json;
+
+/// Parse a `--jobs` spec into per-job configs. Each job starts from
+/// `Config::default()` (so `IGG_*` environment presets apply) with the
+/// spec's overrides; the caller is expected to overwrite shared knobs
+/// (`net`, threads) afterwards — tenants share one wire by construction.
+pub fn parse_jobs(spec: &str) -> anyhow::Result<Vec<Config>> {
+    let mut jobs = Vec::new();
+    for item in spec.split([';', '+']).map(str::trim).filter(|s| !s.is_empty()) {
+        let (app_s, kvs) = match item.split_once(':') {
+            Some((a, k)) => (a.trim(), Some(k)),
+            None => (item, None),
+        };
+        let mut cfg = Config { app: AppKind::parse(app_s)?, ..Config::default() };
+        if let Some(kvs) = kvs {
+            for kv in kvs.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                let (k, v) = kv.split_once('=').ok_or_else(|| {
+                    anyhow::anyhow!("in job '{item}': '{kv}' is not key=value")
+                })?;
+                let usize_v = || -> anyhow::Result<usize> {
+                    v.parse()
+                        .map_err(|_| anyhow::anyhow!("in job '{item}': {k}='{v}' not an integer"))
+                };
+                match k {
+                    "ranks" => cfg.nranks = usize_v()?,
+                    "nx" => {
+                        let n = usize_v()?;
+                        cfg.local = [n, n, n];
+                    }
+                    "ny" => cfg.local[1] = usize_v()?,
+                    "nz" => cfg.local[2] = usize_v()?,
+                    "nt" => cfg.nt = usize_v()?,
+                    "seed" => cfg.seed = usize_v()? as u64,
+                    "hide" => cfg.hide = Some(HideWidths::parse(&v.replace('/', ","))?),
+                    "dims" => {
+                        let d: Vec<usize> = v
+                            .split('/')
+                            .map(|x| x.parse())
+                            .collect::<Result<_, _>>()
+                            .map_err(|_| {
+                                anyhow::anyhow!("in job '{item}': dims='{v}' wants dx/dy/dz")
+                            })?;
+                        anyhow::ensure!(d.len() == 3, "in job '{item}': dims='{v}' wants dx/dy/dz");
+                        cfg.dims = [d[0], d[1], d[2]];
+                    }
+                    other => anyhow::bail!(
+                        "in job '{item}': unknown key '{other}' \
+                         (want ranks|nx|ny|nz|nt|seed|hide|dims)"
+                    ),
+                }
+            }
+        }
+        cfg.validate().map_err(|e| e.context(format!("in job '{item}'")))?;
+        jobs.push(cfg);
+    }
+    anyhow::ensure!(jobs.len() >= 2, "--jobs needs at least two jobs (got {})", jobs.len());
+    Ok(jobs)
+}
+
+/// Expected slowdown from ideal core time-sharing alone: with `c` cores a
+/// job of `r` ranks alone runs at `max(1, r/c)` time-sharing, and at
+/// `max(1, t/c)` when `t` total ranks share the host. A co-tenancy run on
+/// a time-shared testbed pays this ratio even if the network isolates
+/// perfectly, so QoS efficiency divides it out.
+pub fn expected_timeshare_slowdown(job_ranks: usize, total_ranks: usize) -> f64 {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64;
+    let alone = (job_ranks as f64 / cores).max(1.0);
+    let shared = (total_ranks as f64 / cores).max(1.0);
+    shared / alone
+}
+
+/// One job's outcome of a co-tenancy run.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub app: &'static str,
+    pub nranks: usize,
+    pub nt: usize,
+    /// Median-free single-sample step time of the isolated baseline run.
+    pub iso_step_s: f64,
+    /// Step time of the same job sharing the network with its co-tenants.
+    pub co_step_s: f64,
+    /// `co_step_s / iso_step_s` (>= ~1; network + host interference).
+    pub slowdown: f64,
+    /// Machine-portable QoS column: expected time-sharing slowdown over
+    /// the measured one. 1.0 = all interference explained by core
+    /// time-sharing; below 1.0 = genuine contention (NICs, links, locks).
+    pub qos_efficiency: f64,
+    /// Wall-clock time of the job's co-tenant run (spawn to join).
+    pub job_time_s: f64,
+}
+
+/// Outcome of [`run_jobs`]: per-job results plus the fairness ratio.
+#[derive(Debug, Clone)]
+pub struct TenancyOutcome {
+    pub jobs: Vec<JobResult>,
+    /// max/min over co-tenant job wall times — the QoS headline: 1.0 is
+    /// perfectly fair sharing *of jobs with equal demand*; heterogeneous
+    /// jobs report their structural imbalance here too.
+    pub fairness: f64,
+    pub total_ranks: usize,
+    /// Injector-side fault count of the shared network (0 without
+    /// `--faults`).
+    pub fault_injected: u64,
+    /// Ranks that exhausted their retry budget (must be 0 for a
+    /// recoverable schedule).
+    pub fault_exhausted: u64,
+}
+
+impl TenancyOutcome {
+    /// The `tenancy` section merged into `BENCH_perf.json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "jobs",
+                Json::Arr(
+                    self.jobs
+                        .iter()
+                        .map(|j| {
+                            Json::obj(vec![
+                                ("app", Json::Str(j.app.into())),
+                                ("nranks", Json::Num(j.nranks as f64)),
+                                ("nt", Json::Num(j.nt as f64)),
+                                ("iso_step_s", Json::Num(j.iso_step_s)),
+                                ("co_step_s", Json::Num(j.co_step_s)),
+                                ("slowdown", Json::Num(j.slowdown)),
+                                ("qos_efficiency", Json::Num(j.qos_efficiency)),
+                                ("job_time_s", Json::Num(j.job_time_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("fairness", Json::Num(self.fairness)),
+            ("total_ranks", Json::Num(self.total_ranks as f64)),
+            ("fault_injected", Json::Num(self.fault_injected as f64)),
+            ("fault_exhausted", Json::Num(self.fault_exhausted as f64)),
+        ])
+    }
+}
+
+/// Run `jobs` concurrently on one shared network (isolated baselines
+/// first), with optional fault injection scoped to `faults = (job index,
+/// spec)`. Every job's `net` must match — tenants share one wire.
+pub fn run_jobs(
+    jobs: &[Config],
+    warmup: usize,
+    faults: Option<(usize, FaultSpec)>,
+) -> anyhow::Result<TenancyOutcome> {
+    anyhow::ensure!(jobs.len() >= 2, "co-tenancy needs at least two jobs");
+    for (j, cfg) in jobs.iter().enumerate() {
+        cfg.validate().map_err(|e| e.context(format!("job {j}")))?;
+        anyhow::ensure!(
+            cfg.net == jobs[0].net,
+            "job {j} uses a different net model; tenants share one wire"
+        );
+        anyhow::ensure!(
+            cfg.faults.is_none(),
+            "job {j} carries its own fault spec; use the (job, spec) argument"
+        );
+    }
+    let total: usize = jobs.iter().map(|c| c.nranks).sum();
+    let bases: Vec<usize> = jobs
+        .iter()
+        .scan(0, |acc, c| {
+            let b = *acc;
+            *acc += c.nranks;
+            Some(b)
+        })
+        .collect();
+
+    // Per-job fault scoping: validate the (job-local) spec against the
+    // job, arm the job's own config (engine retry policy + launcher
+    // poison semantics), and offset the plan to the tenant's global slice.
+    let mut cfgs: Vec<Config> = jobs.to_vec();
+    let mut plan = None;
+    if let Some((fj, spec)) = &faults {
+        anyhow::ensure!(*fj < jobs.len(), "--faults-job {fj} out of range (jobs: {})", jobs.len());
+        let cfg = &mut cfgs[*fj];
+        cfg.faults = Some(spec.clone());
+        cfg.validate().map_err(|e| e.context(format!("--faults for job {fj}")))?;
+        plan = Some(spec.plan.clone().for_tenant(bases[*fj], cfg.nranks));
+    }
+
+    // Isolated baselines: each job alone on a fresh clean network of its
+    // own size — the denominator of the slowdown column. Baselines stay
+    // fault-free even for the faulted job: slowdown measures co-tenancy
+    // interference, not recovery overhead on both sides of the ratio.
+    let mut iso = Vec::with_capacity(jobs.len());
+    for (j, cfg) in jobs.iter().enumerate() {
+        let rm = crate::bench::scaling::run_app_once(cfg, warmup)
+            .map_err(|e| e.context(format!("isolated baseline for job {j}")))?;
+        iso.push(rm.step_time_s());
+    }
+
+    // The shared network: one tenant slice per job, faults (if any)
+    // scoped to the faulted job's slice.
+    let net = match plan {
+        Some(p) => Network::with_faults(total, jobs[0].net, p),
+        None => Network::with_model(total, jobs[0].net),
+    };
+    net.partition(&jobs.iter().map(|c| c.nranks).collect::<Vec<_>>());
+    // One carrier gate spanning the whole network (per-job gates would
+    // deadlock: a permit-starved job cannot make progress for its
+    // co-tenant's collectives). Gating and faults stay mutually exclusive,
+    // as in the single-tenant launcher.
+    let budget = carrier_budget(&jobs[0]);
+    if budget < total && !net.faults_enabled() {
+        net.limit_carriers(budget);
+    }
+
+    let mut handles = Vec::with_capacity(cfgs.len());
+    for (j, cfg) in cfgs.iter().enumerate() {
+        let net = Arc::clone(&net);
+        let cfg = cfg.clone();
+        let base = bases[j];
+        handles.push(std::thread::spawn(move || -> anyhow::Result<(RunMetrics, f64)> {
+            let t0 = Instant::now();
+            let results =
+                run_tenant(&net, &cfg, base, Some(j), move |ctx| apps::run_app(&ctx, warmup))?;
+            let wall = t0.elapsed().as_secs_f64();
+            Ok((RunMetrics::new(results.into_iter().map(|r| r.metrics).collect()), wall))
+        }));
+    }
+    let mut outcomes = Vec::with_capacity(cfgs.len());
+    let mut first_err: Option<anyhow::Error> = None;
+    for (j, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(Ok(v)) => outcomes.push(Some(v)),
+            Ok(Err(e)) => {
+                outcomes.push(None);
+                if first_err.is_none() {
+                    first_err = Some(e.context(format!("job {j} ({})", cfgs[j].app.name())));
+                }
+            }
+            Err(payload) => {
+                outcomes.push(None);
+                if first_err.is_none() {
+                    let msg = payload
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "opaque panic".into());
+                    first_err = Some(anyhow::anyhow!("job {j} driver panicked: {msg}"));
+                }
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+
+    let stats = net.fault_stats();
+    let mut results = Vec::with_capacity(cfgs.len());
+    for (j, out) in outcomes.into_iter().enumerate() {
+        let (rm, wall) = out.expect("errors returned above");
+        let co = rm.step_time_s();
+        results.push(JobResult {
+            app: cfgs[j].app.name(),
+            nranks: cfgs[j].nranks,
+            nt: cfgs[j].nt,
+            iso_step_s: iso[j],
+            co_step_s: co,
+            slowdown: co / iso[j],
+            qos_efficiency: expected_timeshare_slowdown(cfgs[j].nranks, total) / (co / iso[j]),
+            job_time_s: wall,
+        });
+    }
+    let max_t = results.iter().map(|r| r.job_time_s).fold(f64::MIN, f64::max);
+    let min_t = results.iter().map(|r| r.job_time_s).fold(f64::MAX, f64::min);
+    Ok(TenancyOutcome {
+        jobs: results,
+        fairness: max_t / min_t,
+        total_ranks: total,
+        fault_injected: stats.injected(),
+        fault_exhausted: stats.exhausted,
+    })
+}
+
+/// `run_jobs` for specs straight off the CLI: parse, overwrite the shared
+/// knobs every tenant must agree on, run.
+pub fn run_jobs_spec(
+    spec: &str,
+    net: crate::mpisim::NetModel,
+    warmup: usize,
+    faults: Option<(usize, FaultSpec)>,
+) -> anyhow::Result<TenancyOutcome> {
+    let mut jobs = parse_jobs(spec)?;
+    for cfg in &mut jobs {
+        cfg.net = net;
+        cfg.faults = None;
+    }
+    run_jobs(&jobs, warmup, faults)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jobs_grammar_round_trips() {
+        let jobs = parse_jobs(
+            "diffusion:ranks=2,nx=16,nt=8,hide=2/2/2;wave:ranks=4,nx=12,nz=10,nt=5,dims=1/2/2",
+        )
+        .unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].app, AppKind::Diffusion);
+        assert_eq!((jobs[0].nranks, jobs[0].nt), (2, 8));
+        assert_eq!(jobs[0].hide, Some(HideWidths([2, 2, 2])));
+        assert_eq!(jobs[1].app, AppKind::Wave);
+        assert_eq!(jobs[1].local, [12, 12, 10]);
+        assert_eq!(jobs[1].dims, [1, 2, 2]);
+        // '+' separates too (shell-friendlier than ';')
+        let jobs = parse_jobs("diffusion:ranks=2+twophase:ranks=2").unwrap();
+        assert_eq!(jobs[1].app, AppKind::Twophase);
+    }
+
+    #[test]
+    fn jobs_grammar_rejects_bad_specs() {
+        for (bad, needle) in [
+            ("diffusion:ranks=2", "at least two jobs"),
+            ("diffusion:ranks=2;mystery:ranks=2", "unknown app"),
+            ("diffusion:ranks=2;wave:speed=9", "unknown key"),
+            ("diffusion:ranks=2;wave:ranks=x", "not an integer"),
+            ("diffusion:ranks=2;wave:dims=1/2", "dx/dy/dz"),
+            ("diffusion:nx=2;wave:ranks=2", "too small"),
+        ] {
+            let err = format!("{:#}", parse_jobs(bad).unwrap_err());
+            assert!(err.contains(needle), "spec '{bad}': error '{err}' missing '{needle}'");
+        }
+    }
+
+    #[test]
+    fn timeshare_slowdown_bounds() {
+        // a job that owns every core expects no extra slowdown from itself
+        assert_eq!(expected_timeshare_slowdown(4, 4), 1.0);
+        // doubling the rank population on a saturated host doubles expected
+        // wall time
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let r = 2 * cores;
+        assert!((expected_timeshare_slowdown(r, 2 * r) - 2.0).abs() < 1e-12);
+    }
+}

@@ -445,7 +445,11 @@ impl HaloEngine {
         let device = Arc::new(SimDevice::new(copy_model));
         let pool = Arc::new(Mutex::new(BufferPool::new()));
         let stats = Arc::new(Mutex::new(HaloStats::default()));
-        let fault = if cart.comm().network().faults_enabled() {
+        // Armed per *rank*, not per network: under multi-tenancy a clean
+        // co-tenant sharing a faulted network must not fold epochs into
+        // its tags or join the quiesce handshake — only ranks the fault
+        // plan covers arm the recovery layer.
+        let fault = if cart.comm().network().faults_enabled_for(cart.comm().global_rank()) {
             Some(Arc::new(FaultCtx::new(retry.unwrap_or_default())))
         } else {
             None
@@ -552,7 +556,7 @@ impl HaloEngine {
         while !net.quiesce_all_stopped() {
             crate::util::timing::precise_sleep(SERVICE_QUANTUM);
         }
-        net.purge_fault_traffic(self.comm.rank());
+        net.purge_fault_traffic(self.comm.global_rank());
     }
 
     /// The memoized plan for this call signature, rebuilt only when the
@@ -808,7 +812,7 @@ unsafe fn exchange(
     let epoch = match fault {
         Some(fx) => {
             let e = fx.epoch.fetch_add(1, Ordering::Relaxed);
-            comm.network().purge_stale(comm.rank(), e);
+            comm.network().purge_stale(comm.global_rank(), e);
             fx.service_nacks(comm, &mut pool.lock().unwrap());
             e
         }
@@ -1249,8 +1253,8 @@ fn abort_announce(comm: &Comm, fx: &FaultCtx) {
         return;
     }
     let net = comm.network();
-    net.mark_aborted(comm.rank());
-    net.purge_fault_traffic(comm.rank());
+    net.mark_aborted(comm.global_rank());
+    net.purge_fault_traffic(comm.global_rank());
     net.quiesce_announce_done();
     net.quiesce_announce_stopped();
 }

@@ -5,6 +5,7 @@
 //!   run        run an application once and print metrics
 //!   validate   N-rank vs 1-rank global-equivalence check
 //!   scaling    weak-scaling sweep (the CLI form of the Fig. 2/3 benches)
+//!   tenancy    co-tenant jobs sharing one network (slowdown + fairness)
 
 use igg::bench::{markdown_table, report, scaling};
 use igg::coordinator::config::Config;
@@ -45,7 +46,8 @@ fn run_flags(cmd: Command) -> Command {
         .value(
             "net",
             Some("ideal"),
-            "network model: ideal|aries|aries:<scale>[,serial-nic]",
+            "network model: ideal|aries|aries:<scale>\
+             [,serial-nic|independent][,eject][,links[:<bw-scale>]]",
         )
         .value(
             "faults",
@@ -74,6 +76,7 @@ fn dispatch(argv: &[String]) -> anyhow::Result<()> {
         Some("run") => ("run", &argv[1..]),
         Some("validate") => ("validate", &argv[1..]),
         Some("scaling") => ("scaling", &argv[1..]),
+        Some("tenancy") => ("tenancy", &argv[1..]),
         Some("--help") | Some("-h") | None => {
             print_usage();
             return Ok(());
@@ -85,6 +88,7 @@ fn dispatch(argv: &[String]) -> anyhow::Result<()> {
         "run" => run(rest),
         "validate" => validate(rest),
         "scaling" => cmd_scaling(rest),
+        "tenancy" => cmd_tenancy(rest),
         _ => unreachable!(),
     }
 }
@@ -97,6 +101,7 @@ fn usage_text() -> String {
      \x20 run        run an application once and print metrics\n\
      \x20 validate   N-rank vs 1-rank global-equivalence check\n\
      \x20 scaling    weak-scaling sweep (Fig. 2 / Fig. 3 protocol)\n\
+     \x20 tenancy    co-tenant jobs sharing one network (slowdown + fairness)\n\
      \n\
      `igg <subcommand> --help` lists the flags."
         .to_string()
@@ -196,6 +201,72 @@ fn cmd_scaling(argv: &[String]) -> anyhow::Result<()> {
                 ("rows", report::rows_to_json(&rows)),
             ]),
         )?;
+    }
+    Ok(())
+}
+
+fn cmd_tenancy(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("tenancy", "co-tenant jobs sharing one network")
+        .value(
+            "jobs",
+            None,
+            "job specs 'app[:k=v,...];app[:k=v,...]' with \
+             k = ranks|nx|ny|nz|nt|seed|hide=wx/wy/wz|dims=dx/dy/dz \
+             ('+' separates too; see EXPERIMENTS.md)",
+        )
+        .value(
+            "net",
+            Some("aries,serial-nic,eject,links"),
+            "shared network model — every tenant rides the same wire \
+             (grammar as in `run --help`)",
+        )
+        .value("warmup", Some("2"), "unmeasured warm-up steps per job")
+        .value(
+            "faults",
+            None,
+            "fault spec in the faulted job's local ranks, scoped to its tenant slice",
+        )
+        .value("faults-job", Some("0"), "job index the --faults spec applies to")
+        .switch("json", "print the tenancy section as JSON")
+        .value("out", None, "merge a 'tenancy' section into this JSON report");
+    let args = cmd.parse(argv)?;
+    let spec = args.get("jobs").ok_or_else(|| anyhow::anyhow!("--jobs is required"))?;
+    let net = igg::mpisim::NetModel::parse(args.get("net").unwrap())?;
+    let warmup = args.get_usize("warmup")?.unwrap();
+    let faults = match args.get("faults") {
+        Some(s) => {
+            Some((args.get_usize("faults-job")?.unwrap(), igg::mpisim::FaultSpec::parse(s)?))
+        }
+        None => None,
+    };
+
+    let outcome = igg::coordinator::tenancy::run_jobs_spec(spec, net, warmup, faults)?;
+    if args.get_flag("json") {
+        println!("{}", outcome.to_json());
+    } else {
+        println!("| job | app | ranks | iso t/step | co t/step | slowdown | qos eff |");
+        println!("|---:|---|---:|---:|---:|---:|---:|");
+        for (j, r) in outcome.jobs.iter().enumerate() {
+            println!(
+                "| {j} | {} | {} | {} | {} | {:.2}x | {:.2} |",
+                r.app,
+                r.nranks,
+                igg::bench::measure::fmt_time(r.iso_step_s),
+                igg::bench::measure::fmt_time(r.co_step_s),
+                r.slowdown,
+                r.qos_efficiency,
+            );
+        }
+        println!("fairness (max/min job time): {:.2}", outcome.fairness);
+        if outcome.fault_injected > 0 {
+            println!(
+                "faults: injected {} exhausted {}",
+                outcome.fault_injected, outcome.fault_exhausted
+            );
+        }
+    }
+    if let Some(out) = args.get("out") {
+        report::merge_json_report(out, vec![("tenancy", outcome.to_json())])?;
     }
     Ok(())
 }

@@ -7,15 +7,33 @@ use super::Network;
 
 /// A rank's view of the network: all point-to-point and collective entry
 /// points. Cheap to clone; clones refer to the same rank.
+///
+/// Under multi-tenancy a `Comm` is a *tenant-local* view: `rank()` and
+/// `size()` describe the job's contiguous slice of the rank space
+/// (`base .. base + size`), and every peer index crossing this API is
+/// tenant-local — the translation to network-global mailbox indices
+/// happens here and only here, so applications, collectives and the halo
+/// engine run unmodified inside a shared network. A whole-network `Comm`
+/// is the degenerate view with `base == 0`, `size == network.size()`.
 #[derive(Clone)]
 pub struct Comm {
     net: Arc<Network>,
+    /// Tenant-local rank (0-based within the tenant).
     rank: usize,
+    /// First network-global rank of this tenant's slice.
+    base: usize,
+    /// Tenant size in ranks.
+    size: usize,
 }
 
 impl Comm {
     pub(super) fn new(net: Arc<Network>, rank: usize) -> Self {
-        Comm { net, rank }
+        let size = net.size();
+        Comm { net, rank, base: 0, size }
+    }
+
+    pub(super) fn tenant(net: Arc<Network>, base: usize, size: usize, rank: usize) -> Self {
+        Comm { net, rank, base, size }
     }
 
     pub fn rank(&self) -> usize {
@@ -23,7 +41,15 @@ impl Comm {
     }
 
     pub fn size(&self) -> usize {
-        self.net.size()
+        self.size
+    }
+
+    /// This rank's network-global index (mailbox/NIC slot). Equals
+    /// [`Self::rank`] on a whole-network communicator; fault-layer call
+    /// sites that index per-rank network state must use this, never the
+    /// tenant-local rank.
+    pub fn global_rank(&self) -> usize {
+        self.base + self.rank
     }
 
     pub fn network(&self) -> &Arc<Network> {
@@ -47,19 +73,25 @@ impl Comm {
     pub fn isend(&self, dst: usize, tag: u64, data: Vec<f64>) -> SendRequest {
         assert!(dst < self.size(), "send to invalid rank {dst}");
         assert!(dst != self.rank, "self-sends are a deadlock footgun; use a local copy");
-        let complete_at = self.net.deposit(self.rank, dst, tag, data);
+        let complete_at = self.net.deposit(self.global_rank(), self.base + dst, tag, data);
         SendRequest::completing_at(complete_at)
     }
 
     /// Blocking matched receive.
     pub fn recv(&self, src: usize, tag: u64) -> Vec<f64> {
-        self.net.collect(self.rank, src, tag)
+        assert!(src < self.size(), "recv from invalid rank {src}");
+        self.net.collect(self.global_rank(), self.base + src, tag)
     }
 
     /// Post a non-blocking receive.
     pub fn irecv(&self, src: usize, tag: u64) -> RecvRequest {
         assert!(src < self.size(), "recv from invalid rank {src}");
-        RecvRequest { net: Arc::clone(&self.net), me: self.rank, src, tag }
+        RecvRequest {
+            net: Arc::clone(&self.net),
+            me: self.global_rank(),
+            src: self.base + src,
+            tag,
+        }
     }
 
     // ---- collectives ---------------------------------------------------

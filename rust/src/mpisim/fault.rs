@@ -191,11 +191,42 @@ pub struct FaultPlan {
     pub seed: u64,
     pub rules: Vec<FaultRule>,
     pub chaos: Option<Chaos>,
+    /// Restrict injection to the global rank slice `base .. base + size`
+    /// (a `(base, size)` pair): under multi-tenancy only the faulted job's
+    /// traffic is injected, and — because the tenant check precedes the
+    /// link-counter increment in [`Injector::decide`] — co-tenant traffic
+    /// never advances the deterministic replay clock, so a job's fault
+    /// schedule is identical with or without noisy neighbours. `None`
+    /// covers the whole network (the seed behaviour).
+    pub tenant: Option<(usize, usize)>,
 }
 
 impl Default for FaultPlan {
     fn default() -> Self {
-        FaultPlan { seed: 0x1667_5D0F, rules: Vec::new(), chaos: None }
+        FaultPlan { seed: 0x1667_5D0F, rules: Vec::new(), chaos: None, tenant: None }
+    }
+}
+
+impl FaultPlan {
+    /// Scope the plan to the tenant occupying global ranks
+    /// `base .. base + size`, shifting every concrete rule rank (written in
+    /// tenant-local terms) by `base`. Wildcards stay wildcards but are
+    /// bounded by the tenant slice at decision time.
+    pub fn for_tenant(mut self, base: usize, size: usize) -> Self {
+        for rule in &mut self.rules {
+            rule.src = rule.src.map(|r| r + base);
+            rule.dst = rule.dst.map(|r| r + base);
+        }
+        self.tenant = Some((base, size));
+        self
+    }
+
+    /// Does the plan's injection scope cover global `rank`?
+    pub fn covers(&self, rank: usize) -> bool {
+        match self.tenant {
+            Some((base, size)) => rank >= base && rank < base + size,
+            None => true,
+        }
     }
 }
 
@@ -564,10 +595,20 @@ impl Injector {
         self.counters.refused.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Does the plan's injection scope cover global `rank`?
+    pub(super) fn covers(&self, rank: usize) -> bool {
+        self.plan.covers(rank)
+    }
+
     /// Decide the fate of one *data* (non-internal) message on (src, dst).
     /// Advances the link's replay clock; at most one fault applies per
     /// message (first matching rule wins, chaos only if no rule fired).
+    /// Traffic outside a tenant-scoped plan's slice is exempt *before* the
+    /// counter increment, so co-tenants never perturb the replay clock.
     pub(super) fn decide(&self, src: usize, dst: usize) -> Option<Action> {
+        if !(self.covers(src) && self.covers(dst)) {
+            return None;
+        }
         let idx = self.links[src * self.n + dst].fetch_add(1, Ordering::Relaxed) + 1;
         for rule in &self.plan.rules {
             if rule.matches(src, dst, idx) {
@@ -748,6 +789,33 @@ mod tests {
         assert_eq!(inj.decide(0, 1), Some(Action::Drop));
         assert!(inj.is_killed(0), "kill latches from the matched message on");
         assert_eq!(inj.stats().kills, 1);
+    }
+
+    #[test]
+    fn tenant_scope_offsets_rules_and_gates_the_clock() {
+        // A job-local plan "drop the 2nd msg on link 0->1" installed for the
+        // tenant at global base 2: rule ranks shift to 2->3, and traffic
+        // outside the slice neither matches nor advances any replay clock.
+        let plan = FaultSpec::parse("drop@0->1#n=2").unwrap().plan.for_tenant(2, 2);
+        assert_eq!((plan.rules[0].src, plan.rules[0].dst), (Some(2), Some(3)));
+        assert!(!plan.covers(0) && plan.covers(2) && plan.covers(3) && !plan.covers(4));
+        let inj = Injector::new(5, plan);
+        assert_eq!(inj.decide(0, 1), None, "co-tenant link is exempt");
+        assert_eq!(inj.decide(2, 3), None, "first in-tenant message: n=2 not reached");
+        assert_eq!(inj.decide(0, 1), None, "co-tenant traffic must not advance the clock");
+        assert_eq!(inj.decide(2, 4), None, "cross-boundary traffic is exempt too");
+        assert_eq!(inj.decide(2, 3), Some(Action::Drop), "second in-tenant message fires");
+        assert_eq!(inj.stats().drops, 1);
+    }
+
+    #[test]
+    fn tenant_scope_bounds_wildcards() {
+        let plan = FaultSpec::parse("drop@*->*#n=1,count=999").unwrap().plan.for_tenant(1, 2);
+        let inj = Injector::new(4, plan);
+        assert_eq!(inj.decide(0, 3), None, "wildcard must not leak outside the tenant");
+        assert_eq!(inj.decide(3, 1), None, "half-in-tenant links stay exempt");
+        assert_eq!(inj.decide(1, 2), Some(Action::Drop));
+        assert_eq!(inj.decide(2, 1), Some(Action::Drop));
     }
 
     #[test]

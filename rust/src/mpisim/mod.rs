@@ -18,12 +18,19 @@
 //! concurrently posted sends then serialize through a per-rank busy-until
 //! instant instead of each injecting at full bandwidth, which is what
 //! separates modeled from measured scaling on bandwidth-bound planes (see
-//! EXPERIMENTS.md §Netmodel).
+//! EXPERIMENTS.md §Netmodel). Two further opt-in rungs complete the
+//! contention ladder: receiver-side *ejection* (`,eject`) gives each rank a
+//! symmetric drain-side NIC busy-until, and per-directed-link occupancy
+//! (`,links[:<bw-scale>]`) serializes messages that share a (src → dst)
+//! wire. A network can also be *partitioned* into contiguous tenant
+//! slices ([`Network::partition`]) so independent jobs share the fabric —
+//! failure isolation, fault scoping, and the quiesce handshake are all
+//! tenant-aware; see `coordinator::tenancy` for the driver.
 //!
-//! What is deliberately *not* modeled: topology-dependent routing,
-//! switch-level (cross-rank) link sharing, and MPI unexpected-message
-//! buffers. Halo exchange is nearest-neighbour, so these effects are
-//! second-order for the workloads reproduced here.
+//! What is deliberately *not* modeled: topology-dependent (multi-hop)
+//! routing and MPI unexpected-message buffers. Halo exchange is
+//! nearest-neighbour, so these effects are second-order for the workloads
+//! reproduced here.
 
 mod cart;
 mod collective;

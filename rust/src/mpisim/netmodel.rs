@@ -24,8 +24,25 @@
 //!   scaling curves on real machines (see EXPERIMENTS.md §Netmodel), and
 //!   its hide-ratios are the honest headline numbers.
 //!
-//! Select with the `,serial-nic` suffix on any preset: `--net
-//! aries,serial-nic`, `--net aries:32,serial-nic`.
+//! ## Receiver-side ejection and per-link congestion
+//!
+//! Two further rungs complete the realism ladder (EXPERIMENTS.md
+//! §Netmodel):
+//!
+//! * `eject` — the receiver's NIC drains arrivals serially, symmetric to
+//!   `serial-nic` on the send side: a rank receiving six halo planes pays
+//!   one ejection bandwidth charge per plane, queued behind a per-rank
+//!   ejection busy-until instant. Without it, a hot receiver drains all
+//!   inbound planes concurrently at full per-link bandwidth.
+//! * `links[:<bw-scale>]` — each *directed* (src → dst) link has its own
+//!   busy-until instant, so two messages sharing a link contend for its
+//!   wire bandwidth (optionally scaled by `<bw-scale>`, default 1.0,
+//!   relative to the model's point-to-point bandwidth). Distinct links
+//!   stay independent, which is the torus property the Cartesian neighbor
+//!   traffic of a stencil exchange actually exercises.
+//!
+//! Suffixes combine in any order: `--net aries,serial-nic,eject,links` or
+//! `--net aries:8,links:0.5,eject`.
 
 use std::time::Duration;
 
@@ -48,12 +65,27 @@ pub struct NetModel {
     pub bw_bytes_per_s: f64,
     /// Injection-contention sub-model; see [`NicMode`].
     pub nic: NicMode,
+    /// Receiver-side ejection serialization: arrivals at one rank queue
+    /// behind a per-rank ejection busy-until instant, symmetric to
+    /// [`NicMode::SerialNic`] on the send side.
+    pub eject: bool,
+    /// Per-directed-link congestion: `Some(scale)` gives every (src → dst)
+    /// pair its own busy-until instant with wire bandwidth
+    /// `scale * bw_bytes_per_s`. `None` (the default) keeps links
+    /// uncontended.
+    pub links: Option<f64>,
 }
 
 impl NetModel {
     /// A latency/bandwidth model with the default (independent) NIC mode.
     pub fn new(latency_s: f64, bw_bytes_per_s: f64) -> Self {
-        NetModel { latency_s, bw_bytes_per_s, nic: NicMode::Independent }
+        NetModel {
+            latency_s,
+            bw_bytes_per_s,
+            nic: NicMode::Independent,
+            eject: false,
+            links: None,
+        }
     }
 
     /// No modeled cost: raw shared-memory transport (for unit tests).
@@ -83,6 +115,19 @@ impl NetModel {
         self
     }
 
+    /// The same model with serialized receiver-side ejection.
+    pub fn with_eject(mut self) -> Self {
+        self.eject = true;
+        self
+    }
+
+    /// The same model with per-directed-link congestion at
+    /// `scale * bw_bytes_per_s` wire bandwidth.
+    pub fn with_links(mut self, scale: f64) -> Self {
+        self.links = Some(scale);
+        self
+    }
+
     pub fn is_ideal(&self) -> bool {
         self.latency_s == 0.0 && self.bw_bytes_per_s.is_infinite()
     }
@@ -90,6 +135,16 @@ impl NetModel {
     /// Does this model serialize a rank's concurrent injections?
     pub fn is_contended(&self) -> bool {
         self.nic == NicMode::SerialNic
+    }
+
+    /// Does this model serialize a rank's concurrent ejections?
+    pub fn has_eject(&self) -> bool {
+        self.eject
+    }
+
+    /// Does this model contend messages sharing a directed link?
+    pub fn has_links(&self) -> bool {
+        self.links.is_some()
     }
 
     /// The model used by `Config::default()`: [`Self::ideal`], unless the
@@ -130,18 +185,26 @@ impl NetModel {
         Duration::from_secs_f64(bytes as f64 / self.bw_bytes_per_s)
     }
 
-    /// Parse `ideal`, `aries`, or `aries:<scale>` (e.g. "aries:32"), each
-    /// optionally followed by a NIC-mode suffix: `,serial-nic` (contended)
-    /// or `,independent` (explicit default).
-    pub fn parse(s: &str) -> anyhow::Result<Self> {
-        let (base, nic) = match s.split_once(',') {
-            None => (s, NicMode::Independent),
-            Some((base, "serial-nic")) => (base, NicMode::SerialNic),
-            Some((base, "independent")) => (base, NicMode::Independent),
-            Some((_, mode)) => {
-                anyhow::bail!("unknown NIC mode '{mode}' (want serial-nic|independent)")
+    /// Modeled wire occupancy of a directed link for a message of `bytes`:
+    /// the bandwidth term at the link's (possibly scaled) wire bandwidth.
+    /// Zero when link congestion is off or the model is ideal.
+    pub fn link_occupancy(&self, bytes: usize) -> Duration {
+        match self.links {
+            Some(scale) if !self.is_ideal() => {
+                Duration::from_secs_f64(bytes as f64 / (self.bw_bytes_per_s * scale))
             }
-        };
+            _ => Duration::ZERO,
+        }
+    }
+
+    /// Parse `ideal`, `aries`, or `aries:<scale>` (e.g. "aries:32"), each
+    /// optionally followed by comma-separated feature suffixes in any
+    /// order: `serial-nic` (contended injection), `independent` (explicit
+    /// default), `eject` (contended ejection), `links` or `links:<bw-scale>`
+    /// (per-directed-link congestion).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let mut parts = s.split(',');
+        let base = parts.next().unwrap_or("");
         let mut model = match base {
             "ideal" => Self::ideal(),
             "aries" => Self::aries(),
@@ -154,12 +217,36 @@ impl NetModel {
                 } else {
                     anyhow::bail!(
                         "unknown net model '{base}' \
-                         (want ideal|aries|aries:<scale>[,serial-nic])"
+                         (want ideal|aries|aries:<scale>[,serial-nic][,eject][,links[:<bw-scale>]])"
                     )
                 }
             }
         };
-        model.nic = nic;
+        for part in parts {
+            match part {
+                "serial-nic" => model.nic = NicMode::SerialNic,
+                "independent" => model.nic = NicMode::Independent,
+                "eject" => model.eject = true,
+                "links" => model.links = Some(1.0),
+                _ => {
+                    if let Some(f) = part.strip_prefix("links:") {
+                        let scale: f64 = f
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("bad link bandwidth scale '{f}'"))?;
+                        let positive = scale.is_finite() && scale > 0.0;
+                        if !positive {
+                            anyhow::bail!("link bandwidth scale must be positive, got '{f}'");
+                        }
+                        model.links = Some(scale);
+                    } else {
+                        anyhow::bail!(
+                            "unknown net model suffix '{part}' \
+                             (want serial-nic|independent|eject|links[:<bw-scale>])"
+                        )
+                    }
+                }
+            }
+        }
         Ok(model)
     }
 }
@@ -172,6 +259,7 @@ mod tests {
     fn ideal_has_zero_transit() {
         assert_eq!(NetModel::ideal().transit(1 << 30), Duration::ZERO);
         assert_eq!(NetModel::ideal().injection(1 << 30), Duration::ZERO);
+        assert_eq!(NetModel::ideal().with_links(1.0).link_occupancy(1 << 30), Duration::ZERO);
     }
 
     #[test]
@@ -186,6 +274,16 @@ mod tests {
         let m = NetModel::new(1e-3, 1e6);
         let t = m.transit(500); // 1 ms + 0.5 ms
         assert!((t.as_secs_f64() - 1.5e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn link_occupancy_scales_wire_bandwidth() {
+        let m = NetModel::new(1e-3, 1e6);
+        assert_eq!(m.link_occupancy(500), Duration::ZERO); // links off
+        let l = m.with_links(1.0);
+        assert!((l.link_occupancy(500).as_secs_f64() - 0.5e-3).abs() < 1e-9);
+        let half = m.with_links(0.5); // half the wire bandwidth, twice the time
+        assert!((half.link_occupancy(500).as_secs_f64() - 1.0e-3).abs() < 1e-9);
     }
 
     #[test]
@@ -215,6 +313,28 @@ mod tests {
     }
 
     #[test]
+    fn parse_eject_and_links_suffixes() {
+        let e = NetModel::parse("aries,eject").unwrap();
+        assert!(e.has_eject() && !e.is_contended() && !e.has_links());
+
+        let l = NetModel::parse("aries,links").unwrap();
+        assert_eq!(l.links, Some(1.0));
+        let l = NetModel::parse("aries,links:0.5").unwrap();
+        assert_eq!(l.links, Some(0.5));
+
+        // suffixes combine in any order, base scale intact
+        let full = NetModel::parse("aries:8,links:0.25,eject,serial-nic").unwrap();
+        assert!(full.is_contended() && full.has_eject());
+        assert_eq!(full.links, Some(0.25));
+        assert!((full.bw_bytes_per_s - 10e9 / 8.0).abs() < 1.0);
+
+        assert!(NetModel::parse("aries,links:x").is_err());
+        assert!(NetModel::parse("aries,links:-1").is_err());
+        assert!(NetModel::parse("aries,links:0").is_err());
+        assert!(NetModel::parse("aries,eject:2").is_err());
+    }
+
+    #[test]
     fn with_serial_nic_builder() {
         let m = NetModel::aries_scaled(8.0).with_serial_nic();
         assert!(m.is_contended());
@@ -224,5 +344,14 @@ mod tests {
         // injection may start
         assert_eq!(m.transit(4096), NetModel::aries_scaled(8.0).transit(4096));
         assert_eq!(m.injection(4096), NetModel::aries_scaled(8.0).injection(4096));
+    }
+
+    #[test]
+    fn with_eject_and_links_builders() {
+        let m = NetModel::aries().with_eject().with_links(0.5);
+        assert!(m.has_eject() && m.has_links());
+        // the builders never change the per-message base durations
+        assert_eq!(m.transit(4096), NetModel::aries().transit(4096));
+        assert_eq!(m.injection(4096), NetModel::aries().injection(4096));
     }
 }

@@ -75,11 +75,83 @@ pub struct TrafficStats {
 /// ([`super::NicMode::SerialNic`]): the instant this rank's NIC finishes
 /// draining its last accepted send. Allocated once per network, one slot
 /// per rank — the deposit hot path only locks and rewrites the slot, so the
-/// busy-until bookkeeping adds no per-send heap traffic.
+/// busy-until bookkeeping adds no per-send heap traffic. The same shape
+/// tracks the receiver-side ejection timeline under the `eject` model.
 #[derive(Default)]
 struct NicState {
     /// `None` until the rank's first modeled send.
     busy_until: Option<Instant>,
+}
+
+/// Upper bound on the distinct destinations one rank's link set tracks.
+/// Stencil halo traffic is pure Cartesian neighbor exchange — at most 6
+/// directed links out of a rank in 3D — so 8 slots cover the working set
+/// with slack; beyond that the least-busy entry is recycled.
+const LINK_FANOUT: usize = 8;
+
+/// Per-source directed-link occupancy table for the `links` model: one
+/// (dst, busy-until) slot per destination this rank has recently sent to.
+/// Preallocated to [`LINK_FANOUT`] entries at network construction so the
+/// deposit hot path never allocates — find-or-insert is a linear scan over
+/// at most 8 slots, which beats a hash map at this fan-out.
+struct LinkSet {
+    entries: Vec<(usize, Instant)>,
+}
+
+impl Default for LinkSet {
+    fn default() -> Self {
+        LinkSet { entries: Vec::with_capacity(LINK_FANOUT) }
+    }
+}
+
+impl LinkSet {
+    /// Reserve the (self → `dst`) link from `earliest` for `occupancy`:
+    /// returns the instant the message's wire time may start (queued behind
+    /// the link's previous occupancy) and records the new busy-until.
+    fn occupy(&mut self, dst: usize, earliest: Instant, occupancy: std::time::Duration) -> Instant {
+        for e in self.entries.iter_mut() {
+            if e.0 == dst {
+                let start = if e.1 > earliest { e.1 } else { earliest };
+                e.1 = start + occupancy;
+                return start;
+            }
+        }
+        if self.entries.len() == LINK_FANOUT {
+            // Recycle the least-busy slot: a link whose busy-until is the
+            // oldest is the least likely to still contend with anything.
+            let mut idx = 0;
+            for (i, e) in self.entries.iter().enumerate() {
+                if e.1 < self.entries[idx].1 {
+                    idx = i;
+                }
+            }
+            self.entries[idx] = (dst, earliest + occupancy);
+        } else {
+            self.entries.push((dst, earliest + occupancy));
+        }
+        earliest
+    }
+
+    /// Latest busy-until over this rank's outbound links, if any.
+    fn max_busy(&self) -> Option<Instant> {
+        self.entries.iter().map(|e| e.1).max()
+    }
+}
+
+/// One job's contiguous slice of the rank space under multi-tenancy, plus
+/// its poison latch. A single-job network is one tenant spanning all ranks.
+struct Tenant {
+    base: usize,
+    size: usize,
+    /// First rank of *this tenant* whose body failed; co-tenants keep
+    /// their own latch, so a death in job A never unwinds job B.
+    origin: Option<usize>,
+}
+
+impl Tenant {
+    fn contains(&self, rank: usize) -> bool {
+        rank >= self.base && rank < self.base + self.size
+    }
 }
 
 /// The in-process "interconnect": one mailbox per rank plus the model.
@@ -93,6 +165,13 @@ pub struct Network {
     /// model; a rank's main thread and its comm stream may deposit
     /// concurrently, hence the per-slot lock).
     nics: Vec<Mutex<NicState>>,
+    /// One *ejection* timeline per rank (only consulted under the `eject`
+    /// model): arrivals queue behind the receiver's NIC drain, symmetric
+    /// to the injection table on the send side.
+    ejects: Vec<Mutex<NicState>>,
+    /// One outbound link set per rank (only consulted under the `links`
+    /// model): per-directed-link busy-until slots, preallocated.
+    links: Vec<Mutex<LinkSet>>,
     msg_count: AtomicU64,
     byte_count: AtomicU64,
     /// Per-rank count of internal-tag (collective) sends. Not traffic
@@ -101,11 +180,17 @@ pub struct Network {
     /// The carrier gate bounding how many rank bodies run at once.
     /// Inactive unless the launcher calls [`Self::limit_carriers`].
     carrier_gate: Arc<RunGate>,
-    /// Latched on the first rank failure (clean networks only): every rank
-    /// blocked in — or subsequently entering — a transport wait unwinds
-    /// with [`PeerDied`] instead of hanging forever.
+    /// Latched when *any* tenant is poisoned (fast global check for tests
+    /// and drivers; the per-rank flags below scope the unwind).
     poisoned: AtomicBool,
-    poison_origin: Mutex<Option<usize>>,
+    /// Per-rank poison latch: rank `r` unwinds out of transport waits iff
+    /// its own tenant was poisoned. On a single-tenant network every slot
+    /// latches together, reproducing the seed semantics.
+    rank_poisoned: Vec<AtomicBool>,
+    /// The tenant partition of the rank space (a single all-spanning
+    /// tenant unless [`Self::partition`] was called) and each tenant's
+    /// first-failure origin.
+    tenants: Mutex<Vec<Tenant>>,
     /// Deterministic fault injection (`--faults`); `None` = clean wire.
     fault: Option<Injector>,
     /// End-of-run quiesce handshake, phase 1: ranks whose final exchange
@@ -116,6 +201,10 @@ pub struct Network {
     /// (retransmissions). A rank purges its mailbox only after every other
     /// rank has stopped, so no retransmit can land post-purge.
     quiesce_stopped: AtomicUsize,
+    /// How many quiesce announcements complete the handshake: the faulted
+    /// tenant's rank count when the fault plan is tenant-scoped (only its
+    /// members arm the fault layer), the whole network otherwise.
+    quiesce_expected: usize,
 }
 
 impl Network {
@@ -135,19 +224,28 @@ impl Network {
 
     fn build(n: usize, model: NetModel, plan: Option<FaultPlan>) -> Arc<Self> {
         assert!(n > 0, "network needs at least one rank");
+        let quiesce_expected = plan
+            .as_ref()
+            .and_then(|p| p.tenant)
+            .map(|(_, size)| size)
+            .unwrap_or(n);
         Arc::new(Network {
             mailboxes: (0..n).map(|_| Mailbox::default()).collect(),
             model,
             nics: (0..n).map(|_| Mutex::new(NicState::default())).collect(),
+            ejects: (0..n).map(|_| Mutex::new(NicState::default())).collect(),
+            links: (0..n).map(|_| Mutex::new(LinkSet::default())).collect(),
             msg_count: AtomicU64::new(0),
             byte_count: AtomicU64::new(0),
             coll_sends: (0..n).map(|_| AtomicU64::new(0)).collect(),
             carrier_gate: RunGate::new(),
             poisoned: AtomicBool::new(false),
-            poison_origin: Mutex::new(None),
+            rank_poisoned: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            tenants: Mutex::new(vec![Tenant { base: 0, size: n, origin: None }]),
             fault: plan.map(|p| Injector::new(n, p)),
             quiesce_done: AtomicUsize::new(0),
             quiesce_stopped: AtomicUsize::new(0),
+            quiesce_expected,
         })
     }
 
@@ -163,6 +261,39 @@ impl Network {
     pub fn comm(self: &Arc<Self>, rank: usize) -> Comm {
         assert!(rank < self.size(), "rank {rank} out of range 0..{}", self.size());
         Comm::new(Arc::clone(self), rank)
+    }
+
+    /// Tenant-local communicator: the job owning ranks
+    /// `base .. base + size` sees itself as an isolated `size`-rank world
+    /// (`rank` is tenant-local). The slice must lie inside the network and
+    /// should match a partition installed via [`Self::partition`].
+    pub fn tenant_comm(self: &Arc<Self>, base: usize, size: usize, rank: usize) -> Comm {
+        assert!(size > 0 && base + size <= self.size(), "tenant slice out of range");
+        assert!(rank < size, "tenant rank {rank} out of range 0..{size}");
+        Comm::tenant(Arc::clone(self), base, size, rank)
+    }
+
+    /// Partition the rank space into contiguous tenants of the given sizes
+    /// (must sum to the network size). Call once, before any rank runs:
+    /// poisoning then stays inside the failing rank's tenant, so a death
+    /// in one job never unwinds its co-tenants. Without a partition the
+    /// whole network is one tenant (the seed behaviour).
+    pub fn partition(&self, sizes: &[usize]) {
+        assert!(!sizes.is_empty(), "partition needs at least one tenant");
+        assert!(sizes.iter().all(|&s| s > 0), "empty tenants are not allowed");
+        assert_eq!(
+            sizes.iter().sum::<usize>(),
+            self.size(),
+            "tenant sizes must cover the rank space exactly"
+        );
+        assert!(!self.is_poisoned(), "cannot repartition a poisoned network");
+        let mut tenants = self.tenants.lock().unwrap();
+        let mut base = 0;
+        tenants.clear();
+        for &size in sizes {
+            tenants.push(Tenant { base, size, origin: None });
+            base += size;
+        }
     }
 
     pub fn traffic(&self) -> TrafficStats {
@@ -204,21 +335,32 @@ impl Network {
         gate::exit();
     }
 
-    /// Latch the network poisoned because `origin`'s rank body failed.
-    /// First failure wins. Opens the carrier gate and wakes every mailbox
-    /// condvar, so ranks blocked in `collect` (directly or inside a
-    /// message-based collective) unwind with [`PeerDied`] instead of
-    /// waiting on a peer that will never send.
+    /// Latch `origin`'s *tenant* poisoned because `origin`'s rank body
+    /// failed (global rank index). First failure per tenant wins. Opens
+    /// the carrier gate and wakes the tenant's mailbox condvars, so its
+    /// ranks blocked in `collect` (directly or inside a message-based
+    /// collective) unwind with [`PeerDied`] instead of waiting on a peer
+    /// that will never send — while co-tenant jobs on the same network
+    /// keep running untouched.
     pub fn poison(&self, origin: usize) {
-        {
-            let mut slot = self.poison_origin.lock().unwrap();
-            if self.poisoned.swap(true, Ordering::AcqRel) {
-                return;
+        let (base, size) = {
+            let mut tenants = self.tenants.lock().unwrap();
+            let t = match tenants.iter_mut().find(|t| t.contains(origin)) {
+                Some(t) => t,
+                None => return,
+            };
+            if t.origin.is_some() {
+                return; // this tenant already has a root cause
             }
-            *slot = Some(origin);
-        }
+            t.origin = Some(origin);
+            self.poisoned.store(true, Ordering::Release);
+            for flag in &self.rank_poisoned[t.base..t.base + t.size] {
+                flag.store(true, Ordering::Release);
+            }
+            (t.base, t.size)
+        };
         self.carrier_gate.open();
-        for mb in &self.mailboxes {
+        for mb in &self.mailboxes[base..base + size] {
             // Lock-then-notify: a waiter re-checks the flag under the queue
             // lock before each cv.wait, so this can never lose a wakeup.
             let _q = mb.queue.lock().unwrap();
@@ -226,13 +368,27 @@ impl Network {
         }
     }
 
+    /// Is *any* tenant poisoned? (Per-rank scoping is internal: a rank
+    /// only unwinds if its own tenant's latch is set.)
     pub fn is_poisoned(&self) -> bool {
         self.poisoned.load(Ordering::Acquire)
     }
 
-    /// Unwind the calling rank out of a transport wait after poisoning.
-    fn abort_peer_died(&self) -> ! {
-        let origin = self.poison_origin.lock().unwrap().unwrap_or(usize::MAX);
+    /// Is `rank`'s own tenant poisoned?
+    pub fn rank_poisoned(&self, rank: usize) -> bool {
+        self.rank_poisoned[rank].load(Ordering::Acquire)
+    }
+
+    /// Unwind the calling rank out of a transport wait after its tenant
+    /// was poisoned.
+    fn abort_peer_died(&self, me: usize) -> ! {
+        let tenants = self.tenants.lock().unwrap();
+        let origin = tenants
+            .iter()
+            .find(|t| t.contains(me))
+            .and_then(|t| t.origin)
+            .unwrap_or(usize::MAX);
+        drop(tenants);
         std::panic::panic_any(PeerDied { origin });
     }
 
@@ -249,6 +405,21 @@ impl Network {
     /// through its NIC, shifting both the sender-side completion and the
     /// receiver's arrival instant by the queueing delay, while distinct
     /// sender NICs progress independently.
+    ///
+    /// Two further optional stages refine the receiver-side arrival
+    /// instant (sender completion is never affected by either):
+    ///
+    /// * under the `links` model the wire time queues behind the directed
+    ///   (src → dst) link's busy-until, so messages sharing a link contend
+    ///   for its (possibly scaled) wire bandwidth while distinct links
+    ///   stay independent;
+    /// * under the `eject` model the arrival additionally queues behind
+    ///   the *receiver's* NIC drain — symmetric to `serial-nic` on the
+    ///   send side — so a rank receiving many planes pays one ejection
+    ///   bandwidth charge per plane.
+    ///
+    /// A single uncontended message reduces exactly to
+    /// `start + transit(bytes)` under every mode combination.
     pub(super) fn deposit(&self, src: usize, dst: usize, tag: u64, mut data: Vec<f64>) -> Instant {
         let bytes = data.len() * std::mem::size_of::<f64>();
         // Internal (collective) traffic is not charged to the model or the
@@ -277,7 +448,10 @@ impl Network {
         } else {
             self.msg_count.fetch_add(1, Ordering::Relaxed);
             self.byte_count.fetch_add(bytes as u64, Ordering::Relaxed);
-            let start = if self.model.is_contended() && !self.model.is_ideal() {
+            let modeled = !self.model.is_ideal();
+            // Stage 1 — injection: when may src's NIC start draining the
+            // buffer? (Queued behind its busy-until under serial-nic.)
+            let start = if self.model.is_contended() && modeled {
                 let mut nic = self.nics[src].lock().unwrap();
                 let start = match nic.busy_until {
                     Some(busy) if busy > now => busy,
@@ -288,7 +462,36 @@ impl Network {
             } else {
                 now
             };
-            (start + self.model.transit(bytes), start + self.model.injection(bytes))
+            // Stage 2 — wire: `head` is when the leading byte reaches dst
+            // (earliest possible ejection start), `wire_done` when the
+            // trailing byte does. Under `links` the wire time queues
+            // behind the directed link's busy-until; `transit(0)` is the
+            // pure latency term.
+            let (head, wire_done) = if self.model.has_links() && modeled {
+                let occupancy = self.model.link_occupancy(bytes);
+                let wire_start = self.links[src].lock().unwrap().occupy(dst, start, occupancy);
+                let head = wire_start + self.model.transit(0);
+                (head, head + occupancy)
+            } else {
+                (start + self.model.transit(0), start + self.model.transit(bytes))
+            };
+            // Stage 3 — ejection: under `eject` the receiver's NIC drains
+            // arrivals serially; the message is fully ejected no earlier
+            // than its own wire time allows, and the receiver NIC stays
+            // busy until then.
+            let arrival = if self.model.has_eject() && modeled {
+                let mut ej = self.ejects[dst].lock().unwrap();
+                let eject_start = match ej.busy_until {
+                    Some(busy) if busy > head => busy,
+                    _ => head,
+                };
+                let done = (eject_start + self.model.injection(bytes)).max(wire_done);
+                ej.busy_until = Some(done);
+                done
+            } else {
+                wire_done
+            };
+            (arrival, start + self.model.injection(bytes))
         };
         let mut corrupt = false;
         let mut dup = false;
@@ -338,16 +541,16 @@ impl Network {
     /// Both transitions happen with the queue lock dropped; a rank that
     /// never entered the gate pays one thread-local read for each.
     ///
-    /// Unwinds with [`PeerDied`] if the network is poisoned, checked under
-    /// the queue lock before every wait so the poison broadcast can never
-    /// race a waiter into a lost wakeup.
+    /// Unwinds with [`PeerDied`] if the rank's tenant is poisoned, checked
+    /// under the queue lock before every wait so the poison broadcast can
+    /// never race a waiter into a lost wakeup.
     pub(super) fn collect(&self, me: usize, src: usize, tag: u64) -> Vec<f64> {
         let mb = &self.mailboxes[me];
         let mut q = mb.queue.lock().unwrap();
         loop {
-            if self.is_poisoned() {
+            if self.rank_poisoned(me) {
                 drop(q);
-                self.abort_peer_died();
+                self.abort_peer_died(me);
             }
             if let Some(pos) = q.iter().position(|e| e.src == src && e.tag == tag) {
                 let arrival = q[pos].arrival;
@@ -401,9 +604,9 @@ impl Network {
         let mb = &self.mailboxes[me];
         let mut q = mb.queue.lock().unwrap();
         loop {
-            if self.is_poisoned() {
+            if self.rank_poisoned(me) {
                 drop(q);
-                self.abort_peer_died();
+                self.abort_peer_died(me);
             }
             let now = Instant::now();
             if q.iter().any(|e| e.src == src && e.tag == tag && e.arrival <= now) {
@@ -467,6 +670,35 @@ impl Network {
                 busy - now
             );
         }
+        drop(nic);
+        let ej = self.ejects[rank].lock().unwrap();
+        if let Some(busy) = ej.busy_until {
+            let now = Instant::now();
+            assert!(
+                busy <= now,
+                "rank {rank} NIC not quiescent: ejection draining for another {:?}",
+                busy - now
+            );
+        }
+        drop(ej);
+        let ls = self.links[rank].lock().unwrap();
+        if let Some(busy) = ls.max_busy() {
+            let now = Instant::now();
+            assert!(
+                busy <= now,
+                "rank {rank} links not quiescent: wire occupied for another {:?}",
+                busy - now
+            );
+        }
+    }
+
+    /// Modeled arrival instant of the earliest queued (src, tag) message in
+    /// `rank`'s mailbox, if any — whether or not it has "arrived" yet. The
+    /// deterministic ejection/link tests assert queueing semantics on these
+    /// instants instead of wall-clock sleeps.
+    pub fn arrival_instant(&self, rank: usize, src: usize, tag: u64) -> Option<Instant> {
+        let q = self.mailboxes[rank].queue.lock().unwrap();
+        q.iter().filter(|e| e.src == src && e.tag == tag).map(|e| e.arrival).min()
     }
 
     /// Fault mode only: drop every epoch-stale halo message (data tags and
@@ -522,7 +754,7 @@ impl Network {
     }
 
     pub fn quiesce_all_done(&self) -> bool {
-        self.quiesce_done.load(Ordering::Acquire) >= self.size()
+        self.quiesce_done.load(Ordering::Acquire) >= self.quiesce_expected
     }
 
     /// Quiesce handshake, phase 2: this rank will emit no further
@@ -535,12 +767,21 @@ impl Network {
     }
 
     pub fn quiesce_all_stopped(&self) -> bool {
-        self.quiesce_stopped.load(Ordering::Acquire) >= self.size()
+        self.quiesce_stopped.load(Ordering::Acquire) >= self.quiesce_expected
     }
 
     /// Is a fault-injection plan layered on this network?
     pub fn faults_enabled(&self) -> bool {
         self.fault.is_some()
+    }
+
+    /// Does the fault plan cover `rank` (global index)? False on a clean
+    /// network and for ranks outside a tenant-scoped plan's slice — those
+    /// ranks must not arm the fault-recovery layer (epoch tags, quiesce
+    /// announcements), or a clean co-tenant would pollute the faulted
+    /// tenant's quiesce handshake.
+    pub fn faults_enabled_for(&self, rank: usize) -> bool {
+        self.fault.as_ref().is_some_and(|inj| inj.covers(rank))
     }
 
     /// Injection-side fault counters (all zero on a clean network).
@@ -801,6 +1042,121 @@ mod tests {
         }))
         .unwrap_err();
         assert_eq!(*err.downcast::<PeerDied>().unwrap(), PeerDied { origin: 1 });
+    }
+
+    /// Receiver-side ejection, asserted on modeled instants (no sleeps):
+    /// two senders targeting one receiver eject serially — the second
+    /// arrival lands a full ejection after the first — while a message to
+    /// a different receiver is unaffected.
+    #[test]
+    fn eject_serializes_same_receiver_arrivals() {
+        use std::time::Duration;
+        let inj = Duration::from_millis(49); // 50 ms modeled, 1 ms slack
+        let model = NetModel::new(0.0, 8192.0 / 0.05).with_eject();
+        let net = Network::with_model(3, model);
+        net.deposit(0, 2, 1, vec![0.0; 1024]);
+        net.deposit(1, 2, 2, vec![0.0; 1024]); // distinct sender, same receiver
+        net.deposit(0, 1, 3, vec![0.0; 1024]); // different receiver: no queueing
+        let posted = Instant::now();
+        let a1 = net.arrival_instant(2, 0, 1).unwrap();
+        let a2 = net.arrival_instant(2, 1, 2).unwrap();
+        let a3 = net.arrival_instant(1, 0, 3).unwrap();
+        assert!(a2 >= a1 + inj, "same-receiver arrivals must queue a full ejection apart");
+        assert!(
+            a3 <= posted + Duration::from_millis(51),
+            "a different receiver's NIC must not contend"
+        );
+    }
+
+    /// Per-link congestion: two messages on the same directed link queue a
+    /// full wire occupancy apart; distinct links (even the reverse
+    /// direction) stay independent.
+    #[test]
+    fn links_contend_per_directed_link_only() {
+        use std::time::Duration;
+        let occ = Duration::from_millis(49); // 50 ms at scale 1.0, 1 ms slack
+        let model = NetModel::new(0.0, 8192.0 / 0.05).with_links(1.0);
+        let net = Network::with_model(3, model);
+        net.deposit(0, 1, 1, vec![0.0; 1024]);
+        net.deposit(0, 1, 2, vec![0.0; 1024]); // same link: queues
+        net.deposit(0, 2, 3, vec![0.0; 1024]); // distinct link, same sender
+        net.deposit(1, 0, 4, vec![0.0; 1024]); // reverse direction: distinct
+        let posted = Instant::now();
+        let a1 = net.arrival_instant(1, 0, 1).unwrap();
+        let a2 = net.arrival_instant(1, 0, 2).unwrap();
+        assert!(a2 >= a1 + occ, "shared-link messages must queue a full occupancy apart");
+        let slack = posted + Duration::from_millis(51);
+        assert!(net.arrival_instant(2, 0, 3).unwrap() <= slack, "distinct links independent");
+        assert!(net.arrival_instant(0, 1, 4).unwrap() <= slack, "reverse link independent");
+    }
+
+    /// links:<bw-scale> scales the wire bandwidth: at 0.5 the occupancy
+    /// doubles relative to the point-to-point model.
+    #[test]
+    fn link_scale_stretches_wire_occupancy() {
+        use std::time::Duration;
+        let model = NetModel::new(0.0, 8192.0 / 0.05).with_links(0.5);
+        let net = Network::with_model(2, model);
+        let t0 = Instant::now();
+        net.deposit(0, 1, 1, vec![0.0; 1024]);
+        let a = net.arrival_instant(1, 0, 1).unwrap();
+        assert!(a >= t0 + Duration::from_millis(99), "half bandwidth, double occupancy");
+    }
+
+    #[test]
+    #[should_panic(expected = "ejection draining")]
+    fn draining_eject_fails_quiescence() {
+        let model = NetModel::new(0.0, 4096.0).with_eject();
+        let net = Network::with_model(2, model);
+        net.deposit(0, 1, 1, vec![0.0; 1024]);
+        net.assert_quiescent(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "links not quiescent")]
+    fn occupied_link_fails_quiescence() {
+        let model = NetModel::new(0.0, 4096.0).with_links(1.0);
+        let net = Network::with_model(2, model);
+        net.deposit(0, 1, 1, vec![0.0; 1024]);
+        // rank 0's mailbox is empty and its NICs idle: only the outbound
+        // link occupancy can trip
+        net.assert_quiescent(0);
+    }
+
+    #[test]
+    fn partition_validates_cover() {
+        let net = Network::new(4);
+        net.partition(&[1, 3]);
+        net.partition(&[2, 2]); // repartition before ranks run is fine
+        let bad = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            net.partition(&[2, 3])
+        }));
+        assert!(bad.is_err(), "sizes must cover the rank space exactly");
+    }
+
+    /// The tenant-boundary fix: poisoning a rank in one tenant unwinds
+    /// that tenant's waiters but never a co-tenant's.
+    #[test]
+    fn poison_stays_inside_tenant() {
+        quiet_peer_died_panics();
+        let net = Network::new(4);
+        net.partition(&[2, 2]);
+        let netw = Arc::clone(&net);
+        let waiter = std::thread::spawn(move || {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                netw.collect(0, 1, 7) // tenant A waiter
+            }))
+            .is_err()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        net.poison(1); // tenant A dies
+        assert!(waiter.join().unwrap(), "tenant A waiter must unwind");
+        assert!(net.is_poisoned());
+        assert!(net.rank_poisoned(0) && net.rank_poisoned(1));
+        assert!(!net.rank_poisoned(2) && !net.rank_poisoned(3));
+        // tenant B traffic still flows end to end
+        net.deposit(2, 3, 9, vec![42.0]);
+        assert_eq!(net.collect(3, 2, 9), vec![42.0]);
     }
 
     #[test]

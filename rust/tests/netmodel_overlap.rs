@@ -353,3 +353,88 @@ fn contended_traffic_matches_optimistic() {
         assert_eq!(st.bytes_sent, 2 * 12 * 12 * 8);
     }
 }
+
+/// Receiver-side ejection (`--net ...,eject`), asserted deterministically
+/// on the modeled arrival instants: two senders with *independent* NICs
+/// target one receiver, so it is the receiver's drain — not the senders'
+/// injections and not a link — that serializes. The second arrival lands
+/// a full ejection after the first, and two ejections cost two drains.
+#[test]
+fn eject_serializes_arrivals_at_one_receiver() {
+    let model =
+        NetModel { nic: igg::mpisim::NicMode::Independent, ..contended_model() }.with_eject();
+    let net = Network::with_model(3, model);
+    let t0 = Instant::now();
+    let s0 = net.comm(0).isend(2, 1, vec![0.0; PAYLOAD]);
+    let s1 = net.comm(1).isend(2, 2, vec![0.0; PAYLOAD]);
+    let posted = Instant::now();
+    let bound = INJ + Duration::from_millis(1);
+    // sender-side completions stay independent: ejection is the
+    // receiver's cost, never billed back to the sender
+    assert!(s0.completion_instant() <= posted + bound);
+    assert!(s1.completion_instant() <= posted + bound);
+
+    let a0 = net.arrival_instant(2, 0, 1).expect("message from rank 0 deposited");
+    let a1 = net.arrival_instant(2, 1, 2).expect("message from rank 1 deposited");
+    let (first, second) = if a0 <= a1 { (a0, a1) } else { (a1, a0) };
+    let spacing = INJ - Duration::from_millis(1);
+    assert!(
+        second >= first + spacing,
+        "the receiver must drain one ejection at a time (got {:?} apart)",
+        second - first
+    );
+    assert!(second >= t0 + 2 * spacing, "two ejections must cost two drain times");
+    assert!(second <= posted + 2 * bound, "queueing must not overcharge beyond two ejections");
+}
+
+/// Per-directed-link occupancy (`--net ...,links`), on modeled instants:
+/// with independent NICs, two messages on the *same* (src → dst) wire
+/// serialize — the second arrives a full wire occupancy after the first —
+/// while a message on a different link from the same sender is oblivious
+/// (it is the link, not the NIC, that is busy).
+#[test]
+fn links_serialize_shared_wire_but_not_distinct_links() {
+    let model =
+        NetModel { nic: igg::mpisim::NicMode::Independent, ..contended_model() }.with_links(1.0);
+    let net = Network::with_model(3, model);
+    let t0 = Instant::now();
+    // two on the 0 -> 1 link, one on the 0 -> 2 link, posted back to back
+    let _a = net.comm(0).isend(1, 1, vec![0.0; PAYLOAD]);
+    let _b = net.comm(0).isend(1, 2, vec![0.0; PAYLOAD]);
+    let _c = net.comm(0).isend(2, 3, vec![0.0; PAYLOAD]);
+    let posted = Instant::now();
+    let occupancy = INJ; // bytes/bw at link scale 1.0
+    let spacing = occupancy - Duration::from_millis(1);
+    let bound = occupancy + Duration::from_millis(1);
+
+    let a = net.arrival_instant(1, 0, 1).unwrap();
+    let b = net.arrival_instant(1, 0, 2).unwrap();
+    let c = net.arrival_instant(2, 0, 3).unwrap();
+    assert!(b >= a + spacing, "same directed link: the wire carries one message at a time");
+    assert!(b >= t0 + 2 * spacing, "two occupancies on one wire must cost their sum");
+    // the 0 -> 2 message rides an idle wire: one occupancy after its post,
+    // regardless of the congested 0 -> 1 link next door
+    assert!(c <= posted + bound, "distinct directed links must not contend");
+}
+
+/// Halved link bandwidth (`links:0.5`) doubles the wire occupancy without
+/// touching the sender's injection completion — the two cost layers stay
+/// separate.
+#[test]
+fn link_scale_stretches_arrivals_not_injections() {
+    let model =
+        NetModel { nic: igg::mpisim::NicMode::Independent, ..contended_model() }.with_links(0.5);
+    let net = Network::with_model(2, model);
+    let t0 = Instant::now();
+    let s = net.comm(0).isend(1, 1, vec![0.0; PAYLOAD]);
+    let posted = Instant::now();
+    assert!(
+        s.completion_instant() <= posted + INJ + Duration::from_millis(1),
+        "injection completes at full NIC bandwidth"
+    );
+    let a = net.arrival_instant(1, 0, 1).unwrap();
+    assert!(
+        a >= t0 + 2 * INJ - Duration::from_millis(1),
+        "half the wire bandwidth, twice the occupancy"
+    );
+}

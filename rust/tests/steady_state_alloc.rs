@@ -438,4 +438,156 @@ fn timeloop_steady_state_is_allocation_free() {
             },
         );
     }
+
+    // The two new contention rungs, alone and stacked: the receiver-side
+    // ejection busy-until and the per-directed-link occupancy table are
+    // both preallocated at network construction (`ejects[]`; `links[]`
+    // with LINK_FANOUT slots per source — ample for a halo topology's
+    // <= 6 neighbour destinations), so the rungs must not cost a single
+    // steady-state allocation — including the full ladder under hiding, where the comm
+    // stream and main thread share every table.
+    for (label, hide, net) in [
+        ("diffusion/plain/2 ranks/eject", None, NetModel::aries().with_serial_nic().with_eject()),
+        (
+            "diffusion/plain/2 ranks/links",
+            None,
+            NetModel::aries().with_serial_nic().with_links(0.5),
+        ),
+        (
+            "diffusion/hide/2 ranks/eject-links",
+            Some(HideWidths([3, 2, 2])),
+            NetModel::aries().with_serial_nic().with_eject().with_links(0.5),
+        ),
+    ] {
+        assert_steady_state_alloc_free::<Diffusion>(
+            label,
+            Config {
+                app: AppKind::Diffusion,
+                nranks: 2,
+                local: [12, 12, 12],
+                nt: 1,
+                hide,
+                net,
+                ..Default::default()
+            },
+        );
+    }
+
+    // Two tenants sharing one network: tenant-translated deposits ride the
+    // same preallocated per-rank tables, and the tenant registry plus the
+    // per-rank poison latches are built at partition time — before the
+    // counting window opens.
+    assert_two_tenant_steady_state_alloc_free();
+}
+
+/// The multi-tenant rung of the contract: a diffusion job (hidden) and a
+/// wave job (plain) share one full-ladder network as tenants 0 and 1.
+/// Barriers are tenant-local now, so the counting window is framed by a
+/// process-wide [`std::sync::Barrier`] across both jobs' ranks instead.
+fn assert_two_tenant_steady_state_alloc_free() {
+    let net_model = NetModel::aries().with_serial_nic().with_eject().with_links(0.5);
+    let mk = |app, hide| Config {
+        app,
+        nranks: 2,
+        local: [12, 12, 12],
+        nt: 1,
+        hide,
+        net: net_model,
+        ..Default::default()
+    };
+    let cfgs = [mk(AppKind::Diffusion, Some(HideWidths([3, 2, 2]))), mk(AppKind::Wave, None)];
+    let total: usize = cfgs.iter().map(|c| c.nranks).sum();
+    let net = Network::with_model(total, net_model);
+    net.partition(&[cfgs[0].nranks, cfgs[1].nranks]);
+
+    let sync = Arc::new(std::sync::Barrier::new(total));
+    let before = Arc::new(AtomicUsize::new(0));
+    let after = Arc::new(AtomicUsize::new(0));
+    let handles: Vec<_> = (0..total)
+        .map(|r| {
+            let (base, cfg) = if r < cfgs[0].nranks {
+                (0, cfgs[0].clone())
+            } else {
+                (cfgs[0].nranks, cfgs[1].clone())
+            };
+            let net = Arc::clone(&net);
+            let sync = Arc::clone(&sync);
+            let before = Arc::clone(&before);
+            let after = Arc::clone(&after);
+            std::thread::Builder::new()
+                .name(format!("alloc-tenant-rank-{r}"))
+                .spawn(move || {
+                    let local = r - base;
+                    match cfg.app {
+                        AppKind::Diffusion => tenant_rank_body::<Diffusion>(
+                            &net, &cfg, base, local, &sync, &before, &after,
+                        ),
+                        _ => tenant_rank_body::<Wave>(
+                            &net, &cfg, base, local, &sync, &before, &after,
+                        ),
+                    }
+                })
+                .expect("spawn tenant rank thread")
+        })
+        .collect();
+    for (r, h) in handles.into_iter().enumerate() {
+        let (engine_warm, engine_after) = h.join().unwrap();
+        assert_eq!(
+            engine_after, engine_warm,
+            "two-tenant: engine allocated in steady state (global rank {r})"
+        );
+    }
+    let delta = after.load(Ordering::SeqCst) - before.load(Ordering::SeqCst);
+    assert_eq!(
+        delta, 0,
+        "two-tenant: {delta} heap allocations during {STEADY} steady-state steps \
+         across {total} shared-network ranks (want 0)"
+    );
+}
+
+/// One tenant rank's body: warm up, rendezvous with *every* rank of both
+/// tenants, count, rendezvous again. Mirrors the single-tenant harness.
+fn tenant_rank_body<A>(
+    net: &Arc<Network>,
+    cfg: &Config,
+    base: usize,
+    local_r: usize,
+    sync: &std::sync::Barrier,
+    before: &AtomicUsize,
+    after: &AtomicUsize,
+) -> (usize, usize)
+where
+    A: StencilApp,
+{
+    net.rank_enter();
+    let comm = net.tenant_comm(base, cfg.nranks, local_r);
+    let grid = GlobalGrid::init(comm, cfg.local, cfg.grid_options()).unwrap();
+    let ctx = RankCtx { grid, cfg: cfg.clone() };
+    let schedule = Schedule::plan(&ctx.cfg, &ctx.grid).unwrap();
+    let mut app = A::init(&ctx).unwrap();
+
+    for _ in 0..WARMUP {
+        timeloop::step(&ctx.grid, &schedule, &mut app).unwrap();
+    }
+    let engine_warm = ctx.grid.halo_allocations();
+    sync.wait(); // both tenants warmed
+    if base == 0 && local_r == 0 {
+        before.store(ALLOCS.load(Ordering::SeqCst), Ordering::SeqCst);
+    }
+    sync.wait(); // counter snapshotted
+
+    for _ in 0..STEADY {
+        timeloop::step(&ctx.grid, &schedule, &mut app).unwrap();
+    }
+
+    sync.wait(); // both tenants done stepping
+    if base == 0 && local_r == 0 {
+        after.store(ALLOCS.load(Ordering::SeqCst), Ordering::SeqCst);
+    }
+    // hold every rank until the counter is read (see the single-tenant
+    // harness for why assertions happen on the main thread)
+    sync.wait();
+    let counts = (engine_warm, ctx.grid.halo_allocations());
+    net.rank_exit();
+    counts
 }

@@ -1,0 +1,220 @@
+//! Multi-tenant integration: independent jobs sharing one [`Network`].
+//!
+//! Three contracts, each end to end through the real driver stack
+//! (`TimeLoop` over `run_tenant` / `tenancy::run_jobs_spec`):
+//!
+//! * **Co-tenancy completes and reports.** Two jobs of different apps
+//!   under the full contention ladder (`aries,serial-nic,eject,links`)
+//!   finish, and the outcome carries finite per-job slowdown and
+//!   qos-efficiency columns plus the fairness ratio — the numbers the CI
+//!   multi-tenant job echoes and the tenancy bench trends.
+//! * **Tenant isolation of results.** Sharing a network is invisible to
+//!   the physics: each job's final fields are bitwise identical to its
+//!   isolated run, faults in one tenant never leak into another — a
+//!   killed rank aborts its own job while the co-tenant completes
+//!   untouched — and a recoverable chaos schedule repairs one tenant
+//!   bitwise while a noisy co-tenant hammers the same wire.
+//! * **Tenant-scoped cleanliness.** After every scenario the surviving
+//!   ranks' mailboxes and NICs are quiescent.
+
+use std::sync::Arc;
+use std::thread;
+
+use igg::coordinator::apps::{diffusion::Diffusion, wave::Wave};
+use igg::coordinator::config::{AppKind, Config};
+use igg::coordinator::launcher::{run_ranks_on, run_tenant, RankCtx};
+use igg::coordinator::tenancy;
+use igg::coordinator::timeloop::{StencilApp, TimeLoop};
+use igg::mpisim::{FaultReport, FaultSpec, NetModel, Network};
+use igg::physics::Field3D;
+
+type RankFields = Vec<(&'static str, Field3D)>;
+
+fn cfg(app: AppKind, nranks: usize, nt: usize, net: NetModel) -> Config {
+    Config { app, nranks, local: [10, 10, 10], nt, net, ..Default::default() }
+}
+
+fn fields_of<A>(ctx: RankCtx) -> anyhow::Result<RankFields>
+where
+    A: StencilApp + Send + 'static,
+{
+    Ok(TimeLoop::new(0).run::<A>(&ctx)?.fields)
+}
+
+/// Run one job's ranks concurrently with its co-tenants (one driver
+/// thread per job, exactly like `tenancy::run_jobs`).
+fn spawn_job<A>(
+    net: &Arc<Network>,
+    cfg: &Config,
+    base: usize,
+    job: usize,
+) -> thread::JoinHandle<anyhow::Result<Vec<RankFields>>>
+where
+    A: StencilApp + Send + 'static,
+{
+    let net = Arc::clone(net);
+    let cfg = cfg.clone();
+    thread::spawn(move || run_tenant(&net, &cfg, base, Some(job), fields_of::<A>))
+}
+
+fn isolated<A>(cfg: &Config) -> Vec<RankFields>
+where
+    A: StencilApp + Send + 'static,
+{
+    let net = Network::with_model(cfg.nranks, cfg.net);
+    let out = run_ranks_on(&net, cfg, fields_of::<A>)
+        .unwrap_or_else(|e| panic!("isolated {} reference failed: {e:#}", cfg.app.name()));
+    for r in 0..cfg.nranks {
+        net.assert_quiescent(r);
+    }
+    out
+}
+
+fn assert_bitwise(label: &str, got: &[RankFields], want: &[RankFields]) {
+    assert_eq!(got.len(), want.len(), "{label}: rank count");
+    for (r, (fa, fb)) in got.iter().zip(want).enumerate() {
+        for ((name, a), (_, b)) in fa.iter().zip(fb) {
+            assert_eq!(
+                a.max_abs_diff(b),
+                0.0,
+                "{label}: rank {r} field '{name}' must be bitwise equal"
+            );
+        }
+    }
+}
+
+/// The acceptance scenario: diffusion + wave co-tenants on the full
+/// network-realism ladder, driven through the public spec API.
+#[test]
+fn co_tenancy_full_ladder_reports_slowdown_and_fairness() {
+    let net = NetModel::parse("aries,serial-nic,eject,links").unwrap();
+    let out = tenancy::run_jobs_spec(
+        "diffusion:ranks=2,nx=10,nt=4;wave:ranks=2,nx=10,nt=4",
+        net,
+        1,
+        None,
+    )
+    .unwrap_or_else(|e| panic!("co-tenancy run failed: {e:#}"));
+
+    assert_eq!(out.jobs.len(), 2);
+    assert_eq!(out.total_ranks, 4);
+    assert_eq!((out.jobs[0].app, out.jobs[1].app), ("diffusion", "wave"));
+    for j in &out.jobs {
+        assert!(j.iso_step_s > 0.0 && j.co_step_s > 0.0, "step times must be measured");
+        assert!(j.slowdown.is_finite() && j.slowdown > 0.0, "slowdown must be finite");
+        assert!(j.qos_efficiency.is_finite() && j.qos_efficiency > 0.0);
+        assert!(j.job_time_s > 0.0);
+    }
+    assert!(out.fairness >= 1.0, "max/min is >= 1 by construction");
+    assert_eq!((out.fault_injected, out.fault_exhausted), (0, 0), "clean run injects nothing");
+
+    // the JSON section the bench trends and CI greps
+    let json = out.to_json().to_string();
+    for key in ["jobs", "slowdown", "qos_efficiency", "fairness", "fault_injected"] {
+        assert!(json.contains(key), "tenancy section must carry '{key}': {json}");
+    }
+}
+
+/// Sharing the fabric is invisible to the physics: both co-tenants
+/// reproduce their isolated runs bitwise (modeled contention moves
+/// instants, never data).
+#[test]
+fn co_tenants_reproduce_isolated_results_bitwise() {
+    let model = NetModel::parse("aries,serial-nic,eject,links").unwrap();
+    let cfg0 = cfg(AppKind::Diffusion, 2, 5, model);
+    let cfg1 = cfg(AppKind::Wave, 2, 5, model);
+    let want0 = isolated::<Diffusion>(&cfg0);
+    let want1 = isolated::<Wave>(&cfg1);
+
+    let net = Network::with_model(cfg0.nranks + cfg1.nranks, model);
+    net.partition(&[cfg0.nranks, cfg1.nranks]);
+    let h0 = spawn_job::<Diffusion>(&net, &cfg0, 0, 0);
+    let h1 = spawn_job::<Wave>(&net, &cfg1, cfg0.nranks, 1);
+    let got0 = h0.join().unwrap().unwrap_or_else(|e| panic!("job 0 failed: {e:#}"));
+    let got1 = h1.join().unwrap().unwrap_or_else(|e| panic!("job 1 failed: {e:#}"));
+
+    assert_bitwise("diffusion co-tenant", &got0, &want0);
+    assert_bitwise("wave co-tenant", &got1, &want1);
+    for r in 0..net.size() {
+        net.assert_quiescent(r);
+    }
+}
+
+/// Failure isolation (the tenant-scoped poison/fault regression): a rank
+/// killed in one job aborts *that* job with a structured report; the
+/// co-tenant never notices. The faulted job sits at base 2, so the
+/// job-local `kill@1` must be offset to global rank 3 by `for_tenant` —
+/// un-offset it would kill the co-tenant's rank instead.
+#[test]
+fn co_tenant_survives_kill_in_other_job() {
+    let model = NetModel::parse("aries,serial-nic").unwrap();
+    let survivor = cfg(AppKind::Diffusion, 2, 6, model);
+    let want = isolated::<Diffusion>(&survivor);
+
+    let faults = FaultSpec::parse("kill@1#n=6;policy:timeout=20ms,retries=3").unwrap();
+    let mut doomed = cfg(AppKind::Wave, 2, 50, model);
+    doomed.faults = Some(faults.clone());
+
+    let plan = faults.plan.clone().for_tenant(survivor.nranks, doomed.nranks);
+    let net = Network::with_faults(survivor.nranks + doomed.nranks, model, plan);
+    net.partition(&[survivor.nranks, doomed.nranks]);
+
+    let h0 = spawn_job::<Diffusion>(&net, &survivor, 0, 0);
+    let h1 = spawn_job::<Wave>(&net, &doomed, survivor.nranks, 1);
+
+    let err = h1.join().unwrap().expect_err("the job with the killed rank must abort");
+    let report = err
+        .downcast_ref::<FaultReport>()
+        .unwrap_or_else(|| panic!("abort must carry a FaultReport, got: {err:#}"));
+    assert_eq!(report.peer, 1, "the report speaks job-local ranks: peer 1 is the killed rank");
+
+    let got = h0
+        .join()
+        .unwrap()
+        .unwrap_or_else(|e| panic!("co-tenant must survive the kill next door, got: {e:#}"));
+    assert_bitwise("surviving co-tenant", &got, &want);
+
+    let stats = net.fault_stats();
+    assert!(stats.kills >= 1, "the kill must have latched");
+    for r in 0..net.size() {
+        net.assert_quiescent(r);
+    }
+}
+
+/// The chaos-soak contract survives co-tenancy: a recoverable chaos
+/// schedule scoped to one tenant repairs that job bitwise while a noisy
+/// co-tenant shares every NIC and link, and the co-tenant's own replay
+/// clock (fault determinism is per-tenant) stays unperturbed.
+#[test]
+fn chaos_recovery_is_bitwise_with_noisy_co_tenant() {
+    let model = NetModel::parse("aries,serial-nic,eject,links").unwrap();
+    let noisy = cfg(AppKind::Wave, 2, 8, model);
+    let mut chaotic = cfg(AppKind::Diffusion, 2, 6, model);
+    let want = isolated::<Diffusion>(&chaotic);
+
+    let faults = FaultSpec::parse(
+        "drop@*->*#n=3,count=2;\
+         chaos:drop=0.05,dup=0.03,corrupt=0.03,delay=0.03,spike=200us,seed=77;\
+         policy:timeout=25ms,retries=10,backoff=1.5",
+    )
+    .unwrap();
+    chaotic.faults = Some(faults.clone());
+
+    let plan = faults.plan.clone().for_tenant(noisy.nranks, chaotic.nranks);
+    let net = Network::with_faults(noisy.nranks + chaotic.nranks, model, plan);
+    net.partition(&[noisy.nranks, chaotic.nranks]);
+
+    let h0 = spawn_job::<Wave>(&net, &noisy, 0, 0);
+    let h1 = spawn_job::<Diffusion>(&net, &chaotic, noisy.nranks, 1);
+    let noisy_out = h0.join().unwrap().unwrap_or_else(|e| panic!("noisy co-tenant failed: {e:#}"));
+    let got = h1.join().unwrap().unwrap_or_else(|e| panic!("chaos tenant must recover: {e:#}"));
+    assert_eq!(noisy_out.len(), noisy.nranks);
+
+    let stats = net.fault_stats();
+    assert!(stats.injected() > 0, "the schedule must actually inject inside its tenant");
+    assert_eq!(stats.exhausted, 0, "a recoverable schedule must never exhaust");
+    assert_bitwise("chaos tenant after recovery", &got, &want);
+    for r in 0..net.size() {
+        net.assert_quiescent(r);
+    }
+}

@@ -62,7 +62,9 @@ fn classify(path: &str) -> Class {
 }
 
 /// Identity fields used to key array elements, in label priority order.
-const ID_KEYS: [&str; 6] = ["n", "dim", "threads", "net", "nranks", "contended"];
+/// `app` distinguishes the tenancy bench's per-job rows (two co-tenant
+/// jobs can share a rank count but never an app+ranks pair there).
+const ID_KEYS: [&str; 7] = ["app", "n", "dim", "threads", "net", "nranks", "contended"];
 
 fn element_label(v: &Json, index: usize) -> String {
     if let Some(obj) = v.as_obj() {
