@@ -1,0 +1,135 @@
+//! **Checkpoint-overhead bench** — what the diskless checkpoint layer
+//! (`coordinator::checkpoint`) costs a healthy run, as a function of the
+//! cadence: a fixed 4-rank diffusion job is swept over `--ckpt-every`
+//! values 0 (off), 8, 4, 2, 1 and each row reports the median step time,
+//! the slowdown over the checkpoint-free run, and the exact recovery
+//! counters.
+//!
+//! The counters double as contracts (compared **exactly** by
+//! `tools/perf_trend.rs`, blocking in CI): `ckpt_saves` must equal the
+//! cadence arithmetic (`nranks * nt/every` — a skipped or duplicated save
+//! shows up here), and a clean run must report `ckpt_restores = 0` and
+//! `fault_injected = 0`. The bench also asserts that every cadence
+//! reproduces the checkpoint-free fields **bitwise**: snapshotting must
+//! observe the run, never perturb it. Timings stay advisory (runner
+//! noise); the cadence-vs-overhead policy they inform is documented in
+//! EXPERIMENTS.md §Checkpoint/restart.
+//!
+//! Emits `BENCH_ckpt.json` (compared against
+//! `bench/baselines/BENCH_ckpt.json`) and merges a `ckpt_overhead`
+//! section into the shared `BENCH_perf.json`; rows are keyed by `every`.
+//!
+//!     cargo bench --bench ckpt_overhead
+
+use igg::bench::measure::{bench_samples, fmt_time, measure};
+use igg::bench::report;
+use igg::coordinator::apps::diffusion::Diffusion;
+use igg::coordinator::config::{AppKind, Config};
+use igg::coordinator::launcher::run_ranks_on;
+use igg::coordinator::timeloop::TimeLoop;
+use igg::mpisim::{FaultStats, NetModel, Network};
+use igg::physics::Field3D;
+use igg::util::json::Json;
+
+const NRANKS: usize = 4;
+const NX: usize = 32;
+const NT: usize = 16;
+const NET: &str = "aries,serial-nic";
+/// Cadence sweep: off first so its fields/timing anchor the other rows.
+const CADENCES: [usize; 5] = [0, 8, 4, 2, 1];
+
+type RankFields = Vec<(&'static str, Field3D)>;
+
+fn cfg(net: NetModel, every: usize) -> Config {
+    Config {
+        app: AppKind::Diffusion,
+        nranks: NRANKS,
+        local: [NX, NX, NX],
+        nt: NT,
+        net,
+        ckpt_every: every,
+        ..Default::default()
+    }
+}
+
+fn run_once(cfg: &Config) -> anyhow::Result<Vec<(RankFields, FaultStats)>> {
+    let net = Network::with_model(cfg.nranks, cfg.net);
+    run_ranks_on(&net, cfg, |ctx| {
+        let r = TimeLoop::new(0).run::<Diffusion>(&ctx)?;
+        Ok((r.fields, r.metrics.fault))
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let samples = bench_samples(3);
+    let net = NetModel::parse(NET)?;
+
+    println!("# Checkpoint overhead — diffusion, {NRANKS} ranks, {NX}^3/rank, nt={NT}");
+    println!("net: {NET}, {samples} samples (median step time per cadence)\n");
+    println!("| every | t/step | slowdown | saves | restores |");
+    println!("|---:|---:|---:|---:|---:|");
+
+    let mut reference: Option<Vec<(RankFields, FaultStats)>> = None;
+    let mut t_off = 0.0f64;
+    let mut rows = Vec::new();
+    for every in CADENCES {
+        let c = cfg(net, every);
+        // One counted run for the counters and the bitwise contract...
+        let out = run_once(&c)?;
+        if let Some(want) = reference.as_ref() {
+            for (r, ((fa, _), (fb, _))) in out.iter().zip(want).enumerate() {
+                for ((name, a), (_, b)) in fa.iter().zip(fb) {
+                    assert_eq!(
+                        a.max_abs_diff(b),
+                        0.0,
+                        "every={every}: rank {r} field '{name}' must be bitwise \
+                         identical to the checkpoint-free run"
+                    );
+                }
+            }
+        } else {
+            reference = Some(out.clone());
+        }
+        let saves: u64 = out.iter().map(|(_, f)| f.ckpt_saves).sum();
+        let restores: u64 = out.iter().map(|(_, f)| f.ckpt_restores).sum();
+        let injected: u64 = out.iter().map(|(_, f)| f.injected()).sum();
+        let expect_saves = if every == 0 { 0 } else { (NRANKS * (NT / every)) as u64 };
+        assert_eq!(saves, expect_saves, "every={every}: cadence arithmetic must hold");
+        assert_eq!(restores, 0, "every={every}: a clean run must never restore");
+
+        // ...then the timed samples.
+        let t = measure(samples, 1, || {
+            run_once(&c).expect("bench run failed");
+        });
+        let t_step = t.median / NT as f64;
+        if every == 0 {
+            t_off = t_step;
+        }
+        let slowdown = t_step / t_off.max(1e-12);
+        println!("| {every} | {} | {slowdown:.3}x | {saves} | {restores} |", fmt_time(t_step));
+        rows.push(Json::obj(vec![
+            ("every", Json::Num(every as f64)),
+            ("t_step_s", Json::Num(t_step)),
+            // t_off/t_step divides out core time-sharing, so it is the
+            // machine-portable column (higher-is-better, advisory); it is
+            // deliberately not `ckpt_*`-prefixed — that prefix marks the
+            // exact/blocking counters below
+            ("step_efficiency", Json::Num(1.0 / slowdown.max(1e-12))),
+            ("ckpt_saves", Json::Num(saves as f64)),
+            ("ckpt_restores", Json::Num(restores as f64)),
+            ("fault_injected", Json::Num(injected as f64)),
+        ]));
+    }
+
+    let section = Json::obj(vec![
+        ("app", Json::Str("diffusion".into())),
+        ("nranks", Json::Num(NRANKS as f64)),
+        ("n", Json::Num(NX as f64)),
+        ("nt", Json::Num(NT as f64)),
+        ("net", Json::Str(NET.into())),
+        ("rows", Json::Arr(rows)),
+    ]);
+    report::write_json_report("BENCH_ckpt.json", section.clone())?;
+    report::merge_json_report("BENCH_perf.json", vec![("ckpt_overhead", section)])?;
+    Ok(())
+}

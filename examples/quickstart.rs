@@ -81,6 +81,15 @@ impl StencilApp for Smooth {
         exchange(&mut [&mut self.b]) // stack-built slice: no per-step allocation
     }
 
+    // For diskless checkpoint/restore (`--ckpt-every`), list *both* time
+    // levels — a snapshot must capture everything the next step reads.
+    fn ckpt_fields<R, F>(&mut self, visit: F) -> R
+    where
+        F: FnOnce(&mut [&mut Field3D]) -> R,
+    {
+        visit(&mut [&mut self.a, &mut self.b])
+    }
+
     fn swap(&mut self) {
         std::mem::swap(&mut self.a, &mut self.b);
     }

@@ -89,6 +89,15 @@ impl StencilApp for Diffusion {
         exchange(&mut [&mut self.t2])
     }
 
+    /// Checkpoint both time levels; `ci` is init-derived and constant, so
+    /// the restored `init` reproduces it without snapshotting.
+    fn ckpt_fields<R, F>(&mut self, visit: F) -> R
+    where
+        F: FnOnce(&mut [&mut Field3D]) -> R,
+    {
+        visit(&mut [&mut self.t, &mut self.t2])
+    }
+
     fn swap(&mut self) {
         std::mem::swap(&mut self.t, &mut self.t2);
     }

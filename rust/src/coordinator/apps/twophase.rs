@@ -83,6 +83,14 @@ impl StencilApp for Twophase {
         exchange(&mut [&mut self.pe2, &mut self.phi2])
     }
 
+    /// Checkpoint both time levels of both persistent fields.
+    fn ckpt_fields<R, F>(&mut self, visit: F) -> R
+    where
+        F: FnOnce(&mut [&mut Field3D]) -> R,
+    {
+        visit(&mut [&mut self.pe, &mut self.phi, &mut self.pe2, &mut self.phi2])
+    }
+
     fn swap(&mut self) {
         std::mem::swap(&mut self.pe, &mut self.pe2);
         std::mem::swap(&mut self.phi, &mut self.phi2);

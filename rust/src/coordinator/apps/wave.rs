@@ -108,6 +108,24 @@ impl StencilApp for Wave {
         exchange(&mut [&mut self.p2, &mut self.vx2, &mut self.vy2, &mut self.vz2])
     }
 
+    /// Checkpoint all eight fields: both time levels of pressure and of
+    /// every velocity component feed the next step.
+    fn ckpt_fields<R, F>(&mut self, visit: F) -> R
+    where
+        F: FnOnce(&mut [&mut Field3D]) -> R,
+    {
+        visit(&mut [
+            &mut self.p,
+            &mut self.vx,
+            &mut self.vy,
+            &mut self.vz,
+            &mut self.p2,
+            &mut self.vx2,
+            &mut self.vy2,
+            &mut self.vz2,
+        ])
+    }
+
     fn swap(&mut self) {
         std::mem::swap(&mut self.p, &mut self.p2);
         std::mem::swap(&mut self.vx, &mut self.vx2);

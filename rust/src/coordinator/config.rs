@@ -78,8 +78,10 @@ pub struct Config {
     /// Carrier budget for the bounded rank executor: at most this many
     /// rank bodies *run* concurrently (the rest park on the launcher's
     /// carrier gate at their next transport wait). 0 = automatic
-    /// (`max(4, 2 × cores)`); gating engages only when the budget is below
-    /// `nranks` and no faults are armed (`--carriers` / `IGG_CARRIERS`).
+    /// (`max(4, 2 × cores)`); gating engages whenever the budget is below
+    /// `nranks` — faults included: blocked fault-layer waits hand their
+    /// permit over, and the restart orchestrator's respawned attempts
+    /// reacquire permits normally (`--carriers` / `IGG_CARRIERS`).
     pub carriers: usize,
     /// Stack size per rank thread in KiB (`--rank-stack-kib` /
     /// `IGG_RANK_STACK_KIB`). Thousands of ranks are only cheap because
@@ -90,6 +92,12 @@ pub struct Config {
     /// `Some(spec)` arms the network's deterministic fault injector and the
     /// halo engine's recovery layer (`--faults` / `IGG_FAULTS`).
     pub faults: Option<FaultSpec>,
+    /// Diskless checkpoint cadence in steps: every `ckpt_every` completed
+    /// steps each rank snapshots its fields into a preallocated in-memory
+    /// slot and pushes a redundant copy to its buddy rank, and a `kill@`
+    /// fault becomes a rollback-replay instead of a job abort. 0 disables
+    /// the layer entirely (`--ckpt-every` / `IGG_CKPT_EVERY`).
+    pub ckpt_every: usize,
     pub seed: u64,
     /// Physical domain edge length (cubic domain, as in the paper).
     pub lx: f64,
@@ -126,6 +134,9 @@ impl Default for Config {
             // none unless the IGG_FAULTS environment variable supplies a
             // spec (lets the CI chaos leg arm faults suite-wide)
             faults: default_faults(),
+            // 0 = disabled unless IGG_CKPT_EVERY arms the checkpoint layer
+            // suite-wide (the CI restart leg runs kill scenarios with it)
+            ckpt_every: default_env_usize("IGG_CKPT_EVERY", 0),
             seed: 42,
             lx: 1.0,
         }
@@ -224,6 +235,9 @@ impl Config {
                 FaultSpec::parse(f)
                     .map_err(|e| e.context(format!("invalid --faults value '{f}'")))?,
             );
+        }
+        if let Some(c) = args.get_usize("ckpt-every")? {
+            cfg.ckpt_every = c;
         }
         if let Some(s) = args.get_usize("seed")? {
             cfg.seed = s as u64;
@@ -346,6 +360,7 @@ impl Config {
                     None => Json::Null,
                 },
             ),
+            ("ckpt_every", Json::Num(self.ckpt_every as f64)),
             ("seed", Json::Num(self.seed as f64)),
         ])
     }
@@ -376,6 +391,7 @@ mod tests {
             .value("rank-stack-kib", None, "")
             .value("net", None, "")
             .value("faults", None, "")
+            .value("ckpt-every", None, "")
             .value("seed", None, "")
     }
 
@@ -496,6 +512,19 @@ mod tests {
         let err =
             format!("{:#}", parse(&["--faults", "drop@0->5#n=1", "--ranks", "2"]).unwrap_err());
         assert!(err.contains("rank 5") && err.contains("only 2 ranks"), "{err}");
+    }
+
+    #[test]
+    fn ckpt_every_flag() {
+        // default 0 (layer off) unless IGG_CKPT_EVERY arms it suite-wide
+        let want = std::env::var("IGG_CKPT_EVERY")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .unwrap_or(0);
+        assert_eq!(parse(&[]).unwrap().ckpt_every, want);
+        let c = parse(&["--ckpt-every", "4"]).unwrap();
+        assert_eq!(c.ckpt_every, 4);
+        assert_eq!(c.to_json().get("ckpt_every").unwrap().as_usize(), Some(4));
     }
 
     #[test]

@@ -25,14 +25,20 @@
 use std::sync::Arc;
 
 use crate::grid::GlobalGrid;
-use crate::mpisim::{quiet_peer_died_panics, Network, PeerDied};
+use crate::mpisim::{quiet_peer_died_panics, FaultReport, Network, PeerDied};
 
+use super::checkpoint::CheckpointStore;
 use super::config::Config;
 
 /// Everything a rank's application code needs.
 pub struct RankCtx {
     pub grid: GlobalGrid,
     pub cfg: Config,
+    /// The job's diskless checkpoint store (`Some` iff `cfg.ckpt_every >
+    /// 0`). Shared by every rank thread of the job and — crucially — by
+    /// the restart orchestrator across attempts, so snapshots survive the
+    /// rank threads that wrote them.
+    pub ckpt: Option<Arc<CheckpointStore>>,
 }
 
 /// The executor's carrier budget for `cfg`: `cfg.carriers` when set,
@@ -93,20 +99,39 @@ where
     cfg.validate()?;
     assert_eq!(net.size(), cfg.nranks, "network size must match cfg.nranks");
     let carriers = carrier_budget(cfg);
-    if carriers < cfg.nranks && !net.faults_enabled() {
+    if carriers < cfg.nranks {
+        // Gating composes with faults on a single-tenant network: blocked
+        // fault-layer receives hand their permit over (`wait_arrival`
+        // pauses like `collect`), a faulted job never poisons — so the
+        // gate is never force-opened — and exiting rank threads return
+        // their permits, leaving the gate armed for a restart attempt.
         net.limit_carriers(carriers);
     }
     run_tenant(net, cfg, 0, None, f)
 }
 
-/// Spawn and join one job's `cfg.nranks` rank threads on the tenant slice
-/// starting at global rank `base` of a (possibly shared) network. This is
-/// the spawn/join core [`run_ranks_on`] and the multi-tenant driver
-/// (`coordinator::tenancy`) both sit on: ranks get tenant-local
-/// communicators, failures poison the tenant via the failing rank's
-/// *global* index, and the first error (by rank order) wins. Carrier
-/// gating and network construction are the caller's business — under
-/// tenancy the gate must span the whole network, not one job.
+/// Cap on restart attempts per job. Each injected kill consumes its fault
+/// rule and the injector's replay clock survives revival, so a plan with
+/// `k` kill rules needs at most `k` restarts; the cap is a backstop
+/// against a pathological plan, not a tuning knob.
+const MAX_RESTARTS: usize = 8;
+
+/// Run one job's `cfg.nranks` rank threads on the tenant slice starting at
+/// global rank `base` of a (possibly shared) network, restarting after
+/// recoverable fault aborts when the checkpoint layer is armed. This is
+/// the core [`run_ranks_on`] and the multi-tenant driver
+/// (`coordinator::tenancy`) both sit on. Carrier gating and network
+/// construction are the caller's business — under tenancy the gate must
+/// span the whole network, not one job.
+///
+/// With `cfg.ckpt_every > 0`, an attempt that fails with a [`FaultReport`]
+/// anywhere in its error chain (retry exhaustion — the terminal outcome of
+/// a `kill@`) triggers the restart protocol: purge the tenant's mailboxes,
+/// record which endpoints were killed, revive them (kill/abort latches and
+/// poison bookkeeping reset; the fault replay clock kept), wait out the
+/// modeled NIC/link timelines, roll the job back to the newest epoch every
+/// rank can restore, and respawn all rank threads. The respawned ranks
+/// restore state inside the time loop and replay bitwise.
 pub fn run_tenant<R, F>(
     net: &Arc<Network>,
     cfg: &Config,
@@ -121,6 +146,59 @@ where
     assert!(base + cfg.nranks <= net.size(), "tenant slice must fit the network");
     quiet_peer_died_panics();
     let f = Arc::new(f);
+    let ckpt =
+        (cfg.ckpt_every > 0).then(|| Arc::new(CheckpointStore::new(cfg.nranks, cfg.ckpt_every)));
+    let mut attempts = 0;
+    loop {
+        let err = match run_attempt(net, cfg, base, job, &f, &ckpt) {
+            Ok(out) => return Ok(out),
+            Err(e) => e,
+        };
+        attempts += 1;
+        let Some(ck) = &ckpt else { return Err(err) };
+        let fault_abort = err.chain().any(|c| c.downcast_ref::<FaultReport>().is_some());
+        if !fault_abort || attempts >= MAX_RESTARTS {
+            return Err(err);
+        }
+        // ---- restart protocol: all rank threads of this job have joined.
+        // Drop everything the aborted attempt left queued (halo data, fault
+        // control, collective rendezvous, in-flight buddy payloads)...
+        for r in base..base + cfg.nranks {
+            net.purge_all(r);
+        }
+        // ...note who died *before* reviving clears the kill latches...
+        let killed: Vec<usize> =
+            (0..cfg.nranks).filter(|&r| net.is_rank_killed(base + r)).collect();
+        // ...revive the tenant's endpoints (latches and poison bookkeeping
+        // reset; the injector's replay clock kept, so consumed rules cannot
+        // re-fire on replay)...
+        net.revive_tenant(base, cfg.nranks);
+        // ...let the modeled NIC/link timelines drain and hold the network
+        // to its quiescence contract before respawning...
+        for r in base..base + cfg.nranks {
+            net.wait_quiescent(r);
+        }
+        // ...and roll the whole job back to the newest epoch every rank can
+        // restore — the killed ranks via their buddy copies.
+        ck.plan_rollback(&killed);
+    }
+}
+
+/// One spawn/join attempt of a job: ranks get tenant-local communicators,
+/// failures poison the tenant via the failing rank's *global* index, and
+/// the first error (by rank order) wins.
+fn run_attempt<R, F>(
+    net: &Arc<Network>,
+    cfg: &Config,
+    base: usize,
+    job: Option<usize>,
+    f: &Arc<F>,
+    ckpt: &Option<Arc<CheckpointStore>>,
+) -> anyhow::Result<Vec<R>>
+where
+    R: Send + 'static,
+    F: Fn(RankCtx) -> anyhow::Result<R> + Send + Sync + 'static,
+{
     // A *clean* job poisons its own tenant on failure so its peers unwind;
     // a faulted job leaves poisoning to the fault layer's recovery
     // protocol. Keyed on the job's own fault config, not the network's:
@@ -135,7 +213,8 @@ where
         let comm = net.tenant_comm(base, cfg.nranks, r);
         let net = Arc::clone(net);
         let cfg = cfg.clone();
-        let f = Arc::clone(&f);
+        let f = Arc::clone(f);
+        let ckpt = ckpt.clone();
         let stack = cfg.rank_stack_kib * 1024;
         let handle = std::thread::Builder::new()
             .name(format!("{job_label}-{r}"))
@@ -144,7 +223,7 @@ where
                 net.rank_enter();
                 let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     let grid = GlobalGrid::init(comm, cfg.local, cfg.grid_options())?;
-                    f(RankCtx { grid, cfg })
+                    f(RankCtx { grid, cfg, ckpt })
                 }));
                 net.rank_exit();
                 match result {

@@ -65,6 +65,10 @@ impl StepMetrics {
             ("fault_retx_recovered", Json::Num(self.fault.retx_recovered as f64)),
             ("fault_send_timeouts", Json::Num(self.fault.send_timeouts as f64)),
             ("fault_exhausted", Json::Num(self.fault.exhausted as f64)),
+            ("ckpt_saves", Json::Num(self.fault.ckpt_saves as f64)),
+            ("ckpt_restores", Json::Num(self.fault.ckpt_restores as f64)),
+            ("ranks_revived", Json::Num(self.fault.ranks_revived as f64)),
+            ("rollback_steps", Json::Num(self.fault.rollback_steps as f64)),
             ("final_norm", Json::Num(self.final_norm)),
         ])
     }

@@ -10,6 +10,7 @@
 //! initial-condition code; everything else is shared.
 
 pub mod apps;
+pub mod checkpoint;
 pub mod config;
 pub mod insitu;
 pub mod launcher;
@@ -17,4 +18,5 @@ pub mod metrics;
 pub mod tenancy;
 pub mod timeloop;
 
+pub use checkpoint::CheckpointStore;
 pub use timeloop::{AppResult, Schedule, StencilApp, TimeLoop};

@@ -243,8 +243,12 @@ pub fn run_jobs(
     net.partition(&jobs.iter().map(|c| c.nranks).collect::<Vec<_>>());
     // One carrier gate spanning the whole network (per-job gates would
     // deadlock: a permit-starved job cannot make progress for its
-    // co-tenant's collectives). Gating and faults stay mutually exclusive,
-    // as in the single-tenant launcher.
+    // co-tenant's collectives). Gating and faults stay mutually exclusive
+    // *here* even though the single-tenant launcher now composes them:
+    // that composition relies on fault jobs never poisoning the network,
+    // but a clean co-tenant still poisons on failure — which would `open()`
+    // the shared gate and corrupt permit accounting for the faulted job's
+    // restart attempts.
     let budget = carrier_budget(&jobs[0]);
     if budget < total && !net.faults_enabled() {
         net.limit_carriers(budget);

@@ -75,6 +75,20 @@ pub trait StencilApp: Sized {
     where
         F: FnOnce(&mut [&mut Field3D]) -> R;
 
+    /// Visit the fields a diskless checkpoint must capture to resume the
+    /// next step bitwise: the exchanged fields *plus* any scratch that
+    /// feeds the next step (back-buffers, staggered components). Defaults
+    /// to [`StencilApp::halo_fields`], which suffices only when the entire
+    /// persistent state is exchanged; the bundled apps override it (see
+    /// `coordinator::apps`). Init-derived constants (coefficient fields)
+    /// need not be listed — `init` reconstructs them deterministically.
+    fn ckpt_fields<R, F>(&mut self, visit: F) -> R
+    where
+        F: FnOnce(&mut [&mut Field3D]) -> R,
+    {
+        self.halo_fields(visit)
+    }
+
     /// Swap next-step fields into place (`T, T2 = T2, T`).
     fn swap(&mut self);
 
@@ -199,13 +213,25 @@ impl TimeLoop {
         let mut app = A::init(ctx).map_err(|e| e.context(format!("init app '{}'", A::NAME)))?;
         let schedule = Schedule::plan(&ctx.cfg, &ctx.grid)
             .map_err(|e| e.context(format!("schedule app '{}'", A::NAME)))?;
+        // A pending rollback (set by the restart orchestrator between
+        // attempts) fast-forwards the loop: the fields now hold the commit
+        // epoch's snapshot and the loop resumes mid-run. All ranks of the
+        // job share one start_it, so the warmup barrier below stays
+        // consistent: either every rank replays through it or none does.
+        let start_it = match &ctx.ckpt {
+            Some(ck) => ck
+                .restore_pending(ctx, &mut app)
+                .map_err(|e| e.context(format!("restore app '{}'", A::NAME)))?,
+            None => 0,
+        };
         let mut measured_wall = 0.0f64;
         let total = ctx.cfg.nt + self.warmup;
-        for it in 0..total {
+        for it in start_it..total {
             if it == self.warmup {
                 ctx.grid.comm().barrier(); // synchronized start of measurement
                 measured_wall = 0.0;
             }
+            ctx.grid.note_step(it); // a fault abort reports this step index
             let t0 = Instant::now();
             // On failure the engine has already run its abort protocol
             // (announce + purge), so early return here cannot strand peers;
@@ -215,11 +241,24 @@ impl TimeLoop {
                 .map_err(|e| e.context(format!("app '{}' step {it}", A::NAME)))?;
             measured_wall += t0.elapsed().as_secs_f64();
             app.diagnose(ctx, it);
+            if let Some(ck) = &ctx.ckpt {
+                // progress note every step; snapshot + buddy push on cadence
+                ck.after_step(ctx, &mut app, it);
+            }
         }
         // Wind down the fault-recovery layer collectively (no-op on a clean
         // network): peers may still need retransmits of our last planes.
         ctx.grid.fault_quiesce();
 
+        let mut fault = ctx.grid.halo_fault_stats();
+        if let Some(ck) = &ctx.ckpt {
+            // Overlay the rank-local checkpoint counters. `ranks_revived`
+            // needs no overlay — it flows from the injector's own stats.
+            let (saves, restores, rollback) = ck.counters(ctx.grid.rank());
+            fault.ckpt_saves += saves;
+            fault.ckpt_restores += restores;
+            fault.rollback_steps += rollback;
+        }
         let metrics = StepMetrics {
             rank: ctx.grid.rank(),
             nranks: ctx.grid.nprocs(),
@@ -229,7 +268,7 @@ impl TimeLoop {
             d_u: A::D_U,
             d_k: A::D_K,
             halo: ctx.grid.halo_stats(),
-            fault: ctx.grid.halo_fault_stats(),
+            fault,
             final_norm: app.final_norm(),
         };
         Ok(AppResult { metrics, fields: app.into_fields() })

@@ -248,6 +248,19 @@ impl GlobalGrid {
         self.engine.lock().unwrap().fault_stats()
     }
 
+    /// Tell the halo engine which time-loop step is about to run, so an
+    /// exhausted-recovery `FaultReport` can carry the exact step index it
+    /// aborted in. No-op on a clean network.
+    pub fn note_step(&self, it: usize) {
+        self.engine.lock().unwrap().note_step(it);
+    }
+
+    /// Wait until the rank's scheduler pool holds no in-flight job. The
+    /// checkpoint restore path calls this before overwriting field memory.
+    pub fn sched_quiesce(&self) {
+        self.sched.quiesce();
+    }
+
     /// Collective wind-down of the fault-recovery layer: keep serving
     /// retransmit requests until every rank has stopped needing them, then
     /// sweep leftover fault traffic (dups, stale retransmits) out of this

@@ -111,6 +111,10 @@ struct FaultCtx {
     /// idempotent per rank and turns `fault_quiesce` into a no-op on an
     /// already-dead engine.
     aborted: AtomicBool,
+    /// Time-loop step the driver last announced ([`HaloEngine::note_step`]),
+    /// stamped into an exhausted-recovery [`FaultReport`] so restart
+    /// decisions and test pins need not infer where the abort happened.
+    step: AtomicU64,
     // recovery counters (this rank)
     recv_timeouts: AtomicU64,
     nacks_sent: AtomicU64,
@@ -127,6 +131,7 @@ impl FaultCtx {
             epoch: AtomicU64::new(0),
             backups: Mutex::new(HashMap::new()),
             aborted: AtomicBool::new(false),
+            step: AtomicU64::new(0),
             recv_timeouts: AtomicU64::new(0),
             nacks_sent: AtomicU64::new(0),
             retx_served: AtomicU64::new(0),
@@ -529,6 +534,14 @@ impl HaloEngine {
             s.add(&fx.stats());
         }
         s
+    }
+
+    /// Tell the fault layer which time-loop step is about to run; stamped
+    /// into an exhausted-recovery [`FaultReport`]. No-op on a clean wire.
+    pub fn note_step(&self, it: usize) {
+        if let Some(fx) = &self.fault {
+            fx.step.store(it as u64, Ordering::Relaxed);
+        }
     }
 
     /// Fault-mode end-of-run handshake (no-op on a clean network, or after
@@ -1235,6 +1248,7 @@ fn nack_or_exhaust(
             peer: src,
             tag: full_tag,
             attempts: st.attempts,
+            step: fx.step.load(Ordering::Relaxed) as usize,
             stats,
         });
     }

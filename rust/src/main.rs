@@ -55,6 +55,12 @@ fn run_flags(cmd: Command) -> Command {
             "fault injection spec, e.g. 'drop@0->1#n=3' or \
              'chaos:drop=0.02;policy:timeout=50ms,retries=8;seed:7'",
         )
+        .value(
+            "ckpt-every",
+            None,
+            "diskless checkpoint cadence in steps (0 = off, or IGG_CKPT_EVERY): \
+             snapshot fields + buddy copy; kill@ faults roll back and replay bitwise",
+        )
         .value("seed", None, "base RNG seed")
 }
 

@@ -63,6 +63,12 @@ pub const EPOCH_MOD: u64 = 256;
 const RETX_FLAG: u64 = 1 << 54;
 /// The well-known control tag NACKs travel on (payload = requested tag).
 pub const CTRL_NACK: u64 = INTERNAL_TAG_BASE | (1 << 55);
+/// The well-known internal tag checkpoint buddy payloads travel on
+/// (`coordinator::checkpoint`): exempt from injection like all internal
+/// traffic, but *not* fault-layer control — [`is_fault_ctrl`] is false, so
+/// the quiesce sweep leaves in-flight buddy copies alone and rollback purges
+/// them explicitly via `Network::purge_all`.
+pub const CTRL_CKPT: u64 = INTERNAL_TAG_BASE | (1 << 53);
 
 /// Fold an exchange epoch into a base data tag.
 pub fn epoch_tag(base: u64, epoch: u64) -> u64 {
@@ -464,6 +470,15 @@ pub struct FaultStats {
     pub retx_recovered: u64,
     pub send_timeouts: u64,
     pub exhausted: u64,
+    // checkpoint/restore side (`coordinator::checkpoint`)
+    /// Checkpoint epochs this rank committed (own slot + buddy push).
+    pub ckpt_saves: u64,
+    /// Restores performed on this rank (buddy copy or replay-from-init).
+    pub ckpt_restores: u64,
+    /// Killed ranks brought back by the restart protocol (network-global).
+    pub ranks_revived: u64,
+    /// Completed steps this rank discarded and re-ran across all rollbacks.
+    pub rollback_steps: u64,
 }
 
 impl FaultStats {
@@ -485,6 +500,10 @@ impl FaultStats {
         self.retx_recovered += o.retx_recovered;
         self.send_timeouts += o.send_timeouts;
         self.exhausted += o.exhausted;
+        self.ckpt_saves += o.ckpt_saves;
+        self.ckpt_restores += o.ckpt_restores;
+        self.ranks_revived += o.ranks_revived;
+        self.rollback_steps += o.rollback_steps;
     }
 }
 
@@ -502,6 +521,11 @@ pub struct FaultReport {
     pub tag: u64,
     /// Receive attempts made (1 original + retransmit requests).
     pub attempts: u32,
+    /// The time-loop step the engine was in when recovery was exhausted
+    /// (what [`crate::coordinator::TimeLoop`] last announced via
+    /// `note_step`; 0 before the first step). Restart decisions and test
+    /// pins read this directly instead of inferring it from counters.
+    pub step: usize,
     /// Recovery counters at abort time.
     pub stats: FaultStats,
 }
@@ -511,11 +535,13 @@ impl fmt::Display for FaultReport {
         write!(
             f,
             "rank {} gave up waiting for halo chunk tag {:#x} (epoch {}) from rank {} \
-             after {} attempts ({} timeouts, {} NACKs sent, {} retransmits recovered)",
+             at step {} after {} attempts ({} timeouts, {} NACKs sent, {} retransmits \
+             recovered)",
             self.rank,
             tag_base(self.tag),
             tag_epoch(self.tag),
             self.peer,
+            self.step,
             self.attempts,
             self.stats.recv_timeouts,
             self.stats.nacks_sent,
@@ -549,6 +575,7 @@ struct InjectCounters {
     stalls: AtomicU64,
     kills: AtomicU64,
     refused: AtomicU64,
+    ranks_revived: AtomicU64,
 }
 
 /// Deterministic per-network fault state: the plan, per-link message
@@ -593,6 +620,24 @@ impl Injector {
 
     pub(super) fn count_refused(&self) {
         self.counters.refused.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Clear the kill/abort latches of every rank in `base .. base + size`,
+    /// counting ranks that were actually killed as revived. The per-link
+    /// replay clock is deliberately *not* touched: a deterministic rule
+    /// already consumed (`idx >= nth + count`) stays consumed, so an
+    /// injected kill never re-fires on replayed traffic — that is the
+    /// replay-clock/checkpoint-epoch fold the restart protocol relies on.
+    pub(super) fn revive(&self, base: usize, size: usize) -> usize {
+        let mut revived = 0;
+        for r in base..(base + size).min(self.n) {
+            if self.killed[r].swap(false, Ordering::AcqRel) {
+                revived += 1;
+                self.counters.ranks_revived.fetch_add(1, Ordering::Relaxed);
+            }
+            self.aborted[r].store(false, Ordering::Release);
+        }
+        revived
     }
 
     /// Does the plan's injection scope cover global `rank`?
@@ -686,6 +731,7 @@ impl Injector {
             stalls: c.stalls.load(Ordering::Relaxed),
             kills: c.kills.load(Ordering::Relaxed),
             refused: c.refused.load(Ordering::Relaxed),
+            ranks_revived: c.ranks_revived.load(Ordering::Relaxed),
             ..FaultStats::default()
         }
     }
@@ -829,6 +875,37 @@ mod tests {
         assert!(!epoch_is_stale(5, 5));
         assert!(!epoch_is_stale(6, 5), "a peer one epoch ahead is not stale");
         assert!(epoch_is_stale(255, 1), "stale across the mod-256 wrap");
+    }
+
+    #[test]
+    fn revive_clears_latches_but_not_the_replay_clock() {
+        let plan = FaultSpec::parse("kill@1#n=2").unwrap().plan;
+        let inj = Injector::new(3, plan);
+        assert_eq!(inj.decide(1, 0), None);
+        assert_eq!(inj.decide(1, 0), Some(Action::Drop), "2nd msg fires the kill");
+        inj.mark_aborted(1);
+        assert!(inj.is_killed(1) && inj.is_aborted(1));
+        assert_eq!(inj.revive(0, 3), 1, "one rank was actually killed");
+        assert!(!inj.is_killed(1) && !inj.is_aborted(1));
+        // The link counter is past nth + count: the same rule never re-fires
+        // on replayed traffic.
+        for _ in 0..8 {
+            assert_eq!(inj.decide(1, 0), None, "consumed kill must not re-fire");
+        }
+        assert_eq!(inj.revive(0, 3), 0, "nothing left to revive");
+        let s = inj.stats();
+        assert_eq!((s.kills, s.ranks_revived), (1, 1));
+    }
+
+    #[test]
+    fn ckpt_tag_is_internal_but_not_fault_ctrl() {
+        assert!(CTRL_CKPT >= INTERNAL_TAG_BASE);
+        assert!(!is_fault_ctrl(CTRL_CKPT), "quiesce sweep must not eat buddy payloads");
+        assert_ne!(CTRL_CKPT, CTRL_NACK);
+        assert_eq!(retx_data_tag(CTRL_CKPT), None);
+        // distinct from the collective tags
+        assert_ne!(CTRL_CKPT, INTERNAL_TAG_BASE + 1);
+        assert_ne!(CTRL_CKPT, INTERNAL_TAG_BASE + 2);
     }
 
     #[test]

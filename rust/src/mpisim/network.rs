@@ -312,15 +312,15 @@ impl Network {
     }
 
     /// Bound the number of concurrently *running* rank bodies to `permits`
-    /// carriers. Call once, before any rank enters. Not compatible with
-    /// fault injection (the recovery layer's bounded poll loops assume
-    /// peers make progress in wall-clock time), so the launcher only gates
-    /// clean networks.
+    /// carriers. Call before any rank enters. Compatible with fault
+    /// injection: every blocking transport wait — including the recovery
+    /// layer's bounded [`Self::wait_arrival`] polls — pauses (hands its
+    /// permit to a runnable peer) before parking, so gated fault-mode runs
+    /// cannot starve not-yet-started ranks into spurious retry exhaustion.
+    /// A network poison opens the gate (nobody may wait on a dead peer's
+    /// permit); the restart orchestrator re-arms it by calling this again
+    /// once every rank thread of the failed attempt has been joined.
     pub fn limit_carriers(&self, permits: usize) {
-        assert!(
-            !self.faults_enabled(),
-            "carrier gating is incompatible with fault injection"
-        );
         self.carrier_gate.activate(permits);
     }
 
@@ -600,6 +600,12 @@ impl Network {
     /// fault-aware completion pump uses this as its bounded wait and then
     /// re-polls, so it keeps servicing peer retransmit requests while a
     /// receive is slow. Returns whether a matching message is available.
+    ///
+    /// Carrier-gate discipline mirrors [`Self::collect`]: a permit-holding
+    /// rank pauses before parking on the condvar (with the queue lock
+    /// dropped) and resumes before either return. Without this, a gated
+    /// fault-mode run would let permit-holders burn their whole retry
+    /// budget waiting on peers that cannot start for lack of a permit.
     pub(super) fn wait_arrival(&self, me: usize, src: usize, tag: u64, deadline: Instant) -> bool {
         let mb = &self.mailboxes[me];
         let mut q = mb.queue.lock().unwrap();
@@ -610,9 +616,13 @@ impl Network {
             }
             let now = Instant::now();
             if q.iter().any(|e| e.src == src && e.tag == tag && e.arrival <= now) {
+                drop(q);
+                gate::resume();
                 return true;
             }
             if now >= deadline {
+                drop(q);
+                gate::resume();
                 return false;
             }
             let in_transit =
@@ -621,9 +631,16 @@ impl Network {
                 Some(arrival) => {
                     // Matching message still in modeled transit: sleep to
                     // the earlier of its arrival and the deadline, re-scan.
+                    // The sleep is model-bounded, so the permit (if held)
+                    // stays.
                     let wake = arrival.min(deadline);
                     drop(q);
                     crate::util::timing::precise_sleep(wake - now);
+                    q = mb.queue.lock().unwrap();
+                }
+                None if gate::holding() => {
+                    drop(q);
+                    gate::pause();
                     q = mb.queue.lock().unwrap();
                 }
                 None => {
@@ -692,6 +709,32 @@ impl Network {
         }
     }
 
+    /// Block until `rank`'s modeled timelines (NIC injection, ejection,
+    /// link occupancy) have drained, then assert full endpoint quiescence.
+    /// The restart orchestrator calls this between attempts: the aborted
+    /// attempt's last sends may still be inside their modeled busy-until
+    /// windows, which is time that must pass, not state to purge — the
+    /// mailbox itself must already be empty (see [`Self::purge_all`]).
+    pub fn wait_quiescent(&self, rank: usize) {
+        loop {
+            let mut busy: Option<Instant> = None;
+            let mut fold = |b: Option<Instant>| {
+                if let Some(b) = b {
+                    busy = Some(busy.map_or(b, |cur: Instant| cur.max(b)));
+                }
+            };
+            fold(self.nics[rank].lock().unwrap().busy_until);
+            fold(self.ejects[rank].lock().unwrap().busy_until);
+            fold(self.links[rank].lock().unwrap().max_busy());
+            let now = Instant::now();
+            match busy {
+                Some(b) if b > now => crate::util::timing::precise_sleep(b - now),
+                _ => break,
+            }
+        }
+        self.assert_quiescent(rank);
+    }
+
     /// Modeled arrival instant of the earliest queued (src, tag) message in
     /// `rank`'s mailbox, if any — whether or not it has "arrived" yet. The
     /// deterministic ejection/link tests assert queueing semantics on these
@@ -743,6 +786,55 @@ impl Network {
         let before = q.len();
         q.retain(|e| e.tag >= super::INTERNAL_TAG_BASE && !fault::is_fault_ctrl(e.tag));
         before - q.len()
+    }
+
+    /// Drop **everything** from `rank`'s mailbox — halo data, fault-layer
+    /// control, collective and checkpoint traffic alike. Only the restart
+    /// orchestrator calls this, between attempts, when no rank thread of
+    /// the job is running: any message still queued (a collective rendez-
+    /// vous the dead rank never answered, an in-flight buddy checkpoint
+    /// payload) belongs to the aborted attempt and would corrupt the
+    /// replayed one if left to FIFO-match its receives.
+    pub fn purge_all(&self, rank: usize) -> usize {
+        let mut q = self.mailboxes[rank].queue.lock().unwrap();
+        let n = q.len();
+        q.clear();
+        n
+    }
+
+    /// Was `rank` killed by an injected `kill@` rule (and not yet revived)?
+    pub fn is_rank_killed(&self, rank: usize) -> bool {
+        self.fault.as_ref().is_some_and(|inj| inj.is_killed(rank))
+    }
+
+    /// Restart protocol: bring the tenant occupying `base .. base + size`
+    /// back to life after its poison unwind was caught. Clears the
+    /// injector's kill/abort latches (counting actually-killed ranks as
+    /// revived — the per-link replay clock is deliberately preserved, so a
+    /// consumed `kill@` rule never re-fires on replay), clears the
+    /// tenant's poison latches and failure origin, and resets the quiesce
+    /// handshake for the replayed attempt. The caller must have joined
+    /// every rank thread of the failed attempt and purged the tenant's
+    /// mailboxes ([`Self::purge_all`]) first. Returns how many ranks were
+    /// revived.
+    pub fn revive_tenant(&self, base: usize, size: usize) -> usize {
+        assert!(base + size <= self.size(), "tenant slice out of range");
+        let revived = self.fault.as_ref().map(|inj| inj.revive(base, size)).unwrap_or(0);
+        let mut tenants = self.tenants.lock().unwrap();
+        if let Some(t) = tenants.iter_mut().find(|t| t.base == base && t.size == size) {
+            t.origin = None;
+        }
+        for flag in &self.rank_poisoned[base..base + size] {
+            flag.store(false, Ordering::Release);
+        }
+        // The global fast-path flag stays up iff some *other* tenant still
+        // has a failure origin latched.
+        let any = tenants.iter().any(|t| t.origin.is_some());
+        self.poisoned.store(any, Ordering::Release);
+        drop(tenants);
+        self.quiesce_done.store(0, Ordering::Release);
+        self.quiesce_stopped.store(0, Ordering::Release);
+        revived
     }
 
     /// Quiesce handshake, phase 1: this rank's final halo exchange has
@@ -1157,6 +1249,46 @@ mod tests {
         // tenant B traffic still flows end to end
         net.deposit(2, 3, 9, vec![42.0]);
         assert_eq!(net.collect(3, 2, 9), vec![42.0]);
+    }
+
+    /// The restart protocol's network-recovery half: after a kill latched
+    /// and the tenant was poisoned, purge + revive returns the network to
+    /// a state where the job's traffic flows again — while the replay
+    /// clock keeps the consumed kill rule from re-firing.
+    #[test]
+    fn revive_tenant_recovers_a_killed_network() {
+        let net = faulty(2, "kill@1#n=2");
+        net.deposit(1, 0, 7, vec![1.0]);
+        net.deposit(1, 0, 7, vec![2.0]); // fires the kill, dropped
+        net.deposit(1, 0, 7, vec![3.0]); // refused: dead NIC
+        assert!(net.is_rank_killed(1));
+        net.mark_aborted(0);
+        net.poison(1);
+        assert!(net.is_poisoned() && net.rank_poisoned(0));
+        net.quiesce_announce_done();
+        // between attempts: drain everything, then revive
+        assert_eq!(net.purge_all(0), 1);
+        assert_eq!(net.purge_all(1), 0);
+        net.assert_quiescent(0);
+        net.assert_quiescent(1);
+        assert_eq!(net.revive_tenant(0, 2), 1);
+        assert!(!net.is_rank_killed(1) && !net.is_poisoned() && !net.rank_poisoned(0));
+        assert!(!net.quiesce_all_done(), "quiesce handshake reset for the replay");
+        // the link counter survived: the kill rule is consumed for good
+        net.deposit(1, 0, 7, vec![4.0]);
+        assert_eq!(net.collect(0, 1, 7), vec![4.0]);
+        let s = net.fault_stats();
+        assert_eq!((s.kills, s.ranks_revived), (1, 1));
+    }
+
+    #[test]
+    fn purge_all_sweeps_internal_traffic_too() {
+        let net = Network::new(2);
+        net.deposit(0, 1, 7, vec![1.0]);
+        net.deposit(0, 1, super::super::INTERNAL_TAG_BASE + 1, vec![2.0]);
+        net.deposit(0, 1, fault::CTRL_CKPT, vec![3.0]);
+        assert_eq!(net.purge_all(1), 3);
+        assert_eq!(net.mailbox_depth(1), 0);
     }
 
     #[test]

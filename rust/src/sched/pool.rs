@@ -239,6 +239,20 @@ impl Pool {
         self.inner.done_cv.notify_all();
     }
 
+    /// Block until the board holds no active job — every submitted chunk
+    /// claimed *and* completed, every slot recycled. Used by the checkpoint
+    /// restore path to guarantee no worker is still touching field memory
+    /// while a rollback overwrites it; on an idle board this is one lock
+    /// acquisition. Callers must not hold a job open on this pool (a
+    /// submitter inside `run_chunks` would deadlock against itself), which
+    /// matches the restore site: it runs strictly between time steps.
+    pub fn quiesce(&self) {
+        let mut b = self.inner.board.lock().unwrap();
+        while b.slots.iter().any(|s| s.active) {
+            b = self.inner.done_cv.wait(b).unwrap();
+        }
+    }
+
     /// Unclaimed chunks across all active jobs (test introspection).
     #[cfg(test)]
     fn unclaimed_chunks(&self) -> usize {

@@ -19,7 +19,11 @@
 //! raw-pointer work handoff, condvar signaling) — and the bounded rank
 //! executor's carrier gate: with more ranks than carriers, every blocking
 //! receive hands its permit over and re-acquires on wake through
-//! mutex/condvar state only.
+//! mutex/condvar state only — and the diskless checkpoint layer
+//! (`ckpt_every`): the per-step progress hook is one atomic store, and
+//! on-cadence saves fill preallocated snapshot slots and recycle buddy
+//! payloads through a pooled ring, so even checkpoint steps stay off the
+//! heap once warm.
 //! This file contains exactly one #[test] so no concurrent test in the
 //! same binary can pollute the counter.
 
@@ -29,6 +33,7 @@ use std::sync::Arc;
 
 use igg::coordinator::config::{AppKind, Config};
 use igg::coordinator::launcher::RankCtx;
+use igg::coordinator::CheckpointStore;
 use igg::coordinator::timeloop::{self, Schedule, StencilApp};
 use igg::coordinator::apps::{diffusion::Diffusion, twophase::Twophase, wave::Wave};
 use igg::mpisim::{NetModel, Network};
@@ -85,6 +90,8 @@ where
     if carriers < nranks && cfg.faults.is_none() {
         net.limit_carriers(carriers);
     }
+    // mirror the launcher: a checkpoint cadence arms the diskless store
+    let ckpt = (cfg.ckpt_every > 0).then(|| Arc::new(CheckpointStore::new(nranks, cfg.ckpt_every)));
     let before = Arc::new(AtomicUsize::new(0));
     let after = Arc::new(AtomicUsize::new(0));
     let handles: Vec<_> = (0..nranks)
@@ -92,6 +99,7 @@ where
             let comm = net.comm(r);
             let net = Arc::clone(&net);
             let cfg = cfg.clone();
+            let ckpt = ckpt.clone();
             let before = Arc::clone(&before);
             let after = Arc::clone(&after);
             std::thread::Builder::new()
@@ -99,12 +107,25 @@ where
                 .spawn(move || {
                     net.rank_enter();
                     let grid = GlobalGrid::init(comm, cfg.local, cfg.grid_options()).unwrap();
-                    let ctx = RankCtx { grid, cfg };
+                    let ctx = RankCtx { grid, cfg, ckpt };
                     let schedule = Schedule::plan(&ctx.cfg, &ctx.grid).unwrap();
                     let mut app = A::init(&ctx).unwrap();
 
+                    let mut it = 0;
                     for _ in 0..WARMUP {
                         timeloop::step(&ctx.grid, &schedule, &mut app).unwrap();
+                        if let Some(ck) = &ctx.ckpt {
+                            ck.after_step(&ctx, &mut app, it);
+                        }
+                        it += 1;
+                    }
+                    if let Some(ck) = &ctx.ckpt {
+                        // Rendezvous so every warmup buddy payload has been
+                        // deposited (internal tags arrive instantly), then
+                        // drain: both parities of the held slots must reach
+                        // their steady capacity before the window opens.
+                        ctx.grid.comm().barrier();
+                        ck.drain_arrivals(&ctx);
                     }
                     let engine_warm = ctx.grid.halo_allocations();
                     ctx.grid.comm().barrier(); // all ranks warmed
@@ -115,6 +136,10 @@ where
 
                     for _ in 0..STEADY {
                         timeloop::step(&ctx.grid, &schedule, &mut app).unwrap();
+                        if let Some(ck) = &ctx.ckpt {
+                            ck.after_step(&ctx, &mut app, it);
+                        }
+                        it += 1;
                     }
 
                     ctx.grid.comm().barrier(); // all ranks done stepping
@@ -473,6 +498,76 @@ fn timeloop_steady_state_is_allocation_free() {
         );
     }
 
+    // Diskless checkpoint layer armed but off-cadence: every steady step
+    // pays only the progress hook (one atomic store) — the contract that
+    // makes `--ckpt-every` safe to leave on everywhere.
+    assert_steady_state_alloc_free::<Diffusion>(
+        "diffusion/plain/2 ranks/ckpt-idle",
+        Config {
+            app: AppKind::Diffusion,
+            nranks: 2,
+            local: [12, 12, 12],
+            nt: 1,
+            ckpt_every: 1000,
+            ..Default::default()
+        },
+    );
+
+    // On-cadence checkpointing: every other steady step snapshots the app's
+    // ckpt_fields and pushes the buddy copy. Cadence 2 puts epochs 1 and 2
+    // inside warmup, so the double-buffered own slots, the payload recycle
+    // ring (primed at epoch 1) and — after the harness's post-warmup drain
+    // — both held parities all reach steady capacity before the window
+    // opens; epochs 3..7 then save, replicate and run the watermark check
+    // inside it without touching the heap. Plain, hidden, single-rank (no
+    // buddy ring) and the 8-field wave app.
+    assert_steady_state_alloc_free::<Diffusion>(
+        "diffusion/plain/2 ranks/ckpt-2",
+        Config {
+            app: AppKind::Diffusion,
+            nranks: 2,
+            local: [12, 12, 12],
+            nt: 1,
+            ckpt_every: 2,
+            ..Default::default()
+        },
+    );
+    assert_steady_state_alloc_free::<Diffusion>(
+        "diffusion/hide/2 ranks/ckpt-2",
+        Config {
+            app: AppKind::Diffusion,
+            nranks: 2,
+            local: [12, 12, 12],
+            nt: 1,
+            hide: Some(HideWidths([3, 2, 2])),
+            ckpt_every: 2,
+            ..Default::default()
+        },
+    );
+    assert_steady_state_alloc_free::<Diffusion>(
+        "diffusion/plain/1 rank/ckpt-2",
+        Config {
+            app: AppKind::Diffusion,
+            nranks: 1,
+            local: [12, 12, 12],
+            nt: 1,
+            ckpt_every: 2,
+            ..Default::default()
+        },
+    );
+    assert_steady_state_alloc_free::<Wave>(
+        "wave/hide/2 ranks/ckpt-2",
+        Config {
+            app: AppKind::Wave,
+            nranks: 2,
+            local: [12, 12, 12],
+            nt: 1,
+            hide: Some(HideWidths([2, 2, 2])),
+            ckpt_every: 2,
+            ..Default::default()
+        },
+    );
+
     // Two tenants sharing one network: tenant-translated deposits ride the
     // same preallocated per-rank tables, and the tenant registry plus the
     // per-rank poison latches are built at partition time — before the
@@ -562,7 +657,7 @@ where
     net.rank_enter();
     let comm = net.tenant_comm(base, cfg.nranks, local_r);
     let grid = GlobalGrid::init(comm, cfg.local, cfg.grid_options()).unwrap();
-    let ctx = RankCtx { grid, cfg: cfg.clone() };
+    let ctx = RankCtx { grid, cfg: cfg.clone(), ckpt: None };
     let schedule = Schedule::plan(&ctx.cfg, &ctx.grid).unwrap();
     let mut app = A::init(&ctx).unwrap();
 

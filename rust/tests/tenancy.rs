@@ -12,8 +12,11 @@
 //!   the physics: each job's final fields are bitwise identical to its
 //!   isolated run, faults in one tenant never leak into another — a
 //!   killed rank aborts its own job while the co-tenant completes
-//!   untouched — and a recoverable chaos schedule repairs one tenant
-//!   bitwise while a noisy co-tenant hammers the same wire.
+//!   untouched — a recoverable chaos schedule repairs one tenant
+//!   bitwise while a noisy co-tenant hammers the same wire — and with
+//!   the checkpoint layer armed, a killed job is revived, rolled back
+//!   and completes bitwise while its co-tenant never notices the
+//!   restart (purge/revive/rollback are tenant-scoped).
 //! * **Tenant-scoped cleanliness.** After every scenario the surviving
 //!   ranks' mailboxes and NICs are quiescent.
 
@@ -178,6 +181,52 @@ fn co_tenant_survives_kill_in_other_job() {
     assert!(stats.kills >= 1, "the kill must have latched");
     for r in 0..net.size() {
         net.assert_quiescent(r);
+    }
+}
+
+/// Diskless checkpoint/restore under tenancy: job 0 is killed mid-run,
+/// revived and rolled back by the restart orchestrator — and completes
+/// bitwise equal to its clean isolated run — while the co-tenant shares
+/// every NIC and stays bitwise vs isolation throughout. The restart
+/// protocol (purge → revive → rollback) must be tenant-scoped: the
+/// co-tenant's mailboxes, poison latches and fault replay clock are
+/// untouched while its neighbour job dies and comes back.
+#[test]
+fn killed_job_restores_while_co_tenant_stays_bitwise() {
+    let model = NetModel::parse("aries,serial-nic").unwrap();
+    let mut revived = cfg(AppKind::Diffusion, 2, 12, model);
+    revived.ckpt_every = 4;
+    // the bitwise oracle is the same job fault-free and checkpoint-free
+    let want0 = isolated::<Diffusion>(&cfg(AppKind::Diffusion, 2, 12, model));
+    let co = cfg(AppKind::Wave, 2, 8, model);
+    let want1 = isolated::<Wave>(&co);
+
+    let faults = FaultSpec::parse("kill@1#n=5;policy:timeout=20ms,retries=3").unwrap();
+    revived.faults = Some(faults.clone());
+    let plan = faults.plan.clone().for_tenant(0, revived.nranks);
+    let net = Network::with_faults(revived.nranks + co.nranks, model, plan);
+    net.partition(&[revived.nranks, co.nranks]);
+
+    let h0 = spawn_job::<Diffusion>(&net, &revived, 0, 0);
+    let h1 = spawn_job::<Wave>(&net, &co, revived.nranks, 1);
+    let got0 = h0
+        .join()
+        .unwrap()
+        .unwrap_or_else(|e| panic!("the killed job must restore and finish: {e:#}"));
+    let got1 = h1.join().unwrap().unwrap_or_else(|e| panic!("co-tenant failed: {e:#}"));
+
+    assert_bitwise("restored job", &got0, &want0);
+    assert_bitwise("co-tenant beside the restart", &got1, &want1);
+
+    let stats = net.fault_stats();
+    assert!(stats.kills >= 1, "the kill must have latched");
+    assert!(stats.ranks_revived >= 1, "the restart must have revived the killed endpoint");
+    // Leftover buddy payloads (internal checkpoint mail) are legal at job
+    // end; purge and drain the modeled timelines before holding the
+    // per-rank quiescence contract.
+    for r in 0..net.size() {
+        net.purge_all(r);
+        net.wait_quiescent(r);
     }
 }
 

@@ -7,11 +7,12 @@
 //! adding new ones never misattributes a metric). Each shared metric is
 //! classified by its key:
 //!
-//! * `*alloc*` and `fault_*` counts — **exact**: allocation counts and
-//!   fault/injection counters are machine-independent (they pin the
-//!   zero-allocation and fault-idle contracts), so any increase is a
-//!   regression regardless of tolerance. CI runs `--allocs-only` as a
-//!   blocking step covering both.
+//! * `*alloc*`, `fault_*`, `ckpt_*`, `ranks_revived` and `rollback_steps`
+//!   counts — **exact**: allocation, fault/injection and
+//!   checkpoint/recovery counters are machine-independent (they pin the
+//!   zero-allocation, fault-idle and restart contracts), so any increase
+//!   is a regression regardless of tolerance. CI runs `--allocs-only` as
+//!   a blocking step covering all of them.
 //! * `*_s` — lower is better (timings): regression when the relative
 //!   delta exceeds `--tol`. Advisory on shared runners (machine noise).
 //! * `*gbs` / `*speedup*` / `*gain*` / `*efficiency*` — higher is better,
@@ -46,7 +47,12 @@ enum Class {
 fn classify(path: &str) -> Class {
     // the metric key is the last `.`-separated segment
     let key = path.rsplit('.').next().unwrap_or(path);
-    if key.contains("alloc") || key.starts_with("fault_") {
+    if key.contains("alloc")
+        || key.starts_with("fault_")
+        || key.starts_with("ckpt_")
+        || key == "ranks_revived"
+        || key == "rollback_steps"
+    {
         Class::Exact
     } else if key.ends_with("_s") {
         Class::LowerBetter
@@ -63,8 +69,9 @@ fn classify(path: &str) -> Class {
 
 /// Identity fields used to key array elements, in label priority order.
 /// `app` distinguishes the tenancy bench's per-job rows (two co-tenant
-/// jobs can share a rank count but never an app+ranks pair there).
-const ID_KEYS: [&str; 7] = ["app", "n", "dim", "threads", "net", "nranks", "contended"];
+/// jobs can share a rank count but never an app+ranks pair there);
+/// `every` keys the checkpoint-overhead cadence sweep.
+const ID_KEYS: [&str; 8] = ["app", "n", "dim", "threads", "net", "nranks", "contended", "every"];
 
 fn element_label(v: &Json, index: usize) -> String {
     if let Some(obj) = v.as_obj() {
